@@ -1,0 +1,75 @@
+//! Muon-tracker regression (paper §V.D, Table III / Fig. V): trains the
+//! multistage MLP on simulated detector hits, deploys Pareto
+//! representatives and the Qf* uniform baselines, and reports the
+//! resolution (RMS with the paper's 30 mrad outlier cut) against
+//! simulated resources.
+//!
+//!     cargo run --release --example muon_tracking [epochs]
+
+use anyhow::Result;
+
+use hgq::coordinator::deploy;
+use hgq::coordinator::experiment::{preset, run_hgq_sweep, run_uniform_baseline};
+use hgq::firmware::emulator::Emulator;
+use hgq::metrics;
+use hgq::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("HGQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let epochs: Option<usize> = std::env::args().nth(1).and_then(|s| s.parse().ok());
+
+    let rt = Runtime::new()?;
+    let p = preset("muon");
+    println!(
+        "=== muon tracking: 3 stations x 3 layers x 50 strips -> angle (mrad) ===\n\
+         {} epochs, beta {:.0e} -> {:.0e}",
+        epochs.unwrap_or(p.epochs),
+        p.beta_from,
+        p.beta_to
+    );
+
+    let (mr, splits, outcome, reports) = run_hgq_sweep(&rt, &artifacts, &p, epochs, true)?;
+
+    println!("\nHGQ rows (resolution in mrad, lower is better):");
+    for r in &reports {
+        println!("{}", r.row());
+    }
+
+    println!("\nQf* uniform baselines (the paper's comparison points):");
+    for &bits in p.uniform_bits.iter().take(3) {
+        let rep = run_uniform_baseline(&rt, &artifacts, &p, bits, epochs)?;
+        println!("{}", rep.row());
+    }
+
+    // detailed look at the best working point: residual distribution
+    if let Some(best) = outcome.pareto.sorted().last() {
+        let (graph, rep) =
+            deploy(&mr, "best", &best.state, &[&splits.train, &splits.val], &splits.test)?;
+        let mut em = Emulator::new(&graph);
+        let mut logits = vec![0.0f64; splits.test.n];
+        em.infer_batch(&splits.test.x, &mut logits)?;
+        let (rms, outliers) = metrics::resolution_with_cut(&logits, &splits.test.y_reg, 30.0);
+        println!("\nbest point: resolution {rms:.2} mrad, outlier fraction {:.3}", outliers);
+        println!("deployed: {}", rep.row());
+        // residual histogram (10 mrad bins)
+        let mut hist = [0usize; 12];
+        for (pred, &t) in logits.iter().zip(&splits.test.y_reg) {
+            let e = (pred - t as f64).abs();
+            let bin = ((e / 5.0) as usize).min(11);
+            hist[bin] += 1;
+        }
+        println!("|error| histogram (5 mrad bins):");
+        for (i, &h) in hist.iter().enumerate() {
+            println!(
+                "  {:>3}-{:>3} mrad: {:<6} {}",
+                i * 5,
+                (i + 1) * 5,
+                h,
+                "#".repeat((h * 60 / splits.test.n).max(usize::from(h > 0)))
+            );
+        }
+    }
+    Ok(())
+}

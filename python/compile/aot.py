@@ -1,0 +1,156 @@
+"""AOT lowering: L2 jax functions -> HLO *text* artifacts + metadata.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model config this writes into artifacts/<name>/:
+    train.hlo.txt      packed-state train step
+    forward.hlo.txt    quantized inference (state, x) -> logits
+    calib.hlo.txt      (state, x) -> per-element quantized act extremes
+    meta.json          state layout, layers, act groups, shapes
+    init.bin           initial packed state, little-endian f32
+plus artifacts/quant_smoke.hlo.txt, a tiny quantizer round-trip the rust
+runtime tests use.
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .hgq.train import StateSpec, make_calib, make_forward, make_train_step
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # literals as `constant({...})`, which the XLA 0.5.1 text parser
+    # silently mis-parses (observed: the per-segment learning-rate mask
+    # came back wrong, making f_lr a no-op on the rust side).
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO text still contains elided constants"
+    return text
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_model_artifacts(name: str, outdir: pathlib.Path, seed: int = 0) -> None:
+    cfg = model_lib.CONFIGS[name]
+    net = model_lib.build(name)
+    spec = StateSpec(net)
+    batch = cfg["batch"]
+    x_shape = (batch, *net.input_shape)
+    y_dtype = jnp.int32 if cfg["y_dtype"] == "i32" else F32
+
+    d = outdir / name
+    d.mkdir(parents=True, exist_ok=True)
+
+    scalar = _spec((), F32)
+    train_lowered = jax.jit(make_train_step(net, spec)).lower(
+        _spec((spec.total,)), _spec(x_shape), _spec((batch,), y_dtype),
+        scalar, scalar, scalar, scalar,
+    )
+    (d / "train.hlo.txt").write_text(to_hlo_text(train_lowered))
+
+    fwd_lowered = jax.jit(make_forward(net, spec)).lower(
+        _spec((spec.total,)), _spec(x_shape)
+    )
+    (d / "forward.hlo.txt").write_text(to_hlo_text(fwd_lowered))
+
+    calib_lowered = jax.jit(make_calib(net, spec)).lower(
+        _spec((spec.total,)), _spec(x_shape)
+    )
+    (d / "calib.hlo.txt").write_text(to_hlo_text(calib_lowered))
+
+    state0 = spec.init_state(seed)
+    (d / "init.bin").write_bytes(state0.astype("<f4").tobytes())
+
+    n_act = sum(g["size"] for g in net.act_groups)
+    meta = {
+        "name": name,
+        "task": net.task,
+        "batch": batch,
+        "input_shape": list(net.input_shape),
+        "y_dtype": cfg["y_dtype"],
+        "w_gran": net.w_gran,
+        "a_gran": net.a_gran,
+        "state_size": spec.total,
+        "n_params": spec.n_params,
+        "n_train": spec.n_train,
+        "hypers": ["beta", "gamma", "lr", "f_lr"],
+        "metrics": ["loss", "metric", "ebops", "sparsity"],
+        "calib_size": n_act,
+        "tensors": spec.entries,
+        "act_groups": net.act_groups,
+        "layers": net.layers,
+        "output_dim": net.output_dim,
+    }
+    (d / "meta.json").write_text(json.dumps(meta, indent=1))
+    print(f"[aot] {name}: state={spec.total} f32, batch={batch}, "
+          f"train.hlo={len((d/'train.hlo.txt').read_text())//1024} KiB")
+
+
+def build_smoke(outdir: pathlib.Path) -> None:
+    """Quantizer round-trip the rust runtime integration tests check."""
+    from .kernels.hgq_quant import hgq_quantize
+
+    def fn(x, f):
+        return (hgq_quantize(x, f),)
+
+    lowered = jax.jit(fn).lower(_spec((4, 128)), _spec((4, 128)))
+    (outdir / "quant_smoke.hlo.txt").write_text(to_hlo_text(lowered))
+
+
+def _input_fingerprint() -> str:
+    """Hash of every python source feeding the artifacts."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(model_lib.CONFIGS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    stamp = outdir / "fingerprint.txt"
+    fp = _input_fingerprint() + ":" + args.models
+    if not args.force and stamp.exists() and stamp.read_text() == fp:
+        print("[aot] artifacts up to date")
+        return
+
+    build_smoke(outdir)
+    for name in args.models.split(","):
+        build_model_artifacts(name, outdir)
+    stamp.write_text(fp)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

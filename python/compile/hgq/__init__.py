@@ -1,0 +1,9 @@
+"""HGQ: High Granularity Quantization — L2 training library (build-time).
+
+Implements the paper's quantization-aware training with per-parameter
+trainable bitwidths, the differentiable EBOPs-bar resource regularizer
+(Eq. 16), and the packed-state train/forward/calib step builders that
+aot.py lowers to HLO artifacts for the rust coordinator.
+"""
+
+from . import ebops, net, quantizer, train  # noqa: F401

@@ -1,0 +1,81 @@
+"""Differentiable EBOPs-bar (paper §III.C + §III.D.2).
+
+Training-time resource estimate: every multiplication between an operand
+of ``bw_i`` bits and one of ``bw_j`` bits costs ``bw_i * bw_j`` EBOPs
+(Eq. 5). During training the bitwidths are *estimated* as
+
+    bw = max(i' + f, 0)                       (EBOPs-bar, upper bound)
+
+with ``i'`` the integer bits (Eq. 3) from running min/max statistics,
+treated as piecewise-constant (stop-gradient), so d(bw)/d(f) = 1 on the
+active branch — this is what routes the resource gradient into the
+trainable bitwidths.
+
+The *exact* EBOPs (non-zero-bit spans, post-calibration) live on the
+rust side (rust/src/ebops/); python only needs the differentiable bound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+sg = jax.lax.stop_gradient
+
+
+def int_bits_from_minmax(vmin: jnp.ndarray, vmax: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3: integer bits (excluding sign) covering [vmin, vmax].
+
+    i' = max(floor(log2 |vmax|) + 1, ceil(log2 |vmin|)); terms with a
+    zero bound contribute -inf (i.e. are ignored). Returns -inf when both
+    bounds are zero (a dead value: bw collapses to 0 through the relu).
+    """
+    neg_inf = jnp.float32(-1e9)
+    hi = jnp.where(vmax > 0, jnp.floor(_log2(jnp.abs(vmax))) + 1.0, neg_inf)
+    lo = jnp.where(vmin < 0, jnp.ceil(_log2(jnp.abs(vmin))), neg_inf)
+    return jnp.maximum(hi, lo)
+
+
+def _log2(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.log2(jnp.maximum(x, 1e-30))
+
+
+def weight_bits(wq: jnp.ndarray, f_used: jnp.ndarray) -> jnp.ndarray:
+    """Estimated bits of each quantized weight: ceil(log2(m+1)) above the
+    LSB at 2^-f, where m = |wq| * 2^f is the integer mantissa.
+
+    Equals i' + f of the paper for the single-weight group; the value is
+    piecewise constant in the data but carries d/d(f) = 1 (via the f_used
+    STE path) so the regularizer can shrink bitwidths.
+    """
+    fb = jnp.broadcast_to(f_used, wq.shape)
+    m = jnp.round(jnp.abs(sg(wq)) * jnp.exp2(sg(fb)))
+    raw = jnp.ceil(_log2(m + 1.0))  # exact for integer m >= 0
+    # forward: raw; gradient: +1 into f where the weight is alive.
+    bw = sg(raw - fb) + fb
+    return jnp.where(m > 0, jnp.maximum(bw, 0.0), 0.0)
+
+
+def act_bits(
+    vmin: jnp.ndarray, vmax: jnp.ndarray, f_used: jnp.ndarray, signed: bool
+) -> jnp.ndarray:
+    """Estimated bits of an activation group from running min/max."""
+    i = int_bits_from_minmax(sg(vmin), sg(vmax))
+    if signed:
+        i = i + 1.0  # sign bit participates in the multiplier width
+    bw = jnp.maximum(sg(i) + f_used, 0.0)
+    return jnp.where(sg(i) > -1e8, bw, 0.0)
+
+
+def dense_ebops(bw_a: jnp.ndarray, bw_w: jnp.ndarray) -> jnp.ndarray:
+    """Fully-unrolled dense layer: every (in, out) weight has its own
+    multiplier fed by input element `in`: sum_a,w bw_a[i] * bw_w[i, j]."""
+    return jnp.sum(bw_a[:, None] * bw_w)
+
+
+def conv2d_ebops(bw_a_per_cin: jnp.ndarray, bw_w: jnp.ndarray) -> jnp.ndarray:
+    """Stream-IO conv (paper §V.C): one physical multiplier per kernel
+    weight, reused across spatial positions — each counted ONCE (§III.C:
+    "different inputs fed to the same multiplier through a buffer should
+    be counted only once"). bw_w: (kh, kw, cin, cout)."""
+    return jnp.sum(bw_a_per_cin[None, None, :, None] * bw_w)

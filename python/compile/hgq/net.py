@@ -1,0 +1,260 @@
+"""HGQ network definition + quantized forward pass (L2).
+
+A model is declared as a list of layer dicts (the same JSON the rust
+firmware/nn modules consume, exported via meta.json):
+
+    {"kind": "input_quant", "signed": true}
+    {"kind": "dense", "name": "d0", "din": 16, "dout": 64, "act": "relu"}
+    {"kind": "conv2d", "name": "c0", "cin": 3, "cout": 16, "k": 3, "act": "relu"}
+    {"kind": "maxpool2"}
+    {"kind": "flatten"}
+
+Granularity (paper Fig. I):
+  * weights:     "element" (per-parameter, HGQ max granularity) or
+                 "layer" (one bitwidth per tensor — the QKeras baseline)
+  * activations: "element" (per-neuron) or "layer" (stream-IO / baseline)
+
+The forward pass returns logits plus everything the Eq. 16 loss needs:
+EBOPs-bar, the L1 bitwidth norm, updated activation min/max statistics,
+and the weight sparsity (pruned fraction — §III.D.4).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.qmatmul import qmatmul
+from . import ebops
+from .quantizer import grad_scale, group_norm_scale, quantize, use_f
+
+sg = jax.lax.stop_gradient
+
+
+class Net:
+    """Static description of an HGQ model: layers + named tensors."""
+
+    def __init__(self, cfg: dict[str, Any]):
+        self.cfg = cfg
+        self.name: str = cfg["name"]
+        self.task: str = cfg["task"]  # "cls" | "reg"
+        self.input_shape: tuple[int, ...] = tuple(cfg["input_shape"])
+        self.w_gran: str = cfg.get("w_gran", "element")
+        self.a_gran: str = cfg.get("a_gran", "element")
+        self.f_init_w: float = float(cfg.get("f_init_w", 2.0))
+        self.f_init_a: float = float(cfg.get("f_init_a", 2.0))
+        self.layers: list[dict[str, Any]] = []
+        # ordered tensor specs: {"name", "shape", "kind": param|fbit, "init"}
+        self.params: list[dict[str, Any]] = []
+        self.fbits: list[dict[str, Any]] = []
+        # activation groups: {"name", "fshape", "signed", "size"} in
+        # forward order; calib outputs follow this order.
+        self.act_groups: list[dict[str, Any]] = []
+        self._build(cfg["layers"])
+
+    # ------------------------------------------------------------------
+    def _fshape(self, full_shape: tuple[int, ...], gran: str) -> tuple[int, ...]:
+        return full_shape if gran == "element" else ()
+
+    def _add_param(self, name: str, shape: tuple[int, ...], init: str):
+        self.params.append({"name": name, "shape": shape, "init": init})
+
+    def _add_fbit(self, name: str, shape: tuple[int, ...], init: float):
+        self.fbits.append({"name": name, "shape": shape, "init": init})
+
+    def _add_act(self, name: str, fshape: tuple[int, ...], signed: bool):
+        self._add_fbit(name, fshape, self.f_init_a)
+        self.act_groups.append(
+            {
+                "name": name,
+                "fshape": list(fshape),
+                "signed": bool(signed),
+                "size": int(np.prod(fshape)) if fshape else 1,
+            }
+        )
+
+    def _build(self, layer_cfgs: list[dict[str, Any]]):
+        shape = self.input_shape  # feature shape, no batch dim
+        for lc in layer_cfgs:
+            lc = dict(lc)
+            kind = lc["kind"]
+            if kind == "input_quant":
+                lc["name"] = lc.get("name", "inq")
+                lc["fshape"] = self._fshape(shape, self.a_gran)
+                self._add_act(lc["name"] + ".fa", tuple(lc["fshape"]), lc.get("signed", True))
+            elif kind == "dense":
+                din = int(np.prod(shape))
+                dout = lc["dout"]
+                lc["din"] = din
+                n = lc["name"]
+                self._add_param(n + ".w", (din, dout), "he")
+                self._add_param(n + ".b", (dout,), "zero")
+                self._add_fbit(n + ".fw", self._fshape((din, dout), self.w_gran), self.f_init_w)
+                self._add_fbit(n + ".fb", self._fshape((dout,), self.w_gran), self.f_init_w)
+                lc["fshape"] = self._fshape((dout,), self.a_gran)
+                signed = lc.get("act", "linear") != "relu"
+                self._add_act(n + ".fa", tuple(lc["fshape"]), signed)
+                shape = (dout,)
+            elif kind == "conv2d":
+                h, w, cin = shape
+                k, cout = lc["k"], lc["cout"]
+                lc["cin"] = cin
+                n = lc["name"]
+                self._add_param(n + ".w", (k, k, cin, cout), "he")
+                self._add_param(n + ".b", (cout,), "zero")
+                self._add_fbit(n + ".fw", self._fshape((k, k, cin, cout), self.w_gran), self.f_init_w)
+                self._add_fbit(n + ".fb", self._fshape((cout,), self.w_gran), self.f_init_w)
+                ho, wo = h - k + 1, w - k + 1  # VALID padding
+                # stream-IO: activations quantized layer-wise (scalar f)
+                lc["fshape"] = self._fshape((ho, wo, cout), self.a_gran)
+                signed = lc.get("act", "linear") != "relu"
+                self._add_act(n + ".fa", tuple(lc["fshape"]), signed)
+                shape = (ho, wo, cout)
+                lc["out_shape"] = list(shape)
+            elif kind == "maxpool2":
+                h, w, c = shape
+                shape = (h // 2, w // 2, c)
+                lc["out_shape"] = list(shape)
+            elif kind == "flatten":
+                shape = (int(np.prod(shape)),)
+            else:
+                raise ValueError(f"unknown layer kind {kind}")
+            self.layers.append(lc)
+        self.output_dim = int(np.prod(shape))
+
+    # ------------------------------------------------------------------
+    def init_tensors(self, seed: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(seed)
+        out: dict[str, np.ndarray] = {}
+        for p in self.params:
+            shp = p["shape"]
+            if p["init"] == "he":
+                fan_in = int(np.prod(shp[:-1])) if len(shp) > 1 else shp[0]
+                out[p["name"]] = rng.normal(0.0, (2.0 / fan_in) ** 0.5, shp).astype(np.float32)
+            else:
+                out[p["name"]] = np.zeros(shp, np.float32)
+        for fb in self.fbits:
+            out[fb["name"]] = np.full(fb["shape"], fb["init"], np.float32)
+        return out
+
+    # ------------------------------------------------------------------
+    def forward(
+        self,
+        t: dict[str, jnp.ndarray],
+        stats: dict[str, tuple[jnp.ndarray, jnp.ndarray]],
+        x: jnp.ndarray,
+        train: bool,
+    ):
+        """Quantized forward pass.
+
+        t: all named tensors (params + fbits). stats: per act-group
+        (amin, amax) running extremes of the *quantized* values. Returns
+        (logits, aux) with aux = dict(ebops, l1, new_stats, sparsity_num,
+        sparsity_den).
+        """
+        ebops_total = jnp.float32(0.0)
+        l1_total = jnp.float32(0.0)
+        sp_num = jnp.float32(0.0)
+        sp_den = 0.0
+        new_stats: dict[str, tuple[jnp.ndarray, jnp.ndarray]] = {}
+
+        # bits of the activation group currently feeding the next layer,
+        # shaped to broadcast over its feature dims (or scalar).
+        in_bits: jnp.ndarray | None = None
+
+        def _act_update(name: str, fshape, signed: bool, xq: jnp.ndarray, f_fp):
+            """Record quantized extremes + compute this group's bits."""
+            nonlocal l1_total
+            red_axes = (
+                tuple(range(xq.ndim))  # scalar group: reduce everything
+                if fshape == ()
+                else tuple(range(xq.ndim - len(fshape)))
+            )
+            bmin = jnp.min(xq, axis=red_axes)
+            bmax = jnp.max(xq, axis=red_axes)
+            omin, omax = stats[name]
+            nmin = jnp.minimum(omin.reshape(bmin.shape), sg(bmin))
+            nmax = jnp.maximum(omax.reshape(bmax.shape), sg(bmax))
+            new_stats[name] = (nmin, nmax)
+            s = group_norm_scale(xq.size // (x.shape[0] if xq.ndim > len(fshape) else 1), max(1, int(np.prod(fshape)) if fshape else 1))
+            f_reg = use_f(grad_scale(f_fp, s))
+            bits = ebops.act_bits(nmin, nmax, f_reg, signed)
+            l1_total = l1_total + jnp.sum(bits)
+            return bits
+
+        def _weight_bits(wq, f_fp, wshape):
+            nonlocal l1_total, sp_num, sp_den
+            s = group_norm_scale(int(np.prod(wshape)), max(1, f_fp.size))
+            f_reg = use_f(grad_scale(f_fp, s))
+            bw = ebops.weight_bits(wq, jnp.broadcast_to(f_reg, wq.shape))
+            l1_total = l1_total + jnp.sum(bw)
+            sp_num = sp_num + jnp.sum(sg(wq) == 0.0)
+            sp_den = sp_den + float(np.prod(wshape))
+            return bw
+
+        h = x
+        for lc in self.layers:
+            kind = lc["kind"]
+            n = lc.get("name", "")
+            if kind == "input_quant":
+                hq = quantize(h, t[n + ".fa"])
+                in_bits = _act_update(n + ".fa", tuple(lc["fshape"]), lc.get("signed", True), hq, t[n + ".fa"])
+                h = hq
+            elif kind == "dense":
+                wq = quantize(t[n + ".w"], t[n + ".fw"])
+                bq = quantize(t[n + ".b"], t[n + ".fb"])
+                bw_w = _weight_bits(wq, t[n + ".fw"], (lc["din"], lc["dout"]))
+                bw_b = ebops.weight_bits(bq, jnp.broadcast_to(use_f(t[n + ".fb"]), bq.shape))
+                l1_total = l1_total + jnp.sum(bw_b)
+                # EBOPs: input bits x weight bits over every multiplier
+                bw_a = jnp.broadcast_to(in_bits, (lc["din"],))
+                ebops_total = ebops_total + ebops.dense_ebops(bw_a, bw_w)
+                h = h.reshape(h.shape[0], -1)
+                z = qmatmul(h, wq) + bq
+                if lc.get("act") == "relu":
+                    z = jax.nn.relu(z)
+                hq = quantize(z, t[n + ".fa"])
+                in_bits = _act_update(
+                    n + ".fa", tuple(lc["fshape"]), lc.get("act", "linear") != "relu", hq, t[n + ".fa"]
+                )
+                h = hq
+            elif kind == "conv2d":
+                wq = quantize(t[n + ".w"], t[n + ".fw"])
+                bq = quantize(t[n + ".b"], t[n + ".fb"])
+                k, cin, cout = lc["k"], lc["cin"], lc["cout"]
+                bw_w = _weight_bits(wq, t[n + ".fw"], (k, k, cin, cout))
+                bw_b = ebops.weight_bits(bq, jnp.broadcast_to(use_f(t[n + ".fb"]), bq.shape))
+                l1_total = l1_total + jnp.sum(bw_b)
+                bw_a_cin = jnp.broadcast_to(in_bits, (cin,)) if in_bits is not None and in_bits.ndim <= 1 else jnp.max(in_bits, axis=(0, 1))
+                ebops_total = ebops_total + ebops.conv2d_ebops(bw_a_cin, bw_w)
+                z = jax.lax.conv_general_dilated(
+                    h, wq, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+                ) + bq
+                if lc.get("act") == "relu":
+                    z = jax.nn.relu(z)
+                hq = quantize(z, t[n + ".fa"])
+                in_bits = _act_update(
+                    n + ".fa", tuple(lc["fshape"]), lc.get("act", "linear") != "relu", hq, t[n + ".fa"]
+                )
+                h = hq
+            elif kind == "maxpool2":
+                # max of quantized values is exactly representable in the
+                # same fixed-point type: no re-quantization, stats/bits of
+                # the incoming group remain valid (hls4ml semantics).
+                b, hh, ww, c = h.shape
+                h = h[:, : hh - hh % 2, : ww - ww % 2, :]
+                h = jnp.max(h.reshape(b, hh // 2, 2, ww // 2, 2, c), axis=(2, 4))
+            elif kind == "flatten":
+                h = h.reshape(h.shape[0], -1)
+                if in_bits is not None and in_bits.ndim > 1:
+                    in_bits = in_bits.reshape(-1)
+        aux = {
+            "ebops": ebops_total,
+            "l1": l1_total,
+            "new_stats": new_stats,
+            "sparsity": sp_num / max(sp_den, 1.0),
+        }
+        return h, aux

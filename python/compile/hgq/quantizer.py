@@ -1,0 +1,55 @@
+"""Trainable-bitwidth quantizer plumbing (paper §III.D).
+
+The raw trainable tensor is the *floating point* fractional bitwidth
+``f_fp`` per parameter group. On every use it is clipped and STE-rounded
+(Eq. 6) to an integer ``f`` which the Pallas fake-quantizer consumes.
+
+``grad_scale`` implements the paper's 1/sqrt(||g||) normalization of the
+*regularization* gradient (§III.D.3): applied to ``f`` only on the
+EBOPs-bar / L1 path, so the loss-surrogate gradient is untouched.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import hgq_quant, ref
+
+F_MIN = ref.F_MIN
+F_MAX = ref.F_MAX
+
+
+def use_f(f_fp: jnp.ndarray) -> jnp.ndarray:
+    """Clip + STE-round the stored float bitwidth to its integer value."""
+    return ref.ste_round(jnp.clip(f_fp, F_MIN, F_MAX))
+
+
+def quantize(x: jnp.ndarray, f_fp: jnp.ndarray) -> jnp.ndarray:
+    """HGQ fake-quantization of ``x`` with trainable bitwidth ``f_fp``.
+
+    Gradients: STE to ``x``; Eq. 15 surrogate (+ln2*delta) to ``f_fp``.
+    """
+    return hgq_quant.hgq_quantize(x, use_f(f_fp))
+
+
+@jax.custom_vjp
+def grad_scale(x: jnp.ndarray, s: float) -> jnp.ndarray:
+    return x
+
+
+def _gs_fwd(x, s):
+    return x, s
+
+
+def _gs_bwd(s, g):
+    return g * s, None
+
+
+grad_scale.defvjp(_gs_fwd, _gs_bwd)
+
+
+def group_norm_scale(x_size: int, f_size: int) -> float:
+    """1/sqrt(||g||) with ||g|| = values sharing one bitwidth."""
+    n = max(1, x_size // max(1, f_size))
+    return float(n) ** -0.5

@@ -1,0 +1,190 @@
+"""Packed-state train/forward/calib step builders (L2 -> AOT).
+
+The rust coordinator is model-agnostic: every artifact obeys the packed
+state protocol of DESIGN.md. The full training state is ONE flat f32
+vector:
+
+    [ params | fbits | adam_m | adam_v | amin | amax | step ]
+      `------trainables------'
+
+and the lowered functions are
+
+    train_step(state, x, y, beta, gamma, lr, f_lr)
+        -> (state', loss, metric, ebops_bar, sparsity)
+    forward(state, x)          -> logits          (quantized inference)
+    calib(state, x)            -> (amin_b, amax_b) per-element extremes
+                                  of the quantized activations (Eq. 3
+                                  calibration, reduced over batches on
+                                  the rust side)
+
+Optimization is Adam with bias correction; the bitwidth tensors use an
+effective learning rate lr * f_lr (f_lr = 0 freezes bitwidths — that is
+exactly the uniform/static-quantization baseline, Q6/Qf* style).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .net import Net
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-7
+
+
+class StateSpec:
+    """Offsets of every named tensor inside the packed state vector."""
+
+    def __init__(self, net: Net):
+        self.net = net
+        self.entries: list[dict[str, Any]] = []  # name, shape, offset, seg
+        off = 0
+
+        def add(name, shape, seg):
+            nonlocal off
+            size = int(np.prod(shape)) if shape else 1
+            self.entries.append(
+                {"name": name, "shape": list(shape), "offset": off, "size": size, "seg": seg}
+            )
+            off += size
+
+        for p in net.params:
+            add(p["name"], p["shape"], "param")
+        self.n_params = off
+        for f in net.fbits:
+            add(f["name"], f["shape"], "fbit")
+        self.n_train = off
+        add("adam.m", (self.n_train,), "opt")
+        add("adam.v", (self.n_train,), "opt")
+        for g in net.act_groups:
+            add(g["name"] + ".amin", tuple(g["fshape"]), "stat")
+        for g in net.act_groups:
+            add(g["name"] + ".amax", tuple(g["fshape"]), "stat")
+        add("step", (), "opt")
+        self.total = off
+        self._index = {e["name"]: e for e in self.entries}
+
+    def slice(self, state: jnp.ndarray, name: str) -> jnp.ndarray:
+        e = self._index[name]
+        return state[e["offset"] : e["offset"] + e["size"]].reshape(e["shape"])
+
+    def offset(self, name: str) -> int:
+        return self._index[name]["offset"]
+
+    # ---------------- packing helpers (numpy, build time) -------------
+    def init_state(self, seed: int) -> np.ndarray:
+        t = self.net.init_tensors(seed)
+        out = np.zeros(self.total, np.float32)
+        for e in self.entries:
+            if e["name"] in t:
+                out[e["offset"] : e["offset"] + e["size"]] = t[e["name"]].reshape(-1)
+        return out
+
+    def unpack_tensors(self, state: jnp.ndarray) -> dict[str, jnp.ndarray]:
+        out = {}
+        for e in self.entries:
+            if e["seg"] in ("param", "fbit"):
+                out[e["name"]] = self.slice(state, e["name"])
+        return out
+
+    def unpack_stats(self, state: jnp.ndarray):
+        stats = {}
+        for g in self.net.act_groups:
+            stats[g["name"]] = (
+                self.slice(state, g["name"] + ".amin"),
+                self.slice(state, g["name"] + ".amax"),
+            )
+        return stats
+
+
+def _task_loss(net: Net, logits: jnp.ndarray, y: jnp.ndarray):
+    """Returns (base_loss, metric). cls: (CE, accuracy); reg: (MSE, MSE)."""
+    if net.task == "cls":
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+        acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return ce, acc
+    err = logits[:, 0] - y
+    mse = jnp.mean(err * err)
+    return mse, jnp.sqrt(mse)
+
+
+def make_train_step(net: Net, spec: StateSpec):
+    is_fbit = np.zeros(spec.n_train, np.float32)
+    is_fbit[spec.n_params : spec.n_train] = 1.0
+    is_fbit = jnp.asarray(is_fbit)
+
+    def train_step(state, x, y, beta, gamma, lr, f_lr):
+        trainables = state[: spec.n_train]
+        m = spec.slice(state, "adam.m")
+        v = spec.slice(state, "adam.v")
+        step = spec.slice(state, "step")
+
+        stats = spec.unpack_stats(state)
+
+        def loss_fn(tr):
+            full = jnp.concatenate([tr, state[spec.n_train :]])
+            t = spec.unpack_tensors(full)
+            logits, aux = net.forward(t, stats, x, train=True)
+            base, metric = _task_loss(net, logits, y)
+            loss = base + beta * aux["ebops"] + gamma * aux["l1"]
+            return loss, (metric, aux)
+
+        (loss, (metric, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainables)
+
+        # Adam with per-segment effective lr (bitwidths: lr * f_lr)
+        step1 = step + 1.0
+        m1 = ADAM_B1 * m + (1 - ADAM_B1) * grads
+        v1 = ADAM_B2 * v + (1 - ADAM_B2) * grads * grads
+        mh = m1 / (1 - ADAM_B1**step1)
+        vh = v1 / (1 - ADAM_B2**step1)
+        lr_eff = lr * (1.0 + is_fbit * (f_lr - 1.0))
+        tr1 = trainables - lr_eff * mh / (jnp.sqrt(vh) + ADAM_EPS)
+
+        # re-pack state: stats updated from this batch's extremes
+        pieces = [tr1, m1.reshape(-1), v1.reshape(-1)]
+        for g in net.act_groups:
+            pieces.append(aux["new_stats"][g["name"]][0].reshape(-1))
+        for g in net.act_groups:
+            pieces.append(aux["new_stats"][g["name"]][1].reshape(-1))
+        pieces.append(step1.reshape(1))
+        state1 = jnp.concatenate(pieces)
+        return state1, loss, metric, aux["ebops"], aux["sparsity"]
+
+    return train_step
+
+
+def make_forward(net: Net, spec: StateSpec):
+    def forward(state, x):
+        t = spec.unpack_tensors(state)
+        stats = spec.unpack_stats(state)
+        logits, _ = net.forward(t, stats, x, train=False)
+        return logits
+
+    return forward
+
+
+def make_calib(net: Net, spec: StateSpec):
+    """Per-batch quantized activation extremes, concatenated in act-group
+    order (same layout as the amin/amax state segments)."""
+
+    def calib(state, x):
+        t = spec.unpack_tensors(state)
+        # fresh stats so the output reflects THIS batch only
+        stats = {}
+        for g in net.act_groups:
+            z = jnp.zeros(g["fshape"], jnp.float32)
+            stats[g["name"]] = (z, z)
+        _, aux = net.forward(t, stats, x, train=False)
+        amin = jnp.concatenate(
+            [aux["new_stats"][g["name"]][0].reshape(-1) for g in net.act_groups]
+        )
+        amax = jnp.concatenate(
+            [aux["new_stats"][g["name"]][1].reshape(-1) for g in net.act_groups]
+        )
+        return amin, amax
+
+    return calib

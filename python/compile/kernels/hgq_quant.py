@@ -1,0 +1,158 @@
+"""L1 Pallas kernels: the HGQ fake-quantizer (Algorithm 1 of the paper).
+
+The quantizer is the paper's compute contribution — every weight and
+every activation element passes through it on every training step, with a
+*trainable* fractional bitwidth ``f`` per parameter group.
+
+Forward (Eq. 4, no clipping during training):
+    x^q = floor(x * 2^f + 1/2) * 2^-f
+
+Backward (STE + Eq. 15 surrogate):
+    dL/dx = g
+    dL/df = g * ln2 * delta,   delta = x - x^q
+
+Both passes are Pallas kernels, stitched together with ``jax.custom_vjp``
+(autodiff *through* a pallas_call primitive is not relied upon). Kernels
+are lowered with ``interpret=True`` so the AOT HLO runs on the CPU PJRT
+client; on a real TPU the same BlockSpecs tile the arrays into VMEM in
+(8, 128)-aligned blocks (see DESIGN.md §Hardware adaptation).
+
+Group semantics: ``f`` must broadcast against ``x`` (per-parameter:
+``f.shape == x.shape``; per-layer: ``f.shape == ()``; per-neuron:
+trailing feature dims). The VJP sum-reduces ``df`` over the broadcast
+axes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LN2 = ref.LN2
+
+# Last-dim lane target on TPU; also the flattened block width used here.
+_LANES = 128
+# Rows per block: 8 sublanes * 64 — a (512, 128) f32 block is 256 KiB of
+# VMEM, comfortably double-bufferable.
+_BLOCK_ROWS = 512
+
+
+def _pad_to_2d(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    """Flatten to (rows, _LANES), zero-padded. Returns (x2d, n_valid)."""
+    n = x.size
+    rows = max(1, -(-n // _LANES))
+    pad = rows * _LANES - n
+    x2 = jnp.pad(x.reshape(-1), (0, pad)).reshape(rows, _LANES)
+    return x2, n
+
+
+def _quant_fwd_kernel(x_ref, f_ref, xq_ref, delta_ref):
+    x = x_ref[...]
+    scale = jnp.exp2(f_ref[...])
+    xq = jnp.floor(x * scale + 0.5) / scale
+    xq_ref[...] = xq
+    delta_ref[...] = x - xq
+
+
+def _quant_bwd_kernel(delta_ref, g_ref, dx_ref, df_ref):
+    g = g_ref[...]
+    dx_ref[...] = g
+    df_ref[...] = g * LN2 * delta_ref[...]
+
+
+def _block_rows(rows: int) -> int:
+    if rows % _BLOCK_ROWS == 0:
+        return _BLOCK_ROWS
+    return rows  # small tensors: single block
+
+
+def _pallas_quant_fwd(x2: jnp.ndarray, f2: jnp.ndarray):
+    rows = x2.shape[0]
+    br = _block_rows(rows)
+    spec = pl.BlockSpec((br, _LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _quant_fwd_kernel,
+        grid=(rows // br,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+            jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        ],
+        interpret=True,
+    )(x2, f2)
+
+
+def _pallas_quant_bwd(delta2: jnp.ndarray, g2: jnp.ndarray):
+    rows = delta2.shape[0]
+    br = _block_rows(rows)
+    spec = pl.BlockSpec((br, _LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _quant_bwd_kernel,
+        grid=(rows // br,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(delta2.shape, delta2.dtype),
+            jax.ShapeDtypeStruct(delta2.shape, delta2.dtype),
+        ],
+        interpret=True,
+    )(delta2, g2)
+
+
+def _reduce_to_shape(g: jnp.ndarray, shape: tuple[int, ...]) -> jnp.ndarray:
+    """Sum-reduce ``g`` (shape of x) down to the broadcast shape of f."""
+    if g.shape == tuple(shape):
+        return g
+    extra = g.ndim - len(shape)
+    if extra > 0:
+        g = g.sum(axis=tuple(range(extra)))
+    axes = tuple(i for i, (gs, fs) in enumerate(zip(g.shape, shape)) if fs == 1 and gs != 1)
+    if axes:
+        g = g.sum(axis=axes, keepdims=True)
+    return g.reshape(shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def hgq_quantize(x: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize ``x`` with integer fractional bitwidth ``f``.
+
+    ``f`` is assumed already STE-rounded and clipped by the caller (see
+    hgq.quantizer). Differentiable in both arguments per Algorithm 1.
+    """
+    xq, _ = _fwd_impl(x, f)
+    return xq
+
+
+def _fwd_impl(x, f):
+    fb = jnp.broadcast_to(f, x.shape).astype(x.dtype)
+    x2, n = _pad_to_2d(x)
+    f2, _ = _pad_to_2d(fb)
+    xq2, delta2 = _pallas_quant_fwd(x2, f2)
+    xq = xq2.reshape(-1)[:n].reshape(x.shape)
+    delta = delta2.reshape(-1)[:n].reshape(x.shape)
+    return xq, delta
+
+
+def _hgq_quantize_fwd(x, f):
+    xq, delta = _fwd_impl(x, f)
+    return xq, (delta, f.shape)
+
+
+def _hgq_quantize_bwd(res, g):
+    delta, f_shape = res
+    d2, n = _pad_to_2d(delta)
+    g2, _ = _pad_to_2d(g)
+    dx2, df2 = _pallas_quant_bwd(d2, g2)
+    dx = dx2.reshape(-1)[:n].reshape(g.shape)
+    df_elem = df2.reshape(-1)[:n].reshape(g.shape)
+    df = _reduce_to_shape(df_elem, tuple(f_shape)).astype(g.dtype)
+    return dx, df
+
+
+hgq_quantize.defvjp(_hgq_quantize_fwd, _hgq_quantize_bwd)

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: blocked matmul for the HDense forward path.
+
+``y = x @ w`` over f32 with MXU-shaped blocking: the grid walks M in
+``_BLOCK_M`` tiles; K and N stay resident (the paper's layers are narrow
+— K, N <= a few hundred — so a whole (K, N) weight panel fits VMEM;
+footprint analysis in DESIGN.md §Perf).
+
+Backward is standard dots (dx = g @ w.T, dw = x.T @ g) in plain jnp via
+custom_vjp — the forward is the deployment-relevant hot path.
+
+Lowered with interpret=True (CPU PJRT); on TPU the same BlockSpec maps to
+(128, K) x (K, N) MXU passes with f32 accumulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_M = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pallas_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = _BLOCK_M if m % _BLOCK_M == 0 else m
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Pallas-forward matmul with jnp backward."""
+    return _pallas_matmul(x, w)
+
+
+def _qmatmul_fwd(x, w):
+    return _pallas_matmul(x, w), (x, w)
+
+
+def _qmatmul_bwd(res, g):
+    x, w = res
+    return g @ w.T, x.T @ g
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)

@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground truth the Pallas kernels are tested against
+(python/tests/test_kernel.py, hypothesis sweeps). They also document the
+exact numerics of the paper:
+
+  Eq. (4):   f^q(x) = floor(x * 2^f + eps) * 2^-f        (eps = 1/2)
+  Eq. (15):  d(delta)/d(f) <- -ln2 * delta   =>  d(x^q)/d(f) = +ln2 * delta
+  STE:       d(x^q)/d(x) = 1
+
+with delta = x - f^q(x) the (signed) quantization error.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LN2 = 0.6931471805599453
+
+# Trainable fractional bitwidths are clipped to this range before use.
+# The lower bound allows aggressive pruning (2^-(-8) step = 256), the
+# upper bound keeps 2^f representable comfortably in f32.
+F_MIN = -8.0
+F_MAX = 12.0
+
+
+def round_half_up(x: jnp.ndarray) -> jnp.ndarray:
+    """[x] = floor(x + 1/2): midpoint round-up, the paper's eps=1/2."""
+    return jnp.floor(x + 0.5)
+
+
+def ste_round(f: jnp.ndarray) -> jnp.ndarray:
+    """Integer bitwidth in the forward pass, identity in the backward."""
+    import jax
+
+    return f + jax.lax.stop_gradient(round_half_up(f) - f)
+
+
+def quantize_fwd(x: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (4) forward value, f already integer (broadcasts against x)."""
+    scale = jnp.exp2(f)
+    return round_half_up(x * scale) / scale
+
+
+def quantize_delta(x: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
+    """Signed quantization error delta_f = x - f^q(x)."""
+    return x - quantize_fwd(x, f)
+
+
+def quantize_bwd(delta: jnp.ndarray, g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Backward oracle.
+
+    Returns (dL/dx_elem, dL/df_elem) *element-wise*; reduction of df over
+    broadcast axes is the caller's job (the custom_vjp wrapper).
+      dx = g                      (STE)
+      df = g * ln2 * delta        (x^q = x - delta, d delta/df = -ln2*delta)
+    """
+    return g, g * LN2 * delta
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the blocked Pallas matmul: plain f32 dot."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,130 @@
+"""The paper's three evaluation models (L2), in HGQ and baseline
+granularities (§V).
+
+  jets  — 16 -> 64 -> 32 -> 32 -> 5 MLP (jet tagging, [36]); fully
+          unrolled, per-parameter weights + per-neuron activations.
+  muon  — multistage MLP on 3 stations of 3x50 binary strips ([65]):
+          per-station encoders -> combiner -> scalar angle (mrad).
+  svhn  — LeNet-like CNN ([64]) on 32x32x3, stream IO: per-parameter
+          weights, LAYER-wise activations (paper §V.C limitation).
+
+Granularity suffixes: `_pp` per-parameter HGQ, `_lw` layer-wise
+(QKeras-style baseline; combined with f_lr=0 it is the uniform Q*-bit
+baseline family).
+"""
+
+from __future__ import annotations
+
+from .hgq.net import Net
+
+# batch sizes are baked into the AOT shapes; the rust side pads batches.
+BATCH = {"jets": 512, "muon": 512, "svhn": 128}
+
+
+def _jets_layers():
+    return [
+        {"kind": "input_quant", "signed": True},
+        {"kind": "dense", "name": "d0", "dout": 64, "act": "relu"},
+        {"kind": "dense", "name": "d1", "dout": 32, "act": "relu"},
+        {"kind": "dense", "name": "d2", "dout": 32, "act": "relu"},
+        {"kind": "dense", "name": "d3", "dout": 5, "act": "linear"},
+    ]
+
+
+def _muon_layers():
+    # stations are concatenated on the feature axis by the data loader;
+    # the multistage structure of [65] is approximated by a wide first
+    # stage (station mixing) + regression head.
+    return [
+        {"kind": "input_quant", "signed": False},  # binary hit maps
+        {"kind": "dense", "name": "s0", "dout": 48, "act": "relu"},
+        {"kind": "dense", "name": "s1", "dout": 32, "act": "relu"},
+        {"kind": "dense", "name": "head", "dout": 1, "act": "linear"},
+    ]
+
+
+def _svhn_layers():
+    return [
+        {"kind": "input_quant", "signed": False},  # pixel values in [0,1)
+        {"kind": "conv2d", "name": "c0", "cout": 16, "k": 3, "act": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "conv2d", "name": "c1", "cout": 16, "k": 3, "act": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "conv2d", "name": "c2", "cout": 24, "k": 3, "act": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "flatten"},
+        {"kind": "dense", "name": "d0", "dout": 42, "act": "relu"},
+        {"kind": "dense", "name": "d1", "dout": 64, "act": "relu"},
+        {"kind": "dense", "name": "d2", "dout": 10, "act": "linear"},
+    ]
+
+
+CONFIGS: dict[str, dict] = {
+    # --- jet tagging (Table I / Fig. III): f_init 2 per the paper ------
+    "jets_pp": {
+        "name": "jets_pp",
+        "task": "cls",
+        "input_shape": [16],
+        "layers": _jets_layers(),
+        "w_gran": "element",
+        "a_gran": "element",
+        "f_init_w": 2.0,
+        "f_init_a": 2.0,
+        "batch": BATCH["jets"],
+        "y_dtype": "i32",
+    },
+    "jets_lw": {
+        "name": "jets_lw",
+        "task": "cls",
+        "input_shape": [16],
+        "layers": _jets_layers(),
+        "w_gran": "layer",
+        "a_gran": "layer",
+        "f_init_w": 6.0,
+        "f_init_a": 6.0,
+        "batch": BATCH["jets"],
+        "y_dtype": "i32",
+    },
+    # --- muon tracker (Table III / Fig. V): f_init 6 -------------------
+    "muon_pp": {
+        "name": "muon_pp",
+        "task": "reg",
+        "input_shape": [450],
+        "layers": _muon_layers(),
+        "w_gran": "element",
+        "a_gran": "element",
+        "f_init_w": 6.0,
+        "f_init_a": 6.0,
+        "batch": BATCH["muon"],
+        "y_dtype": "f32",
+    },
+    "muon_lw": {
+        "name": "muon_lw",
+        "task": "reg",
+        "input_shape": [450],
+        "layers": _muon_layers(),
+        "w_gran": "layer",
+        "a_gran": "layer",
+        "f_init_w": 6.0,
+        "f_init_a": 6.0,
+        "batch": BATCH["muon"],
+        "y_dtype": "f32",
+    },
+    # --- SVHN classifier (Table II / Fig. IV): stream IO ---------------
+    "svhn_stream": {
+        "name": "svhn_stream",
+        "task": "cls",
+        "input_shape": [32, 32, 3],
+        "layers": _svhn_layers(),
+        "w_gran": "element",
+        "a_gran": "layer",
+        "f_init_w": 6.0,
+        "f_init_a": 6.0,
+        "batch": BATCH["svhn"],
+        "y_dtype": "i32",
+    },
+}
+
+
+def build(name: str) -> Net:
+    return Net(CONFIGS[name])

@@ -1,0 +1,85 @@
+"""AOT lowering contract tests — including the regression guard for the
+large-constant elision bug: `as_hlo_text()` defaults to printing big
+literals as `constant({...})`, which the downstream XLA 0.5.1 text
+parser silently mis-parses (observed: the per-segment learning-rate
+mask came back wrong, disabling f_lr and beta on the rust side).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.aot import _spec, to_hlo_text
+from compile.hgq.train import StateSpec
+
+
+def test_hlo_text_never_elides_constants():
+    # a function with a large closed-over constant
+    big = jnp.asarray(np.arange(5000, dtype=np.float32))
+
+    def fn(x):
+        return (x * big,)
+
+    lowered = jax.jit(fn).lower(_spec((5000,)))
+    text = to_hlo_text(lowered)
+    assert "{...}" not in text
+    assert "ENTRY" in text
+
+
+def test_hlo_text_scalar_params_keep_positions():
+    def fn(a, b, c, d):
+        return (c * 2.0, d * 3.0, a * 5.0, b * 7.0)
+
+    lowered = jax.jit(fn).lower(_spec(()), _spec(()), _spec(()), _spec(()))
+    text = to_hlo_text(lowered)
+    # all four parameters present with explicit indices
+    for i in range(4):
+        assert f"parameter({i})" in text
+
+
+@pytest.mark.parametrize("name", ["jets_pp", "svhn_stream"])
+def test_state_spec_matches_meta_contract(name):
+    """StateSpec layout drives both init.bin and meta.json; the segments
+    must tile the state exactly and keep the params < fbits < opt order
+    the rust ModelMeta/baselines code assumes."""
+    net = model_lib.build(name)
+    spec = StateSpec(net)
+    off = 0
+    segs = []
+    for e in spec.entries:
+        assert e["offset"] == off
+        off += e["size"]
+        segs.append(e["seg"])
+    assert off == spec.total
+    assert segs[-1] == "opt"  # step counter
+    first_fbit = segs.index("fbit")
+    assert set(segs[:first_fbit]) == {"param"}
+    # m/v segments exactly cover the trainables
+    m = next(e for e in spec.entries if e["name"] == "adam.m")
+    assert m["size"] == spec.n_train
+
+
+def test_artifacts_on_disk_are_consistent(tmp_path=None):
+    """If artifacts/ exists (built by make artifacts), its meta.json and
+    init.bin must agree with the in-repo model definitions."""
+    root = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    if not (root / "jets_pp" / "meta.json").exists():
+        pytest.skip("artifacts not built")
+    for name in model_lib.CONFIGS:
+        d = root / name
+        meta = json.loads((d / "meta.json").read_text())
+        net = model_lib.build(name)
+        spec = StateSpec(net)
+        assert meta["state_size"] == spec.total, name
+        assert meta["n_params"] == spec.n_params, name
+        raw = (d / "init.bin").read_bytes()
+        assert len(raw) == spec.total * 4, name
+        hlo = (d / "train.hlo.txt").read_text()
+        assert "{...}" not in hlo, f"{name}: elided constants in artifact"

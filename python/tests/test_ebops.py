@@ -1,0 +1,93 @@
+"""EBOPs-bar estimator unit tests (paper §III.C / §III.D.2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.hgq import ebops
+
+
+def test_int_bits_from_minmax_eq3():
+    # vmax = 3.0 -> floor(log2 3)+1 = 2; vmin = -4 -> ceil(log2 4) = 2
+    i = ebops.int_bits_from_minmax(jnp.float32(-4.0), jnp.float32(3.0))
+    assert float(i) == 2.0
+    # pure positive: vmax = 8 -> floor(3)+1 = 4
+    i = ebops.int_bits_from_minmax(jnp.float32(0.0), jnp.float32(8.0))
+    assert float(i) == 4.0
+    # pure negative bound -5 -> ceil(log2 5) = 3
+    i = ebops.int_bits_from_minmax(jnp.float32(-5.0), jnp.float32(0.0))
+    assert float(i) == 3.0
+    # dead group
+    i = ebops.int_bits_from_minmax(jnp.float32(0.0), jnp.float32(0.0))
+    assert float(i) < -1e8
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    m=st.integers(0, 2**16),
+    f=st.integers(-4, 10),
+)
+def test_weight_bits_counts_mantissa(m, f):
+    """bw(w = m * 2^-f) == number of bits of m above the LSB 2^-f."""
+    w = jnp.asarray([m * 2.0**-f], jnp.float32)
+    fa = jnp.asarray([float(f)], jnp.float32)
+    bw = float(ebops.weight_bits(w, fa)[0])
+    want = 0 if m == 0 else m.bit_length()
+    assert bw == want
+
+
+def test_weight_bits_gradient_flows_to_f():
+    """d bw/df == 1 for live weights, 0 for pruned ones."""
+    w = jnp.asarray([1.5, 0.0, -0.25], jnp.float32)
+    f = jnp.asarray([2.0, 2.0, 2.0], jnp.float32)
+    g = jax.grad(lambda ff: jnp.sum(ebops.weight_bits(w, ff)))(f)
+    np.testing.assert_allclose(np.asarray(g), [1.0, 0.0, 1.0])
+
+
+def test_act_bits_sign_bit():
+    vmin = jnp.float32(0.0)
+    vmax = jnp.float32(3.0)
+    f = jnp.float32(4.0)
+    unsigned = float(ebops.act_bits(vmin, vmax, f, signed=False))
+    signed = float(ebops.act_bits(jnp.float32(-3.0), vmax, f, signed=True))
+    assert unsigned == 2 + 4  # i'=2, f=4
+    assert signed == 2 + 1 + 4  # + sign bit
+
+
+def test_act_bits_dead_group_zero():
+    b = ebops.act_bits(jnp.float32(0.0), jnp.float32(0.0), jnp.float32(5.0), signed=False)
+    assert float(b) == 0.0
+
+
+def test_dense_ebops_shape_and_value():
+    bw_a = jnp.asarray([2.0, 3.0], jnp.float32)
+    bw_w = jnp.asarray([[1.0, 2.0], [3.0, 0.0]], jnp.float32)
+    # sum over (in, out): 2*1 + 2*2 + 3*3 + 3*0 = 15
+    assert float(ebops.dense_ebops(bw_a, bw_w)) == 15.0
+
+
+def test_conv2d_ebops_counts_multipliers_once():
+    """Stream IO: each kernel weight's multiplier counted once, no
+    spatial multiplicity."""
+    bw_a = jnp.asarray([2.0, 4.0], jnp.float32)  # per input channel
+    bw_w = jnp.ones((3, 3, 2, 5), jnp.float32)
+    got = float(ebops.conv2d_ebops(bw_a, bw_w))
+    assert got == 3 * 3 * 5 * (2.0 + 4.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    din=st.integers(1, 16),
+    dout=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_ebops_is_elementwise_product_sum(din, dout, seed):
+    rng = np.random.default_rng(seed)
+    bw_a = rng.integers(0, 8, din).astype(np.float32)
+    bw_w = rng.integers(0, 8, (din, dout)).astype(np.float32)
+    got = float(ebops.dense_ebops(jnp.asarray(bw_a), jnp.asarray(bw_w)))
+    want = float((bw_a[:, None] * bw_w).sum())
+    assert got == want

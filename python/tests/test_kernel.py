@@ -1,0 +1,156 @@
+"""L1 Pallas kernels vs pure-jnp oracle (ref.py) — the CORE correctness
+signal: hypothesis sweeps shapes/dtypes/bitwidths and asserts allclose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hgq_quant import hgq_quantize
+from compile.kernels.qmatmul import qmatmul
+
+SHAPES = [(1,), (7,), (128,), (129,), (16, 64), (3, 5, 7), (512, 16), (2, 2, 2, 2)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("f", [-2.0, 0.0, 3.0, 7.0])
+def test_quantize_matches_ref(shape, f):
+    rng = np.random.default_rng(abs(hash((shape, f))) % 2**32)
+    x = jnp.asarray(rng.normal(0, 4, shape).astype(np.float32))
+    fa = jnp.full(shape, f, jnp.float32)
+    got = hgq_quantize(x, fa)
+    want = ref.quantize_fwd(x, fa)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 400),
+    f=st.integers(-6, 10),
+    scale=st.floats(0.01, 64.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_hypothesis_sweep(n, f, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(0, scale, n)).astype(np.float32))
+    fa = jnp.full((n,), float(f), jnp.float32)
+    got = np.asarray(hgq_quantize(x, fa))
+    want = np.asarray(ref.quantize_fwd(x, fa))
+    np.testing.assert_array_equal(got, want)
+    # quantized values are exact multiples of 2^-f
+    steps = got * 2.0**f
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-3)
+
+
+def test_quantize_idempotent():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 2, (64,)).astype(np.float32))
+    f = jnp.full((64,), 4.0, jnp.float32)
+    xq = hgq_quantize(x, f)
+    xqq = hgq_quantize(xq, f)
+    np.testing.assert_array_equal(np.asarray(xq), np.asarray(xqq))
+
+
+def test_quantize_grad_x_is_ste():
+    """d/dx sum(quantize(x)) == 1 everywhere (straight-through)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 2, (37,)).astype(np.float32))
+    f = jnp.full((37,), 3.0, jnp.float32)
+    g = jax.grad(lambda xx: jnp.sum(hgq_quantize(xx, f)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(37), atol=0)
+
+
+def test_quantize_grad_f_is_surrogate():
+    """d/df quantize = +ln2 * delta (Eq. 15: d delta/df = -ln2*delta)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 2, (53,)).astype(np.float32))
+    f = jnp.full((53,), 2.0, jnp.float32)
+    g = jax.grad(lambda ff: jnp.sum(hgq_quantize(x, ff)))(f)
+    delta = np.asarray(ref.quantize_delta(x, f))
+    np.testing.assert_allclose(np.asarray(g), ref.LN2 * delta, rtol=1e-5, atol=1e-7)
+
+
+def test_quantize_grad_f_broadcast_reduces():
+    """Scalar f: df must be the SUM of element-wise surrogate grads."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 2, (8, 16)).astype(np.float32))
+    f = jnp.zeros((), jnp.float32) + 2.0
+    g = jax.grad(lambda ff: jnp.sum(hgq_quantize(x, ff)), argnums=0)(f)
+    delta = np.asarray(ref.quantize_delta(x, jnp.full(x.shape, 2.0)))
+    np.testing.assert_allclose(float(g), ref.LN2 * delta.sum(), rtol=1e-4)
+
+
+def test_quantize_weighted_cotangent():
+    """Arbitrary upstream cotangent is propagated, not just ones."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))
+    f = jnp.full((64,), 1.0, jnp.float32)
+    gx = jax.grad(lambda xx: jnp.sum(w * hgq_quantize(xx, f)))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(w), atol=0)
+    gf = jax.grad(lambda ff: jnp.sum(w * hgq_quantize(x, ff)))(f)
+    delta = np.asarray(ref.quantize_delta(x, f))
+    np.testing.assert_allclose(
+        np.asarray(gf), np.asarray(w) * ref.LN2 * delta, rtol=1e-5, atol=1e-7
+    )
+
+
+def test_pruning_at_low_f():
+    """|x| < 2^-(f+1) quantizes to exactly zero (paper §III.D.4)."""
+    x = jnp.asarray(np.linspace(-0.24, 0.24, 33).astype(np.float32))
+    f = jnp.full((33,), 1.0, jnp.float32)  # step 0.5, |x|<0.25 -> 0
+    xq = np.asarray(hgq_quantize(x, f))
+    np.testing.assert_array_equal(xq, np.zeros(33))
+
+
+def test_round_half_up_convention():
+    """eps = 1/2: exact midpoints round UP (also for negatives)."""
+    x = jnp.asarray([0.5, 1.5, -0.5, -1.5, 2.5], jnp.float32)
+    f = jnp.zeros((5,), jnp.float32)
+    xq = np.asarray(hgq_quantize(x, f))
+    np.testing.assert_array_equal(xq, [1.0, 2.0, 0.0, -1.0, 3.0])
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(1, 1, 1), (4, 16, 8), (128, 64, 32), (512, 16, 64), (384, 33, 7)]
+)
+def test_qmatmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (k, n)).astype(np.float32))
+    got = qmatmul(x, w)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_qmatmul_grads():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(0, 1, (8, 5)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (5, 3)).astype(np.float32))
+    gx = jax.grad(lambda a: jnp.sum(qmatmul(a, w) ** 2))(x)
+    gx_ref = jax.grad(lambda a: jnp.sum((a @ w) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref), rtol=1e-4, atol=1e-5)
+    gw = jax.grad(lambda b: jnp.sum(qmatmul(x, b) ** 2))(w)
+    gw_ref = jax.grad(lambda b: jnp.sum((x @ b) ** 2))(w)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (k, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(qmatmul(x, w)), np.asarray(ref.matmul(x, w)), rtol=1e-4, atol=1e-4
+    )

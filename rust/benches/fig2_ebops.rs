@@ -1,0 +1,77 @@
+//! Bench: Fig. II — EBOPs vs post-"place-and-route" resources across
+//! checkpoints of all three tasks, with the linear fit
+//! EBOPs ≈ a·LUT + b·DSP (the paper reports a ≈ 1, b ≈ 55 on Vivado;
+//! this regenerates the scatter + fit on our resource simulator).
+//!
+//!     cargo bench --bench fig2_ebops
+
+use std::path::PathBuf;
+
+use hgq::coordinator::experiment::{preset, run_hgq_sweep};
+use hgq::resource::linear_fit;
+use hgq::runtime::Runtime;
+use hgq::util::bench::{bench, black_box};
+
+fn main() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new().expect("pjrt");
+    let epochs = std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok());
+
+    println!("== Fig. II: EBOPs vs LUT + c*DSP across all tasks ==");
+    let mut points: Vec<(f64, f64, f64)> = Vec::new();
+    let mut rows = Vec::new();
+    for task in ["jets", "muon", "svhn"] {
+        let mut p = preset(task);
+        if task == "svhn" {
+            p.n_train = 2048;
+            p.n_eval = 512;
+        }
+        let e = epochs.or(Some(match task {
+            "jets" => 20,
+            "muon" => 12,
+            _ => 5,
+        }));
+        match run_hgq_sweep(&rt, &artifacts, &p, e, false) {
+            Ok((_, _, _, reports)) => {
+                for r in reports {
+                    points.push((
+                        r.resources.lut as f64,
+                        r.resources.dsp as f64,
+                        r.ebops as f64,
+                    ));
+                    rows.push(r);
+                }
+            }
+            Err(err) => eprintln!("{task}: {err}"),
+        }
+    }
+
+    let (a, b) = linear_fit(&points);
+    println!(
+        "\n{:<14} {:<8} {:>10} {:>10} {:>6} {:>12} {:>8}",
+        "model", "row", "EBOPs", "LUT", "DSP", "a*LUT+b*DSP", "ratio"
+    );
+    for r in &rows {
+        let fitted = a * r.resources.lut as f64 + b * r.resources.dsp as f64;
+        let ratio = if fitted > 0.0 { r.ebops as f64 / fitted } else { f64::NAN };
+        println!(
+            "{:<14} {:<8} {:>10} {:>10} {:>6} {:>12.0} {:>8.2}",
+            r.model, r.label, r.ebops, r.resources.lut, r.resources.dsp, fitted, ratio
+        );
+    }
+    println!("\nfit: EBOPs ~= {a:.3} * LUT + {b:.1} * DSP    (paper/Vivado: ~1 * LUT + 55 * DSP)");
+
+    // correlation quality (the figure's visual claim)
+    let mean_e = points.iter().map(|p| p.2).sum::<f64>() / points.len().max(1) as f64;
+    let ss_tot: f64 = points.iter().map(|p| (p.2 - mean_e).powi(2)).sum();
+    let ss_res: f64 =
+        points.iter().map(|p| (p.2 - (a * p.0 + b * p.1)).powi(2)).sum();
+    if ss_tot > 0.0 {
+        println!("R^2 of the linear relation: {:.4}", 1.0 - ss_res / ss_tot);
+    }
+
+    let s = bench("linear_fit over scatter", 10, 1000, || {
+        black_box(linear_fit(&points));
+    });
+    println!("\n{}", s.report());
+}

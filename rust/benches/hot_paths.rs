@@ -1,0 +1,100 @@
+//! Bench: micro-benchmarks of every substrate hot path (the §Perf
+//! targets in EXPERIMENTS.md track these numbers).
+//!
+//!     cargo bench --bench hot_paths
+
+use hgq::ebops::{dense_ebops, span_bits};
+use hgq::firmware::{ActQ, QuantWeights};
+use hgq::fixed::FixedSpec;
+use hgq::resource::{adder_tree, csd_nonzero_digits, dense_resources};
+use hgq::util::bench::{bench, black_box};
+use hgq::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    // ---- fixed-point quantization ----------------------------------
+    let spec = FixedSpec::new(true, 12, 4);
+    let xs: Vec<f64> = (0..4096).map(|_| rng.normal_scaled(0.0, 4.0)).collect();
+    let s = bench("fixed quantize 4k values", 20, 2000, || {
+        let mut acc = 0i64;
+        for &x in &xs {
+            acc = acc.wrapping_add(spec.quantize(x));
+        }
+        black_box(acc);
+    });
+    println!("{}   [{:.1} Mvals/s]", s.report(), s.per_sec(4096.0) / 1e6);
+
+    // ---- EBOPs span counting ----------------------------------------
+    let ms: Vec<i64> = (0..65536).map(|_| (rng.next_u64() & 0xFFFF) as i64 - 0x8000).collect();
+    let s = bench("span_bits 64k mantissas", 10, 1000, || {
+        let mut acc = 0u32;
+        for &m in &ms {
+            acc = acc.wrapping_add(span_bits(m));
+        }
+        black_box(acc);
+    });
+    println!("{}   [{:.1} Mvals/s]", s.report(), s.per_sec(65536.0) / 1e6);
+
+    // ---- exact EBOPs of a jets-size dense stack ----------------------
+    let w: Vec<i64> = (0..16 * 64).map(|_| (rng.next_u64() & 0xFF) as i64 - 128).collect();
+    let bits = vec![8u32; 16];
+    let s = bench("dense_ebops 16x64", 100, 5000, || {
+        black_box(dense_ebops(&w, 16, 64, &bits));
+    });
+    println!("{}", s.report());
+
+    // ---- CSD recoding ------------------------------------------------
+    let s = bench("csd_nonzero_digits 64k", 10, 500, || {
+        let mut acc = 0u32;
+        for &m in &ms {
+            acc = acc.wrapping_add(csd_nonzero_digits(m));
+        }
+        black_box(acc);
+    });
+    println!("{}   [{:.1} Mvals/s]", s.report(), s.per_sec(65536.0) / 1e6);
+
+    // ---- adder tree costing -----------------------------------------
+    let s = bench("adder_tree 512 terms", 100, 5000, || {
+        let mut widths: Vec<u32> = (0..512).map(|i| 8 + (i % 8) as u32).collect();
+        black_box(adder_tree(&mut widths));
+    });
+    println!("{}", s.report());
+
+    // ---- dense resource model (64-neuron layer) ----------------------
+    let wq = QuantWeights {
+        m: (0..16 * 64).map(|_| (rng.next_u64() & 0x3F) as i64 - 32).collect(),
+        frac: vec![4; 16 * 64],
+    };
+    let act = ActQ { scalar: true, specs: vec![FixedSpec::new(true, 8, 2)] };
+    let s = bench("dense_resources 16->64", 50, 2000, || {
+        black_box(dense_resources(16, 64, &wq, &act, &act));
+    });
+    println!("{}", s.report());
+
+    // ---- RNG / data generation ---------------------------------------
+    let s = bench("jets generate 4k samples", 3, 50, || {
+        black_box(hgq::data::jets::generate(7, 4096));
+    });
+    println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(4096.0));
+
+    let s = bench("rng normal 64k", 10, 500, || {
+        let mut r = Rng::new(1);
+        let mut acc = 0.0;
+        for _ in 0..65536 {
+            acc += r.normal();
+        }
+        black_box(acc);
+    });
+    println!("{}   [{:.1} Mvals/s]", s.report(), s.per_sec(65536.0) / 1e6);
+
+    // ---- JSON parse of a real meta.json ------------------------------
+    let meta_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/jets_pp/meta.json");
+    if let Ok(text) = std::fs::read_to_string(&meta_path) {
+        let s = bench("json parse jets meta.json", 10, 500, || {
+            black_box(hgq::util::json::Json::parse(&text).unwrap());
+        });
+        println!("{}   [{:.1} MiB/s]", s.report(), s.per_sec(text.len() as f64) / (1 << 20) as f64);
+    }
+}

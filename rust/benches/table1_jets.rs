@@ -1,0 +1,79 @@
+//! Bench: Table I / Fig. III (jet tagging) — regenerates the table rows
+//! at a reduced epoch budget and times the pipeline's hot paths
+//! (train step, quantized forward, firmware inference, deployment).
+//!
+//!     cargo bench --bench table1_jets
+//! Full-budget rows: `cargo run --release -- table1`.
+
+use std::path::PathBuf;
+
+use hgq::coordinator::experiment::{preset, run_hgq_sweep, run_uniform_baseline};
+use hgq::coordinator::{calibrate, train};
+use hgq::data::splits_for;
+use hgq::firmware::emulator::Emulator;
+use hgq::firmware::Graph;
+use hgq::runtime::{self, Hypers, ModelRuntime, Runtime};
+use hgq::util::bench::{bench, bench_budget, black_box};
+
+fn main() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new().expect("pjrt");
+    let p = preset("jets");
+    let epochs = std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
+
+    println!("== Table I / Fig. III: jet tagging (reduced budget: {epochs} epochs) ==");
+    let (mr, splits, outcome, reports) =
+        run_hgq_sweep(&rt, &artifacts, &p, Some(epochs), false).expect("sweep");
+    for r in &reports {
+        println!("{}", r.row());
+    }
+    if let Ok(rep) = run_uniform_baseline(&rt, &artifacts, &p, 6.0, Some(epochs)) {
+        println!("{}", rep.row());
+    }
+
+    // ---- hot path timings ------------------------------------------
+    println!("\n-- hot paths --");
+    let state_host = outcome.state.clone();
+    let state = mr.state_literal(&state_host).unwrap();
+    let b = mr.meta.batch;
+    let x = vec![0.1f32; b * 16];
+    let y = vec![1i32; b];
+    let xl = mr.x_literal(&x).unwrap();
+    let yl = mr.y_literal_cls(&y).unwrap();
+    let h = Hypers { beta: 1e-5, gamma: 2e-6, lr: 3e-3, f_lr: 8.0 };
+
+    let s = bench_budget("jets train_step (batch 512)", 2000, 10, || {
+        let out = runtime::train_step(&mr, &state, &xl, &yl, h).unwrap();
+        black_box(out.loss);
+    });
+    println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
+
+    let s = bench_budget("jets forward HLO (batch 512)", 1500, 10, || {
+        black_box(runtime::forward(&mr, &state, &xl).unwrap());
+    });
+    println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
+
+    let calib = calibrate(&mr, &state, &[&splits.train]).unwrap();
+    let graph = Graph::build(&mr.meta, &state_host, &calib).unwrap();
+    let mut em = Emulator::new(&graph);
+    let mut out5 = vec![0.0f64; 5];
+    let sample = splits.test.sample(0).to_vec();
+    let s = bench("jets firmware inference (1 sample)", 100, 2000, || {
+        em.infer(&sample, &mut out5).unwrap();
+        black_box(out5[0]);
+    });
+    println!("{}   [{:.0} inf/s]", s.report(), s.per_sec(1.0));
+
+    let s = bench("jets exact EBOPs + resources", 10, 200, || {
+        black_box(graph.exact_ebops());
+        black_box(hgq::resource::estimate(&graph));
+    });
+    println!("{}", s.report());
+
+    // epoch throughput (the training hot loop end to end)
+    let cfg = hgq::coordinator::TrainConfig { epochs: 1, ..p.train_config() };
+    let s = bench_budget("jets 1 training epoch (16k samples)", 4000, 2, || {
+        black_box(train(&mr, &splits.train, &splits.val, &cfg, None).unwrap());
+    });
+    println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(splits.train.n as f64));
+}

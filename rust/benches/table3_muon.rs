@@ -1,0 +1,63 @@
+//! Bench: Table III / Fig. V (muon tracker) — reduced-budget rows plus
+//! hot-path timings for the regression pipeline.
+//!
+//!     cargo bench --bench table3_muon
+//! Full-budget rows: `cargo run --release -- table3`.
+
+use std::path::PathBuf;
+
+use hgq::coordinator::calibrate;
+use hgq::coordinator::experiment::{preset, run_hgq_sweep, run_uniform_baseline};
+use hgq::data::splits_for;
+use hgq::firmware::emulator::Emulator;
+use hgq::firmware::Graph;
+use hgq::runtime::{self, Runtime};
+use hgq::util::bench::{bench, bench_budget, black_box};
+
+fn main() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new().expect("pjrt");
+    let p = preset("muon");
+    let epochs = std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(15);
+
+    println!("== Table III / Fig. V: muon tracking (reduced budget: {epochs} epochs) ==");
+    let (mr, splits, outcome, reports) =
+        run_hgq_sweep(&rt, &artifacts, &p, Some(epochs), false).expect("sweep");
+    for r in &reports {
+        println!("{}", r.row());
+    }
+    for &bits in &[6.0f32, 4.0] {
+        if let Ok(rep) = run_uniform_baseline(&rt, &artifacts, &p, bits, Some(epochs)) {
+            println!("{}", rep.row());
+        }
+    }
+
+    println!("\n-- hot paths --");
+    let state = mr.state_literal(&outcome.state).unwrap();
+    let b = mr.meta.batch;
+    let mut xbuf = vec![0.0f32; b * mr.meta.input_dim()];
+    for r in 0..b {
+        splits.test.fill_row(r % splits.test.n, r, &mut xbuf);
+    }
+    let xl = mr.x_literal(&xbuf).unwrap();
+    let s = bench_budget("muon forward HLO (batch 512)", 1500, 10, || {
+        black_box(runtime::forward(&mr, &state, &xl).unwrap());
+    });
+    println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
+
+    let calib = calibrate(&mr, &state, &[&splits.train]).unwrap();
+    let graph = Graph::build(&mr.meta, &outcome.state, &calib).unwrap();
+    let mut em = Emulator::new(&graph);
+    let mut out1 = vec![0.0f64; 1];
+    let sample = splits.test.sample(0).to_vec();
+    let s = bench("muon firmware inference (450 binary inputs)", 50, 1000, || {
+        em.infer(&sample, &mut out1).unwrap();
+        black_box(out1[0]);
+    });
+    println!("{}   [{:.0} inf/s]", s.report(), s.per_sec(1.0));
+
+    let s = bench("muon dataset generation (1k tracks)", 3, 30, || {
+        black_box(hgq::data::muon::generate(42, 1000));
+    });
+    println!("{}   [{:.0} tracks/s]", s.report(), s.per_sec(1000.0));
+}

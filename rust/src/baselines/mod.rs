@@ -1,0 +1,144 @@
+//! Baseline model-compression methods from the paper's evaluation
+//! (Tables I-III): QKeras-style uniform quantization (Q6 / Qf*),
+//! layer-wise heterogeneous quantization, and magnitude pruning.
+//!
+//! All baselines reuse the HGQ artifacts: a *uniform* baseline is the
+//! same packed state with every fractional bitwidth overwritten to a
+//! constant and bitwidth learning frozen (f_lr = 0); the layer-wise
+//! baseline is the `_lw` granularity artifact; pruning acts directly on
+//! the weight segments of a trained state.
+
+use anyhow::Result;
+
+use crate::nn::ModelMeta;
+
+/// Overwrite every trainable bitwidth: weight/bias tensors to `f_w`
+/// fractional bits, activation tensors to `f_a`. Combined with f_lr = 0
+/// this reproduces the fixed-format Q*/Qf* baselines.
+pub fn set_uniform_bits(meta: &ModelMeta, state: &mut [f32], f_w: f32, f_a: f32) {
+    for t in &meta.tensors {
+        if t.seg != "fbit" {
+            continue;
+        }
+        let v = if t.name.ends_with(".fa") { f_a } else { f_w };
+        state[t.offset..t.offset + t.size].fill(v);
+    }
+}
+
+/// Reset the Adam moments and step counter (used when a state is reused
+/// as the starting point of a new baseline training run).
+pub fn reset_optimizer(meta: &ModelMeta, state: &mut [f32]) {
+    for t in &meta.tensors {
+        if t.seg == "opt" {
+            state[t.offset..t.offset + t.size].fill(0.0);
+        }
+    }
+}
+
+/// Reset activation min/max statistics (the coordinator calls this at
+/// epoch boundaries, matching the paper's per-epoch extremes).
+pub fn reset_act_stats(meta: &ModelMeta, state: &mut [f32]) {
+    for t in &meta.tensors {
+        if t.seg == "stat" {
+            state[t.offset..t.offset + t.size].fill(0.0);
+        }
+    }
+}
+
+/// Global magnitude pruning: zero the smallest-|w| fraction of all
+/// weight-matrix entries (biases kept). Returns the number pruned.
+/// This is the BP-style baseline — prune after/during training by
+/// magnitude, no bitwidth adaptation.
+pub fn prune_by_magnitude(meta: &ModelMeta, state: &mut [f32], sparsity: f64) -> Result<usize> {
+    let mut mags: Vec<f32> = Vec::new();
+    for t in &meta.tensors {
+        if t.seg == "param" && t.name.ends_with(".w") {
+            mags.extend(state[t.offset..t.offset + t.size].iter().map(|w| w.abs()));
+        }
+    }
+    if mags.is_empty() {
+        return Ok(0);
+    }
+    let k = ((mags.len() as f64) * sparsity).round() as usize;
+    if k == 0 {
+        return Ok(0);
+    }
+    let k = k.min(mags.len() - 1);
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let threshold = mags[k];
+    let mut pruned = 0usize;
+    for t in &meta.tensors {
+        if t.seg == "param" && t.name.ends_with(".w") {
+            for w in state[t.offset..t.offset + t.size].iter_mut() {
+                if w.abs() < threshold {
+                    *w = 0.0;
+                    pruned += 1;
+                }
+            }
+        }
+    }
+    Ok(pruned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::from_json(
+            &Json::parse(
+                r#"{
+          "name":"t","task":"cls","batch":2,"input_shape":[2],"y_dtype":"i32",
+          "w_gran":"element","a_gran":"element",
+          "state_size":20,"n_params":6,"n_train":12,"calib_size":2,"output_dim":2,
+          "tensors":[
+            {"name":"d0.w","shape":[2,2],"offset":0,"size":4,"seg":"param"},
+            {"name":"d0.b","shape":[2],"offset":4,"size":2,"seg":"param"},
+            {"name":"d0.fw","shape":[2,2],"offset":6,"size":4,"seg":"fbit"},
+            {"name":"d0.fa","shape":[2],"offset":10,"size":2,"seg":"fbit"},
+            {"name":"adam.m","shape":[6],"offset":12,"size":6,"seg":"opt"},
+            {"name":"inq.fa.amin","shape":[2],"offset":18,"size":2,"seg":"stat"}],
+          "act_groups":[{"name":"inq.fa","fshape":[2],"signed":true,"size":2}],
+          "layers":[{"kind":"input_quant","name":"inq","signed":true}]
+        }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn uniform_bits_hit_only_fbits() {
+        let m = meta();
+        let mut s: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        set_uniform_bits(&m, &mut s, 6.0, 4.0);
+        assert_eq!(&s[..6], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]); // params untouched
+        assert_eq!(&s[6..10], &[6.0; 4]); // fw
+        assert_eq!(&s[10..12], &[4.0; 2]); // fa
+        assert_eq!(s[12], 12.0); // opt untouched
+    }
+
+    #[test]
+    fn prune_zeroes_smallest() {
+        let m = meta();
+        let mut s = vec![0.0f32; 20];
+        s[..4].copy_from_slice(&[0.1, -0.5, 0.01, 0.9]);
+        s[4] = 0.001; // bias must survive
+        let pruned = prune_by_magnitude(&m, &mut s, 0.5).unwrap();
+        assert_eq!(pruned, 2);
+        assert_eq!(&s[..4], &[0.0, -0.5, 0.0, 0.9]);
+        assert_eq!(s[4], 0.001);
+    }
+
+    #[test]
+    fn resets_target_right_segments() {
+        let m = meta();
+        let mut s: Vec<f32> = (1..=20).map(|i| i as f32).collect();
+        reset_optimizer(&m, &mut s);
+        assert_eq!(&s[12..18], &[0.0; 6]);
+        assert_ne!(s[18], 0.0);
+        reset_act_stats(&m, &mut s);
+        assert_eq!(&s[18..20], &[0.0; 2]);
+    }
+}

@@ -1,0 +1,43 @@
+//! Calibration (paper §III.A): run a calibration dataset through the
+//! quantized network and log the extreme quantized values of every
+//! activation element, from which Eq. 3 assigns integer bits. The paper
+//! uses the full training + validation sets as calibration data.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::firmware::Calib;
+use crate::runtime::{self, ModelRuntime};
+
+/// Batched min/max reduction over one or more datasets.
+pub fn calibrate(mr: &ModelRuntime, state: &xla::Literal, datasets: &[&Dataset]) -> Result<Calib> {
+    let b = mr.meta.batch;
+    let feat = mr.meta.input_dim();
+    let mut calib = Calib::empty(mr.meta.calib_size);
+    let mut first = true;
+    let mut xbuf = vec![0.0f32; b * feat];
+    for data in datasets {
+        let mut i = 0usize;
+        while i < data.n {
+            let take = b.min(data.n - i);
+            for r in 0..take {
+                data.fill_row(i + r, r, &mut xbuf);
+            }
+            for r in take..b {
+                // pad with the last row: only re-observes existing values
+                data.fill_row(i + take - 1, r, &mut xbuf);
+            }
+            let x = mr.x_literal(&xbuf)?;
+            let (amin, amax) = runtime::calib_batch(mr, state, &x)?;
+            if first {
+                calib.amin.copy_from_slice(&amin);
+                calib.amax.copy_from_slice(&amax);
+                first = false;
+            } else {
+                calib.merge(&amin, &amax);
+            }
+            i += take;
+        }
+    }
+    Ok(calib)
+}

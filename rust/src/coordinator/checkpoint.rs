@@ -1,0 +1,142 @@
+//! Checkpoint store: packed training states + metadata persisted to
+//! disk, so any Pareto-front member can be deployed or emulated later
+//! (`hgq deploy --checkpoint ...`).
+//!
+//! Layout (one directory per checkpoint):
+//!     <dir>/state.bin    little-endian f32 packed state
+//!     <dir>/info.json    model, quality, cost, epoch, beta
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct CheckpointInfo {
+    pub model: String,
+    pub label: String,
+    pub quality: f64,
+    pub cost: f64,
+    pub epoch: usize,
+    pub beta: f64,
+}
+
+pub fn save(dir: &Path, info: &CheckpointInfo, state: &[f32]) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let mut bytes = Vec::with_capacity(state.len() * 4);
+    for v in state {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(dir.join("state.bin"), &bytes)?;
+    let j = Json::obj(vec![
+        ("model", Json::str(info.model.clone())),
+        ("label", Json::str(info.label.clone())),
+        ("quality", Json::Num(info.quality)),
+        ("cost", Json::Num(info.cost)),
+        ("epoch", Json::Num(info.epoch as f64)),
+        ("beta", Json::Num(info.beta)),
+        ("state_len", Json::Num(state.len() as f64)),
+    ]);
+    std::fs::write(dir.join("info.json"), j.to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load(dir: &Path) -> Result<(CheckpointInfo, Vec<f32>)> {
+    let text = std::fs::read_to_string(dir.join("info.json"))
+        .with_context(|| format!("reading {}/info.json", dir.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", dir.display()))?;
+    let info = CheckpointInfo {
+        model: j.get("model").and_then(Json::as_str).unwrap_or("").into(),
+        label: j.get("label").and_then(Json::as_str).unwrap_or("").into(),
+        quality: j.get("quality").and_then(Json::as_f64).unwrap_or(0.0),
+        cost: j.get("cost").and_then(Json::as_f64).unwrap_or(0.0),
+        epoch: j.get("epoch").and_then(Json::as_usize).unwrap_or(0),
+        beta: j.get("beta").and_then(Json::as_f64).unwrap_or(0.0),
+    };
+    let raw = std::fs::read(dir.join("state.bin"))?;
+    if raw.len() % 4 != 0 {
+        bail!("corrupt state.bin ({} bytes)", raw.len());
+    }
+    let state: Vec<f32> =
+        raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect();
+    let want = j.get("state_len").and_then(Json::as_usize).unwrap_or(state.len());
+    if state.len() != want {
+        bail!("state.bin has {} f32, info.json says {}", state.len(), want);
+    }
+    Ok((info, state))
+}
+
+/// List checkpoint subdirectories under a root, newest-style sorted by
+/// name.
+pub fn list(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if !root.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(root)? {
+        let p = entry?.path();
+        if p.is_dir() && p.join("info.json").exists() {
+            out.push(p);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hgq_ckpt_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = tmpdir("rt");
+        let info = CheckpointInfo {
+            model: "jets_pp".into(),
+            label: "HGQ-1".into(),
+            quality: 0.93,
+            cost: 12000.0,
+            epoch: 17,
+            beta: 1e-5,
+        };
+        let state: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        save(&d.join("a"), &info, &state).unwrap();
+        let (got, gstate) = load(&d.join("a")).unwrap();
+        assert_eq!(got.model, "jets_pp");
+        assert_eq!(got.epoch, 17);
+        assert_eq!(gstate, state);
+        let ls = list(&d).unwrap();
+        assert_eq!(ls.len(), 1);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn corrupt_length_rejected() {
+        let d = tmpdir("bad");
+        let info = CheckpointInfo {
+            model: "m".into(),
+            label: "l".into(),
+            quality: 0.0,
+            cost: 0.0,
+            epoch: 0,
+            beta: 0.0,
+        };
+        save(&d.join("a"), &info, &[1.0, 2.0]).unwrap();
+        // truncate state.bin
+        std::fs::write(d.join("a/state.bin"), [0u8; 5]).unwrap();
+        assert!(load(&d.join("a")).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn list_empty_root_ok() {
+        let d = tmpdir("none");
+        assert!(list(&d).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,122 @@
+//! Deployment pipeline (paper §IV-V): trained state -> calibration ->
+//! bit-accurate firmware graph -> exact EBOPs -> simulated
+//! place-and-route resources -> test quality, plus the software↔firmware
+//! consistency check the HGQ library guarantees.
+
+use anyhow::Result;
+
+use crate::coordinator::calibrate::calibrate;
+use crate::coordinator::trainer::quality_of;
+use crate::data::Dataset;
+use crate::firmware::{emulator::Emulator, Graph};
+use crate::metrics;
+use crate::resource::{self, ResourceReport};
+use crate::runtime::{self, ModelRuntime};
+
+#[derive(Debug, Clone)]
+pub struct DeployReport {
+    pub model: String,
+    pub label: String,
+    /// test quality: accuracy (cls) or RMS resolution in mrad (reg)
+    pub quality: f64,
+    /// exact EBOPs of the deployed firmware
+    pub ebops: u64,
+    pub sparsity: f64,
+    pub resources: ResourceReport,
+    /// max |firmware - HLO forward| logit difference on the probe batch
+    pub fw_vs_hlo_max_abs: f64,
+}
+
+impl DeployReport {
+    /// One paper-style table row.
+    pub fn row(&self) -> String {
+        let q = if self.quality >= 0.0 && self.quality <= 1.0 {
+            format!("{:>7.1}%", self.quality * 100.0)
+        } else {
+            format!("{:>6.2}mr", self.quality)
+        };
+        format!(
+            "{:<14} {:<8} {} | EBOPs {:>9} | LUT {:>8} DSP {:>5} FF {:>8} BRAM {:>6.1} | {:>3} cc ({:>6.1} ns) II {:>4} | sparsity {:>5.2}",
+            self.model,
+            self.label,
+            q,
+            self.ebops,
+            self.resources.lut,
+            self.resources.dsp,
+            self.resources.ff,
+            self.resources.bram_18k,
+            self.resources.latency_cc,
+            self.resources.latency_ns(),
+            self.resources.ii_cc,
+            self.sparsity,
+        )
+    }
+}
+
+/// Full deployment of a trained state snapshot.
+///
+/// `calib_data`: datasets whose union forms the calibration set (the
+/// paper uses train + val). `test_data`: the held-out set for the
+/// reported quality.
+pub fn deploy(
+    mr: &ModelRuntime,
+    label: &str,
+    state_host: &[f32],
+    calib_data: &[&Dataset],
+    test_data: &Dataset,
+) -> Result<(Graph, DeployReport)> {
+    let state = mr.state_literal(state_host)?;
+    let calib = calibrate(mr, &state, calib_data)?;
+    let graph = Graph::build(&mr.meta, state_host, &calib)?;
+
+    // --- test quality through the firmware emulator ------------------
+    let k = mr.meta.output_dim;
+    let mut em = Emulator::new(&graph);
+    let mut logits = vec![0.0f64; test_data.n * k];
+    em.infer_batch(&test_data.x, &mut logits)?;
+    let quality_raw = quality_of(mr, &logits, test_data, test_data.n);
+    // regression reports positive mrad resolution
+    let quality = if test_data.is_classification() { quality_raw } else { -quality_raw };
+
+    // --- software <-> firmware consistency (paper §IV guarantee) -----
+    // probe rows come from the calibration set: the bit-exactness
+    // contract is conditioned on "no numeric overflow", which holds by
+    // construction only inside the calibrated ranges (out-of-range
+    // inputs wrap in hardware — and in the emulator).
+    let probe_data = calib_data[0];
+    let probe = mr.meta.batch.min(probe_data.n);
+    let feat = mr.meta.input_dim();
+    let mut xbuf = vec![0.0f32; mr.meta.batch * feat];
+    for r in 0..mr.meta.batch {
+        probe_data.fill_row(r % probe_data.n, r, &mut xbuf);
+    }
+    let hlo_logits = runtime::forward(mr, &state, &mr.x_literal(&xbuf)?)?;
+    let mut fw_logits = vec![0.0f64; mr.meta.batch * k];
+    em.infer_batch(&xbuf, &mut fw_logits)?;
+    let mut max_abs: f64 = 0.0;
+    for i in 0..probe * k {
+        max_abs = max_abs.max((hlo_logits[i] - fw_logits[i]).abs());
+    }
+
+    let resources = resource::estimate(&graph);
+    let report = DeployReport {
+        model: mr.meta.name.clone(),
+        label: label.to_string(),
+        quality,
+        ebops: graph.exact_ebops(),
+        sparsity: graph.sparsity(),
+        resources,
+        fw_vs_hlo_max_abs: max_abs,
+    };
+    Ok((graph, report))
+}
+
+/// Classification probe helper for examples: firmware accuracy +
+/// confusion matrix.
+pub fn firmware_confusion(graph: &Graph, data: &Dataset, k: usize) -> Result<(f64, Vec<u64>)> {
+    let mut em = Emulator::new(graph);
+    let mut logits = vec![0.0f64; data.n * k];
+    em.infer_batch(&data.x, &mut logits)?;
+    let acc = metrics::accuracy(&logits, &data.y_cls, k);
+    Ok((acc, metrics::confusion(&logits, &data.y_cls, k)))
+}

@@ -1,0 +1,201 @@
+//! Experiment presets mirroring the paper's evaluation protocol,
+//! rescaled to the CPU-PJRT budget (the paper trains 12k-600k epochs on
+//! GPU; the shape of the protocol — a single run with a log-ramped β,
+//! Pareto checkpointing, N table rows — is preserved exactly).
+
+use anyhow::Result;
+
+use super::deploy::{deploy, DeployReport};
+use super::schedule::BetaSchedule;
+use super::trainer::{train, TrainConfig, TrainOutcome};
+use crate::baselines;
+use crate::data::{splits_for, Splits};
+use crate::runtime::{ModelRuntime, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub model: &'static str,
+    pub epochs: usize,
+    pub lr: f32,
+    pub f_lr: f32,
+    pub gamma: f32,
+    pub beta_from: f64,
+    pub beta_to: f64,
+    pub n_train: usize,
+    pub n_eval: usize,
+    /// table rows to deploy from the Pareto front (HGQ-1..N)
+    pub rows: usize,
+    /// uniform-baseline fractional bit settings (Q*/Qf* rows)
+    pub uniform_bits: &'static [f32],
+}
+
+/// β endpoints follow the paper (§V.B-D); epochs/lr are CPU-scaled.
+pub fn preset(task: &str) -> Preset {
+    match task {
+        "jets" => Preset {
+            model: "jets_pp",
+            epochs: 60,
+            lr: 3e-3,
+            f_lr: 8.0,
+            gamma: 2e-6,
+            beta_from: 1e-6,
+            beta_to: 1e-3,
+            n_train: 16384,
+            n_eval: 4096,
+            rows: 6,
+            uniform_bits: &[6.0, 4.0],
+        },
+        "muon" => Preset {
+            model: "muon_pp",
+            epochs: 40,
+            lr: 2e-3,
+            f_lr: 8.0,
+            gamma: 2e-6,
+            beta_from: 3e-6,
+            beta_to: 6e-4,
+            n_train: 16384,
+            n_eval: 4096,
+            rows: 6,
+            uniform_bits: &[8.0, 7.0, 6.0, 5.0, 4.0, 3.0],
+        },
+        "svhn" => Preset {
+            model: "svhn_stream",
+            epochs: 25,
+            lr: 2e-3,
+            f_lr: 6.0,
+            gamma: 2e-6,
+            beta_from: 1e-7,
+            beta_to: 1e-4,
+            n_train: 8192,
+            n_eval: 2048,
+            rows: 6,
+            uniform_bits: &[7.0],
+        },
+        other => panic!("unknown task '{other}' (expected jets|muon|svhn)"),
+    }
+}
+
+impl Preset {
+    pub fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            epochs: self.epochs,
+            lr: self.lr,
+            f_lr: self.f_lr,
+            gamma: self.gamma,
+            beta: BetaSchedule::LogRamp { from: self.beta_from, to: self.beta_to },
+            seed: 0,
+            val_every: 1,
+            log_every: 0,
+            reset_stats_each_epoch: true,
+        }
+    }
+}
+
+/// The paper's single-run Pareto sweep: train once with the β ramp,
+/// deploy `rows` representatives off the front.
+pub fn run_hgq_sweep(
+    rt: &Runtime,
+    artifacts: &std::path::Path,
+    p: &Preset,
+    epochs_override: Option<usize>,
+    verbose: bool,
+) -> Result<(ModelRuntime, Splits, TrainOutcome, Vec<DeployReport>)> {
+    let mr = ModelRuntime::load(rt, artifacts, p.model)?;
+    let splits = splits_for(p.model, 1, p.n_train, p.n_eval);
+    let mut cfg = p.train_config();
+    if let Some(e) = epochs_override {
+        cfg.epochs = e;
+    }
+    if verbose {
+        cfg.log_every = (cfg.epochs / 10).max(1);
+    }
+    let outcome = train(&mr, &splits.train, &splits.val, &cfg, None)?;
+
+    let mut reports = Vec::new();
+    let reps: Vec<_> =
+        outcome.pareto.representatives(p.rows).into_iter().cloned().collect();
+    for (i, point) in reps.iter().rev().enumerate() {
+        // rev: paper orders HGQ-1 = highest quality/resources
+        let label = format!("HGQ-{}", i + 1);
+        let (_, rep) = deploy(
+            &mr,
+            &label,
+            &point.state,
+            &[&splits.train, &splits.val],
+            &splits.test,
+        )?;
+        reports.push(rep);
+    }
+    Ok((mr, splits, outcome, reports))
+}
+
+/// Uniform fixed-bitwidth QAT baseline (Q*/Qf* rows): bitwidths preset
+/// and frozen, same training budget.
+pub fn run_uniform_baseline(
+    rt: &Runtime,
+    artifacts: &std::path::Path,
+    p: &Preset,
+    bits: f32,
+    epochs_override: Option<usize>,
+) -> Result<DeployReport> {
+    // layer-wise artifact: scalar bitwidth tensors (the Q* baselines are
+    // homogeneous per layer)
+    let lw_model: String = p.model.replace("_pp", "_lw");
+    let mr = ModelRuntime::load(rt, artifacts, &lw_model)?;
+    let splits = splits_for(&lw_model, 1, p.n_train, p.n_eval);
+    let mut init = mr.init_state();
+    baselines::set_uniform_bits(&mr.meta, &mut init, bits, bits);
+    let mut cfg = p.train_config();
+    cfg.f_lr = 0.0; // frozen bitwidths
+    cfg.beta = BetaSchedule::Const(0.0);
+    if let Some(e) = epochs_override {
+        cfg.epochs = e;
+    }
+    let outcome = train(&mr, &splits.train, &splits.val, &cfg, Some(init))?;
+    // deploy the best validation checkpoint
+    let best = outcome
+        .pareto
+        .sorted()
+        .last()
+        .map(|point| point.state.clone())
+        .unwrap_or(outcome.state);
+    let (_, rep) = deploy(
+        &mr,
+        &format!("Qf{bits}"),
+        &best,
+        &[&splits.train, &splits.val],
+        &splits.test,
+    )?;
+    Ok(rep)
+}
+
+/// Layer-wise heterogeneous baseline (AutoQKeras-like): trainable but
+/// layer-granular bitwidths under the same β ramp.
+pub fn run_layerwise_baseline(
+    rt: &Runtime,
+    artifacts: &std::path::Path,
+    p: &Preset,
+    epochs_override: Option<usize>,
+) -> Result<Vec<DeployReport>> {
+    let lw_model: String = p.model.replace("_pp", "_lw");
+    let mr = ModelRuntime::load(rt, artifacts, &lw_model)?;
+    let splits = splits_for(&lw_model, 1, p.n_train, p.n_eval);
+    let mut cfg = p.train_config();
+    if let Some(e) = epochs_override {
+        cfg.epochs = e;
+    }
+    let outcome = train(&mr, &splits.train, &splits.val, &cfg, None)?;
+    let reps: Vec<_> = outcome.pareto.representatives(3).into_iter().cloned().collect();
+    let mut reports = Vec::new();
+    for (i, point) in reps.iter().rev().enumerate() {
+        let (_, rep) = deploy(
+            &mr,
+            &format!("LW-{}", i + 1),
+            &point.state,
+            &[&splits.train, &splits.val],
+            &splits.test,
+        )?;
+        reports.push(rep);
+    }
+    Ok(reports)
+}

@@ -1,0 +1,24 @@
+//! The L3 coordinator: training orchestration, β scheduling, Pareto
+//! checkpointing, calibration (Eq. 3) and deployment — the paper's
+//! single-training-run workflow:
+//!
+//! 1. train with gradually increasing β, per-epoch validation;
+//! 2. keep every checkpoint on the (quality, EBOPs-bar) Pareto front;
+//! 3. post-training: calibrate integer bits on train+val, build the
+//!    bit-accurate firmware, compute exact EBOPs, simulate
+//!    place-and-route resources;
+//! 4. report paper-style table rows.
+
+pub mod calibrate;
+pub mod checkpoint;
+pub mod deploy;
+pub mod experiment;
+pub mod pareto;
+pub mod schedule;
+pub mod trainer;
+
+pub use calibrate::calibrate;
+pub use deploy::{deploy, DeployReport};
+pub use pareto::{ParetoFront, ParetoPoint};
+pub use schedule::BetaSchedule;
+pub use trainer::{evaluate, train, EpochLog, TrainConfig, TrainOutcome};

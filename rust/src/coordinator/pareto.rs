@@ -1,0 +1,165 @@
+//! Pareto-front checkpoint tracking (paper §V: "maintain all model's
+//! checkpoints that are on the Pareto Front" of validation quality vs
+//! EBOPs).
+//!
+//! Quality is higher-better (accuracy, or negated resolution for the
+//! regression task); cost (EBOPs) is lower-better. Each accepted point
+//! carries a snapshot of the packed training state so any front member
+//! can be deployed later.
+
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub quality: f64,
+    pub cost: f64,
+    pub epoch: usize,
+    pub beta: f64,
+    pub state: Vec<f32>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ParetoFront {
+    points: Vec<ParetoPoint>,
+}
+
+impl ParetoFront {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offer a candidate; returns true if it joins the front (and evicts
+    /// any point it dominates).
+    pub fn offer(&mut self, p: ParetoPoint) -> bool {
+        // dominated by an existing point?
+        if self
+            .points
+            .iter()
+            .any(|q| q.quality >= p.quality && q.cost <= p.cost && (q.quality > p.quality || q.cost < p.cost))
+        {
+            return false;
+        }
+        // drop points the candidate dominates (ties kept off)
+        self.points
+            .retain(|q| !(p.quality >= q.quality && p.cost <= q.cost));
+        self.points.push(p);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Front sorted by cost ascending (quality will be ascending too).
+    pub fn sorted(&self) -> Vec<&ParetoPoint> {
+        let mut v: Vec<&ParetoPoint> = self.points.iter().collect();
+        v.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+        v
+    }
+
+    /// Pick `n` representatives spread across the cost axis (log-spaced),
+    /// mirroring the paper's HGQ-1..6 table rows.
+    pub fn representatives(&self, n: usize) -> Vec<&ParetoPoint> {
+        let sorted = self.sorted();
+        if sorted.len() <= n {
+            return sorted;
+        }
+        let lo = sorted.first().unwrap().cost.max(1.0).ln();
+        let hi = sorted.last().unwrap().cost.max(1.0).ln();
+        let mut picks: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let target = if n == 1 { hi } else { lo + (hi - lo) * i as f64 / (n - 1) as f64 };
+            let idx = sorted
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    let da = (a.cost.max(1.0).ln() - target).abs();
+                    let db = (b.cost.max(1.0).ln() - target).abs();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap();
+            if !picks.contains(&idx) {
+                picks.push(idx);
+            }
+        }
+        picks.sort_unstable();
+        picks.into_iter().map(|i| sorted[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::prop_assert;
+
+    fn p(q: f64, c: f64) -> ParetoPoint {
+        ParetoPoint { quality: q, cost: c, epoch: 0, beta: 0.0, state: Vec::new() }
+    }
+
+    #[test]
+    fn keeps_non_dominated_only() {
+        let mut f = ParetoFront::new();
+        assert!(f.offer(p(0.8, 100.0)));
+        assert!(f.offer(p(0.9, 200.0))); // better quality, worse cost: kept
+        assert!(f.offer(p(0.7, 50.0))); // cheaper: kept
+        assert!(!f.offer(p(0.75, 120.0))); // dominated by (0.8, 100)
+        assert_eq!(f.len(), 3);
+        // a dominating point evicts
+        assert!(f.offer(p(0.95, 40.0)));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn sorted_is_monotone_in_both_axes() {
+        let mut f = ParetoFront::new();
+        for (q, c) in [(0.7, 50.0), (0.9, 200.0), (0.8, 100.0), (0.85, 150.0)] {
+            f.offer(p(q, c));
+        }
+        let s = f.sorted();
+        for w in s.windows(2) {
+            assert!(w[0].cost <= w[1].cost);
+            assert!(w[0].quality <= w[1].quality);
+        }
+    }
+
+    #[test]
+    fn representatives_subsets_front() {
+        let mut f = ParetoFront::new();
+        for i in 1..40 {
+            f.offer(p(0.5 + i as f64 * 0.01, 10.0 * i as f64 * i as f64));
+        }
+        let reps = f.representatives(6);
+        assert_eq!(reps.len(), 6);
+        // endpoints included
+        let s = f.sorted();
+        assert_eq!(reps.first().unwrap().cost, s.first().unwrap().cost);
+        assert_eq!(reps.last().unwrap().cost, s.last().unwrap().cost);
+    }
+
+    #[test]
+    fn prop_front_invariant_no_domination() {
+        check("pareto-invariant", 100, |rng| {
+            let mut f = ParetoFront::new();
+            for _ in 0..50 {
+                f.offer(p(rng.uniform(), 1.0 + rng.uniform() * 1000.0));
+            }
+            let pts = f.sorted();
+            for i in 0..pts.len() {
+                for j in 0..pts.len() {
+                    if i == j {
+                        continue;
+                    }
+                    let dominated = pts[j].quality >= pts[i].quality
+                        && pts[j].cost <= pts[i].cost
+                        && (pts[j].quality > pts[i].quality || pts[j].cost < pts[i].cost);
+                    prop_assert!(!dominated, "front contains dominated point");
+                }
+            }
+            Ok(())
+        });
+    }
+}

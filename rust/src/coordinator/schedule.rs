@@ -1,0 +1,61 @@
+//! β (resource-pressure) schedules (paper §V: "β is gradually increased
+//! through the training", e.g. 1e-6 → 1e-4 for jets; constant-β
+//! ablations HGQ-c1/c2).
+
+#[derive(Debug, Clone, Copy)]
+pub enum BetaSchedule {
+    Const(f64),
+    /// log-linear ramp from `from` at epoch 0 to `to` at the last epoch
+    LogRamp { from: f64, to: f64 },
+}
+
+impl BetaSchedule {
+    pub fn at(&self, epoch: usize, total_epochs: usize) -> f64 {
+        match *self {
+            BetaSchedule::Const(b) => b,
+            BetaSchedule::LogRamp { from, to } => {
+                if total_epochs <= 1 {
+                    return to;
+                }
+                let t = epoch as f64 / (total_epochs - 1) as f64;
+                from * (to / from).powf(t)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_is_const() {
+        let s = BetaSchedule::Const(1e-5);
+        assert_eq!(s.at(0, 100), 1e-5);
+        assert_eq!(s.at(99, 100), 1e-5);
+    }
+
+    #[test]
+    fn ramp_hits_endpoints_and_is_monotone() {
+        let s = BetaSchedule::LogRamp { from: 1e-6, to: 1e-4 };
+        let b0 = s.at(0, 50);
+        let b49 = s.at(49, 50);
+        assert!((b0 - 1e-6).abs() / 1e-6 < 1e-9);
+        assert!((b49 - 1e-4).abs() / 1e-4 < 1e-9);
+        let mut prev = 0.0;
+        for e in 0..50 {
+            let b = s.at(e, 50);
+            assert!(b > prev);
+            prev = b;
+        }
+        // geometric midpoint at the middle epoch
+        let mid = s.at(25, 51);
+        assert!((mid - 1e-5).abs() / 1e-5 < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_single_epoch() {
+        let s = BetaSchedule::LogRamp { from: 1e-6, to: 1e-4 };
+        assert_eq!(s.at(0, 1), 1e-4);
+    }
+}

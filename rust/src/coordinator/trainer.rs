@@ -1,0 +1,212 @@
+//! The training loop: epochs over the synthetic dataset, batching with
+//! padding to the artifact's fixed batch size, β schedule, per-epoch
+//! validation through the AOT forward graph, activation-statistic resets
+//! (the paper's per-epoch min/max), and Pareto checkpointing.
+
+use anyhow::Result;
+
+use super::pareto::{ParetoFront, ParetoPoint};
+use super::schedule::BetaSchedule;
+use crate::baselines::reset_act_stats;
+use crate::data::Dataset;
+use crate::metrics;
+use crate::runtime::{self, Hypers, ModelRuntime};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    /// bitwidth learning-rate multiplier (0 freezes bitwidths — the
+    /// uniform/static baselines)
+    pub f_lr: f32,
+    pub gamma: f32,
+    pub beta: BetaSchedule,
+    pub seed: u64,
+    /// validate + offer to the Pareto front every `val_every` epochs
+    pub val_every: usize,
+    /// print progress every `log_every` epochs (0 = silent)
+    pub log_every: usize,
+    /// reset per-epoch activation extremes (paper semantics)
+    pub reset_stats_each_epoch: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 30,
+            lr: 3e-3,
+            f_lr: 8.0,
+            gamma: 2e-6,
+            beta: BetaSchedule::Const(1e-6),
+            seed: 0,
+            val_every: 1,
+            log_every: 0,
+            reset_stats_each_epoch: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub beta: f64,
+    pub loss: f64,
+    pub metric: f64,
+    pub ebops_bar: f64,
+    pub sparsity: f64,
+    /// validation quality (acc, or -rms for regression), when evaluated
+    pub val_quality: Option<f64>,
+}
+
+#[derive(Debug)]
+pub struct TrainOutcome {
+    pub state: Vec<f32>,
+    pub logs: Vec<EpochLog>,
+    pub pareto: ParetoFront,
+}
+
+/// Quality convention: higher is better. Classification -> accuracy;
+/// regression -> negated RMS resolution (30 mrad outlier cut).
+pub fn quality_of(mr: &ModelRuntime, logits: &[f64], data: &Dataset, n: usize) -> f64 {
+    let k = mr.meta.output_dim;
+    if data.is_classification() {
+        metrics::accuracy(&logits[..n * k], &data.y_cls[..n], k)
+    } else {
+        let preds: Vec<f64> = (0..n).map(|i| logits[i * k]).collect();
+        let (rms, _) = metrics::resolution_with_cut(&preds, &data.y_reg[..n], 30.0);
+        -rms
+    }
+}
+
+/// Quantized evaluation through the AOT forward graph over a whole
+/// dataset (batched + padded). Returns quality.
+pub fn evaluate(mr: &ModelRuntime, state: &xla::Literal, data: &Dataset) -> Result<f64> {
+    let b = mr.meta.batch;
+    let feat = mr.meta.input_dim();
+    let k = mr.meta.output_dim;
+    let mut logits = vec![0.0f64; data.n * k];
+    let mut xbuf = vec![0.0f32; b * feat];
+    let mut i = 0usize;
+    while i < data.n {
+        let take = b.min(data.n - i);
+        for r in 0..take {
+            data.fill_row(i + r, r, &mut xbuf);
+        }
+        // pad rows repeat the last sample (ignored on read-back)
+        for r in take..b {
+            data.fill_row(i + take - 1, r, &mut xbuf);
+        }
+        let x = mr.x_literal(&xbuf)?;
+        let out = runtime::forward(mr, state, &x)?;
+        logits[i * k..(i + take) * k].copy_from_slice(&out[..take * k]);
+        i += take;
+    }
+    Ok(quality_of(mr, &logits, data, data.n))
+}
+
+/// Run the full training loop. `init` overrides the artifact's initial
+/// state (used by baselines that preset bitwidths).
+pub fn train(
+    mr: &ModelRuntime,
+    train_data: &Dataset,
+    val_data: &Dataset,
+    cfg: &TrainConfig,
+    init: Option<Vec<f32>>,
+) -> Result<TrainOutcome> {
+    let b = mr.meta.batch;
+    let feat = mr.meta.input_dim();
+    let mut rng = Rng::new(cfg.seed ^ 0x7124);
+
+    let mut state_host = init.unwrap_or_else(|| mr.init_state());
+    let mut state = mr.state_literal(&state_host)?;
+
+    let mut xbuf = vec![0.0f32; b * feat];
+    let mut ybuf_i = vec![0i32; b];
+    let mut ybuf_f = vec![0f32; b];
+
+    let mut logs: Vec<EpochLog> = Vec::with_capacity(cfg.epochs);
+    let mut pareto = ParetoFront::new();
+
+    let n_batches = train_data.n.div_ceil(b).max(1);
+    for epoch in 0..cfg.epochs {
+        let beta = cfg.beta.at(epoch, cfg.epochs) as f32;
+        let h = Hypers { beta, gamma: cfg.gamma, lr: cfg.lr, f_lr: cfg.f_lr };
+
+        if cfg.reset_stats_each_epoch && epoch > 0 {
+            // pull state once per epoch to clear the min/max segments
+            state_host = runtime::literal_to_vec(&state)?;
+            reset_act_stats(&mr.meta, &mut state_host);
+            state = mr.state_literal(&state_host)?;
+        }
+
+        let order = rng.permutation(train_data.n);
+        let (mut s_loss, mut s_metric, mut s_eb, mut s_sp) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for bi in 0..n_batches {
+            for r in 0..b {
+                let src = order[(bi * b + r) % train_data.n];
+                train_data.fill_row(src, r, &mut xbuf);
+                if train_data.is_classification() {
+                    ybuf_i[r] = train_data.y_cls[src];
+                } else {
+                    ybuf_f[r] = train_data.y_reg[src];
+                }
+            }
+            let x = mr.x_literal(&xbuf)?;
+            let y = if train_data.is_classification() {
+                mr.y_literal_cls(&ybuf_i)?
+            } else {
+                mr.y_literal_reg(&ybuf_f)?
+            };
+            let out = runtime::train_step(mr, &state, &x, &y, h)?;
+            state = out.state;
+            s_loss += out.loss as f64;
+            s_metric += out.metric as f64;
+            s_eb += out.ebops as f64;
+            s_sp += out.sparsity as f64;
+        }
+
+        let nb = n_batches as f64;
+        let mut log = EpochLog {
+            epoch,
+            beta: beta as f64,
+            loss: s_loss / nb,
+            metric: s_metric / nb,
+            ebops_bar: s_eb / nb,
+            sparsity: s_sp / nb,
+            val_quality: None,
+        };
+
+        if cfg.val_every > 0 && (epoch % cfg.val_every == cfg.val_every - 1 || epoch + 1 == cfg.epochs)
+        {
+            let q = evaluate(mr, &state, val_data)?;
+            log.val_quality = Some(q);
+            let snapshot = runtime::literal_to_vec(&state)?;
+            pareto.offer(ParetoPoint {
+                quality: q,
+                cost: log.ebops_bar.max(0.0),
+                epoch,
+                beta: beta as f64,
+                state: snapshot,
+            });
+        }
+
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            println!(
+                "[train {}] epoch {:>4} beta {:.2e} loss {:.4} metric {:.4} ebops {:.0} sparsity {:.2} val {}",
+                mr.meta.name,
+                epoch,
+                log.beta,
+                log.loss,
+                log.metric,
+                log.ebops_bar,
+                log.sparsity,
+                log.val_quality.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
+            );
+        }
+        logs.push(log);
+    }
+
+    let state_host = runtime::literal_to_vec(&state)?;
+    Ok(TrainOutcome { state: state_host, logs, pareto })
+}

@@ -1,0 +1,132 @@
+//! Muon-tracking simulation (paper §V.D, after ref. [65]).
+//!
+//! This one is a *faithful* physics-style simulation rather than a mere
+//! stand-in: straight muon tracks with incidence angle θ cross three
+//! detector stations, each with 3 layers of 50 binary strips. Hits are
+//! registered on the strip the track crosses, with per-layer multiple-
+//! scattering smear, finite strip efficiency and random noise hits —
+//! the regression target is θ in milliradians, resolution measured as
+//! RMS with the paper's 30 mrad outlier cut.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+pub const STATIONS: usize = 3;
+pub const LAYERS: usize = 3;
+pub const STRIPS: usize = 50;
+pub const FEAT: usize = STATIONS * LAYERS * STRIPS; // 450
+
+/// max |angle| generated, mrad
+pub const MAX_ANGLE_MRAD: f64 = 250.0;
+/// strip pitch in "strip units" of 1; station spacing in the same units
+const LAYER_Z: [f64; LAYERS] = [0.0, 1.0, 2.0];
+const STATION_Z: [f64; STATIONS] = [0.0, 8.0, 16.0];
+/// multiple-scattering smear per unit z, in strips
+const SCATTER: f64 = 0.15;
+/// strip detection efficiency
+const EFFICIENCY: f64 = 0.96;
+/// probability of a noise hit per layer
+const NOISE: f64 = 0.04;
+
+pub fn generate(seed: u64, n: usize) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x3100);
+    let mut x = vec![0.0f32; n * FEAT];
+    let mut y = Vec::with_capacity(n);
+    for s in 0..n {
+        // angle in mrad; slope in strips per z-unit
+        let theta = rng.range(-MAX_ANGLE_MRAD, MAX_ANGLE_MRAD);
+        y.push(theta as f32);
+        let slope = (theta / 1000.0).tan() * 25.0; // geometry gain
+        let x0 = rng.range(10.0, STRIPS as f64 - 10.0);
+        let row = &mut x[s * FEAT..(s + 1) * FEAT];
+        for st in 0..STATIONS {
+            for ly in 0..LAYERS {
+                let z = STATION_Z[st] + LAYER_Z[ly];
+                let pos = x0 + slope * z + rng.normal_scaled(0.0, SCATTER * (1.0 + 0.1 * z));
+                let strip = pos.round() as i64;
+                if (0..STRIPS as i64).contains(&strip) && rng.bernoulli(EFFICIENCY) {
+                    row[(st * LAYERS + ly) * STRIPS + strip as usize] = 1.0;
+                }
+                if rng.bernoulli(NOISE) {
+                    let noisy = rng.below(STRIPS);
+                    row[(st * LAYERS + ly) * STRIPS + noisy] = 1.0;
+                }
+            }
+        }
+    }
+    Dataset { x, y_cls: Vec::new(), y_reg: y, n, feat_dim: FEAT }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_binary_and_shaped() {
+        let a = generate(9, 50);
+        assert_eq!(a.feat_dim, 450);
+        assert_eq!(a.y_reg.len(), 50);
+        assert!(a.x.iter().all(|&v| v == 0.0 || v == 1.0));
+        let b = generate(9, 50);
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn hits_present_in_every_station_mostly() {
+        let d = generate(1, 200);
+        let mut with_hits = 0;
+        for s in 0..d.n {
+            let row = d.sample(s);
+            let st0: f32 = row[..LAYERS * STRIPS].iter().sum();
+            if st0 > 0.0 {
+                with_hits += 1;
+            }
+        }
+        // efficiency 0.96^3 per station + noise: nearly all events have
+        // first-station activity
+        assert!(with_hits as f64 > 0.95 * d.n as f64, "{with_hits}/{}", d.n);
+    }
+
+    #[test]
+    fn angle_is_recoverable_from_hit_centroids() {
+        // least-squares slope over (z, centroid) should track theta —
+        // validates the generator carries the signal the paper's
+        // network learns
+        let d = generate(2, 500);
+        let mut errs = Vec::new();
+        for s in 0..d.n {
+            let row = d.sample(s);
+            let mut pts: Vec<(f64, f64)> = Vec::new();
+            for st in 0..STATIONS {
+                for ly in 0..LAYERS {
+                    let base = (st * LAYERS + ly) * STRIPS;
+                    let mut num = 0.0;
+                    let mut den = 0.0;
+                    for k in 0..STRIPS {
+                        if row[base + k] > 0.0 {
+                            num += k as f64;
+                            den += 1.0;
+                        }
+                    }
+                    if den > 0.0 {
+                        pts.push((STATION_Z[st] + LAYER_Z[ly], num / den));
+                    }
+                }
+            }
+            if pts.len() < 4 {
+                continue;
+            }
+            let n = pts.len() as f64;
+            let sz: f64 = pts.iter().map(|p| p.0).sum();
+            let sx: f64 = pts.iter().map(|p| p.1).sum();
+            let szz: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+            let szx: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+            let slope = (n * szx - sz * sx) / (n * szz - sz * sz);
+            let theta_hat = (slope / 25.0).atan() * 1000.0;
+            errs.push((theta_hat - d.y_reg[s] as f64).abs());
+        }
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = errs[errs.len() / 2];
+        assert!(med < 30.0, "median |err| = {med} mrad — signal too weak");
+    }
+}

@@ -1,0 +1,158 @@
+//! Synthetic street-view digit images (paper §V.C SVHN substitute).
+//!
+//! 32x32 RGB crops with a centered digit: 5x7 glyph bitmaps scaled up,
+//! randomly translated/sheared, digit/background colors jittered, plus
+//! per-pixel sensor noise and distractor edges — the same 10-class,
+//! same-geometry task the paper's LeNet-like CNN consumes (values
+//! normalized to [0, 1)).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+pub const H: usize = 32;
+pub const W: usize = 32;
+pub const C: usize = 3;
+pub const FEAT: usize = H * W * C;
+pub const CLASSES: usize = 10;
+
+/// 5x7 glyphs, row-major, '1' = ink.
+const GLYPHS: [[u8; 35]; 10] = [
+    // 0
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,1,1, 1,0,1,0,1, 1,1,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 1
+    [0,0,1,0,0, 0,1,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,0,1,0,0, 0,1,1,1,0],
+    // 2
+    [0,1,1,1,0, 1,0,0,0,1, 0,0,0,0,1, 0,0,0,1,0, 0,0,1,0,0, 0,1,0,0,0, 1,1,1,1,1],
+    // 3
+    [1,1,1,1,1, 0,0,0,1,0, 0,0,1,0,0, 0,0,0,1,0, 0,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 4
+    [0,0,0,1,0, 0,0,1,1,0, 0,1,0,1,0, 1,0,0,1,0, 1,1,1,1,1, 0,0,0,1,0, 0,0,0,1,0],
+    // 5
+    [1,1,1,1,1, 1,0,0,0,0, 1,1,1,1,0, 0,0,0,0,1, 0,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 6
+    [0,0,1,1,0, 0,1,0,0,0, 1,0,0,0,0, 1,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 7
+    [1,1,1,1,1, 0,0,0,0,1, 0,0,0,1,0, 0,0,1,0,0, 0,1,0,0,0, 0,1,0,0,0, 0,1,0,0,0],
+    // 8
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,0],
+    // 9
+    [0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,1, 0,0,0,0,1, 0,0,0,1,0, 0,1,1,0,0],
+];
+
+pub fn generate(seed: u64, n: usize) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5148);
+    let mut x = vec![0.0f32; n * FEAT];
+    let mut y = Vec::with_capacity(n);
+    for s in 0..n {
+        let digit = rng.below(CLASSES);
+        y.push(digit as i32);
+        let img = &mut x[s * FEAT..(s + 1) * FEAT];
+
+        // background + digit colors (street-sign-like, moderate contrast)
+        let bg: [f64; 3] = [rng.range(0.1, 0.6), rng.range(0.1, 0.6), rng.range(0.1, 0.6)];
+        let mut fg = [0.0; 3];
+        for c in 0..3 {
+            let delta = rng.range(0.3, 0.45) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            fg[c] = (bg[c] + delta).clamp(0.0, 0.999);
+        }
+
+        for py in 0..H {
+            for px in 0..W {
+                for c in 0..C {
+                    img[(py * W + px) * C + c] =
+                        (bg[c] + rng.normal_scaled(0.0, 0.03)).clamp(0.0, 0.999) as f32;
+                }
+            }
+        }
+
+        // distractor partial digits at the edges (SVHN crops contain
+        // neighbours)
+        if rng.bernoulli(0.5) {
+            let other = rng.below(CLASSES);
+            let ox = -10 + rng.below(4) as i64;
+            let oy = rng.below(8) as i64 - 4;
+            stamp(&mut rng, img, other, ox, oy, &fg);
+        }
+
+        // main digit: scale x4 with jitter, centered-ish
+        let dx = rng.below(9) as i64 - 4;
+        let dy = rng.below(7) as i64 - 3;
+        stamp(&mut rng, img, digit, 6 + dx, 2 + dy, &fg);
+    }
+    Dataset { x, y_cls: y, y_reg: Vec::new(), n, feat_dim: FEAT }
+}
+
+/// Draw glyph `digit` scaled x4 (20x28 px) at top-left (ox, oy), with
+/// slight shear and per-pixel alpha noise.
+fn stamp(rng: &mut Rng, img: &mut [f32], digit: usize, ox: i64, oy: i64, fg: &[f64; 3]) {
+    let shear = rng.range(-0.15, 0.15);
+    let glyph = &GLYPHS[digit];
+    for gy in 0..7i64 {
+        for gx in 0..5i64 {
+            if glyph[(gy * 5 + gx) as usize] == 0 {
+                continue;
+            }
+            for sy in 0..4i64 {
+                for sx in 0..4i64 {
+                    let py = oy + gy * 4 + sy;
+                    let px = ox + gx * 4 + sx + ((gy * 4 + sy) as f64 * shear) as i64;
+                    if !(0..H as i64).contains(&py) || !(0..W as i64).contains(&px) {
+                        continue;
+                    }
+                    let alpha = 0.85 + 0.15 * rng.uniform();
+                    let base = ((py as usize) * W + px as usize) * C;
+                    for c in 0..C {
+                        let cur = img[base + c] as f64;
+                        img[base + c] =
+                            ((1.0 - alpha) * cur + alpha * fg[c]).clamp(0.0, 0.999) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shaped_and_in_range() {
+        let d = generate(4, 20);
+        assert_eq!(d.feat_dim, FEAT);
+        assert!(d.x.iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert!(d.y_cls.iter().all(|&c| (0..10).contains(&c)));
+    }
+
+    #[test]
+    fn digits_change_pixels() {
+        // two samples with different digits must differ in the center
+        let d = generate(8, 50);
+        let (mut a, mut b) = (None, None);
+        for i in 0..d.n {
+            if d.y_cls[i] == 1 {
+                a = Some(i);
+            }
+            if d.y_cls[i] == 8 {
+                b = Some(i);
+            }
+        }
+        let (a, b) = (a.unwrap(), b.unwrap());
+        let center = |i: usize| -> f32 {
+            let s = d.sample(i);
+            let mut acc = 0.0;
+            for y in 12..20 {
+                for x in 12..20 {
+                    acc += s[(y * W + x) * C];
+                }
+            }
+            acc
+        };
+        assert_ne!(center(a), center(b));
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(3, 5).x, generate(3, 5).x);
+    }
+}

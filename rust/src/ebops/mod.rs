@@ -1,0 +1,195 @@
+//! Exact EBOPs — Effective Bit Operations (paper §III.C).
+//!
+//! EBOPs = Σ over multiplications of bᵢ·bⱼ (Eq. 5) with the *effective*
+//! operand widths:
+//!
+//! * constants (weights): the number of bits enclosed by the most- and
+//!   least-significant non-zero bits of the binary magnitude — a weight
+//!   `001xx1000` counts 4 bits, not its declared 8. Trailing zeros are
+//!   free (they are a wire shift in hardware), leading zeros are free
+//!   (no logic).
+//! * variables (activations): the declared fixed-point width from
+//!   calibration (Eq. 3), including the sign bit.
+//! * a weight *group* sharing one multiplier spans from the group's
+//!   highest MSB to its lowest non-zero LSB.
+//!
+//! Accumulations inside a dot product are NOT counted separately — the
+//! paper folds them into the multiplier term (an N-term accumulation of
+//! b-bit addends is N·b EBOPs, exactly the Σ bᵢ·bⱼ of the products).
+//!
+//! The differentiable upper bound (EBOPs-bar) used during training lives
+//! on the python side (compile/hgq/ebops.py); this module computes the
+//! exact post-training value the paper reports against LUT + 55·DSP.
+
+use crate::fixed::bit_length;
+
+/// Effective bits of a single constant mantissa: MSB-to-LSB span of the
+/// magnitude. 0 for a pruned (zero) weight.
+pub fn span_bits(m: i64) -> u32 {
+    let a = m.unsigned_abs();
+    if a == 0 {
+        0
+    } else {
+        bit_length(a as i64) - a.trailing_zeros()
+    }
+}
+
+/// Effective bits of a weight group sharing one multiplier (partial
+/// unroll): from the group's highest MSB down to its lowest non-zero
+/// LSB. Zero when the whole group is pruned.
+pub fn group_span_bits(ms: &[i64]) -> u32 {
+    let mut msb = 0u32;
+    let mut lsb = u32::MAX;
+    for &m in ms {
+        let a = m.unsigned_abs();
+        if a == 0 {
+            continue;
+        }
+        msb = msb.max(bit_length(a as i64));
+        lsb = lsb.min(a.trailing_zeros());
+    }
+    if lsb == u32::MAX {
+        0
+    } else {
+        msb - lsb
+    }
+}
+
+/// EBOPs of a fully-unrolled dense layer: weight (din, dout) mantissas
+/// in row-major, per-input-element activation widths. Every (i, j)
+/// weight has its own multiplier fed by input element i.
+pub fn dense_ebops(w_mantissas: &[i64], din: usize, dout: usize, act_bits: &[u32]) -> u64 {
+    assert_eq!(w_mantissas.len(), din * dout);
+    assert_eq!(act_bits.len(), din);
+    let mut total = 0u64;
+    for i in 0..din {
+        let ba = act_bits[i] as u64;
+        if ba == 0 {
+            continue;
+        }
+        for j in 0..dout {
+            total += ba * span_bits(w_mantissas[i * dout + j]) as u64;
+        }
+    }
+    total
+}
+
+/// EBOPs of a stream-IO conv layer: one physical multiplier per kernel
+/// weight, counted once (paper: inputs sharing a multiplier through a
+/// buffer count once). Weights (kh, kw, cin, cout) row-major; activation
+/// widths per input channel.
+pub fn conv2d_stream_ebops(
+    w_mantissas: &[i64],
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    act_bits_per_cin: &[u32],
+) -> u64 {
+    assert_eq!(w_mantissas.len(), kh * kw * cin * cout);
+    assert_eq!(act_bits_per_cin.len(), cin);
+    let mut total = 0u64;
+    let mut idx = 0;
+    for _y in 0..kh {
+        for _x in 0..kw {
+            for c in 0..cin {
+                let ba = act_bits_per_cin[c] as u64;
+                for _o in 0..cout {
+                    total += ba * span_bits(w_mantissas[idx]) as u64;
+                    idx += 1;
+                }
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn span_matches_paper_example() {
+        // "001xx1000" with x=1: 0b00111000? the paper's example counts 4
+        // bits between the enclosing non-zero bits: 001xx1000 -> bits
+        // 3..6 inclusive = 4.
+        assert_eq!(span_bits(0b001101000), 4);
+        assert_eq!(span_bits(0b001111000), 4);
+        assert_eq!(span_bits(0), 0);
+        assert_eq!(span_bits(1), 1);
+        assert_eq!(span_bits(-8), 1); // sign-magnitude: 0b1000 spans 1 bit
+        assert_eq!(span_bits(0b1010), 3);
+    }
+
+    #[test]
+    fn group_span() {
+        // group {0b1000, 0b0010}: msb 4, lsb 1 -> span 3
+        assert_eq!(group_span_bits(&[0b1000, 0b0010]), 3);
+        assert_eq!(group_span_bits(&[0, 0]), 0);
+        assert_eq!(group_span_bits(&[0b100]), 1);
+        // negative members use magnitudes
+        assert_eq!(group_span_bits(&[-0b1000, 0b0010]), 3);
+    }
+
+    #[test]
+    fn dense_counts_products() {
+        // 2x2 weights [[1 (1b), 6 (2b)], [0, 3 (2b)]], act bits [4, 5]
+        let w = [1, 6, 0, 3];
+        let total = dense_ebops(&w, 2, 2, &[4, 5]);
+        assert_eq!(total, 4 * 1 + 4 * 2 + 5 * 0 + 5 * 2);
+    }
+
+    #[test]
+    fn conv_stream_counts_each_multiplier_once() {
+        // 1x1 kernel, cin=2, cout=1, weights [3 (2b), 4 (1b)], act [8, 8]
+        let total = conv2d_stream_ebops(&[3, 4], 1, 1, 2, 1, &[8, 8]);
+        assert_eq!(total, 8 * 2 + 8 * 1);
+    }
+
+    #[test]
+    fn prop_span_bounds_declared_width() {
+        check("span-le-bitlength", 500, |rng| {
+            let m = (rng.next_u64() & 0xFFFFF) as i64 - 0x80000;
+            let s = span_bits(m);
+            prop_assert!(s <= bit_length(m.unsigned_abs() as i64), "span > declared");
+            // multiplying by a power of two never changes the span
+            prop_assert_eq!(span_bits(m * 16), s);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_group_span_ge_member_span_structure() {
+        check("group-span", 300, |rng| {
+            let n = 1 + rng.below(8);
+            let ms: Vec<i64> =
+                (0..n).map(|_| (rng.next_u64() & 0xFFF) as i64 - 0x800).collect();
+            let g = group_span_bits(&ms);
+            // group span >= any member's span (shared multiplier covers all)
+            for &m in &ms {
+                prop_assert!(g >= span_bits(m), "group {g} < member {}", span_bits(m));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dense_zero_acts_contribute_nothing() {
+        check("dense-dead-input", 200, |rng| {
+            let din = 1 + rng.below(8);
+            let dout = 1 + rng.below(8);
+            let w: Vec<i64> =
+                (0..din * dout).map(|_| (rng.next_u64() & 0xFF) as i64 - 0x80).collect();
+            let mut bits = vec![6u32; din];
+            let dead = rng.below(din);
+            bits[dead] = 0;
+            let with_dead = dense_ebops(&w, din, dout, &bits);
+            bits[dead] = 6;
+            let full = dense_ebops(&w, din, dout, &bits);
+            prop_assert!(with_dead <= full);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,341 @@
+//! Bit-accurate firmware inference: exact i64 mantissa arithmetic.
+//!
+//! Matches the hardware semantics end to end: input quantization with
+//! wrap (Eq. 1/2), exact MAC accumulation at a per-layer common LSB,
+//! ReLU on the full-precision accumulator, then activation
+//! re-quantization (round-half-up + wrap) into the calibrated
+//! fixed-point type. The HLO forward (f32) agrees with this engine up to
+//! f32 accumulation epsilon; the integer path here is the ground truth
+//! the paper's firmware guarantee refers to.
+
+use anyhow::{bail, Result};
+
+use super::{FwLayer, Graph};
+
+/// Reusable inference engine (scratch buffers amortized across calls —
+/// zero allocation per sample once warmed up).
+pub struct Emulator<'g> {
+    g: &'g Graph,
+    // ping-pong activation buffers: mantissa + per-element frac bits
+    m_a: Vec<i64>,
+    f_a: Vec<i32>,
+    m_b: Vec<i64>,
+    f_b: Vec<i32>,
+}
+
+impl<'g> Emulator<'g> {
+    pub fn new(g: &'g Graph) -> Self {
+        let cap = max_width(g);
+        Emulator {
+            g,
+            m_a: vec![0; cap],
+            f_a: vec![0; cap],
+            m_b: vec![0; cap],
+            f_b: vec![0; cap],
+        }
+    }
+
+    /// Run one sample; `out` receives the dequantized logits.
+    pub fn infer(&mut self, x: &[f32], out: &mut [f64]) -> Result<()> {
+        if x.len() != self.g.input_dim {
+            bail!("input dim {} != {}", x.len(), self.g.input_dim);
+        }
+        if out.len() != self.g.output_dim {
+            bail!("output dim {} != {}", out.len(), self.g.output_dim);
+        }
+        let mut n_cur = 0usize;
+
+        for layer in &self.g.layers {
+            match layer {
+                FwLayer::InputQuant { out: q } => {
+                    n_cur = x.len();
+                    for i in 0..n_cur {
+                        let s = q.spec(i);
+                        self.m_a[i] = s.quantize(x[i] as f64);
+                        self.f_a[i] = s.frac_bits();
+                    }
+                }
+                FwLayer::Dense { din, dout, w, b, relu, out: q, acc_frac } => {
+                    debug_assert_eq!(n_cur, *din);
+                    for j in 0..*dout {
+                        let mut acc: i64 = 0;
+                        for i in 0..*din {
+                            let ma = self.m_a[i];
+                            if ma == 0 {
+                                continue;
+                            }
+                            let idx = i * dout + j;
+                            let mw = w.m[idx];
+                            if mw == 0 {
+                                continue;
+                            }
+                            let shift = acc_frac - (self.f_a[i] + w.frac[idx]);
+                            debug_assert!(shift >= 0);
+                            acc += (ma * mw) << shift;
+                        }
+                        // bias aligned to accumulator LSB
+                        acc += b.m[j] << (acc_frac - b.frac[j]);
+                        if *relu {
+                            acc = acc.max(0);
+                        }
+                        let s = q.spec(j);
+                        self.m_b[j] = s.requantize(acc, *acc_frac);
+                        self.f_b[j] = s.frac_bits();
+                    }
+                    n_cur = *dout;
+                    self.swap();
+                }
+                FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, b, relu, out: q, acc_frac } => {
+                    let (oh, ow) = (in_h - k + 1, in_w - k + 1);
+                    debug_assert_eq!(n_cur, in_h * in_w * cin);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for co in 0..*cout {
+                                let mut acc: i64 = 0;
+                                for ky in 0..*k {
+                                    let iy = oy + ky;
+                                    for kx in 0..*k {
+                                        let ix = ox + kx;
+                                        let a_base = (iy * in_w + ix) * cin;
+                                        let w_base = ((ky * k + kx) * cin) * cout + co;
+                                        for ci in 0..*cin {
+                                            let ma = self.m_a[a_base + ci];
+                                            if ma == 0 {
+                                                continue;
+                                            }
+                                            let widx = w_base + ci * cout;
+                                            let mw = w.m[widx];
+                                            if mw == 0 {
+                                                continue;
+                                            }
+                                            let shift =
+                                                acc_frac - (self.f_a[a_base + ci] + w.frac[widx]);
+                                            acc += (ma * mw) << shift;
+                                        }
+                                    }
+                                }
+                                acc += b.m[co] << (acc_frac - b.frac[co]);
+                                if *relu {
+                                    acc = acc.max(0);
+                                }
+                                let oidx = (oy * ow + ox) * cout + co;
+                                let s = q.spec(oidx);
+                                self.m_b[oidx] = s.requantize(acc, *acc_frac);
+                                self.f_b[oidx] = s.frac_bits();
+                            }
+                        }
+                    }
+                    n_cur = oh * ow * cout;
+                    self.swap();
+                }
+                FwLayer::MaxPool2 { in_shape } => {
+                    let [h, w, c] = *in_shape;
+                    let (oh, ow) = (h / 2, w / 2);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ch in 0..c {
+                                let mut best = i64::MIN;
+                                let mut bf = 0i32;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let idx = ((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ch;
+                                        // uniform frac within a pooled group is
+                                        // guaranteed by layer-gran act quantizers
+                                        debug_assert!(
+                                            best == i64::MIN || self.f_a[idx] == bf,
+                                            "maxpool over mixed LSBs"
+                                        );
+                                        if self.m_a[idx] > best {
+                                            best = self.m_a[idx];
+                                            bf = self.f_a[idx];
+                                        }
+                                    }
+                                }
+                                let oidx = (oy * ow + ox) * c + ch;
+                                self.m_b[oidx] = best;
+                                self.f_b[oidx] = bf;
+                            }
+                        }
+                    }
+                    n_cur = oh * ow * c;
+                    self.swap();
+                }
+                FwLayer::Flatten => { /* buffers are already flat */ }
+            }
+        }
+
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.m_a[j] as f64 * crate::fixed::exp2i(-self.f_a[j]);
+        }
+        Ok(())
+    }
+
+    /// Batch helper: samples are rows of `x`, logits rows of `out`.
+    pub fn infer_batch(&mut self, x: &[f32], out: &mut [f64]) -> Result<usize> {
+        let n = x.len() / self.g.input_dim;
+        for s in 0..n {
+            let xi = &x[s * self.g.input_dim..(s + 1) * self.g.input_dim];
+            let oi = &mut out[s * self.g.output_dim..(s + 1) * self.g.output_dim];
+            self.infer(xi, oi)?;
+        }
+        Ok(n)
+    }
+
+    fn swap(&mut self) {
+        std::mem::swap(&mut self.m_a, &mut self.m_b);
+        std::mem::swap(&mut self.f_a, &mut self.f_b);
+    }
+}
+
+/// Widest intermediate tensor in the graph (buffer sizing).
+fn max_width(g: &Graph) -> usize {
+    let mut cap = g.input_dim.max(g.output_dim);
+    for l in &g.layers {
+        cap = cap.max(match l {
+            FwLayer::Dense { dout, .. } => *dout,
+            FwLayer::Conv2d { k, cout, in_h, in_w, cin, .. } => {
+                ((in_h - k + 1) * (in_w - k + 1) * cout).max(in_h * in_w * cin)
+            }
+            FwLayer::MaxPool2 { in_shape } => in_shape.iter().product(),
+            _ => 0,
+        });
+    }
+    cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::firmware::{ActQ, QuantWeights};
+    use crate::fixed::FixedSpec;
+
+    /// Hand-built 2->2->1 network checked against hand-computed fixed-
+    /// point arithmetic.
+    fn tiny_graph() -> Graph {
+        let in_q = ActQ {
+            scalar: false,
+            specs: vec![FixedSpec::new(true, 6, 3), FixedSpec::new(true, 6, 3)],
+        };
+        // w = [[0.5, -1.0], [0.25, 2.0]] at f=2 -> m = [[2,-4],[1,8]]
+        let w0 = QuantWeights { m: vec![2, -4, 1, 8], frac: vec![2; 4] };
+        let b0 = QuantWeights { m: vec![1, -2], frac: vec![2; 2] };
+        let hidden_q = ActQ {
+            scalar: false,
+            specs: vec![FixedSpec::new(false, 8, 4), FixedSpec::new(false, 8, 4)],
+        };
+        let w1 = QuantWeights { m: vec![3, -3], frac: vec![1; 2] };
+        let b1 = QuantWeights { m: vec![0], frac: vec![0] };
+        let out_q = ActQ { scalar: false, specs: vec![FixedSpec::new(true, 12, 6)] };
+        Graph {
+            name: "tiny".into(),
+            input_dim: 2,
+            output_dim: 1,
+            layers: vec![
+                FwLayer::InputQuant { out: in_q },
+                FwLayer::Dense {
+                    din: 2,
+                    dout: 2,
+                    w: w0,
+                    b: b0,
+                    relu: true,
+                    out: hidden_q,
+                    acc_frac: 5,
+                },
+                FwLayer::Dense {
+                    din: 2,
+                    dout: 1,
+                    w: w1,
+                    b: b1,
+                    relu: false,
+                    out: out_q,
+                    acc_frac: 5,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn tiny_network_hand_checked() {
+        let g = tiny_graph();
+        let mut em = Emulator::new(&g);
+        let mut out = [0.0];
+        // x = [1.0, 0.5]; input f=3 -> exact.
+        // h = relu([1*0.5 + 0.5*0.25 + 0.25, 1*-1 + 0.5*2 - 0.5])
+        //   = relu([0.875, -0.5]) = [0.875, 0] (f=4 exact)
+        // y = 0.875*1.5 + 0*-1.5 + 0 = 1.3125 (f=6 exact)
+        em.infer(&[1.0, 0.5], &mut out).unwrap();
+        assert_eq!(out[0], 1.3125);
+    }
+
+    #[test]
+    fn emulator_matches_f64_reference_when_exact() {
+        // random small nets where every value is exactly representable
+        use crate::util::prop::check;
+        check("emulator-vs-f64", 50, |rng| {
+            let din = 1 + rng.below(6);
+            let dout = 1 + rng.below(6);
+            let f = 3i32;
+            let mk = |rng: &mut crate::util::rng::Rng, n: usize| -> Vec<f32> {
+                (0..n).map(|_| ((rng.below(33) as f32) - 16.0) / 8.0).collect()
+            };
+            let wv = mk(rng, din * dout);
+            let bv = mk(rng, dout);
+            let w = QuantWeights::quantize(&wv, &vec![f as f32; din * dout]).unwrap();
+            let b = QuantWeights::quantize(&bv, &vec![f as f32; dout]).unwrap();
+            let in_q = ActQ { scalar: true, specs: vec![FixedSpec::new(true, 10, 5)] };
+            let out_q = ActQ { scalar: true, specs: vec![FixedSpec::new(true, 20, 12)] };
+            let g = Graph {
+                name: "p".into(),
+                input_dim: din,
+                output_dim: dout,
+                layers: vec![
+                    FwLayer::InputQuant { out: in_q },
+                    FwLayer::Dense {
+                        din,
+                        dout,
+                        w: w.clone(),
+                        b: b.clone(),
+                        relu: false,
+                        out: out_q,
+                        acc_frac: 8,
+                    },
+                ],
+            };
+            let x = mk(rng, din);
+            let mut got = vec![0.0; dout];
+            Emulator::new(&g).infer(&x, &mut got).unwrap();
+            for j in 0..dout {
+                let want: f64 = (0..din)
+                    .map(|i| x[i] as f64 * w.value(i * dout + j))
+                    .sum::<f64>()
+                    + b.value(j);
+                if (got[j] - want).abs() > 1e-9 {
+                    return Err(format!("j={j}: {} vs {}", got[j], want));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relu_clamps_negative_accumulators() {
+        let g = tiny_graph();
+        let mut em = Emulator::new(&g);
+        let mut out = [0.0];
+        // strongly negative input drives both hidden units to relu floor
+        em.infer(&[-3.0, -3.0], &mut out).unwrap();
+        // h = relu([-3*0.5 - 3*0.25 + 0.25, 3 - 6 - 0.5]) = [0, 0]; y = 0
+        assert_eq!(out[0], 0.0);
+    }
+
+    #[test]
+    fn input_wrap_behaviour_is_cyclic() {
+        // input spec fixed<6,3>: range [-4, 3.875]; 4.0 wraps to -4.0
+        let g = tiny_graph();
+        let mut em = Emulator::new(&g);
+        let (mut a, mut b) = ([0.0], [0.0]);
+        em.infer(&[4.0, 0.0], &mut a).unwrap();
+        em.infer(&[-4.0, 0.0], &mut b).unwrap();
+        assert_eq!(a[0], b[0]);
+    }
+}

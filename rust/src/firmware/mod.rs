@@ -1,0 +1,371 @@
+//! Firmware graph: the deployed, fully-quantized network (paper §IV).
+//!
+//! This is the hls4ml-substitute: a typed fixed-point dataflow graph
+//! built from (a) the trained packed state (weights + per-group
+//! fractional bits) and (b) the calibration extremes (Eq. 3 integer
+//! bits). All arithmetic in [`emulator`] is exact i64 mantissa math, so
+//! software↔firmware correspondence is bit-exact by construction — the
+//! same guarantee the paper's proxy models provide.
+
+pub mod emulator;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ebops;
+use crate::fixed::{round_half_up, FixedSpec};
+use crate::nn::{LayerMeta, ModelMeta};
+
+/// Trainable-bitwidth clipping range — MUST match python
+/// compile/kernels/ref.py (F_MIN / F_MAX).
+pub const F_MIN: f64 = -8.0;
+pub const F_MAX: f64 = 12.0;
+
+/// Per-element quantized constants (weights / biases).
+#[derive(Debug, Clone)]
+pub struct QuantWeights {
+    /// integer mantissas
+    pub m: Vec<i64>,
+    /// per-element fractional bits (the trained f, rounded)
+    pub frac: Vec<i32>,
+}
+
+impl QuantWeights {
+    /// Quantize float weights with trained fractional bits; `fbits` is
+    /// either per-element (same length) or a single broadcast scalar
+    /// (layer granularity).
+    pub fn quantize(w: &[f32], fbits: &[f32]) -> Result<QuantWeights> {
+        if fbits.len() != w.len() && fbits.len() != 1 {
+            bail!("fbits length {} incompatible with weights {}", fbits.len(), w.len());
+        }
+        let mut m = Vec::with_capacity(w.len());
+        let mut frac = Vec::with_capacity(w.len());
+        for (i, &wi) in w.iter().enumerate() {
+            let f_fp = fbits[if fbits.len() == 1 { 0 } else { i }] as f64;
+            let f = round_half_up(f_fp.clamp(F_MIN, F_MAX)) as i32;
+            m.push(round_half_up(wi as f64 * crate::fixed::exp2i(f)));
+            frac.push(f);
+        }
+        Ok(QuantWeights { m, frac })
+    }
+
+    /// Dequantized value of element i.
+    pub fn value(&self, i: usize) -> f64 {
+        self.m[i] as f64 * crate::fixed::exp2i(-self.frac[i])
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        let zeros = self.m.iter().filter(|&&m| m == 0).count();
+        zeros as f64 / self.m.len().max(1) as f64
+    }
+}
+
+/// Activation quantizer for one tensor: one [`FixedSpec`] per element,
+/// or a single broadcast spec (layer granularity / stream IO).
+#[derive(Debug, Clone)]
+pub struct ActQ {
+    pub specs: Vec<FixedSpec>,
+    pub scalar: bool,
+}
+
+impl ActQ {
+    pub fn spec(&self, i: usize) -> FixedSpec {
+        if self.scalar {
+            self.specs[0]
+        } else {
+            self.specs[i]
+        }
+    }
+
+    pub fn max_frac(&self) -> i32 {
+        self.specs.iter().map(|s| s.frac_bits()).max().unwrap_or(0)
+    }
+
+    pub fn max_bits(&self) -> i32 {
+        self.specs.iter().map(|s| s.bits).max().unwrap_or(0)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum FwLayer {
+    InputQuant {
+        out: ActQ,
+    },
+    Dense {
+        din: usize,
+        dout: usize,
+        w: QuantWeights,
+        b: QuantWeights,
+        relu: bool,
+        out: ActQ,
+        /// common accumulator LSB (fractional bits)
+        acc_frac: i32,
+    },
+    Conv2d {
+        k: usize,
+        cin: usize,
+        cout: usize,
+        in_h: usize,
+        in_w: usize,
+        w: QuantWeights,
+        b: QuantWeights,
+        relu: bool,
+        out: ActQ,
+        acc_frac: i32,
+    },
+    MaxPool2 {
+        in_shape: [usize; 3],
+    },
+    Flatten,
+}
+
+/// Calibration extremes of the *quantized* activations, concatenated in
+/// act-group order (the calib.hlo artifact's output, batch-reduced).
+#[derive(Debug, Clone)]
+pub struct Calib {
+    pub amin: Vec<f32>,
+    pub amax: Vec<f32>,
+}
+
+impl Calib {
+    pub fn merge(&mut self, amin: &[f32], amax: &[f32]) {
+        for (a, &b) in self.amin.iter_mut().zip(amin) {
+            *a = a.min(b);
+        }
+        for (a, &b) in self.amax.iter_mut().zip(amax) {
+            *a = a.max(b);
+        }
+    }
+
+    pub fn empty(n: usize) -> Calib {
+        Calib { amin: vec![0.0; n], amax: vec![0.0; n] }
+    }
+
+    /// Add a symmetric safety margin (paper: "extra margins ... for
+    /// potential outliers"). margin = 0 keeps the exact extremes.
+    pub fn with_margin(mut self, margin: f64) -> Calib {
+        for v in self.amin.iter_mut() {
+            if *v < 0.0 {
+                *v *= 1.0 + margin as f32;
+            }
+        }
+        for v in self.amax.iter_mut() {
+            if *v > 0.0 {
+                *v *= 1.0 + margin as f32;
+            }
+        }
+        self
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub layers: Vec<FwLayer>,
+    pub input_dim: usize,
+    pub output_dim: usize,
+}
+
+impl Graph {
+    /// Assemble the firmware graph from trained state + calibration.
+    pub fn build(meta: &ModelMeta, state: &[f32], calib: &Calib) -> Result<Graph> {
+        if state.len() != meta.state_size {
+            bail!("state size {} != meta {}", state.len(), meta.state_size);
+        }
+        if calib.amin.len() != meta.calib_size {
+            bail!("calib size {} != meta {}", calib.amin.len(), meta.calib_size);
+        }
+
+        let act_q = |gname: &str| -> Result<ActQ> {
+            let g = meta.act_group(gname)?;
+            let f_fp = meta.tensor_slice(state, gname)?;
+            let mut specs = Vec::with_capacity(g.size);
+            for i in 0..g.size {
+                let f = round_half_up((f_fp[i] as f64).clamp(F_MIN, F_MAX)) as i32;
+                let (lo, hi) =
+                    (calib.amin[g.calib_offset + i] as f64, calib.amax[g.calib_offset + i] as f64);
+                specs.push(FixedSpec::from_range(lo, hi, f));
+            }
+            Ok(ActQ { scalar: g.size == 1, specs })
+        };
+
+        let mut layers = Vec::new();
+        let mut cur_act: Option<ActQ> = None;
+        for lm in &meta.layers {
+            match lm {
+                LayerMeta::InputQuant { name, .. } => {
+                    let out = act_q(&format!("{name}.fa"))?;
+                    cur_act = Some(out.clone());
+                    layers.push(FwLayer::InputQuant { out });
+                }
+                LayerMeta::Dense { name, din, dout, relu } => {
+                    let w = QuantWeights::quantize(
+                        meta.tensor_slice(state, &format!("{name}.w"))?,
+                        meta.tensor_slice(state, &format!("{name}.fw"))?,
+                    )?;
+                    let b = QuantWeights::quantize(
+                        meta.tensor_slice(state, &format!("{name}.b"))?,
+                        meta.tensor_slice(state, &format!("{name}.fb"))?,
+                    )?;
+                    let out = act_q(&format!("{name}.fa"))?;
+                    let in_act =
+                        cur_act.as_ref().ok_or_else(|| anyhow!("dense before input_quant"))?;
+                    let acc_frac = acc_frac_for(&w, &b, in_act);
+                    cur_act = Some(out.clone());
+                    layers.push(FwLayer::Dense {
+                        din: *din,
+                        dout: *dout,
+                        w,
+                        b,
+                        relu: *relu,
+                        out,
+                        acc_frac,
+                    });
+                }
+                LayerMeta::Conv2d { name, k, cin, cout, relu, out_shape } => {
+                    let w = QuantWeights::quantize(
+                        meta.tensor_slice(state, &format!("{name}.w"))?,
+                        meta.tensor_slice(state, &format!("{name}.fw"))?,
+                    )?;
+                    let b = QuantWeights::quantize(
+                        meta.tensor_slice(state, &format!("{name}.b"))?,
+                        meta.tensor_slice(state, &format!("{name}.fb"))?,
+                    )?;
+                    let out = act_q(&format!("{name}.fa"))?;
+                    let in_act =
+                        cur_act.as_ref().ok_or_else(|| anyhow!("conv before input_quant"))?;
+                    let acc_frac = acc_frac_for(&w, &b, in_act);
+                    let in_h = out_shape[0] + k - 1;
+                    let in_w = out_shape[1] + k - 1;
+                    cur_act = Some(out.clone());
+                    layers.push(FwLayer::Conv2d {
+                        k: *k,
+                        cin: *cin,
+                        cout: *cout,
+                        in_h,
+                        in_w,
+                        w,
+                        b,
+                        relu: *relu,
+                        out,
+                        acc_frac,
+                    });
+                }
+                LayerMeta::MaxPool2 { out_shape } => {
+                    let in_shape = [out_shape[0] * 2, out_shape[1] * 2, out_shape[2]];
+                    layers.push(FwLayer::MaxPool2 { in_shape });
+                }
+                LayerMeta::Flatten => layers.push(FwLayer::Flatten),
+            }
+        }
+        Ok(Graph {
+            name: meta.name.clone(),
+            layers,
+            input_dim: meta.input_dim(),
+            output_dim: meta.output_dim,
+        })
+    }
+
+    /// Exact EBOPs of the deployed model (paper Eq. 5 with effective,
+    /// non-zero-bit-span widths). The headline resource metric.
+    pub fn exact_ebops(&self) -> u64 {
+        let mut total = 0u64;
+        let mut cur: Option<&ActQ> = None;
+        for l in &self.layers {
+            match l {
+                FwLayer::InputQuant { out } => cur = Some(out),
+                FwLayer::Dense { din, dout, w, out, .. } => {
+                    let in_act = cur.expect("dense before input");
+                    let act_bits: Vec<u32> =
+                        (0..*din).map(|i| in_act.spec(i).bits.max(0) as u32).collect();
+                    total += ebops::dense_ebops(&w.m, *din, *dout, &act_bits);
+                    cur = Some(out);
+                }
+                FwLayer::Conv2d { k, cin, cout, w, out, .. } => {
+                    let in_act = cur.expect("conv before input");
+                    // per-input-channel widths; layer-gran specs are scalar
+                    let act_bits: Vec<u32> = (0..*cin)
+                        .map(|c| {
+                            if in_act.scalar {
+                                in_act.specs[0].bits.max(0) as u32
+                            } else {
+                                // max over spatial positions for channel c
+                                in_act
+                                    .specs
+                                    .iter()
+                                    .skip(c)
+                                    .step_by(*cin)
+                                    .map(|s| s.bits.max(0) as u32)
+                                    .max()
+                                    .unwrap_or(0)
+                            }
+                        })
+                        .collect();
+                    total += ebops::conv2d_stream_ebops(&w.m, *k, *k, *cin, *cout, &act_bits);
+                    cur = Some(out);
+                }
+                FwLayer::MaxPool2 { .. } | FwLayer::Flatten => {}
+            }
+        }
+        total
+    }
+
+    /// Overall weight sparsity (pruned fraction, §III.D.4).
+    pub fn sparsity(&self) -> f64 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for l in &self.layers {
+            if let FwLayer::Dense { w, .. } | FwLayer::Conv2d { w, .. } = l {
+                zeros += w.m.iter().filter(|&&m| m == 0).count();
+                total += w.m.len();
+            }
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+}
+
+/// Accumulator LSB: fine enough for every product (fa + fw) and bias.
+fn acc_frac_for(w: &QuantWeights, b: &QuantWeights, in_act: &ActQ) -> i32 {
+    let max_fw = w.frac.iter().copied().max().unwrap_or(0);
+    let max_fb = b.frac.iter().copied().max().unwrap_or(0);
+    (in_act.max_frac() + max_fw).max(max_fb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_weights_matches_python_use_f() {
+        // f = 2.4 -> round-half-up 2; w = 0.3 -> m = round(0.3*4) = 1
+        let q = QuantWeights::quantize(&[0.3, -0.3, 0.1], &[2.4, 2.4, 2.4]).unwrap();
+        assert_eq!(q.m, vec![1, -1, 0]);
+        assert_eq!(q.frac, vec![2, 2, 2]);
+        assert_eq!(q.value(0), 0.25);
+        // clipping at F_MAX
+        let q = QuantWeights::quantize(&[1.0], &[99.0]).unwrap();
+        assert_eq!(q.frac, vec![12]);
+    }
+
+    #[test]
+    fn quantize_weights_broadcast_scalar_f() {
+        let q = QuantWeights::quantize(&[0.5, 1.5], &[1.0]).unwrap();
+        assert_eq!(q.m, vec![1, 3]);
+        assert_eq!(q.frac, vec![1, 1]);
+    }
+
+    #[test]
+    fn sparsity_counts_zero_mantissas() {
+        let q = QuantWeights::quantize(&[0.0, 0.1, 0.9], &[1.0]).unwrap();
+        // 0.1 at f=1 -> round(0.2)=0 -> pruned
+        assert_eq!(q.m, vec![0, 0, 2]);
+        assert!((q.sparsity() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calib_merge_takes_extremes() {
+        let mut c = Calib::empty(2);
+        c.merge(&[-1.0, 0.0], &[2.0, 1.0]);
+        c.merge(&[-0.5, -3.0], &[5.0, 0.5]);
+        assert_eq!(c.amin, vec![-1.0, -3.0]);
+        assert_eq!(c.amax, vec![5.0, 1.0]);
+    }
+}

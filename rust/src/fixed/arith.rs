@@ -1,0 +1,165 @@
+//! Exact fixed-point arithmetic on (mantissa, frac_bits) pairs.
+//!
+//! The firmware emulator's dense/conv accumulators use these: products
+//! and sums of fixed-point numbers are computed exactly in i64 mantissa
+//! space at a common LSB scale, matching what an unrolled HLS MAC tree
+//! does in hardware. Width bookkeeping (for overflow-free accumulation)
+//! mirrors the bit-growth rules HLS applies.
+
+use super::bit_length;
+
+/// A fixed-point value: mantissa at scale 2^-frac.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fx {
+    pub m: i64,
+    pub frac: i32,
+}
+
+impl Fx {
+    pub fn new(m: i64, frac: i32) -> Self {
+        Fx { m, frac }
+    }
+
+    pub fn zero(frac: i32) -> Self {
+        Fx { m: 0, frac }
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.m as f64 * super::exp2i(-self.frac)
+    }
+
+    /// Exact product: LSBs add.
+    pub fn mul(self, other: Fx) -> Fx {
+        Fx { m: self.m * other.m, frac: self.frac + other.frac }
+    }
+
+    /// Exact sum after aligning to the finer LSB.
+    pub fn add(self, other: Fx) -> Fx {
+        let frac = self.frac.max(other.frac);
+        Fx {
+            m: align(self.m, self.frac, frac) + align(other.m, other.frac, frac),
+            frac,
+        }
+    }
+
+    /// Align to a target LSB; only ever widens (exact). Narrowing with
+    /// rounding is `FixedSpec::requantize`.
+    pub fn align_to(self, frac: i32) -> Fx {
+        debug_assert!(frac >= self.frac, "align_to only widens");
+        Fx { m: align(self.m, self.frac, frac), frac }
+    }
+
+    pub fn relu(self) -> Fx {
+        Fx { m: self.m.max(0), frac: self.frac }
+    }
+
+    /// Width in bits of the magnitude (sign handled by the caller).
+    pub fn mag_bits(self) -> u32 {
+        bit_length(self.m.unsigned_abs() as i64)
+    }
+}
+
+fn align(m: i64, f_src: i32, f_dst: i32) -> i64 {
+    debug_assert!(f_dst >= f_src);
+    m << (f_dst - f_src)
+}
+
+/// Exact dot product of quantized vectors with per-element scales.
+/// Returns the accumulator at the common (finest) LSB — this is the
+/// "full-precision accumulator" HLS synthesizes before the activation
+/// quantizer narrows it.
+pub fn dot(acc_frac: i32, pairs: impl Iterator<Item = (Fx, Fx)>) -> Fx {
+    let mut acc = Fx::zero(acc_frac);
+    for (a, w) in pairs {
+        let p = a.mul(w);
+        debug_assert!(p.frac <= acc_frac, "accumulator LSB too coarse: {} > {}", p.frac, acc_frac);
+        acc.m += align(p.m, p.frac, acc_frac);
+    }
+    acc
+}
+
+/// Lossless narrowing guard: #bits needed to accumulate `n` terms of
+/// `term_bits`-bit magnitudes (adder-tree bit growth: ceil(log2 n)).
+pub fn accumulator_bits(term_bits: u32, n: usize) -> u32 {
+    if n == 0 {
+        return 0;
+    }
+    term_bits + (usize::BITS - (n - 1).leading_zeros()).min(63)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn mul_is_exact() {
+        // 1.5 (m=3,f=1) * -2.25 (m=-9,f=2) = -3.375 (m=-27,f=3)
+        let p = Fx::new(3, 1).mul(Fx::new(-9, 2));
+        assert_eq!(p, Fx::new(-27, 3));
+        assert_eq!(p.to_f64(), -3.375);
+    }
+
+    #[test]
+    fn add_aligns_lsb() {
+        // 0.5 (f=1) + 0.25 (f=2) = 0.75 at f=2
+        let s = Fx::new(1, 1).add(Fx::new(1, 2));
+        assert_eq!(s, Fx::new(3, 2));
+    }
+
+    #[test]
+    fn dot_matches_f64_for_exact_values() {
+        let a = [Fx::new(3, 2), Fx::new(-1, 2), Fx::new(7, 2)];
+        let w = [Fx::new(5, 3), Fx::new(2, 3), Fx::new(-4, 3)];
+        let acc = dot(5, a.iter().copied().zip(w.iter().copied()));
+        let want: f64 = a.iter().zip(&w).map(|(x, y)| x.to_f64() * y.to_f64()).sum();
+        assert_eq!(acc.to_f64(), want);
+    }
+
+    #[test]
+    fn accumulator_bit_growth() {
+        assert_eq!(accumulator_bits(8, 1), 8);
+        assert_eq!(accumulator_bits(8, 2), 9);
+        assert_eq!(accumulator_bits(8, 3), 10);
+        assert_eq!(accumulator_bits(8, 16), 12);
+        assert_eq!(accumulator_bits(8, 17), 13);
+    }
+
+    #[test]
+    fn prop_dot_exactness_random() {
+        check("fx-dot-exact", 300, |rng| {
+            let n = 1 + rng.below(64);
+            let fa = rng.below(8) as i32;
+            let fw = rng.below(8) as i32;
+            let a: Vec<Fx> =
+                (0..n).map(|_| Fx::new((rng.next_u64() % 512) as i64 - 256, fa)).collect();
+            let w: Vec<Fx> =
+                (0..n).map(|_| Fx::new((rng.next_u64() % 512) as i64 - 256, fw)).collect();
+            let acc = dot(fa + fw, a.iter().copied().zip(w.iter().copied()));
+            let want: f64 = a.iter().zip(&w).map(|(x, y)| x.to_f64() * y.to_f64()).sum();
+            prop_assert!(
+                (acc.to_f64() - want).abs() < 1e-9,
+                "dot mismatch: {} vs {}",
+                acc.to_f64(),
+                want
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_add_commutes_and_associates() {
+        check("fx-add-algebra", 300, |rng| {
+            let mk = |rng: &mut crate::util::rng::Rng| {
+                Fx::new((rng.next_u64() % 1024) as i64 - 512, rng.below(10) as i32)
+            };
+            let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+            prop_assert_eq!(a.add(b).to_f64(), b.add(a).to_f64());
+            let l = a.add(b).add(c).to_f64();
+            let r = a.add(b.add(c)).to_f64();
+            prop_assert!((l - r).abs() < 1e-12, "assoc: {l} vs {r}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,320 @@
+//! Bit-accurate fixed-point arithmetic (paper §III.A, Eq. 1/2/4).
+//!
+//! Follows the AMD Vivado/Vitis HLS convention the paper adopts: a
+//! `fixed<b, i>` has `b` total bits, `i` integer bits *including* the
+//! sign bit when signed, and `f = b - i` fractional bits. Representable
+//! ranges:
+//!
+//! *   signed:   [-2^(i-1), 2^(i-1) - 2^-f], step 2^-f
+//! *   unsigned: [0,        2^i     - 2^-f], step 2^-f
+//!
+//! Values are carried as integer mantissas `m` (value = m * 2^-f) so all
+//! arithmetic in the firmware emulator is exact; overflow *wraps*
+//! cyclically (the paper explicitly does not saturate — Eq. 1/2).
+
+pub mod arith;
+
+/// A fixed-point type descriptor. `int_bits` may be negative (all-
+/// fractional values smaller than 1) and `bits == 0` denotes a dead
+/// (always-zero / pruned) value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FixedSpec {
+    pub signed: bool,
+    /// total bits b (0 = dead value)
+    pub bits: i32,
+    /// integer bits i, *including* the sign bit when signed
+    pub int_bits: i32,
+}
+
+impl FixedSpec {
+    pub fn new(signed: bool, bits: i32, int_bits: i32) -> Self {
+        FixedSpec { signed, bits, int_bits }
+    }
+
+    /// Fractional bits f = b - i.
+    pub fn frac_bits(&self) -> i32 {
+        self.bits - self.int_bits
+    }
+
+    /// Quantization step 2^-f.
+    pub fn step(&self) -> f64 {
+        exp2i(-self.frac_bits())
+    }
+
+    /// Smallest representable value.
+    pub fn min_value(&self) -> f64 {
+        if self.bits <= 0 {
+            return 0.0;
+        }
+        if self.signed {
+            -exp2i(self.int_bits - 1)
+        } else {
+            0.0
+        }
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> f64 {
+        if self.bits <= 0 {
+            return 0.0;
+        }
+        if self.signed {
+            exp2i(self.int_bits - 1) - self.step()
+        } else {
+            exp2i(self.int_bits) - self.step()
+        }
+    }
+
+    /// Eq. (1)/(2): quantize a real number, round-half-up then cyclic
+    /// wrap into the representable range. Returns the mantissa.
+    pub fn quantize(&self, x: f64) -> i64 {
+        if self.bits <= 0 {
+            return 0;
+        }
+        let scaled = x * exp2i(self.frac_bits());
+        let m = round_half_up(scaled);
+        self.wrap(m)
+    }
+
+    /// Quantize without wrapping (training-time Eq. 4 semantics). The
+    /// caller must guarantee range coverage via calibration.
+    pub fn quantize_nowrap(&self, x: f64) -> i64 {
+        round_half_up(x * exp2i(self.frac_bits()))
+    }
+
+    /// Cyclic wrap of a mantissa into b bits (Eq. 1/2 "overflow").
+    pub fn wrap(&self, m: i64) -> i64 {
+        if self.bits <= 0 {
+            return 0;
+        }
+        let b = self.bits as u32;
+        if b >= 63 {
+            return m; // full i64 dynamic range: nothing to wrap
+        }
+        let modulus = 1i64 << b;
+        if self.signed {
+            let half = 1i64 << (b - 1);
+            (m + half).rem_euclid(modulus) - half
+        } else {
+            m.rem_euclid(modulus)
+        }
+    }
+
+    /// Mantissa -> real value.
+    pub fn to_f64(&self, m: i64) -> f64 {
+        m as f64 * self.step()
+    }
+
+    /// True iff the mantissa is already in range (no wrap needed).
+    pub fn in_range(&self, m: i64) -> bool {
+        self.wrap(m) == m
+    }
+
+    /// Re-quantize a mantissa from `f_src` fractional bits to this
+    /// spec's `f`, round-half-up, then wrap. This is the firmware
+    /// activation-quantization step.
+    pub fn requantize(&self, m: i64, f_src: i32) -> i64 {
+        self.wrap(shift_mantissa(m, f_src, self.frac_bits()))
+    }
+
+    /// Eq. (3): the spec needed to represent the *quantized* calibration
+    /// extremes `[vmin, vmax]` with `f` fractional bits, sign inferred.
+    ///
+    /// i' = max(floor(log2 |vmax|) + 1, ceil(log2 |vmin|)), computed on
+    /// integer mantissas for exactness; i = i' + 1 when signed.
+    pub fn from_range(vmin: f64, vmax: f64, f: i32) -> FixedSpec {
+        let signed = vmin < 0.0;
+        let m_max = round_half_up(vmax.max(0.0) * exp2i(f));
+        let m_min = round_half_up((-vmin).max(0.0) * exp2i(f));
+        let hi = if m_max > 0 { bit_length(m_max) as i32 - f } else { i32::MIN / 2 };
+        let lo = if m_min > 0 { ceil_log2(m_min) as i32 - f } else { i32::MIN / 2 };
+        let i_prime = hi.max(lo);
+        if i_prime <= i32::MIN / 4 {
+            // dead value: nothing ever flows here
+            return FixedSpec { signed, bits: 0, int_bits: 0 };
+        }
+        let int_bits = i_prime + if signed { 1 } else { 0 };
+        let bits = (int_bits + f).max(0);
+        FixedSpec { signed, bits, int_bits }
+    }
+}
+
+/// floor(x + 1/2) — the paper's eps = 1/2 midpoint-round-up.
+pub fn round_half_up(x: f64) -> i64 {
+    (x + 0.5).floor() as i64
+}
+
+/// Exact 2^e for |e| < 1023.
+pub fn exp2i(e: i32) -> f64 {
+    f64::powi(2.0, e)
+}
+
+/// Number of bits needed to represent the non-negative integer m
+/// (bit_length(0) == 0).
+pub fn bit_length(m: i64) -> u32 {
+    debug_assert!(m >= 0);
+    64 - (m as u64).leading_zeros()
+}
+
+/// ceil(log2 m) for m >= 1.
+pub fn ceil_log2(m: i64) -> u32 {
+    debug_assert!(m >= 1);
+    if m == 1 {
+        0
+    } else {
+        bit_length(m - 1)
+    }
+}
+
+/// Move a mantissa between fractional-bit scales with round-half-up.
+pub fn shift_mantissa(m: i64, f_src: i32, f_dst: i32) -> i64 {
+    if f_dst >= f_src {
+        m << (f_dst - f_src)
+    } else {
+        let s = (f_src - f_dst) as u32;
+        // floor((m + 2^(s-1)) / 2^s): arithmetic shift right is floor
+        (m + (1i64 << (s - 1))) >> s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn ranges_match_paper_conventions() {
+        // fixed<8,3> signed: [-4, 4 - 2^-5]
+        let s = FixedSpec::new(true, 8, 3);
+        assert_eq!(s.frac_bits(), 5);
+        assert_eq!(s.min_value(), -4.0);
+        assert_eq!(s.max_value(), 4.0 - exp2i(-5));
+        // ufixed<8,3>: [0, 8 - 2^-5]
+        let u = FixedSpec::new(false, 8, 3);
+        assert_eq!(u.min_value(), 0.0);
+        assert_eq!(u.max_value(), 8.0 - exp2i(-5));
+    }
+
+    #[test]
+    fn quantize_rounds_half_up() {
+        let s = FixedSpec::new(true, 8, 4); // f = 4, step 1/16
+        assert_eq!(s.to_f64(s.quantize(0.03125)), 0.0625); // 0.5 steps -> up
+        assert_eq!(s.to_f64(s.quantize(-0.03125)), 0.0); // -0.5 steps -> up
+        assert_eq!(s.to_f64(s.quantize(1.0)), 1.0);
+    }
+
+    #[test]
+    fn overflow_wraps_cyclically() {
+        let s = FixedSpec::new(true, 4, 4); // integers in [-8, 7]
+        assert_eq!(s.quantize(8.0), -8); // 8 wraps to -8
+        assert_eq!(s.quantize(9.0), -7);
+        assert_eq!(s.quantize(-9.0), 7);
+        let u = FixedSpec::new(false, 4, 4); // [0, 15]
+        assert_eq!(u.quantize(16.0), 0);
+        assert_eq!(u.quantize(-1.0), 15);
+    }
+
+    #[test]
+    fn from_range_matches_eq3_examples() {
+        // vmax = 3.0 -> i' = 2; signed by vmin < 0 (vmin = -4 -> ceil(log2 4) = 2)
+        let s = FixedSpec::from_range(-4.0, 3.0, 4);
+        assert!(s.signed);
+        assert_eq!(s.int_bits, 3); // i' = 2 plus sign bit
+        assert_eq!(s.bits, 7);
+        // unsigned relu output up to 8.0 -> i' = 4
+        let u = FixedSpec::from_range(0.0, 8.0, 2);
+        assert!(!u.signed);
+        assert_eq!(u.int_bits, 4);
+        assert_eq!(u.bits, 6);
+        // dead group
+        let d = FixedSpec::from_range(0.0, 0.0, 5);
+        assert_eq!(d.bits, 0);
+        assert_eq!(d.quantize(123.0), 0);
+    }
+
+    #[test]
+    fn from_range_covers_extremes() {
+        for &(lo, hi, f) in
+            &[(-4.0, 3.0, 4), (0.0, 7.99, 3), (-0.3, 0.2, 8), (-128.0, 127.0, 0)]
+        {
+            let s = FixedSpec::from_range(lo, hi, f);
+            let ml = s.quantize_nowrap(lo);
+            let mh = s.quantize_nowrap(hi);
+            assert!(s.in_range(ml), "{s:?} lo {lo}");
+            assert!(s.in_range(mh), "{s:?} hi {hi}");
+        }
+    }
+
+    #[test]
+    fn integer_log_helpers() {
+        assert_eq!(bit_length(0), 0);
+        assert_eq!(bit_length(1), 1);
+        assert_eq!(bit_length(8), 4);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+    }
+
+    #[test]
+    fn shift_mantissa_round_half_up() {
+        // 0b1011 at f=2 (2.75) -> f=0: round(2.75) = 3
+        assert_eq!(shift_mantissa(0b1011, 2, 0), 3);
+        // -2.75 -> -2 (floor(-2.75 + 0.5) = -3? no: round-half-up(-2.75) = -3 + ... )
+        // round_half_up(-2.75) = floor(-2.25) = -3
+        assert_eq!(shift_mantissa(-11, 2, 0), -3);
+        // upshift is exact
+        assert_eq!(shift_mantissa(3, 0, 4), 48);
+    }
+
+    #[test]
+    fn prop_quantize_in_range_is_exact_multiple() {
+        check("quantize-exact", 500, |rng| {
+            let bits = 1 + rng.below(16) as i32;
+            let int_bits = rng.below(bits as usize + 1) as i32;
+            let signed = rng.bernoulli(0.5);
+            let s = FixedSpec::new(signed, bits, int_bits);
+            let x = rng.range(s.min_value(), s.max_value() + s.step() * 0.49);
+            let m = s.quantize(x);
+            let v = s.to_f64(m);
+            prop_assert!(
+                (v - x).abs() <= s.step() / 2.0 + 1e-12,
+                "quantization error too large: x={x} v={v} spec={s:?}"
+            );
+            prop_assert!(s.in_range(m), "wrapped inside range: {s:?} {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_wrap_is_idempotent_and_periodic() {
+        check("wrap-periodic", 500, |rng| {
+            let bits = 1 + rng.below(20) as i32;
+            let signed = rng.bernoulli(0.5);
+            let s = FixedSpec::new(signed, bits, rng.below(8) as i32);
+            let m = rng.next_u64() as i64 >> 24;
+            let w = s.wrap(m);
+            prop_assert_eq!(s.wrap(w), w);
+            let period = 1i64 << bits;
+            prop_assert_eq!(s.wrap(m + period), w);
+            prop_assert_eq!(s.wrap(m - period), w);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_requantize_matches_f64_path() {
+        check("requantize-vs-f64", 500, |rng| {
+            let f_src = rng.below(12) as i32;
+            let s = FixedSpec::new(true, 14, 6);
+            let m = (rng.next_u64() % 4000) as i64 - 2000;
+            let x = m as f64 * exp2i(-f_src);
+            let direct = s.quantize(x);
+            let shifted = s.requantize(m, f_src);
+            prop_assert_eq!(direct, shifted);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,42 @@
+//! HGQ: High Granularity Quantization — reproduction library.
+//!
+//! Layer 3 of the rust + JAX + Pallas stack: the training/deployment
+//! coordinator plus every substrate the paper depends on:
+//!
+//! * [`fixed`]     — bit-accurate fixed-point arithmetic (Eq. 1/2/4 of
+//!                   the paper, Vivado sign-bit convention, wrap
+//!                   overflow).
+//! * [`ebops`]     — *exact* Effective Bit Operations: non-zero-bit-span
+//!                   operand widths, Σ bᵢ·bⱼ over multiplications.
+//! * [`resource`]  — the Vivado/Vitis place-and-route substitute: CSD
+//!                   shift-add multiplier decomposition, carry-chain
+//!                   adder trees, DSP inference, pipeline FF + latency.
+//! * [`firmware`]  — integer fixed-point inference engine with exact
+//!                   software↔firmware correspondence (hls4ml contract).
+//! * [`nn`]        — model metadata (meta.json) shared with the python
+//!                   build path.
+//! * [`data`]      — synthetic datasets standing in for the paper's
+//!                   (jets / SVHN / muon tracking; see DESIGN.md
+//!                   substitutions).
+//! * [`runtime`]   — PJRT CPU client: loads AOT HLO artifacts compiled
+//!                   from the L2 JAX model (python never runs at
+//!                   inference/training time).
+//! * [`coordinator`] — the training loop, β schedule, Pareto-front
+//!                   checkpointing, calibration (Eq. 3) and deployment.
+//! * [`baselines`] — QKeras-style uniform / layer-wise quantization and
+//!                   magnitude-pruning baselines from the evaluation.
+//! * [`metrics`], [`util`] — shared helpers (accuracy/resolution; JSON,
+//!                   RNG, CLI, bench harness, property testing).
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod ebops;
+pub mod firmware;
+pub mod fixed;
+pub mod metrics;
+pub mod nn;
+pub mod report;
+pub mod resource;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,307 @@
+//! `hgq` — the HGQ reproduction launcher.
+//!
+//! Subcommands:
+//!   train    train one model (HGQ or baseline settings)
+//!   sweep    single-run β-ramp Pareto sweep + deploy (paper protocol)
+//!   table1   jet tagging (Table I / Fig. III)
+//!   table2   SVHN classifier (Table II / Fig. IV)
+//!   table3   muon tracker (Table III / Fig. V)
+//!   fig2     EBOPs vs LUT + c·DSP linearity (Fig. II)
+//!   ablate   constant-β (HGQ-c*) and granularity ablations
+//!   info     print artifact/platform info
+//!
+//! Python never runs from here: everything executes AOT HLO artifacts
+//! through the PJRT CPU client plus pure-rust substrates.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use hgq::coordinator::experiment::{
+    preset, run_hgq_sweep, run_layerwise_baseline, run_uniform_baseline, Preset,
+};
+use hgq::coordinator::{deploy, BetaSchedule, TrainConfig};
+use hgq::data::splits_for;
+use hgq::resource::linear_fit;
+use hgq::runtime::{ModelRuntime, Runtime};
+use hgq::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::parse_env();
+    let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "info" => cmd_info(&artifacts, args),
+        "train" => cmd_train(&artifacts, args),
+        "sweep" => cmd_sweep(&artifacts, args),
+        "table1" => cmd_table(&artifacts, args, "jets"),
+        "table2" => cmd_table(&artifacts, args, "svhn"),
+        "table3" => cmd_table(&artifacts, args, "muon"),
+        "fig2" => cmd_fig2(&artifacts, args),
+        "ablate" => cmd_ablate(&artifacts, args),
+        "deploy" => cmd_deploy(&artifacts, args),
+        "emulate" => cmd_emulate(&artifacts, args),
+        "help" | _ => {
+            println!(
+                "usage: hgq <info|train|sweep|table1|table2|table3|fig2|ablate|deploy|emulate> \
+                 [--artifacts DIR] [--model NAME] [--epochs N] [--beta B] [--seed S] \
+                 [--checkpoint DIR] [--json FILE] [--verbose]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    args.finish()?;
+    let rt = Runtime::new()?;
+    println!("platform: {}", rt.platform());
+    for model in ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"] {
+        match ModelRuntime::load(&rt, artifacts, model) {
+            Ok(mr) => println!(
+                "  {:<12} state={:>7} f32, batch={:>4}, calib={:>6}, layers={}",
+                model,
+                mr.meta.state_size,
+                mr.meta.batch,
+                mr.meta.calib_size,
+                mr.meta.layers.len()
+            ),
+            Err(e) => println!("  {model:<12} UNAVAILABLE ({e})"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let model = args.str("model", "jets_pp");
+    let epochs = args.usize("epochs", 30);
+    let beta = args.f64("beta", 1e-5);
+    let beta_to = args.f64("beta-to", 0.0);
+    let f_lr = args.f64("f-lr", 8.0) as f32;
+    let lr = args.f64("lr", 3e-3) as f32;
+    let seed = args.u64("seed", 0);
+    let n_train = args.usize("n-train", 8192);
+    let n_eval = args.usize("n-eval", 2048);
+    let verbose = args.flag("verbose");
+    args.finish()?;
+
+    let rt = Runtime::new()?;
+    let mr = ModelRuntime::load(&rt, artifacts, &model)?;
+    let splits = splits_for(&model, seed ^ 1, n_train, n_eval);
+    let cfg = TrainConfig {
+        epochs,
+        lr,
+        f_lr,
+        beta: if beta_to > 0.0 {
+            BetaSchedule::LogRamp { from: beta, to: beta_to }
+        } else {
+            BetaSchedule::Const(beta)
+        },
+        seed,
+        log_every: if verbose { 1 } else { (epochs / 10).max(1) },
+        ..TrainConfig::default()
+    };
+    let out = hgq::coordinator::train(&mr, &splits.train, &splits.val, &cfg, None)?;
+    let (_, rep) = deploy(&mr, "final", &out.state, &[&splits.train, &splits.val], &splits.test)?;
+    println!("{}", rep.row());
+    println!("fw-vs-hlo max |diff| = {:.3e}", rep.fw_vs_hlo_max_abs);
+    Ok(())
+}
+
+fn cmd_sweep(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let task = args.str("task", "jets");
+    let epochs = args.str_opt("epochs").and_then(|s| s.parse().ok());
+    let verbose = args.flag("verbose");
+    args.finish()?;
+    let rt = Runtime::new()?;
+    let p = preset(&task);
+    let (_, _, outcome, reports) = run_hgq_sweep(&rt, artifacts, &p, epochs, verbose)?;
+    println!("pareto front: {} checkpoints", outcome.pareto.len());
+    for r in &reports {
+        println!("{}", r.row());
+    }
+    Ok(())
+}
+
+fn table_header(task: &str) {
+    println!("== {} ==", task);
+    println!(
+        "{:<14} {:<8} {:>8} | {:>15} | {:>35} | {:>22} | {}",
+        "model", "row", "quality", "EBOPs", "LUT/DSP/FF/BRAM", "latency/II", "sparsity"
+    );
+}
+
+fn cmd_table(artifacts: &PathBuf, mut args: Args, task: &str) -> Result<()> {
+    let epochs = args.str_opt("epochs").and_then(|s| s.parse().ok());
+    let verbose = args.flag("verbose");
+    let skip_baselines = args.flag("no-baselines");
+    let json_out = args.str_opt("json");
+    let ckpt_root = args.str_opt("save-checkpoints");
+    args.finish()?;
+    let rt = Runtime::new()?;
+    let p = preset(task);
+
+    table_header(task);
+    let (_, _, outcome, mut reports) = run_hgq_sweep(&rt, artifacts, &p, epochs, verbose)?;
+    for r in &reports {
+        println!("{}", r.row());
+    }
+    if let Some(root) = &ckpt_root {
+        use hgq::coordinator::checkpoint::{save, CheckpointInfo};
+        for (i, pt) in outcome.pareto.sorted().iter().enumerate() {
+            save(
+                &PathBuf::from(root).join(format!("{}_{:03}", p.model, i)),
+                &CheckpointInfo {
+                    model: p.model.to_string(),
+                    label: format!("pareto-{i}"),
+                    quality: pt.quality,
+                    cost: pt.cost,
+                    epoch: pt.epoch,
+                    beta: pt.beta,
+                },
+                &pt.state,
+            )?;
+        }
+        println!("(saved {} checkpoints under {root})", outcome.pareto.len());
+    }
+    if !skip_baselines {
+        for &bits in p.uniform_bits {
+            let rep = run_uniform_baseline(&rt, artifacts, &p, bits, epochs)?;
+            println!("{}", rep.row());
+            reports.push(rep);
+        }
+        for rep in run_layerwise_baseline(&rt, artifacts, &p, epochs)? {
+            println!("{}", rep.row());
+            reports.push(rep);
+        }
+    }
+    if let Some(path) = json_out {
+        hgq::report::write_json(&PathBuf::from(&path), &format!("{task} table"), &reports)?;
+        println!("(wrote {path})");
+    }
+    Ok(())
+}
+
+/// Deploy a saved checkpoint: calibrate, build firmware, print the
+/// utilization report and per-layer breakdown.
+fn cmd_deploy(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let ckpt = args.str_opt("checkpoint").ok_or_else(|| anyhow::anyhow!("--checkpoint DIR required"))?;
+    let n_eval = args.usize("n-eval", 2048);
+    args.finish()?;
+    let (info, state) = hgq::coordinator::checkpoint::load(&PathBuf::from(&ckpt))?;
+    let rt = Runtime::new()?;
+    let mr = ModelRuntime::load(&rt, artifacts, &info.model)?;
+    let splits = splits_for(&info.model, 1, n_eval * 2, n_eval);
+    let (graph, rep) = deploy(
+        &mr,
+        &info.label,
+        &state,
+        &[&splits.train, &splits.val],
+        &splits.test,
+    )?;
+    println!("{}", rep.row());
+    println!("\n{}", hgq::report::utilization_report(&rep));
+    println!("{}", hgq::resource::breakdown::format_breakdown(&hgq::resource::breakdown::breakdown(&graph)));
+    Ok(())
+}
+
+/// Run the bit-accurate firmware emulator on fresh samples from a saved
+/// checkpoint (the "proxy model" workflow of paper §IV).
+fn cmd_emulate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let ckpt = args.str_opt("checkpoint").ok_or_else(|| anyhow::anyhow!("--checkpoint DIR required"))?;
+    let n = args.usize("n", 8);
+    args.finish()?;
+    let (info, state) = hgq::coordinator::checkpoint::load(&PathBuf::from(&ckpt))?;
+    let rt = Runtime::new()?;
+    let mr = ModelRuntime::load(&rt, artifacts, &info.model)?;
+    let splits = splits_for(&info.model, 99, 1024, n.max(16));
+    let state_lit = mr.state_literal(&state)?;
+    let calib = hgq::coordinator::calibrate(&mr, &state_lit, &[&splits.train])?;
+    let graph = hgq::firmware::Graph::build(&mr.meta, &state, &calib)?;
+    let mut em = hgq::firmware::emulator::Emulator::new(&graph);
+    let mut out = vec![0.0f64; graph.output_dim];
+    println!("emulating {} samples through {} ({} layers):", n, info.model, graph.layers.len());
+    for i in 0..n {
+        em.infer(splits.test.sample(i), &mut out)?;
+        if splits.test.is_classification() {
+            let pred = hgq::metrics::argmax(&out);
+            println!(
+                "  sample {i}: logits {:?} -> class {pred} (truth {})",
+                out.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>(),
+                splits.test.y_cls[i]
+            );
+        } else {
+            println!("  sample {i}: angle {:.2} mrad (truth {:.2})", out[0], splits.test.y_reg[i]);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig2(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let epochs = args.str_opt("epochs").and_then(|s| s.parse().ok());
+    args.finish()?;
+    let rt = Runtime::new()?;
+    let mut points: Vec<(f64, f64, f64)> = Vec::new();
+    println!("{:<14} {:<8} {:>10} {:>10} {:>6} {:>12}", "model", "row", "EBOPs", "LUT", "DSP", "LUT+c*DSP");
+    let mut all_reports = Vec::new();
+    for task in ["jets", "muon", "svhn"] {
+        let p: Preset = preset(task);
+        let (_, _, _, reports) = run_hgq_sweep(&rt, artifacts, &p, epochs, false)?;
+        all_reports.extend(reports);
+    }
+    for r in &all_reports {
+        points.push((r.resources.lut as f64, r.resources.dsp as f64, r.ebops as f64));
+    }
+    let (a, b) = linear_fit(&points);
+    for r in &all_reports {
+        let fitted = a * r.resources.lut as f64 + b * r.resources.dsp as f64;
+        println!(
+            "{:<14} {:<8} {:>10} {:>10} {:>6} {:>12.0}",
+            r.model, r.label, r.ebops, r.resources.lut, r.resources.dsp, fitted
+        );
+    }
+    println!("fit: EBOPs ~= {a:.3} * LUT + {b:.1} * DSP   (paper: 1 * LUT + 55 * DSP)");
+    Ok(())
+}
+
+fn cmd_ablate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let epochs = args.usize("epochs", 40);
+    args.finish()?;
+    let rt = Runtime::new()?;
+    let p = preset("jets");
+    let mr = ModelRuntime::load(&rt, artifacts, p.model)?;
+    let splits = splits_for(p.model, 1, p.n_train, p.n_eval);
+
+    println!("== ablation: constant beta (HGQ-c*) vs ramp ==");
+    for (label, beta) in [("HGQ-c1", 2.1e-6), ("HGQ-c2", 1.2e-5)] {
+        let cfg = TrainConfig {
+            epochs,
+            lr: p.lr,
+            f_lr: p.f_lr,
+            gamma: p.gamma,
+            beta: BetaSchedule::Const(beta),
+            ..TrainConfig::default()
+        };
+        let out = hgq::coordinator::train(&mr, &splits.train, &splits.val, &cfg, None)?;
+        let best = out.pareto.sorted().last().map(|pt| pt.state.clone()).unwrap_or(out.state);
+        let (_, rep) = deploy(&mr, label, &best, &[&splits.train, &splits.val], &splits.test)?;
+        println!("{}", rep.row());
+    }
+
+    println!("== ablation: granularity (per-parameter vs layer-wise) ==");
+    let (_, _, _, reports) = run_hgq_sweep(&rt, artifacts, &p, Some(epochs), false)?;
+    for r in reports.iter().take(2) {
+        println!("{}", r.row());
+    }
+    for rep in run_layerwise_baseline(&rt, artifacts, &p, Some(epochs))? {
+        println!("{}", rep.row());
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Evaluation metrics used across the paper's three tasks.
+
+/// Classification accuracy from logits (row-major n x k).
+pub fn accuracy(logits: &[f64], labels: &[i32], k: usize) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * k);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let pred = argmax(row);
+        if pred == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / n.max(1) as f64
+}
+
+pub fn argmax(row: &[f64]) -> usize {
+    let mut best = 0;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Mean cross-entropy from logits (numerically stable log-softmax).
+pub fn cross_entropy(logits: &[f64], labels: &[i32], k: usize) -> f64 {
+    let n = labels.len();
+    let mut total = 0.0;
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f64>().ln();
+        total += lse - row[labels[i] as usize];
+    }
+    total / n.max(1) as f64
+}
+
+/// Regression resolution, paper §V.D: RMS of the error after removing
+/// outliers with |err| > cut (30 mrad in the paper). Returns (rms,
+/// outlier_fraction).
+pub fn resolution_with_cut(pred: &[f64], target: &[f32], cut: f64) -> (f64, f64) {
+    let mut ss = 0.0;
+    let mut kept = 0usize;
+    for (p, &t) in pred.iter().zip(target) {
+        let e = p - t as f64;
+        if e.abs() <= cut {
+            ss += e * e;
+            kept += 1;
+        }
+    }
+    let n = pred.len().max(1);
+    let rms = if kept > 0 { (ss / kept as f64).sqrt() } else { f64::INFINITY };
+    (rms, 1.0 - kept as f64 / n as f64)
+}
+
+/// k x k confusion matrix, rows = truth.
+pub fn confusion(logits: &[f64], labels: &[i32], k: usize) -> Vec<u64> {
+    let mut m = vec![0u64; k * k];
+    for (i, &t) in labels.iter().enumerate() {
+        let pred = argmax(&logits[i * k..(i + 1) * k]);
+        m[t as usize * k + pred] += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = [1.0, 0.0, 0.0, 2.0, 0.5, 0.1]; // preds: 0, 1 (wait: [0.0,2.0]? no)
+        // rows: [1,0,0] -> 0 ; [2,0.5,0.1] -> 0
+        let acc = accuracy(&logits, &[0, 1], 3);
+        assert!((acc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cross_entropy_uniform() {
+        // all-zero logits over k classes: CE = ln k
+        let ce = cross_entropy(&[0.0; 10], &[3, 1], 5);
+        assert!((ce - (5f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resolution_cut_drops_outliers() {
+        let pred = [0.0, 1.0, 100.0];
+        let target = [0.0f32, 0.0, 0.0];
+        let (rms, outfrac) = resolution_with_cut(&pred, &target, 30.0);
+        assert!((rms - (0.5f64).sqrt()).abs() < 1e-12);
+        assert!((outfrac - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn confusion_layout() {
+        let logits = [0.0, 1.0, 1.0, 0.0]; // preds: 1, 0
+        let m = confusion(&logits, &[0, 0], 2);
+        assert_eq!(m, vec![1, 1, 0, 0]);
+    }
+}

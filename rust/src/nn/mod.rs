@@ -1,0 +1,271 @@
+//! Model metadata: the contract between the python build path and the
+//! rust runtime. Parses `artifacts/<model>/meta.json` (written by
+//! compile/aot.py) into typed descriptions of the packed state vector,
+//! the activation quantizer groups, and the layer graph.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named tensor inside the packed state vector.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// "param" | "fbit" | "opt" | "stat"
+    pub seg: String,
+}
+
+/// One activation quantizer group (paper: a set of activation values
+/// sharing statistics; per-element granularity => size == tensor size,
+/// layer granularity => size == 1).
+#[derive(Debug, Clone)]
+pub struct ActGroup {
+    pub name: String,
+    pub fshape: Vec<usize>,
+    pub signed: bool,
+    pub size: usize,
+    /// offset of this group inside the concatenated calib vectors
+    pub calib_offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum LayerMeta {
+    InputQuant { name: String, signed: bool },
+    Dense { name: String, din: usize, dout: usize, relu: bool },
+    Conv2d { name: String, k: usize, cin: usize, cout: usize, relu: bool, out_shape: [usize; 3] },
+    MaxPool2 { out_shape: [usize; 3] },
+    Flatten,
+}
+
+impl LayerMeta {
+    pub fn name(&self) -> &str {
+        match self {
+            LayerMeta::InputQuant { name, .. } => name,
+            LayerMeta::Dense { name, .. } => name,
+            LayerMeta::Conv2d { name, .. } => name,
+            LayerMeta::MaxPool2 { .. } => "maxpool2",
+            LayerMeta::Flatten => "flatten",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    /// "cls" | "reg"
+    pub task: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub y_is_int: bool,
+    pub w_gran: String,
+    pub a_gran: String,
+    pub state_size: usize,
+    pub n_params: usize,
+    pub n_train: usize,
+    pub calib_size: usize,
+    pub output_dim: usize,
+    pub tensors: Vec<TensorEntry>,
+    pub act_groups: Vec<ActGroup>,
+    pub layers: Vec<LayerMeta>,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelMeta> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("meta missing {k}"))?.into())
+        };
+        let n = |k: &str| -> Result<usize> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("meta missing {k}"))
+        };
+
+        let mut tensors = Vec::new();
+        for t in j.get("tensors").and_then(Json::as_arr).unwrap_or(&[]) {
+            tensors.push(TensorEntry {
+                name: t.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                shape: t.get("shape").and_then(Json::as_usize_vec).unwrap_or_default(),
+                offset: t.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                size: t.get("size").and_then(Json::as_usize).unwrap_or(0),
+                seg: t.get("seg").and_then(Json::as_str).unwrap_or("").into(),
+            });
+        }
+
+        let mut act_groups = Vec::new();
+        let mut calib_off = 0usize;
+        for g in j.get("act_groups").and_then(Json::as_arr).unwrap_or(&[]) {
+            let size = g.get("size").and_then(Json::as_usize).unwrap_or(1);
+            act_groups.push(ActGroup {
+                name: g.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                fshape: g.get("fshape").and_then(Json::as_usize_vec).unwrap_or_default(),
+                signed: g.get("signed").and_then(Json::as_bool).unwrap_or(true),
+                size,
+                calib_offset: calib_off,
+            });
+            calib_off += size;
+        }
+
+        let mut layers = Vec::new();
+        for l in j.get("layers").and_then(Json::as_arr).unwrap_or(&[]) {
+            let kind = l.get("kind").and_then(Json::as_str).unwrap_or("");
+            let name = l.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+            let relu = l.get("act").and_then(Json::as_str) == Some("relu");
+            match kind {
+                "input_quant" => layers.push(LayerMeta::InputQuant {
+                    name,
+                    signed: l.get("signed").and_then(Json::as_bool).unwrap_or(true),
+                }),
+                "dense" => layers.push(LayerMeta::Dense {
+                    name,
+                    din: l.get("din").and_then(Json::as_usize).unwrap_or(0),
+                    dout: l.get("dout").and_then(Json::as_usize).unwrap_or(0),
+                    relu,
+                }),
+                "conv2d" => {
+                    let os = l
+                        .get("out_shape")
+                        .and_then(Json::as_usize_vec)
+                        .ok_or_else(|| anyhow!("conv2d missing out_shape"))?;
+                    layers.push(LayerMeta::Conv2d {
+                        name,
+                        k: l.get("k").and_then(Json::as_usize).unwrap_or(0),
+                        cin: l.get("cin").and_then(Json::as_usize).unwrap_or(0),
+                        cout: l.get("cout").and_then(Json::as_usize).unwrap_or(0),
+                        relu,
+                        out_shape: [os[0], os[1], os[2]],
+                    });
+                }
+                "maxpool2" => {
+                    let os = l
+                        .get("out_shape")
+                        .and_then(Json::as_usize_vec)
+                        .ok_or_else(|| anyhow!("maxpool2 missing out_shape"))?;
+                    layers.push(LayerMeta::MaxPool2 { out_shape: [os[0], os[1], os[2]] });
+                }
+                "flatten" => layers.push(LayerMeta::Flatten),
+                other => bail!("unknown layer kind '{other}'"),
+            }
+        }
+
+        let calib_size = n("calib_size")?;
+        if calib_off != calib_size {
+            bail!("act group sizes ({calib_off}) disagree with calib_size ({calib_size})");
+        }
+
+        Ok(ModelMeta {
+            name: s("name")?,
+            task: s("task")?,
+            batch: n("batch")?,
+            input_shape: j
+                .get("input_shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("meta missing input_shape"))?,
+            y_is_int: s("y_dtype")? == "i32",
+            w_gran: s("w_gran")?,
+            a_gran: s("a_gran")?,
+            state_size: n("state_size")?,
+            n_params: n("n_params")?,
+            n_train: n("n_train")?,
+            calib_size,
+            output_dim: n("output_dim")?,
+            tensors,
+            act_groups,
+            layers,
+        })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&TensorEntry> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not in meta"))
+    }
+
+    /// View of a named tensor inside a packed state slice.
+    pub fn tensor_slice<'a>(&self, state: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let t = self.tensor(name)?;
+        state
+            .get(t.offset..t.offset + t.size)
+            .ok_or_else(|| anyhow!("state too short for '{name}'"))
+    }
+
+    pub fn act_group(&self, name: &str) -> Result<&ActGroup> {
+        self.act_groups
+            .iter()
+            .find(|g| g.name == name)
+            .ok_or_else(|| anyhow!("act group '{name}' not in meta"))
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_meta() -> Json {
+        Json::parse(
+            r#"{
+          "name":"t","task":"cls","batch":4,"input_shape":[3],"y_dtype":"i32",
+          "w_gran":"element","a_gran":"element",
+          "state_size":100,"n_params":10,"n_train":20,"calib_size":5,"output_dim":2,
+          "hypers":["beta","gamma","lr","f_lr"],"metrics":["loss","metric","ebops","sparsity"],
+          "tensors":[
+            {"name":"d0.w","shape":[3,2],"offset":0,"size":6,"seg":"param"},
+            {"name":"d0.b","shape":[2],"offset":6,"size":2,"seg":"param"}],
+          "act_groups":[
+            {"name":"inq.fa","fshape":[3],"signed":true,"size":3},
+            {"name":"d0.fa","fshape":[2],"signed":false,"size":2}],
+          "layers":[
+            {"kind":"input_quant","name":"inq","signed":true},
+            {"kind":"dense","name":"d0","din":3,"dout":2,"act":"relu"}]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_tiny_meta() {
+        let m = ModelMeta::from_json(&tiny_meta()).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.tensors.len(), 2);
+        assert_eq!(m.act_groups[1].calib_offset, 3);
+        assert!(matches!(m.layers[1], LayerMeta::Dense { din: 3, dout: 2, relu: true, .. }));
+        assert_eq!(m.input_dim(), 3);
+    }
+
+    #[test]
+    fn tensor_slice_reads_offsets() {
+        let m = ModelMeta::from_json(&tiny_meta()).unwrap();
+        let state: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let b = m.tensor_slice(&state, "d0.b").unwrap();
+        assert_eq!(b, &[6.0, 7.0]);
+        assert!(m.tensor_slice(&state, "nope").is_err());
+    }
+
+    #[test]
+    fn calib_size_mismatch_rejected() {
+        let mut j = tiny_meta();
+        if let Json::Obj(o) = &mut j {
+            for (k, v) in o.iter_mut() {
+                if k == "calib_size" {
+                    *v = Json::Num(99.0);
+                }
+            }
+        }
+        assert!(ModelMeta::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Experiment reporting: structured JSON/markdown emitters for the
+//! regenerated paper tables, including the paper's own reference rows
+//! for side-by-side comparison in EXPERIMENTS.md.
+
+pub mod paper;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::deploy::DeployReport;
+use crate::util::json::Json;
+
+/// Serialize a set of deploy reports as JSON (machine-readable results
+/// file next to EXPERIMENTS.md).
+pub fn reports_to_json(title: &str, reports: &[DeployReport]) -> Json {
+    let rows: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("model", Json::str(r.model.clone())),
+                ("label", Json::str(r.label.clone())),
+                ("quality", Json::Num(r.quality)),
+                ("ebops", Json::Num(r.ebops as f64)),
+                ("lut", Json::Num(r.resources.lut as f64)),
+                ("dsp", Json::Num(r.resources.dsp as f64)),
+                ("ff", Json::Num(r.resources.ff as f64)),
+                ("bram_18k", Json::Num(r.resources.bram_18k)),
+                ("latency_cc", Json::Num(r.resources.latency_cc as f64)),
+                ("ii_cc", Json::Num(r.resources.ii_cc as f64)),
+                ("sparsity", Json::Num(r.sparsity)),
+                ("fw_vs_hlo_max_abs", Json::Num(r.fw_vs_hlo_max_abs)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("title", Json::str(title)), ("rows", Json::Arr(rows))])
+}
+
+pub fn write_json(path: &Path, title: &str, reports: &[DeployReport]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, reports_to_json(title, reports).to_string_pretty())?;
+    Ok(())
+}
+
+/// Markdown table of deploy reports (EXPERIMENTS.md sections).
+pub fn markdown_table(reports: &[DeployReport], quality_header: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "| model | row | {quality_header} | EBOPs | LUT | DSP | FF | BRAM | latency (cc / ns) | II | sparsity |\n"
+    ));
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for r in reports {
+        let q = if r.quality >= 0.0 && r.quality <= 1.0 {
+            format!("{:.1}%", r.quality * 100.0)
+        } else {
+            format!("{:.2} mrad", r.quality)
+        };
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {:.1} | {} / {:.0} | {} | {:.2} |\n",
+            r.model,
+            r.label,
+            q,
+            r.ebops,
+            r.resources.lut,
+            r.resources.dsp,
+            r.resources.ff,
+            r.resources.bram_18k,
+            r.resources.latency_cc,
+            r.resources.latency_ns(),
+            r.resources.ii_cc,
+            r.sparsity,
+        ));
+    }
+    out
+}
+
+/// Vivado-style utilization summary for one deployed model.
+pub fn utilization_report(r: &DeployReport) -> String {
+    // XCVU9P budget (the paper's part): LUT 1182k, DSP 6840, FF 2364k
+    const LUT_BUDGET: f64 = 1_182_240.0;
+    const DSP_BUDGET: f64 = 6_840.0;
+    const FF_BUDGET: f64 = 2_364_480.0;
+    const BRAM_BUDGET: f64 = 2_160.0;
+    let pct = |used: f64, budget: f64| 100.0 * used / budget;
+    format!(
+        "+--------------------+------------+-----------+\n\
+         | Resource           |       Used |  % XCVU9P |\n\
+         +--------------------+------------+-----------+\n\
+         | LUT                | {:>10} | {:>8.2}% |\n\
+         | DSP                | {:>10} | {:>8.2}% |\n\
+         | FF                 | {:>10} | {:>8.2}% |\n\
+         | BRAM (18k)         | {:>10.1} | {:>8.2}% |\n\
+         +--------------------+------------+-----------+\n\
+         | Latency            | {:>4} cc ({:.0} ns @ 200 MHz)      |\n\
+         | Initiation interval| {:>4} cc                           |\n\
+         | Exact EBOPs        | {:>10}                       |\n\
+         +--------------------+------------+-----------+\n",
+        r.resources.lut,
+        pct(r.resources.lut as f64, LUT_BUDGET),
+        r.resources.dsp,
+        pct(r.resources.dsp as f64, DSP_BUDGET),
+        r.resources.ff,
+        pct(r.resources.ff as f64, FF_BUDGET),
+        r.resources.bram_18k,
+        pct(r.resources.bram_18k, BRAM_BUDGET),
+        r.resources.latency_cc,
+        r.resources.latency_ns(),
+        r.resources.ii_cc,
+        r.ebops,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::ResourceReport;
+
+    fn rep() -> DeployReport {
+        DeployReport {
+            model: "jets_pp".into(),
+            label: "HGQ-1".into(),
+            quality: 0.935,
+            ebops: 12222,
+            sparsity: 0.46,
+            resources: ResourceReport {
+                lut: 19880,
+                dsp: 2,
+                ff: 4456,
+                bram_18k: 0.0,
+                latency_cc: 13,
+                ii_cc: 1,
+            },
+            fw_vs_hlo_max_abs: 0.0,
+        }
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = reports_to_json("Table I", &[rep()]);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let row = &parsed.get("rows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("ebops").unwrap().as_usize(), Some(12222));
+        assert_eq!(row.get("label").unwrap().as_str(), Some("HGQ-1"));
+    }
+
+    #[test]
+    fn markdown_has_row_per_report() {
+        let md = markdown_table(&[rep(), rep()], "accuracy");
+        assert_eq!(md.lines().count(), 2 + 2);
+        assert!(md.contains("93.5%"));
+        assert!(md.contains("| 12222 |"));
+    }
+
+    #[test]
+    fn utilization_mentions_budget_percentages() {
+        let u = utilization_report(&rep());
+        assert!(u.contains("LUT"));
+        assert!(u.contains("1.68%")); // 19880 / 1182240
+    }
+
+    #[test]
+    fn regression_quality_formats_as_mrad() {
+        let mut r = rep();
+        r.quality = 2.15;
+        let md = markdown_table(&[r], "resolution");
+        assert!(md.contains("2.15 mrad"));
+    }
+}

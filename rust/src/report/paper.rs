@@ -1,0 +1,123 @@
+//! The paper's published numbers (Tables I-III), kept as data so the
+//! regenerated tables can be printed side by side with the original in
+//! EXPERIMENTS.md. Absolute values are NOT expected to match (different
+//! datasets/substrate — see DESIGN.md); the comparisons check the
+//! *shape*: orderings, ratios, crossovers.
+
+/// One published row: (label, quality, dsp, lut, ff, latency_cc, ii).
+/// quality is accuracy% for cls tasks, mrad resolution for muon.
+pub struct PaperRow {
+    pub label: &'static str,
+    pub quality: f64,
+    pub dsp: u64,
+    pub lut: u64,
+    pub ff: u64,
+    pub latency_cc: u64,
+    pub ii: u64,
+}
+
+/// Table I — jet tagging on XCVU9P.
+pub const TABLE1_JETS: &[PaperRow] = &[
+    PaperRow { label: "BF", quality: 74.4, dsp: 1826, lut: 48321, ff: 20132, latency_cc: 9, ii: 1 },
+    PaperRow { label: "BP", quality: 74.8, dsp: 526, lut: 17577, ff: 10548, latency_cc: 14, ii: 1 },
+    PaperRow { label: "BH", quality: 73.2, dsp: 88, lut: 15802, ff: 8108, latency_cc: 14, ii: 1 },
+    PaperRow { label: "Q6", quality: 74.8, dsp: 124, lut: 39782, ff: 8128, latency_cc: 11, ii: 1 },
+    PaperRow { label: "QE", quality: 72.3, dsp: 66, lut: 9149, ff: 1781, latency_cc: 11, ii: 1 },
+    PaperRow { label: "QB", quality: 71.9, dsp: 69, lut: 11193, ff: 1771, latency_cc: 14, ii: 1 },
+    PaperRow { label: "LogicNets JSC-M", quality: 70.6, dsp: 0, lut: 14428, ff: 440, latency_cc: 0, ii: 1 },
+    PaperRow { label: "LogicNets JSC-L", quality: 71.8, dsp: 0, lut: 37931, ff: 810, latency_cc: 5, ii: 1 },
+    PaperRow { label: "BP-DSP-RF=2", quality: 76.3, dsp: 175, lut: 5504, ff: 3036, latency_cc: 21, ii: 2 },
+    PaperRow { label: "MetaML-1%", quality: 75.6, dsp: 50, lut: 6698, ff: 0, latency_cc: 9, ii: 1 },
+    PaperRow { label: "MetaML-4%", quality: 72.8, dsp: 23, lut: 7224, ff: 0, latency_cc: 8, ii: 1 },
+    PaperRow { label: "SymbolNet", quality: 71.0, dsp: 3, lut: 177, ff: 109, latency_cc: 2, ii: 1 },
+    PaperRow { label: "HGQ-1", quality: 76.4, dsp: 34, lut: 6236, ff: 1253, latency_cc: 6, ii: 1 },
+    PaperRow { label: "HGQ-2", quality: 75.9, dsp: 6, lut: 3162, ff: 550, latency_cc: 4, ii: 1 },
+    PaperRow { label: "HGQ-3", quality: 75.0, dsp: 5, lut: 1540, ff: 370, latency_cc: 4, ii: 1 },
+    PaperRow { label: "HGQ-4", quality: 73.9, dsp: 0, lut: 565, ff: 140, latency_cc: 3, ii: 1 },
+    PaperRow { label: "HGQ-5", quality: 72.5, dsp: 0, lut: 468, ff: 131, latency_cc: 2, ii: 1 },
+    PaperRow { label: "HGQ-6", quality: 71.0, dsp: 0, lut: 256, ff: 66, latency_cc: 2, ii: 1 },
+];
+
+/// Table II — SVHN stream IO on XCVU9P (BRAM omitted; latency ~1030 cc).
+pub const TABLE2_SVHN: &[PaperRow] = &[
+    PaperRow { label: "BP 14-bit", quality: 93.0, dsp: 3341, lut: 145089, ff: 65482, latency_cc: 1035, ii: 1030 },
+    PaperRow { label: "Q 7-bit", quality: 94.0, dsp: 175, lut: 150981, ff: 35628, latency_cc: 1034, ii: 1029 },
+    PaperRow { label: "QP 7-bit", quality: 94.0, dsp: 174, lut: 111152, ff: 32554, latency_cc: 1035, ii: 1030 },
+    PaperRow { label: "AQ", quality: 88.0, dsp: 72, lut: 48027, ff: 15242, latency_cc: 1059, ii: 1029 },
+    PaperRow { label: "AQP", quality: 88.0, dsp: 70, lut: 38795, ff: 14802, latency_cc: 1059, ii: 1029 },
+    PaperRow { label: "HGQ-1", quality: 93.9, dsp: 58, lut: 69407, ff: 27853, latency_cc: 1050, ii: 1029 },
+    PaperRow { label: "HGQ-2", quality: 93.1, dsp: 30, lut: 47314, ff: 20582, latency_cc: 1061, ii: 1029 },
+    PaperRow { label: "HGQ-3", quality: 91.9, dsp: 15, lut: 40032, ff: 18087, latency_cc: 1058, ii: 1029 },
+    PaperRow { label: "HGQ-4", quality: 90.9, dsp: 13, lut: 34435, ff: 17261, latency_cc: 1059, ii: 1029 },
+    PaperRow { label: "HGQ-5", quality: 89.9, dsp: 10, lut: 30766, ff: 15205, latency_cc: 1056, ii: 1029 },
+    PaperRow { label: "HGQ-6", quality: 88.8, dsp: 6, lut: 27982, ff: 14736, latency_cc: 1056, ii: 1029 },
+];
+
+/// Table III — muon tracking on XCVU13P (quality in mrad, lower better).
+pub const TABLE3_MUON: &[PaperRow] = &[
+    PaperRow { label: "Qf8", quality: 1.95, dsp: 1762, lut: 37867, ff: 8443, latency_cc: 17, ii: 1 },
+    PaperRow { label: "Qf7", quality: 1.97, dsp: 1389, lut: 34848, ff: 5433, latency_cc: 11, ii: 1 },
+    PaperRow { label: "Qf6", quality: 2.04, dsp: 324, lut: 54638, ff: 6525, latency_cc: 13, ii: 1 },
+    PaperRow { label: "Qf5", quality: 2.15, dsp: 88, lut: 40039, ff: 3419, latency_cc: 11, ii: 1 },
+    PaperRow { label: "Qf4", quality: 2.45, dsp: 24, lut: 28526, ff: 2954, latency_cc: 10, ii: 1 },
+    PaperRow { label: "Qf3", quality: 2.78, dsp: 2, lut: 21682, ff: 2242, latency_cc: 9, ii: 1 },
+    PaperRow { label: "HGQ-1", quality: 1.95, dsp: 522, lut: 39413, ff: 6043, latency_cc: 11, ii: 1 },
+    PaperRow { label: "HGQ-2", quality: 2.00, dsp: 154, lut: 34460, ff: 5263, latency_cc: 11, ii: 1 },
+    PaperRow { label: "HGQ-3", quality: 2.09, dsp: 68, lut: 24941, ff: 4677, latency_cc: 12, ii: 1 },
+    PaperRow { label: "HGQ-4", quality: 2.20, dsp: 41, lut: 21557, ff: 4699, latency_cc: 13, ii: 1 },
+    PaperRow { label: "HGQ-5", quality: 2.39, dsp: 27, lut: 16918, ff: 2484, latency_cc: 10, ii: 1 },
+    PaperRow { label: "HGQ-6", quality: 2.63, dsp: 10, lut: 13306, ff: 3429, latency_cc: 12, ii: 1 },
+];
+
+/// "Equivalent LUT" with the paper's Fig. II coefficient.
+pub fn equiv_lut(row: &PaperRow) -> u64 {
+    row.lut + 55 * row.dsp
+}
+
+/// The paper's headline claim on Table I: resource reduction of the HGQ
+/// row vs the best baseline at >= the same accuracy.
+pub fn paper_reduction_at_iso_accuracy(
+    table: &[PaperRow],
+    hgq_label: &str,
+    baseline_label: &str,
+) -> f64 {
+    let h = table.iter().find(|r| r.label == hgq_label).unwrap();
+    let b = table.iter().find(|r| r.label == baseline_label).unwrap();
+    1.0 - equiv_lut(h) as f64 / equiv_lut(b) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_hgq_rows() {
+        for t in [TABLE1_JETS, TABLE2_SVHN, TABLE3_MUON] {
+            assert!(t.iter().any(|r| r.label.starts_with("HGQ")));
+        }
+    }
+
+    #[test]
+    fn headline_claim_reproduced_from_published_rows() {
+        // Q6 (74.8%) vs HGQ-3 (75.0%): paper claims large reduction at
+        // iso-accuracy — from the published numbers themselves:
+        let red = paper_reduction_at_iso_accuracy(TABLE1_JETS, "HGQ-3", "Q6");
+        assert!(red > 0.90, "expected >90% reduction, got {red}");
+        // QE (72.3%) vs HGQ-5 (72.5%)
+        let red = paper_reduction_at_iso_accuracy(TABLE1_JETS, "HGQ-5", "QE");
+        assert!(red > 0.90, "expected >90% reduction, got {red}");
+    }
+
+    #[test]
+    fn hgq_latency_beats_baselines_in_table1() {
+        let hgq_min = TABLE1_JETS
+            .iter()
+            .filter(|r| r.label.starts_with("HGQ"))
+            .map(|r| r.latency_cc)
+            .min()
+            .unwrap();
+        let q6 = TABLE1_JETS.iter().find(|r| r.label == "Q6").unwrap();
+        // paper: latency improvement up to ~5x
+        assert!(q6.latency_cc >= 5 * hgq_min);
+    }
+}

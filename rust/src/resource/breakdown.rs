@@ -1,0 +1,141 @@
+//! Per-layer resource breakdown — the "synthesis report" view of a
+//! deployed model (which layer dominates LUTs, where DSPs go, the
+//! latency critical path).
+
+use crate::firmware::{FwLayer, Graph};
+
+use super::{conv2d_stream_resources, dense_resources, ResourceReport};
+
+#[derive(Debug, Clone)]
+pub struct LayerUsage {
+    pub name: String,
+    pub report: ResourceReport,
+    pub ebops: u64,
+    pub weights_alive: usize,
+    pub weights_total: usize,
+}
+
+/// Break a firmware graph down layer by layer (same cost model as
+/// [`super::estimate`]; the totals agree by construction for MAC
+/// layers).
+pub fn breakdown(g: &Graph) -> Vec<LayerUsage> {
+    let mut out = Vec::new();
+    let mut cur: Option<&crate::firmware::ActQ> = None;
+    for (i, l) in g.layers.iter().enumerate() {
+        match l {
+            FwLayer::InputQuant { out: q } => {
+                cur = Some(q);
+            }
+            FwLayer::Dense { din, dout, w, out: q, .. } => {
+                let in_act = cur.expect("dense before input");
+                let r = dense_resources(*din, *dout, w, in_act, q);
+                let act_bits: Vec<u32> =
+                    (0..*din).map(|k| in_act.spec(k).bits.max(0) as u32).collect();
+                out.push(LayerUsage {
+                    name: format!("dense[{i}] {din}x{dout}"),
+                    report: r,
+                    ebops: crate::ebops::dense_ebops(&w.m, *din, *dout, &act_bits),
+                    weights_alive: w.m.iter().filter(|&&m| m != 0).count(),
+                    weights_total: w.m.len(),
+                });
+                cur = Some(q);
+            }
+            FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, out: q, .. } => {
+                let in_act = cur.expect("conv before input");
+                let r = conv2d_stream_resources(*k, *cin, *cout, *in_h, *in_w, w, in_act, q);
+                let act_bits: Vec<u32> = (0..*cin)
+                    .map(|c| {
+                        if in_act.scalar {
+                            in_act.specs[0].bits.max(0) as u32
+                        } else {
+                            in_act.spec(c).bits.max(0) as u32
+                        }
+                    })
+                    .collect();
+                out.push(LayerUsage {
+                    name: format!("conv[{i}] {k}x{k} {cin}->{cout} @{in_h}x{in_w}"),
+                    report: r,
+                    ebops: crate::ebops::conv2d_stream_ebops(&w.m, *k, *k, *cin, *cout, &act_bits),
+                    weights_alive: w.m.iter().filter(|&&m| m != 0).count(),
+                    weights_total: w.m.len(),
+                });
+                cur = Some(q);
+            }
+            FwLayer::MaxPool2 { .. } | FwLayer::Flatten => {}
+        }
+    }
+    out
+}
+
+/// Human-readable breakdown table.
+pub fn format_breakdown(rows: &[LayerUsage]) -> String {
+    let mut s = format!(
+        "{:<28} {:>9} {:>9} {:>5} {:>8} {:>7} {:>12}\n",
+        "layer", "EBOPs", "LUT", "DSP", "FF", "lat cc", "alive/total"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<28} {:>9} {:>9} {:>5} {:>8} {:>7} {:>6}/{:<6}\n",
+            r.name,
+            r.ebops,
+            r.report.lut,
+            r.report.dsp,
+            r.report.ff,
+            r.report.latency_cc,
+            r.weights_alive,
+            r.weights_total,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::firmware::{ActQ, QuantWeights};
+    use crate::fixed::FixedSpec;
+
+    fn tiny() -> Graph {
+        let q = ActQ { scalar: true, specs: vec![FixedSpec::new(true, 8, 3)] };
+        Graph {
+            name: "t".into(),
+            input_dim: 4,
+            output_dim: 2,
+            layers: vec![
+                FwLayer::InputQuant { out: q.clone() },
+                FwLayer::Dense {
+                    din: 4,
+                    dout: 2,
+                    w: QuantWeights { m: vec![3, 0, 1, 5, 0, 0, 2, 7], frac: vec![3; 8] },
+                    b: QuantWeights { m: vec![0, 0], frac: vec![3; 2] },
+                    relu: true,
+                    out: q,
+                    acc_frac: 6,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn breakdown_covers_mac_layers() {
+        let g = tiny();
+        let rows = breakdown(&g);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].weights_total, 8);
+        assert_eq!(rows[0].weights_alive, 5);
+        assert_eq!(rows[0].ebops, g.exact_ebops());
+        let txt = format_breakdown(&rows);
+        assert!(txt.contains("dense[1] 4x2"));
+    }
+
+    #[test]
+    fn breakdown_totals_match_estimate_for_macs() {
+        let g = tiny();
+        let rows = breakdown(&g);
+        let est = crate::resource::estimate(&g);
+        let lut_sum: u64 = rows.iter().map(|r| r.report.lut).sum();
+        // estimate() adds only input registers beyond MAC layers here
+        assert!(lut_sum <= est.lut);
+        assert!(est.lut - lut_sum <= 64);
+    }
+}

@@ -1,0 +1,484 @@
+//! FPGA resource + latency model — the Vivado/Vitis place-and-route
+//! substitute (DESIGN.md substitutions table).
+//!
+//! Models the arithmetic structures Vitis HLS emits for fully-unrolled
+//! fixed-point neural networks:
+//!
+//! * const×var multipliers are decomposed into shift-adds over the
+//!   weight's **canonical signed digit** (CSD) form — `d` non-zero CSD
+//!   digits cost `d-1` adders; powers of two are free wiring; pruned
+//!   weights vanish. Wide×wide products map to DSP48 blocks instead.
+//! * per-neuron accumulation is a balanced adder tree; each 2-input
+//!   adder of result width `w` costs `w` LUTs (one 6-LUT + carry per
+//!   bit), pipelined every `ADDER_LEVELS_PER_CC` levels.
+//! * FFs: pipeline registers at each register stage boundary.
+//! * stream-IO convolutions keep one physical MAC set (multiplier reuse)
+//!   plus (k-1)-row line buffers in BRAM; II = number of positions.
+//!
+//! Absolute LUT counts will not equal Vivado's optimizer output — the
+//! *relative* structure (who wins, EBOPs ≈ linear in LUT + c·DSP) is
+//! what the reproduction relies on; `linear_fit` measures our own c.
+
+pub mod breakdown;
+
+use crate::firmware::{ActQ, FwLayer, Graph, QuantWeights};
+
+/// DSP48-style block is inferred when both effective operand widths are
+/// at least this wide (narrow consts always go to fabric shift-adds).
+pub const DSP_MIN_WIDTH: u32 = 10;
+/// Adder levels absorbed per pipeline stage / clock cycle (550 MHz-class
+/// carry chains at the paper's ~200 MHz clock absorb a few levels).
+pub const ADDER_LEVELS_PER_CC: u32 = 3;
+/// Clock period assumed when converting cycles to ns (200 MHz, matching
+/// the paper's 2 cc = 10 ns tables).
+pub const NS_PER_CC: f64 = 5.0;
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceReport {
+    pub lut: u64,
+    pub dsp: u64,
+    pub ff: u64,
+    pub bram_18k: f64,
+    pub latency_cc: u64,
+    pub ii_cc: u64,
+}
+
+impl ResourceReport {
+    pub fn latency_ns(&self) -> f64 {
+        self.latency_cc as f64 * NS_PER_CC
+    }
+
+    pub fn add(&mut self, other: &ResourceReport) {
+        self.lut += other.lut;
+        self.dsp += other.dsp;
+        self.ff += other.ff;
+        self.bram_18k += other.bram_18k;
+        self.latency_cc += other.latency_cc;
+        self.ii_cc = self.ii_cc.max(other.ii_cc);
+    }
+}
+
+/// Number of non-zero digits in the canonical signed-digit form of |m|.
+/// CSD is the minimal signed-binary representation HLS uses for constant
+/// multipliers (e.g. 15 = 10000-1 -> 2 digits, not 4).
+///
+/// Closed form via the NAF identity: the non-adjacent form of x has a
+/// non-zero digit exactly where the bits of `3x` and `x` differ, so the
+/// count is `popcount(3x ^ x)`. (§Perf: replaced a bit-serial carry
+/// loop — ~250x faster, see EXPERIMENTS.md iteration log.)
+pub fn csd_nonzero_digits(m: i64) -> u32 {
+    let x = m.unsigned_abs();
+    debug_assert!(x < (1 << 62), "mantissa too wide for 3x");
+    ((x.wrapping_mul(3)) ^ x).count_ones()
+}
+
+/// Reference bit-serial CSD recoder (kept for the property test that
+/// pins the closed form to the textbook algorithm).
+#[cfg(test)]
+fn csd_nonzero_digits_serial(m: i64) -> u32 {
+    let mut x = m.unsigned_abs();
+    let mut count = 0u32;
+    while x != 0 {
+        if x & 1 == 1 {
+            count += 1;
+            // canonical recoding: runs of ones become +/- pair
+            if x & 0b11 == 0b11 {
+                x += 1; // -1 digit here, +1 carried up
+            } else {
+                x -= 1;
+            }
+        }
+        x >>= 1;
+    }
+    count
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MultKind {
+    /// weight == 0: no hardware at all
+    Dead,
+    /// power-of-two weight: pure wiring (shift)
+    Wire,
+    /// CSD shift-add network in fabric
+    LutAdders { adders: u32 },
+    /// wide product: DSP block
+    Dsp,
+}
+
+/// Cost of one const×var multiplier: weight mantissa `m`, variable width
+/// `act_bits` (includes sign).
+pub fn mult_kind(m: i64, act_bits: u32) -> MultKind {
+    if m == 0 || act_bits == 0 {
+        return MultKind::Dead;
+    }
+    let span = crate::ebops::span_bits(m);
+    if span == 1 {
+        return MultKind::Wire;
+    }
+    if span >= DSP_MIN_WIDTH && act_bits >= DSP_MIN_WIDTH {
+        return MultKind::Dsp;
+    }
+    MultKind::LutAdders { adders: csd_nonzero_digits(m).saturating_sub(1) }
+}
+
+/// LUTs of one const×var multiplier (0 for Wire/Dead/Dsp).
+pub fn mult_lut(m: i64, act_bits: u32) -> u64 {
+    match mult_kind(m, act_bits) {
+        MultKind::LutAdders { adders } => {
+            // each shift-add stage produces ~ (act_bits + span) wide sums;
+            // model each adder at the partial-product width
+            let w = act_bits + crate::ebops::span_bits(m);
+            adders as u64 * w as u64
+        }
+        _ => 0,
+    }
+}
+
+/// Balanced adder tree over `widths` (bits of each addend). Returns
+/// (lut, ff, levels). Smallest-first pairing like HLS balance-reduction.
+/// Reduces in place — no per-level allocation (§Perf iteration log).
+pub fn adder_tree(widths: &mut Vec<u32>) -> (u64, u64, u32) {
+    if widths.len() <= 1 {
+        return (0, 0, 0);
+    }
+    let mut lut = 0u64;
+    let mut ff = 0u64;
+    let mut levels = 0u32;
+    widths.sort_unstable();
+    let mut n = widths.len();
+    while n > 1 {
+        levels += 1;
+        let mut out = 0usize;
+        let mut i = 0usize;
+        while i + 1 < n {
+            let w = widths[i].max(widths[i + 1]) + 1;
+            lut += w as u64;
+            widths[out] = w;
+            out += 1;
+            i += 2;
+        }
+        if i < n {
+            widths[out] = widths[i];
+            out += 1;
+        }
+        n = out;
+        // pipeline register stage every ADDER_LEVELS_PER_CC levels
+        if levels % ADDER_LEVELS_PER_CC == 0 {
+            ff += widths[..n].iter().map(|&w| w as u64).sum::<u64>();
+        }
+    }
+    widths.truncate(n);
+    (lut, ff, levels)
+}
+
+/// Latency in clock cycles of a MAC layer: one mult stage + the adder
+/// tree, ADDER_LEVELS_PER_CC levels per cycle, plus the output register.
+fn mac_latency_cc(levels: u32, any_dsp: bool) -> u64 {
+    let mult_cc = if any_dsp { 3 } else { 1 }; // DSP48 pipeline regs
+    mult_cc + (levels as u64).div_ceil(ADDER_LEVELS_PER_CC as u64)
+}
+
+/// Resource estimate of one fully-unrolled dense layer.
+pub fn dense_resources(
+    din: usize,
+    dout: usize,
+    w: &QuantWeights,
+    in_act: &ActQ,
+    out_act: &ActQ,
+) -> ResourceReport {
+    let mut r = ResourceReport { ii_cc: 1, ..Default::default() };
+    let mut any_dsp = false;
+    let mut max_levels = 0u32;
+    let mut term_widths: Vec<u32> = Vec::with_capacity(din + 1);
+    for j in 0..dout {
+        term_widths.clear();
+        for i in 0..din {
+            let ba = in_act.spec(i).bits.max(0) as u32;
+            let m = w.m[i * dout + j];
+            match mult_kind(m, ba) {
+                MultKind::Dead => {}
+                MultKind::Wire => {
+                    term_widths.push(ba + crate::ebops::span_bits(m));
+                }
+                MultKind::LutAdders { .. } => {
+                    r.lut += mult_lut(m, ba);
+                    term_widths.push(ba + crate::ebops::span_bits(m));
+                }
+                MultKind::Dsp => {
+                    r.dsp += 1;
+                    any_dsp = true;
+                    term_widths.push(ba + crate::ebops::span_bits(m));
+                }
+            }
+        }
+        term_widths.push(8); // bias addend
+        let (lut, ff, levels) = adder_tree(&mut term_widths);
+        r.lut += lut;
+        r.ff += ff;
+        max_levels = max_levels.max(levels);
+        // output register at the activation quantizer
+        r.ff += out_act.spec(j).bits.max(0) as u64;
+    }
+    r.latency_cc = mac_latency_cc(max_levels, any_dsp);
+    r
+}
+
+/// Resource estimate of a stream-IO conv layer (one physical MAC set,
+/// multiplier reuse across positions; line buffers in BRAM).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_stream_resources(
+    k: usize,
+    cin: usize,
+    cout: usize,
+    in_h: usize,
+    in_w: usize,
+    w: &QuantWeights,
+    in_act: &ActQ,
+    out_act: &ActQ,
+) -> ResourceReport {
+    let mut r = ResourceReport::default();
+    let mut any_dsp = false;
+    let mut max_levels = 0u32;
+    for co in 0..cout {
+        let mut term_widths: Vec<u32> = Vec::new();
+        for ky in 0..k {
+            for kx in 0..k {
+                for ci in 0..cin {
+                    let ba = if in_act.scalar {
+                        in_act.specs[0].bits.max(0) as u32
+                    } else {
+                        in_act.spec(ci).bits.max(0) as u32
+                    };
+                    let m = w.m[((ky * k + kx) * cin + ci) * cout + co];
+                    match mult_kind(m, ba) {
+                        MultKind::Dead => {}
+                        MultKind::Wire => term_widths.push(ba + crate::ebops::span_bits(m)),
+                        MultKind::LutAdders { .. } => {
+                            r.lut += mult_lut(m, ba);
+                            term_widths.push(ba + crate::ebops::span_bits(m));
+                        }
+                        MultKind::Dsp => {
+                            r.dsp += 1;
+                            any_dsp = true;
+                            term_widths.push(ba + crate::ebops::span_bits(m));
+                        }
+                    }
+                }
+            }
+        }
+        term_widths.push(8);
+        let (lut, ff, levels) = adder_tree(&mut term_widths);
+        r.lut += lut;
+        r.ff += ff;
+        max_levels = max_levels.max(levels);
+        r.ff += out_act.spec(0).bits.max(0) as u64;
+    }
+    // (k-1)-row line buffer per input channel in BRAM18
+    let act_bits = if in_act.scalar {
+        in_act.specs[0].bits.max(0) as u64
+    } else {
+        in_act.max_bits().max(0) as u64
+    };
+    let buffer_bits = (k - 1) as u64 * in_w as u64 * cin as u64 * act_bits;
+    r.bram_18k += buffer_bits as f64 / 18_432.0;
+    // II: one output position per cycle
+    let (oh, ow) = (in_h - k + 1, in_w - k + 1);
+    r.ii_cc = (oh * ow) as u64;
+    r.latency_cc = r.ii_cc + mac_latency_cc(max_levels, any_dsp) + in_w as u64 * (k - 1) as u64;
+    r
+}
+
+/// Estimate the whole firmware graph. Stream (any conv present) vs
+/// fully-parallel changes how latency composes.
+pub fn estimate(g: &Graph) -> ResourceReport {
+    let mut total = ResourceReport::default();
+    let mut cur: Option<&ActQ> = None;
+    let mut is_stream = false;
+    for l in &g.layers {
+        match l {
+            FwLayer::InputQuant { out } => {
+                cur = Some(out);
+                total.latency_cc += 1; // input register
+                total.ff += out.specs.iter().map(|s| s.bits.max(0) as u64).sum::<u64>();
+            }
+            FwLayer::Dense { din, dout, w, out, .. } => {
+                let r = dense_resources(*din, *dout, w, cur.unwrap(), out);
+                total.add(&r);
+                cur = Some(out);
+            }
+            FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, out, .. } => {
+                is_stream = true;
+                let r = conv2d_stream_resources(*k, *cin, *cout, *in_h, *in_w, w, cur.unwrap(), out);
+                total.add(&r);
+                cur = Some(out);
+            }
+            FwLayer::MaxPool2 { in_shape } => {
+                // (window-1) comparators per output value, streamed
+                let [h, w, c] = *in_shape;
+                let width = cur.map(|a| a.max_bits().max(0) as u64).unwrap_or(8);
+                total.lut += 3 * c as u64 * width;
+                total.latency_cc += (h / 2 * w / 2) as u64 * if is_stream { 0 } else { 1 };
+                total.ii_cc = total.ii_cc.max((h / 2 * w / 2) as u64);
+            }
+            FwLayer::Flatten => {}
+        }
+    }
+    if !is_stream {
+        total.ii_cc = 1; // fully unrolled + pipelined
+    }
+    total
+}
+
+/// Least-squares fit EBOPs ≈ a·LUT + b·DSP over model points
+/// (Fig. II reproduction; the paper reports a ≈ 1, b ≈ 55).
+pub fn linear_fit(points: &[(f64, f64, f64)]) -> (f64, f64) {
+    // normal equations for [lut dsp] * [a b]^T = ebops
+    let (mut s_ll, mut s_ld, mut s_dd, mut s_le, mut s_de) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for &(lut, dsp, ebops) in points {
+        s_ll += lut * lut;
+        s_ld += lut * dsp;
+        s_dd += dsp * dsp;
+        s_le += lut * ebops;
+        s_de += dsp * ebops;
+    }
+    let det = s_ll * s_dd - s_ld * s_ld;
+    if det.abs() < 1e-9 {
+        // degenerate (e.g. all dsp == 0): 1-D fit on LUT
+        return (if s_ll > 0.0 { s_le / s_ll } else { 0.0 }, 0.0);
+    }
+    let a = (s_dd * s_le - s_ld * s_de) / det;
+    let b = (s_ll * s_de - s_ld * s_le) / det;
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::FixedSpec;
+    use crate::util::prop::check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn csd_examples() {
+        assert_eq!(csd_nonzero_digits(0), 0);
+        assert_eq!(csd_nonzero_digits(1), 1);
+        assert_eq!(csd_nonzero_digits(2), 1);
+        assert_eq!(csd_nonzero_digits(3), 2); // 4 - 1
+        assert_eq!(csd_nonzero_digits(15), 2); // 16 - 1
+        assert_eq!(csd_nonzero_digits(7), 2); // 8 - 1
+        assert_eq!(csd_nonzero_digits(0b101010), 3);
+        assert_eq!(csd_nonzero_digits(-15), 2);
+    }
+
+    #[test]
+    fn prop_csd_at_most_half_plus_one_of_bits() {
+        check("csd-density", 500, |rng| {
+            let m = (rng.next_u64() & 0xFFFFFF) as i64;
+            let d = csd_nonzero_digits(m);
+            let bl = crate::fixed::bit_length(m) + 1;
+            prop_assert!(d <= bl.div_ceil(2) + 1, "m={m} csd={d} bits={bl}");
+            // CSD never exceeds the plain binary popcount + 1
+            prop_assert!(d <= (m as u64).count_ones() + 1, "m={m}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_csd_closed_form_matches_serial_recoder() {
+        // exhaustive over 17 bits, then randomized wide values
+        for m in 0..(1i64 << 17) {
+            assert_eq!(
+                csd_nonzero_digits(m),
+                csd_nonzero_digits_serial(m),
+                "closed form diverges at {m}"
+            );
+        }
+        check("csd-naf-identity", 500, |rng| {
+            let m = (rng.next_u64() & 0x3FFF_FFFF_FFFF) as i64;
+            prop_assert_eq!(csd_nonzero_digits(m), csd_nonzero_digits_serial(m));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mult_kinds() {
+        assert_eq!(mult_kind(0, 8), MultKind::Dead);
+        assert_eq!(mult_kind(4, 8), MultKind::Wire); // power of two
+        assert_eq!(mult_kind(5, 0), MultKind::Dead); // dead input
+    }
+
+    #[test]
+    fn mult_kind_span_based() {
+        assert!(matches!(mult_kind(6, 8), MultKind::LutAdders { .. })); // 0b110
+        assert_eq!(mult_kind(8, 8), MultKind::Wire); // 0b1000
+        // wide x wide -> DSP
+        assert_eq!(mult_kind(0b1010101010101, 12), MultKind::Dsp);
+        // wide const but narrow act stays in fabric
+        assert!(matches!(mult_kind(0b1010101010101, 6), MultKind::LutAdders { .. }));
+    }
+
+    #[test]
+    fn adder_tree_counts() {
+        // 4 terms of 8 bits: level1 two adders of 9, level2 one adder of 10
+        let (lut, _ff, levels) = adder_tree(&mut vec![8, 8, 8, 8]);
+        assert_eq!(levels, 2);
+        assert_eq!(lut, 9 + 9 + 10);
+        let (lut1, _, l1) = adder_tree(&mut vec![8]);
+        assert_eq!((lut1, l1), (0, 0));
+    }
+
+    #[test]
+    fn prop_resources_monotone_in_weight_magnitude_structure() {
+        // pruning a weight never increases LUT cost
+        check("lut-monotone-prune", 200, |rng| {
+            let din = 2 + rng.below(6);
+            let dout = 1 + rng.below(4);
+            let mut m: Vec<i64> =
+                (0..din * dout).map(|_| (rng.next_u64() & 0x3F) as i64 - 32).collect();
+            let w = QuantWeights { m: m.clone(), frac: vec![4; din * dout] };
+            let act = ActQ { scalar: true, specs: vec![FixedSpec::new(true, 8, 2)] };
+            let full = dense_resources(din, dout, &w, &act, &act);
+            let kill = rng.below(din * dout);
+            m[kill] = 0;
+            let w2 = QuantWeights { m, frac: vec![4; din * dout] };
+            let pruned = dense_resources(din, dout, &w2, &act, &act);
+            prop_assert!(pruned.lut <= full.lut, "{} > {}", pruned.lut, full.lut);
+            prop_assert!(pruned.dsp <= full.dsp);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linear_fit_recovers_known_coefficients() {
+        let pts: Vec<(f64, f64, f64)> = (1..20)
+            .map(|i| {
+                let lut = 100.0 * i as f64;
+                let dsp = (i % 5) as f64;
+                (lut, dsp, 1.0 * lut + 55.0 * dsp)
+            })
+            .collect();
+        let (a, b) = linear_fit(&pts);
+        assert!((a - 1.0).abs() < 1e-6, "a={a}");
+        assert!((b - 55.0).abs() < 1e-6, "b={b}");
+    }
+
+    #[test]
+    fn linear_fit_degenerate_no_dsp() {
+        let pts: Vec<(f64, f64, f64)> =
+            (1..10).map(|i| (i as f64 * 10.0, 0.0, i as f64 * 20.0)).collect();
+        let (a, b) = linear_fit(&pts);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert_eq!(b, 0.0);
+    }
+
+    #[test]
+    fn dense_latency_reasonable() {
+        // 16-wide fan-in, no DSP: 1 mult cc + ceil(levels/3)
+        let w = QuantWeights { m: vec![3; 16 * 4], frac: vec![4; 64] };
+        let act = ActQ { scalar: true, specs: vec![FixedSpec::new(true, 8, 2)] };
+        let r = dense_resources(16, 4, &w, &act, &act);
+        // 17 terms (16 + bias) -> 5 levels -> 1 + ceil(5/3) = 3
+        assert_eq!(r.latency_cc, 3);
+        assert_eq!(r.ii_cc, 1);
+    }
+}

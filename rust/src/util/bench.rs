@@ -1,0 +1,128 @@
+//! Micro-benchmark harness for `cargo bench` targets (harness = false).
+//!
+//! Criterion is unavailable offline; this provides the part we need:
+//! warmup, N timed iterations, median/mean/p95/min, black_box, and a
+//! uniform one-line report format the bench binaries print (captured
+//! into bench_output.txt).
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<40} iters={:<6} median={:>12} mean={:>12} p95={:>12} min={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+
+    /// Throughput helper: items processed per second at the median.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{:.0} ns", ns)
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    stats_from(name, samples)
+}
+
+/// Time-budgeted variant: keep iterating until `budget_ms` is spent
+/// (at least `min_iters`). Right default for expensive end-to-end runs.
+pub fn bench_budget<F: FnMut()>(name: &str, budget_ms: u64, min_iters: usize, mut f: F) -> Stats {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_millis() < budget_ms as u128 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    stats_from(name, samples)
+}
+
+fn stats_from(name: &str, mut samples: Vec<f64>) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let median = samples[n / 2];
+    let p95 = samples[((n as f64 * 0.95) as usize).min(n - 1)];
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: median,
+        p95_ns: p95,
+        min_ns: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("noop-loop", 2, 50, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn report_formats() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000 s");
+    }
+}

@@ -1,0 +1,123 @@
+//! Launcher argument parsing: `hgq <subcommand> [--key value] [--flag]`.
+//!
+//! Replacement for clap in the offline build environment. Typed getters
+//! with defaults; unknown-flag detection is the caller's choice via
+//! [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.kv.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.kv.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.kv.get(name).cloned()
+    }
+
+    pub fn str(&mut self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64(&mut self, name: &str, default: f64) -> f64 {
+        self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize(&mut self, name: &str, default: usize) -> usize {
+        self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&mut self, name: &str, default: u64) -> u64 {
+        self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Error on any `--key`/`--flag` that no getter asked about (typo guard).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !self.consumed.iter().any(|c| c == k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_kv_and_flags() {
+        // note: a bare word after `--verbose` would bind as its value
+        // (greedy kv); positionals go before flags
+        let mut a = parse("train extra --model jets_pp --steps 500 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str("model", "x"), "jets_pp");
+        assert_eq!(a.usize("steps", 0), 500);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn eq_form_and_defaults() {
+        let mut a = parse("bench --beta=1e-4");
+        assert_eq!(a.f64("beta", 0.0), 1e-4);
+        assert_eq!(a.f64("gamma", 2e-6), 2e-6);
+        assert!(!a.flag("force"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse("train --oops 3");
+        let _ = a.str("model", "m");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let mut a = parse("x --lo -3.5");
+        // "-3.5" does not start with "--" so it binds as the value
+        assert_eq!(a.f64("lo", 0.0), -3.5);
+    }
+}

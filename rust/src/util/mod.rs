@@ -1,0 +1,23 @@
+//! Dependency-light utility layer.
+//!
+//! The build environment resolves crates offline and ships neither
+//! serde/serde_json, clap, rand, criterion nor proptest — so the pieces
+//! of those we need are implemented here (and unit-tested like any other
+//! substrate module):
+//!
+//! * [`json`]  — recursive-descent JSON parser + serializer (meta.json,
+//!               experiment configs, reports).
+//! * [`rng`]   — SplitMix64 / xoshiro256** RNG with normal sampling and
+//!               shuffling (seeded, reproducible).
+//! * [`cli`]   — `--flag value` argument parsing for the launcher.
+//! * [`bench`] — micro-benchmark harness (warmup + timed iterations,
+//!               median / mean / p95) used by `cargo bench` targets with
+//!               `harness = false`.
+//! * [`prop`]  — minimal property-testing driver (seeded case
+//!               generation + shrinking-free failure reporting).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

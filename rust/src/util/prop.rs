@@ -1,0 +1,81 @@
+//! Minimal property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
+//! random inputs; the closure returns `Err(msg)` (or panics) to fail.
+//! On failure the seed of the failing case is printed so it can be
+//! replayed deterministically with `check_seed`.
+
+use super::rng::Rng;
+
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seed<F>(name: &str, seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helpers that return Err instead of panicking, so the
+/// failing seed is reported by `check`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |rng| {
+            count += 1;
+            let x = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&x), "out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+}

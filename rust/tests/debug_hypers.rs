@@ -1,0 +1,40 @@
+// probe: scalar hyper routing through the AOT artifact (regression
+// guard for the print_large_constants lowering bug)
+use hgq::runtime::{self, Hypers, ModelRuntime, Runtime};
+
+#[test]
+fn scalar_hypers_reach_the_computation() {
+    let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &p, "jets_lw").unwrap();
+    let mut s0 = mr.init_state();
+    for t in &mr.meta.tensors {
+        if t.seg == "fbit" {
+            s0[t.offset..t.offset + t.size].fill(6.0);
+        }
+    }
+    let state = mr.state_literal(&s0).unwrap();
+    let x: Vec<f32> = (0..mr.meta.batch * 16).map(|i| ((i % 31) as f32 - 15.0) / 8.0).collect();
+    let y: Vec<i32> = (0..mr.meta.batch).map(|i| (i % 5) as i32).collect();
+    let xl = mr.x_literal(&x).unwrap();
+    let yl = mr.y_literal_cls(&y).unwrap();
+    let run = |h: Hypers| -> (f32, Vec<f32>) {
+        let out = runtime::train_step(&mr, &state, &xl, &yl, h).unwrap();
+        let s1 = runtime::literal_to_vec(&out.state).unwrap();
+        (out.loss, s1[mr.meta.n_params..mr.meta.n_train].to_vec())
+    };
+    let base = run(Hypers { beta: 0.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 });
+    // f_lr = 0 freezes bitwidths even at lr = 1
+    let frozen = run(Hypers { beta: 0.0, gamma: 0.0, lr: 1.0, f_lr: 0.0 });
+    let moved = frozen.1.iter().zip(&base.1).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert_eq!(moved, 0.0, "f_lr=0 must freeze bitwidths");
+    // f_lr > 0 moves them
+    let live = run(Hypers { beta: 0.0, gamma: 0.0, lr: 1.0, f_lr: 1.0 });
+    let moved = live.1.iter().zip(&base.1).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert!(moved > 0.0, "f_lr=1 must move bitwidths");
+    // beta scales the loss by ~EBOPs-bar, gamma by ~L1
+    let lb = run(Hypers { beta: 1.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 }).0;
+    let lg = run(Hypers { beta: 0.0, gamma: 1.0, lr: 0.0, f_lr: 0.0 }).0;
+    assert!(lb > base.0 + 1.0, "beta must reach the loss");
+    assert!(lg > base.0 + 1.0, "gamma must reach the loss");
+}

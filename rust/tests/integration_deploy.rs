@@ -1,0 +1,203 @@
+//! Deployment integration: calibration -> firmware -> exact EBOPs ->
+//! resource simulation, including the golden software↔firmware checks
+//! that back the paper's §IV bit-exactness guarantee.
+
+use std::path::PathBuf;
+
+use hgq::coordinator::{calibrate, deploy, train, BetaSchedule, TrainConfig};
+use hgq::data::splits_for;
+use hgq::firmware::emulator::Emulator;
+use hgq::firmware::{FwLayer, Graph};
+use hgq::runtime::{ModelRuntime, Runtime};
+
+fn artifacts() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(p.join("jets_pp").join("meta.json").exists(), "run `make artifacts` first");
+    p
+}
+
+fn trained_jets(rt: &Runtime) -> (ModelRuntime, hgq::data::Splits, Vec<f32>) {
+    let mr = ModelRuntime::load(rt, &artifacts(), "jets_pp").unwrap();
+    let splits = splits_for("jets_pp", 5, 2048, 512);
+    let cfg = TrainConfig {
+        epochs: 5,
+        lr: 3e-3,
+        f_lr: 8.0,
+        gamma: 2e-6,
+        beta: BetaSchedule::Const(1e-6),
+        seed: 5,
+        val_every: 0,
+        log_every: 0,
+        reset_stats_each_epoch: true,
+    };
+    let out = train(&mr, &splits.train, &splits.val, &cfg, None).unwrap();
+    (mr, splits, out.state)
+}
+
+#[test]
+fn firmware_bit_exact_vs_hlo_on_calibration_data_mlp() {
+    // the §IV contract: inside the calibrated ranges, the integer
+    // firmware and the HLO forward agree EXACTLY for the MLP (whose f32
+    // accumulators stay within 24-bit exactness)
+    let rt = Runtime::new().unwrap();
+    let (mr, splits, state) = trained_jets(&rt);
+    let (_, rep) =
+        deploy(&mr, "t", &state, &[&splits.train, &splits.val], &splits.test).unwrap();
+    assert_eq!(rep.fw_vs_hlo_max_abs, 0.0, "MLP firmware must match HLO bit-exactly");
+    assert!(rep.ebops > 0);
+    assert!(rep.resources.lut > 0);
+    assert_eq!(rep.resources.ii_cc, 1, "fully-unrolled MLP is II=1");
+}
+
+#[test]
+fn exact_ebops_bounded_by_train_estimate_shape() {
+    // EBOPs-bar (training) uses declared widths — the exact span-based
+    // EBOPs of the deployed model must not exceed ~it by much, and both
+    // must move together under pressure
+    let rt = Runtime::new().unwrap();
+    let (mr, splits, state) = trained_jets(&rt);
+    let (graph, rep) =
+        deploy(&mr, "t", &state, &[&splits.train, &splits.val], &splits.test).unwrap();
+    let exact = graph.exact_ebops();
+    assert_eq!(exact, rep.ebops);
+    assert!(exact > 100, "EBOPs suspiciously small: {exact}");
+}
+
+#[test]
+fn firmware_conv_matches_independent_f64_reference() {
+    // independent cross-check of the conv/pool/dense indexing: an f64
+    // reference implementation computed from the dequantized graph must
+    // agree with the integer emulator wherever f64 is exact (it is: all
+    // values are fixed-point with < 52 bits)
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "svhn_stream").unwrap();
+    let splits = splits_for("svhn_stream", 2, 128, 128);
+    let state = mr.init_state();
+    let state_lit = mr.state_literal(&state).unwrap();
+    let calib = calibrate(&mr, &state_lit, &[&splits.train]).unwrap();
+    let graph = Graph::build(&mr.meta, &state, &calib).unwrap();
+
+    let mut em = Emulator::new(&graph);
+    let x = splits.train.sample(0);
+    let mut got = vec![0.0f64; graph.output_dim];
+    em.infer(x, &mut got).unwrap();
+    let want = f64_reference(&graph, x);
+    for j in 0..graph.output_dim {
+        assert!(
+            (got[j] - want[j]).abs() < 1e-9,
+            "logit {j}: emulator {} vs f64 reference {}",
+            got[j],
+            want[j]
+        );
+    }
+}
+
+/// Naive f64 forward over the dequantized firmware graph (independent
+/// of the emulator's integer code paths).
+fn f64_reference(g: &Graph, x: &[f32]) -> Vec<f64> {
+    let quant = |v: f64, s: hgq::fixed::FixedSpec| -> f64 {
+        s.to_f64(s.quantize(v))
+    };
+    let mut cur: Vec<f64> = Vec::new();
+    for l in &g.layers {
+        match l {
+            FwLayer::InputQuant { out } => {
+                cur = x.iter().enumerate().map(|(i, &v)| quant(v as f64, out.spec(i))).collect();
+            }
+            FwLayer::Dense { din, dout, w, b, relu, out, .. } => {
+                let mut next = vec![0.0f64; *dout];
+                for (j, nj) in next.iter_mut().enumerate() {
+                    let mut acc = b.value(j);
+                    for i in 0..*din {
+                        acc += cur[i] * w.value(i * dout + j);
+                    }
+                    if *relu {
+                        acc = acc.max(0.0);
+                    }
+                    *nj = quant(acc, out.spec(j));
+                }
+                cur = next;
+            }
+            FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, b, relu, out, .. } => {
+                let (oh, ow) = (in_h - k + 1, in_w - k + 1);
+                let mut next = vec![0.0f64; oh * ow * cout];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for co in 0..*cout {
+                            let mut acc = b.value(co);
+                            for ky in 0..*k {
+                                for kx in 0..*k {
+                                    for ci in 0..*cin {
+                                        let a = cur[((oy + ky) * in_w + ox + kx) * cin + ci];
+                                        let wv = w.value(((ky * k + kx) * cin + ci) * cout + co);
+                                        acc += a * wv;
+                                    }
+                                }
+                            }
+                            if *relu {
+                                acc = acc.max(0.0);
+                            }
+                            let oi = (oy * ow + ox) * cout + co;
+                            next[oi] = quant(acc, out.spec(oi));
+                        }
+                    }
+                }
+                cur = next;
+            }
+            FwLayer::MaxPool2 { in_shape } => {
+                let [h, w, c] = *in_shape;
+                let (oh, ow) = (h / 2, w / 2);
+                let mut next = vec![0.0f64; oh * ow * c];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for ch in 0..c {
+                            let mut best = f64::NEG_INFINITY;
+                            for dy in 0..2 {
+                                for dx in 0..2 {
+                                    best = best
+                                        .max(cur[((oy * 2 + dy) * w + ox * 2 + dx) * c + ch]);
+                                }
+                            }
+                            next[(oy * ow + ox) * c + ch] = best;
+                        }
+                    }
+                }
+                cur = next;
+            }
+            FwLayer::Flatten => {}
+        }
+    }
+    cur
+}
+
+#[test]
+fn pruning_baseline_reduces_resources() {
+    let rt = Runtime::new().unwrap();
+    let (mr, splits, mut state) = trained_jets(&rt);
+    let (_, full) =
+        deploy(&mr, "full", &state, &[&splits.train, &splits.val], &splits.test).unwrap();
+    let pruned_n =
+        hgq::baselines::prune_by_magnitude(&mr.meta, &mut state, 0.7).unwrap();
+    assert!(pruned_n > 0);
+    let (graph, rep) =
+        deploy(&mr, "pruned", &state, &[&splits.train, &splits.val], &splits.test).unwrap();
+    assert!(graph.sparsity() >= 0.5);
+    assert!(rep.ebops < full.ebops, "pruning must cut EBOPs: {} vs {}", rep.ebops, full.ebops);
+    assert!(rep.resources.lut < full.resources.lut);
+}
+
+#[test]
+fn stream_conv_ii_counts_positions() {
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "svhn_stream").unwrap();
+    let splits = splits_for("svhn_stream", 2, 128, 128);
+    let state = mr.init_state();
+    let state_lit = mr.state_literal(&state).unwrap();
+    let calib = calibrate(&mr, &state_lit, &[&splits.train]).unwrap();
+    let graph = Graph::build(&mr.meta, &state, &calib).unwrap();
+    let r = hgq::resource::estimate(&graph);
+    // first conv dominates: 30x30 = 900 positions (paper's streams run
+    // at II ~= image positions)
+    assert_eq!(r.ii_cc, 900);
+    assert!(r.bram_18k > 0.0, "stream line buffers must use BRAM");
+}

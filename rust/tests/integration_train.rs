@@ -1,0 +1,113 @@
+//! Coordinator integration: short end-to-end trainings through the AOT
+//! artifacts, checking the paper's core training behaviours (loss
+//! descent, β pressure, bitwidth freezing, Pareto bookkeeping).
+
+use std::path::PathBuf;
+
+use hgq::baselines;
+use hgq::coordinator::{evaluate, train, BetaSchedule, TrainConfig};
+use hgq::data::splits_for;
+use hgq::runtime::{ModelRuntime, Runtime};
+
+fn artifacts() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(p.join("jets_pp").join("meta.json").exists(), "run `make artifacts` first");
+    p
+}
+
+fn quick_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        lr: 3e-3,
+        f_lr: 8.0,
+        gamma: 2e-6,
+        beta: BetaSchedule::Const(1e-6),
+        seed: 7,
+        val_every: 1,
+        log_every: 0,
+        reset_stats_each_epoch: true,
+    }
+}
+
+#[test]
+fn jets_loss_decreases_and_val_quality_improves() {
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "jets_pp").unwrap();
+    let splits = splits_for("jets_pp", 3, 2048, 1024);
+    let out = train(&mr, &splits.train, &splits.val, &quick_cfg(6), None).unwrap();
+    assert_eq!(out.logs.len(), 6);
+    assert!(
+        out.logs.last().unwrap().loss < out.logs[0].loss * 0.8,
+        "loss did not decrease: {:?}",
+        out.logs.iter().map(|l| l.loss).collect::<Vec<_>>()
+    );
+    let v0 = out.logs[0].val_quality.unwrap();
+    let v1 = out.logs.last().unwrap().val_quality.unwrap();
+    assert!(v1 > v0, "val quality did not improve: {v0} -> {v1}");
+    assert!(!out.pareto.is_empty());
+}
+
+#[test]
+fn beta_pressure_shrinks_ebops_bar() {
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "jets_pp").unwrap();
+    let splits = splits_for("jets_pp", 3, 2048, 512);
+    let mut lo = quick_cfg(8);
+    lo.beta = BetaSchedule::Const(1e-8);
+    let mut hi = quick_cfg(8);
+    hi.beta = BetaSchedule::Const(1e-3);
+    let out_lo = train(&mr, &splits.train, &splits.val, &lo, None).unwrap();
+    let out_hi = train(&mr, &splits.train, &splits.val, &hi, None).unwrap();
+    let e_lo = out_lo.logs.last().unwrap().ebops_bar;
+    let e_hi = out_hi.logs.last().unwrap().ebops_bar;
+    assert!(
+        e_hi < e_lo * 0.6,
+        "strong beta must shrink EBOPs-bar: {e_hi} vs {e_lo}"
+    );
+    // and pruning (0-bit quantization) kicks in
+    assert!(out_hi.logs.last().unwrap().sparsity > out_lo.logs.last().unwrap().sparsity);
+}
+
+#[test]
+fn f_lr_zero_trains_weights_only() {
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "jets_lw").unwrap();
+    let splits = splits_for("jets_lw", 3, 1024, 512);
+    let mut init = mr.init_state();
+    baselines::set_uniform_bits(&mr.meta, &mut init, 6.0, 6.0);
+    let mut cfg = quick_cfg(3);
+    cfg.f_lr = 0.0;
+    let out = train(&mr, &splits.train, &splits.val, &cfg, Some(init.clone())).unwrap();
+    // bitwidth segment unchanged
+    assert_eq!(
+        &out.state[mr.meta.n_params..mr.meta.n_train],
+        &init[mr.meta.n_params..mr.meta.n_train],
+    );
+    // weights changed
+    assert_ne!(&out.state[..mr.meta.n_params], &init[..mr.meta.n_params]);
+}
+
+#[test]
+fn evaluate_is_deterministic() {
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "jets_pp").unwrap();
+    let splits = splits_for("jets_pp", 3, 512, 512);
+    let state = mr.state_literal(&mr.init_state()).unwrap();
+    let a = evaluate(&mr, &state, &splits.val).unwrap();
+    let b = evaluate(&mr, &state, &splits.val).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn muon_regression_loss_decreases() {
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "muon_pp").unwrap();
+    let splits = splits_for("muon_pp", 3, 2048, 512);
+    let mut cfg = quick_cfg(8);
+    cfg.lr = 2e-3;
+    let out = train(&mr, &splits.train, &splits.val, &cfg, None).unwrap();
+    assert!(
+        out.logs.last().unwrap().loss < out.logs[0].loss,
+        "muon MSE did not decrease"
+    );
+}
