@@ -2,14 +2,16 @@
 //!
 //! This is the repository's E2E validation driver: it trains the
 //! 16-64-32-32-5 MLP with per-parameter trainable bitwidths through the
-//! AOT train-step artifact (PJRT CPU), logs the loss curve, then runs
-//! the complete deployment pipeline — calibration (Eq. 3), bit-accurate
-//! firmware build, exact EBOPs, simulated place-and-route — and checks
-//! the software↔firmware bit-exactness contract.
+//! hermetic pure-rust native backend (set `HGQ_BACKEND=pjrt` on a
+//! `--features pjrt` build with real artifacts for the AOT/PJRT path),
+//! logs the loss curve, then runs the complete deployment pipeline —
+//! calibration (Eq. 3), bit-accurate firmware build, exact EBOPs,
+//! simulated place-and-route — and checks the software↔firmware
+//! bit-exactness contract.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Takes ~1 minute on a laptop-class CPU.
+//! Takes ~1 minute on a laptop-class CPU; no artifacts needed.
 
 use anyhow::Result;
 
@@ -23,8 +25,10 @@ fn main() -> Result<()> {
     );
     println!("=== HGQ quickstart: jet tagging, per-parameter bitwidths ===");
 
-    let rt = Runtime::new()?;
-    println!("PJRT platform: {}", rt.platform());
+    let rt = Runtime::from_name(
+        &std::env::var("HGQ_BACKEND").unwrap_or_else(|_| "native".into()),
+    )?;
+    println!("backend: {}", rt.platform());
     let mr = ModelRuntime::load(&rt, &artifacts, "jets_pp")?;
     println!(
         "model {}: packed state {} f32 ({} params, {} trainables), batch {}",

@@ -3,14 +3,21 @@
 //! activation bitwidths (the stream-IO limitation the paper describes),
 //! line-buffer BRAM accounting and position-count initiation interval.
 //!
+//! Training the CNN needs the PJRT backend (`HGQ_BACKEND=pjrt` on a
+//! `--features pjrt` build with artifacts). On the default native
+//! backend the sweep is skipped and the deployment pipeline — which is
+//! backend-independent — runs from the initial state instead, so the
+//! stream-IO structure, BRAM and II reporting still demonstrate.
+//!
 //!     cargo run --release --example svhn_stream [epochs]
 
 use anyhow::Result;
 
 use hgq::coordinator::deploy;
 use hgq::coordinator::experiment::{preset, run_hgq_sweep};
+use hgq::data::splits_for;
 use hgq::firmware::FwLayer;
-use hgq::runtime::Runtime;
+use hgq::runtime::{ModelRuntime, Runtime};
 
 fn main() -> Result<()> {
     let artifacts = std::path::PathBuf::from(
@@ -18,7 +25,9 @@ fn main() -> Result<()> {
     );
     let epochs: Option<usize> = std::env::args().nth(1).and_then(|s| s.parse().ok());
 
-    let rt = Runtime::new()?;
+    let rt = Runtime::from_name(
+        &std::env::var("HGQ_BACKEND").unwrap_or_else(|_| "native".into()),
+    )?;
     let p = preset("svhn");
     println!(
         "=== SVHN stream-IO CNN: conv16-conv16-conv24 + dense 42-64-10 ===\n\
@@ -28,49 +37,64 @@ fn main() -> Result<()> {
         p.beta_to
     );
 
-    let (mr, splits, outcome, reports) = run_hgq_sweep(&rt, &artifacts, &p, epochs, true)?;
-
-    println!("\nHGQ rows:");
-    for r in &reports {
-        println!("{}", r.row());
-    }
-
-    // stream-IO structure of the best point: per-layer bit allocation
-    if let Some(best) = outcome.pareto.sorted().last() {
-        let (graph, rep) =
-            deploy(&mr, "best", &best.state, &[&splits.train, &splits.val], &splits.test)?;
-        println!("\nbest point deployed: {}", rep.row());
-        println!("\nper-layer stream structure:");
-        for l in &graph.layers {
-            match l {
-                FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, out, .. } => {
-                    let nz = w.m.iter().filter(|&&m| m != 0).count();
-                    println!(
-                        "  conv {k}x{k} {cin:>3} -> {cout:<3} @ {in_h}x{in_w}: act {} bits, {}/{} weights alive",
-                        out.specs[0].bits,
-                        nz,
-                        w.m.len()
-                    );
-                }
-                FwLayer::Dense { din, dout, w, out, .. } => {
-                    let nz = w.m.iter().filter(|&&m| m != 0).count();
-                    println!(
-                        "  dense {din:>4} -> {dout:<4}: act {} bits, {}/{} weights alive",
-                        out.spec(0).bits,
-                        nz,
-                        w.m.len()
-                    );
-                }
-                _ => {}
+    // sweep when the backend can train the CNN; otherwise fall back to
+    // deploying the untrained initial state
+    let mr = ModelRuntime::load(&rt, &artifacts, p.model)?;
+    let (best_state, label) = match run_hgq_sweep(&rt, &artifacts, &p, epochs, true) {
+        Ok((_, _, outcome, reports)) => {
+            println!("\nHGQ rows:");
+            for r in &reports {
+                println!("{}", r.row());
             }
+            let best = outcome
+                .pareto
+                .sorted()
+                .last()
+                .map(|pt| pt.state.clone())
+                .unwrap_or(outcome.state);
+            (best, "best")
         }
-        println!(
-            "\nII = {} cc (stream positions), latency = {} cc ({:.2} µs) — paper's \
-             stream implementations run at II ~1029, latency ~5.3 µs",
-            rep.resources.ii_cc,
-            rep.resources.latency_cc,
-            rep.resources.latency_ns() / 1000.0
-        );
+        Err(err) => {
+            println!("\n(sweep skipped: {err})");
+            println!("(deploying the initial state to show the stream-IO structure)");
+            (mr.init_state(), "init")
+        }
+    };
+
+    let splits = splits_for(p.model, 1, p.n_train.min(2048), p.n_eval.min(512));
+    let (graph, rep) =
+        deploy(&mr, label, &best_state, &[&splits.train, &splits.val], &splits.test)?;
+    println!("\ndeployed ({label}): {}", rep.row());
+    println!("\nper-layer stream structure:");
+    for l in &graph.layers {
+        match l {
+            FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, out, .. } => {
+                let nz = w.m.iter().filter(|&&m| m != 0).count();
+                println!(
+                    "  conv {k}x{k} {cin:>3} -> {cout:<3} @ {in_h}x{in_w}: act {} bits, {}/{} weights alive",
+                    out.specs[0].bits,
+                    nz,
+                    w.m.len()
+                );
+            }
+            FwLayer::Dense { din, dout, w, out, .. } => {
+                let nz = w.m.iter().filter(|&&m| m != 0).count();
+                println!(
+                    "  dense {din:>4} -> {dout:<4}: act {} bits, {}/{} weights alive",
+                    out.spec(0).bits,
+                    nz,
+                    w.m.len()
+                );
+            }
+            _ => {}
+        }
     }
+    println!(
+        "\nII = {} cc (stream positions), latency = {} cc ({:.2} µs) — paper's \
+         stream implementations run at II ~1029, latency ~5.3 µs",
+        rep.resources.ii_cc,
+        rep.resources.latency_cc,
+        rep.resources.latency_ns() / 1000.0
+    );
     Ok(())
 }

@@ -14,7 +14,7 @@ use hgq::util::bench::{bench, black_box};
 
 fn main() {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::new().expect("pjrt");
+    let rt = Runtime::new().expect("backend");
     let epochs = std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok());
 
     println!("== Fig. II: EBOPs vs LUT + c*DSP across all tasks ==");

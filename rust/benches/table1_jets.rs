@@ -12,14 +12,15 @@ use hgq::coordinator::{calibrate, train};
 use hgq::data::splits_for;
 use hgq::firmware::emulator::Emulator;
 use hgq::firmware::Graph;
-use hgq::runtime::{self, Hypers, ModelRuntime, Runtime};
+use hgq::runtime::{self, Hypers, Runtime, Target};
 use hgq::util::bench::{bench, bench_budget, black_box};
 
 fn main() {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::new().expect("pjrt");
+    let rt = Runtime::new().expect("backend");
     let p = preset("jets");
-    let epochs = std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let epochs =
+        std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
 
     println!("== Table I / Fig. III: jet tagging (reduced budget: {epochs} epochs) ==");
     let (mr, splits, outcome, reports) =
@@ -33,28 +34,25 @@ fn main() {
 
     // ---- hot path timings ------------------------------------------
     println!("\n-- hot paths --");
-    let state_host = outcome.state.clone();
-    let state = mr.state_literal(&state_host).unwrap();
+    let state = outcome.state.clone();
     let b = mr.meta.batch;
     let x = vec![0.1f32; b * 16];
     let y = vec![1i32; b];
-    let xl = mr.x_literal(&x).unwrap();
-    let yl = mr.y_literal_cls(&y).unwrap();
     let h = Hypers { beta: 1e-5, gamma: 2e-6, lr: 3e-3, f_lr: 8.0 };
 
     let s = bench_budget("jets train_step (batch 512)", 2000, 10, || {
-        let out = runtime::train_step(&mr, &state, &xl, &yl, h).unwrap();
+        let out = runtime::train_step(&mr, &state, &x, Target::Cls(&y), h).unwrap();
         black_box(out.loss);
     });
     println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
 
-    let s = bench_budget("jets forward HLO (batch 512)", 1500, 10, || {
-        black_box(runtime::forward(&mr, &state, &xl).unwrap());
+    let s = bench_budget("jets quantized forward (batch 512)", 1500, 10, || {
+        black_box(runtime::forward(&mr, &state, &x).unwrap());
     });
     println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
 
     let calib = calibrate(&mr, &state, &[&splits.train]).unwrap();
-    let graph = Graph::build(&mr.meta, &state_host, &calib).unwrap();
+    let graph = Graph::build(&mr.meta, &state, &calib).unwrap();
     let mut em = Emulator::new(&graph);
     let mut out5 = vec![0.0f64; 5];
     let sample = splits.test.sample(0).to_vec();

@@ -8,7 +8,6 @@ use std::path::PathBuf;
 
 use hgq::coordinator::calibrate;
 use hgq::coordinator::experiment::{preset, run_hgq_sweep, run_uniform_baseline};
-use hgq::data::splits_for;
 use hgq::firmware::emulator::Emulator;
 use hgq::firmware::Graph;
 use hgq::runtime::{self, Runtime};
@@ -16,9 +15,10 @@ use hgq::util::bench::{bench, bench_budget, black_box};
 
 fn main() {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::new().expect("pjrt");
+    let rt = Runtime::new().expect("backend");
     let p = preset("muon");
-    let epochs = std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(15);
+    let epochs =
+        std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(15);
 
     println!("== Table III / Fig. V: muon tracking (reduced budget: {epochs} epochs) ==");
     let (mr, splits, outcome, reports) =
@@ -33,19 +33,17 @@ fn main() {
     }
 
     println!("\n-- hot paths --");
-    let state = mr.state_literal(&outcome.state).unwrap();
     let b = mr.meta.batch;
     let mut xbuf = vec![0.0f32; b * mr.meta.input_dim()];
     for r in 0..b {
         splits.test.fill_row(r % splits.test.n, r, &mut xbuf);
     }
-    let xl = mr.x_literal(&xbuf).unwrap();
-    let s = bench_budget("muon forward HLO (batch 512)", 1500, 10, || {
-        black_box(runtime::forward(&mr, &state, &xl).unwrap());
+    let s = bench_budget("muon quantized forward (batch 512)", 1500, 10, || {
+        black_box(runtime::forward(&mr, &outcome.state, &xbuf).unwrap());
     });
     println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
 
-    let calib = calibrate(&mr, &state, &[&splits.train]).unwrap();
+    let calib = calibrate(&mr, &outcome.state, &[&splits.train]).unwrap();
     let graph = Graph::build(&mr.meta, &outcome.state, &calib).unwrap();
     let mut em = Emulator::new(&graph);
     let mut out1 = vec![0.0f64; 1];

@@ -10,7 +10,7 @@ use crate::firmware::Calib;
 use crate::runtime::{self, ModelRuntime};
 
 /// Batched min/max reduction over one or more datasets.
-pub fn calibrate(mr: &ModelRuntime, state: &xla::Literal, datasets: &[&Dataset]) -> Result<Calib> {
+pub fn calibrate(mr: &ModelRuntime, state: &[f32], datasets: &[&Dataset]) -> Result<Calib> {
     let b = mr.meta.batch;
     let feat = mr.meta.input_dim();
     let mut calib = Calib::empty(mr.meta.calib_size);
@@ -27,8 +27,7 @@ pub fn calibrate(mr: &ModelRuntime, state: &xla::Literal, datasets: &[&Dataset])
                 // pad with the last row: only re-observes existing values
                 data.fill_row(i + take - 1, r, &mut xbuf);
             }
-            let x = mr.x_literal(&xbuf)?;
-            let (amin, amax) = runtime::calib_batch(mr, state, &x)?;
+            let (amin, amax) = runtime::calib_batch(mr, state, &xbuf)?;
             if first {
                 calib.amin.copy_from_slice(&amin);
                 calib.amax.copy_from_slice(&amax);

@@ -23,7 +23,8 @@ pub struct DeployReport {
     pub ebops: u64,
     pub sparsity: f64,
     pub resources: ResourceReport,
-    /// max |firmware - HLO forward| logit difference on the probe batch
+    /// max |firmware - backend forward| logit difference on the probe
+    /// batch (bit-exact = 0 inside the calibrated ranges)
     pub fw_vs_hlo_max_abs: f64,
 }
 
@@ -65,8 +66,7 @@ pub fn deploy(
     calib_data: &[&Dataset],
     test_data: &Dataset,
 ) -> Result<(Graph, DeployReport)> {
-    let state = mr.state_literal(state_host)?;
-    let calib = calibrate(mr, &state, calib_data)?;
+    let calib = calibrate(mr, state_host, calib_data)?;
     let graph = Graph::build(&mr.meta, state_host, &calib)?;
 
     // --- test quality through the firmware emulator ------------------
@@ -90,7 +90,7 @@ pub fn deploy(
     for r in 0..mr.meta.batch {
         probe_data.fill_row(r % probe_data.n, r, &mut xbuf);
     }
-    let hlo_logits = runtime::forward(mr, &state, &mr.x_literal(&xbuf)?)?;
+    let hlo_logits = runtime::forward(mr, state_host, &xbuf)?;
     let mut fw_logits = vec![0.0f64; mr.meta.batch * k];
     em.infer_batch(&xbuf, &mut fw_logits)?;
     let mut max_abs: f64 = 0.0;

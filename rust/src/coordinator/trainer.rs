@@ -1,7 +1,9 @@
 //! The training loop: epochs over the synthetic dataset, batching with
-//! padding to the artifact's fixed batch size, β schedule, per-epoch
-//! validation through the AOT forward graph, activation-statistic resets
-//! (the paper's per-epoch min/max), and Pareto checkpointing.
+//! padding to the model's fixed batch size, β schedule, per-epoch
+//! validation through the backend's quantized forward pass, activation-
+//! statistic resets (the paper's per-epoch min/max), and Pareto
+//! checkpointing. Generic over the execution backend: the packed state
+//! lives on the host as a flat `Vec<f32>`.
 
 use anyhow::Result;
 
@@ -10,7 +12,7 @@ use super::schedule::BetaSchedule;
 use crate::baselines::reset_act_stats;
 use crate::data::Dataset;
 use crate::metrics;
-use crate::runtime::{self, Hypers, ModelRuntime};
+use crate::runtime::{self, Hypers, ModelRuntime, Target};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -79,9 +81,9 @@ pub fn quality_of(mr: &ModelRuntime, logits: &[f64], data: &Dataset, n: usize) -
     }
 }
 
-/// Quantized evaluation through the AOT forward graph over a whole
+/// Quantized evaluation through the backend's forward pass over a whole
 /// dataset (batched + padded). Returns quality.
-pub fn evaluate(mr: &ModelRuntime, state: &xla::Literal, data: &Dataset) -> Result<f64> {
+pub fn evaluate(mr: &ModelRuntime, state: &[f32], data: &Dataset) -> Result<f64> {
     let b = mr.meta.batch;
     let feat = mr.meta.input_dim();
     let k = mr.meta.output_dim;
@@ -97,15 +99,14 @@ pub fn evaluate(mr: &ModelRuntime, state: &xla::Literal, data: &Dataset) -> Resu
         for r in take..b {
             data.fill_row(i + take - 1, r, &mut xbuf);
         }
-        let x = mr.x_literal(&xbuf)?;
-        let out = runtime::forward(mr, state, &x)?;
+        let out = runtime::forward(mr, state, &xbuf)?;
         logits[i * k..(i + take) * k].copy_from_slice(&out[..take * k]);
         i += take;
     }
     Ok(quality_of(mr, &logits, data, data.n))
 }
 
-/// Run the full training loop. `init` overrides the artifact's initial
+/// Run the full training loop. `init` overrides the model's initial
 /// state (used by baselines that preset bitwidths).
 pub fn train(
     mr: &ModelRuntime,
@@ -118,8 +119,7 @@ pub fn train(
     let feat = mr.meta.input_dim();
     let mut rng = Rng::new(cfg.seed ^ 0x7124);
 
-    let mut state_host = init.unwrap_or_else(|| mr.init_state());
-    let mut state = mr.state_literal(&state_host)?;
+    let mut state = init.unwrap_or_else(|| mr.init_state());
 
     let mut xbuf = vec![0.0f32; b * feat];
     let mut ybuf_i = vec![0i32; b];
@@ -134,10 +134,8 @@ pub fn train(
         let h = Hypers { beta, gamma: cfg.gamma, lr: cfg.lr, f_lr: cfg.f_lr };
 
         if cfg.reset_stats_each_epoch && epoch > 0 {
-            // pull state once per epoch to clear the min/max segments
-            state_host = runtime::literal_to_vec(&state)?;
-            reset_act_stats(&mr.meta, &mut state_host);
-            state = mr.state_literal(&state_host)?;
+            // clear the running min/max segments (paper: per-epoch extremes)
+            reset_act_stats(&mr.meta, &mut state);
         }
 
         let order = rng.permutation(train_data.n);
@@ -152,13 +150,12 @@ pub fn train(
                     ybuf_f[r] = train_data.y_reg[src];
                 }
             }
-            let x = mr.x_literal(&xbuf)?;
             let y = if train_data.is_classification() {
-                mr.y_literal_cls(&ybuf_i)?
+                Target::Cls(&ybuf_i)
             } else {
-                mr.y_literal_reg(&ybuf_f)?
+                Target::Reg(&ybuf_f)
             };
-            let out = runtime::train_step(mr, &state, &x, &y, h)?;
+            let out = runtime::train_step(mr, &state, &xbuf, y, h)?;
             state = out.state;
             s_loss += out.loss as f64;
             s_metric += out.metric as f64;
@@ -177,17 +174,17 @@ pub fn train(
             val_quality: None,
         };
 
-        if cfg.val_every > 0 && (epoch % cfg.val_every == cfg.val_every - 1 || epoch + 1 == cfg.epochs)
+        if cfg.val_every > 0
+            && (epoch % cfg.val_every == cfg.val_every - 1 || epoch + 1 == cfg.epochs)
         {
             let q = evaluate(mr, &state, val_data)?;
             log.val_quality = Some(q);
-            let snapshot = runtime::literal_to_vec(&state)?;
             pareto.offer(ParetoPoint {
                 quality: q,
                 cost: log.ebops_bar.max(0.0),
                 epoch,
                 beta: beta as f64,
-                state: snapshot,
+                state: state.clone(),
             });
         }
 
@@ -207,6 +204,5 @@ pub fn train(
         logs.push(log);
     }
 
-    let state_host = runtime::literal_to_vec(&state)?;
-    Ok(TrainOutcome { state: state_host, logs, pareto })
+    Ok(TrainOutcome { state, logs, pareto })
 }

@@ -18,9 +18,11 @@
 //! * [`data`]      — synthetic datasets standing in for the paper's
 //!                   (jets / SVHN / muon tracking; see DESIGN.md
 //!                   substitutions).
-//! * [`runtime`]   — PJRT CPU client: loads AOT HLO artifacts compiled
-//!                   from the L2 JAX model (python never runs at
-//!                   inference/training time).
+//! * [`runtime`]   — multi-backend execution: the pure-rust native HGQ
+//!                   engine (default, hermetic, built-in model presets)
+//!                   and the PJRT/HLO path behind the `pjrt` feature
+//!                   (AOT artifacts from the L2 JAX model; python never
+//!                   runs at inference/training time).
 //! * [`coordinator`] — the training loop, β schedule, Pareto-front
 //!                   checkpointing, calibration (Eq. 3) and deployment.
 //! * [`baselines`] — QKeras-style uniform / layer-wise quantization and

@@ -1,17 +1,20 @@
 //! `hgq` — the HGQ reproduction launcher.
 //!
 //! Subcommands:
-//!   train    train one model (HGQ or baseline settings)
+//!   train    train one model (HGQ or baseline settings, or --preset)
 //!   sweep    single-run β-ramp Pareto sweep + deploy (paper protocol)
 //!   table1   jet tagging (Table I / Fig. III)
 //!   table2   SVHN classifier (Table II / Fig. IV)
 //!   table3   muon tracker (Table III / Fig. V)
 //!   fig2     EBOPs vs LUT + c·DSP linearity (Fig. II)
 //!   ablate   constant-β (HGQ-c*) and granularity ablations
-//!   info     print artifact/platform info
+//!   info     print model/backend info
 //!
-//! Python never runs from here: everything executes AOT HLO artifacts
-//! through the PJRT CPU client plus pure-rust substrates.
+//! Every command takes `--backend native|pjrt`. The default native
+//! backend is pure rust and needs no artifacts: model presets are built
+//! in, so the full train → calibrate → deploy → firmware-emulate
+//! pipeline runs hermetically. The pjrt backend executes AOT HLO
+//! artifacts (build with `--features pjrt`).
 
 use std::path::PathBuf;
 
@@ -51,17 +54,21 @@ fn run() -> Result<()> {
         "help" | _ => {
             println!(
                 "usage: hgq <info|train|sweep|table1|table2|table3|fig2|ablate|deploy|emulate> \
-                 [--artifacts DIR] [--model NAME] [--epochs N] [--beta B] [--seed S] \
-                 [--checkpoint DIR] [--json FILE] [--verbose]"
+                 [--backend native|pjrt] [--artifacts DIR] [--model NAME] [--preset TASK] \
+                 [--epochs N] [--beta B] [--seed S] [--checkpoint DIR] [--json FILE] [--verbose]"
             );
             Ok(())
         }
     }
 }
 
+fn backend_from(args: &mut Args) -> Result<Runtime> {
+    Runtime::from_name(&args.str("backend", "native"))
+}
+
 fn cmd_info(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let rt = backend_from(&mut args)?;
     args.finish()?;
-    let rt = Runtime::new()?;
     println!("platform: {}", rt.platform());
     for model in ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"] {
         match ModelRuntime::load(&rt, artifacts, model) {
@@ -80,6 +87,27 @@ fn cmd_info(artifacts: &PathBuf, mut args: Args) -> Result<()> {
 }
 
 fn cmd_train(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let rt = backend_from(&mut args)?;
+    // --preset TASK: the paper-protocol sweep at a short default budget
+    // (train -> Pareto front -> deploy rows through the firmware
+    // emulator), zero artifacts needed on the native backend.
+    if let Some(task) = args.str_opt("preset") {
+        let epochs = args.usize("epochs", 12);
+        let verbose = args.flag("verbose");
+        args.finish()?;
+        let p = preset(&task);
+        println!("== preset {task} on {} (short sweep, {epochs} epochs) ==", rt.platform());
+        let (_, _, outcome, reports) = run_hgq_sweep(&rt, artifacts, &p, Some(epochs), verbose)?;
+        println!("pareto front: {} checkpoints", outcome.pareto.len());
+        for r in &reports {
+            println!("{}", r.row());
+        }
+        if let Some(r) = reports.first() {
+            println!("fw-vs-forward max |diff| = {:.3e}", r.fw_vs_hlo_max_abs);
+        }
+        return Ok(());
+    }
+
     let model = args.str("model", "jets_pp");
     let epochs = args.usize("epochs", 30);
     let beta = args.f64("beta", 1e-5);
@@ -92,7 +120,6 @@ fn cmd_train(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     let verbose = args.flag("verbose");
     args.finish()?;
 
-    let rt = Runtime::new()?;
     let mr = ModelRuntime::load(&rt, artifacts, &model)?;
     let splits = splits_for(&model, seed ^ 1, n_train, n_eval);
     let cfg = TrainConfig {
@@ -111,16 +138,16 @@ fn cmd_train(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     let out = hgq::coordinator::train(&mr, &splits.train, &splits.val, &cfg, None)?;
     let (_, rep) = deploy(&mr, "final", &out.state, &[&splits.train, &splits.val], &splits.test)?;
     println!("{}", rep.row());
-    println!("fw-vs-hlo max |diff| = {:.3e}", rep.fw_vs_hlo_max_abs);
+    println!("fw-vs-forward max |diff| = {:.3e}", rep.fw_vs_hlo_max_abs);
     Ok(())
 }
 
 fn cmd_sweep(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let rt = backend_from(&mut args)?;
     let task = args.str("task", "jets");
     let epochs = args.str_opt("epochs").and_then(|s| s.parse().ok());
     let verbose = args.flag("verbose");
     args.finish()?;
-    let rt = Runtime::new()?;
     let p = preset(&task);
     let (_, _, outcome, reports) = run_hgq_sweep(&rt, artifacts, &p, epochs, verbose)?;
     println!("pareto front: {} checkpoints", outcome.pareto.len());
@@ -139,13 +166,13 @@ fn table_header(task: &str) {
 }
 
 fn cmd_table(artifacts: &PathBuf, mut args: Args, task: &str) -> Result<()> {
+    let rt = backend_from(&mut args)?;
     let epochs = args.str_opt("epochs").and_then(|s| s.parse().ok());
     let verbose = args.flag("verbose");
     let skip_baselines = args.flag("no-baselines");
     let json_out = args.str_opt("json");
     let ckpt_root = args.str_opt("save-checkpoints");
     args.finish()?;
-    let rt = Runtime::new()?;
     let p = preset(task);
 
     table_header(task);
@@ -192,11 +219,13 @@ fn cmd_table(artifacts: &PathBuf, mut args: Args, task: &str) -> Result<()> {
 /// Deploy a saved checkpoint: calibrate, build firmware, print the
 /// utilization report and per-layer breakdown.
 fn cmd_deploy(artifacts: &PathBuf, mut args: Args) -> Result<()> {
-    let ckpt = args.str_opt("checkpoint").ok_or_else(|| anyhow::anyhow!("--checkpoint DIR required"))?;
+    let rt = backend_from(&mut args)?;
+    let ckpt = args
+        .str_opt("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint DIR required"))?;
     let n_eval = args.usize("n-eval", 2048);
     args.finish()?;
     let (info, state) = hgq::coordinator::checkpoint::load(&PathBuf::from(&ckpt))?;
-    let rt = Runtime::new()?;
     let mr = ModelRuntime::load(&rt, artifacts, &info.model)?;
     let splits = splits_for(&info.model, 1, n_eval * 2, n_eval);
     let (graph, rep) = deploy(
@@ -208,22 +237,26 @@ fn cmd_deploy(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     )?;
     println!("{}", rep.row());
     println!("\n{}", hgq::report::utilization_report(&rep));
-    println!("{}", hgq::resource::breakdown::format_breakdown(&hgq::resource::breakdown::breakdown(&graph)));
+    println!(
+        "{}",
+        hgq::resource::breakdown::format_breakdown(&hgq::resource::breakdown::breakdown(&graph))
+    );
     Ok(())
 }
 
 /// Run the bit-accurate firmware emulator on fresh samples from a saved
 /// checkpoint (the "proxy model" workflow of paper §IV).
 fn cmd_emulate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
-    let ckpt = args.str_opt("checkpoint").ok_or_else(|| anyhow::anyhow!("--checkpoint DIR required"))?;
+    let rt = backend_from(&mut args)?;
+    let ckpt = args
+        .str_opt("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint DIR required"))?;
     let n = args.usize("n", 8);
     args.finish()?;
     let (info, state) = hgq::coordinator::checkpoint::load(&PathBuf::from(&ckpt))?;
-    let rt = Runtime::new()?;
     let mr = ModelRuntime::load(&rt, artifacts, &info.model)?;
     let splits = splits_for(&info.model, 99, 1024, n.max(16));
-    let state_lit = mr.state_literal(&state)?;
-    let calib = hgq::coordinator::calibrate(&mr, &state_lit, &[&splits.train])?;
+    let calib = hgq::coordinator::calibrate(&mr, &state, &[&splits.train])?;
     let graph = hgq::firmware::Graph::build(&mr.meta, &state, &calib)?;
     let mut em = hgq::firmware::emulator::Emulator::new(&graph);
     let mut out = vec![0.0f64; graph.output_dim];
@@ -245,16 +278,24 @@ fn cmd_emulate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
 }
 
 fn cmd_fig2(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let rt = backend_from(&mut args)?;
     let epochs = args.str_opt("epochs").and_then(|s| s.parse().ok());
     args.finish()?;
-    let rt = Runtime::new()?;
     let mut points: Vec<(f64, f64, f64)> = Vec::new();
-    println!("{:<14} {:<8} {:>10} {:>10} {:>6} {:>12}", "model", "row", "EBOPs", "LUT", "DSP", "LUT+c*DSP");
+    println!(
+        "{:<14} {:<8} {:>10} {:>10} {:>6} {:>12}",
+        "model", "row", "EBOPs", "LUT", "DSP", "LUT+c*DSP"
+    );
     let mut all_reports = Vec::new();
     for task in ["jets", "muon", "svhn"] {
         let p: Preset = preset(task);
-        let (_, _, _, reports) = run_hgq_sweep(&rt, artifacts, &p, epochs, false)?;
-        all_reports.extend(reports);
+        match run_hgq_sweep(&rt, artifacts, &p, epochs, false) {
+            Ok((_, _, _, reports)) => all_reports.extend(reports),
+            Err(err) => eprintln!("{task}: {err}"),
+        }
+    }
+    if all_reports.is_empty() {
+        bail!("no task produced reports");
     }
     for r in &all_reports {
         points.push((r.resources.lut as f64, r.resources.dsp as f64, r.ebops as f64));
@@ -272,9 +313,9 @@ fn cmd_fig2(artifacts: &PathBuf, mut args: Args) -> Result<()> {
 }
 
 fn cmd_ablate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let rt = backend_from(&mut args)?;
     let epochs = args.usize("epochs", 40);
     args.finish()?;
-    let rt = Runtime::new()?;
     let p = preset("jets");
     let mr = ModelRuntime::load(&rt, artifacts, p.model)?;
     let splits = splits_for(p.model, 1, p.n_train, p.n_eval);

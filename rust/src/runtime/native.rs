@@ -1,0 +1,1321 @@
+//! Pure-rust native backend: the HGQ training/inference engine with no
+//! external artifacts.
+//!
+//! Interprets the packed-state protocol (DESIGN.md / python
+//! compile/hgq/train.py) directly from [`ModelMeta`]:
+//!
+//! * **forward** — quantized inference with the paper's Eq. 4
+//!   fake-quantizer `f^q(x) = floor(x·2^f + 1/2)·2^-f` on weights,
+//!   biases and activations, computed in f64 so every value is an exact
+//!   fixed-point number (this is what makes the software↔firmware
+//!   correspondence check bit-exact for the MLPs).
+//! * **train_step** — Adam on `[params | fbits]` with the surrogate
+//!   bitwidth gradients of Eq. 15 (`d x^q / d f = ln2 · δ`, STE to x)
+//!   plus the resource-pressure gradients of the β·EBOPs-bar + γ·L1
+//!   regularizer (d bw / d f = 1 on the active branch, scaled by the
+//!   1/√‖g‖ group normalization of §III.D.3).
+//! * **calib_batch** — per-batch extremes of the quantized activations
+//!   (Eq. 3 inputs), zero-initialized exactly like the AOT calib graph.
+//!
+//! Models load from `artifacts/<model>/` when present; otherwise the
+//! built-in presets mirroring python/compile/model.py are synthesized
+//! in-process (same tensor layout, he-init weights), so `hgq train
+//! --preset jets --backend native` runs with zero files on disk.
+//!
+//! Conv/pool models are supported for forward + calibration (deploy,
+//! firmware tests); training them natively is rejected — the CNN budget
+//! belongs to the PJRT path.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Hypers, ModelExec, StepOut, Target};
+use crate::firmware::{F_MAX, F_MIN};
+use crate::fixed::{bit_length, exp2i, round_half_up};
+use crate::nn::{ActGroup, LayerMeta, ModelMeta, TensorEntry};
+use crate::util::rng::Rng;
+
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-7;
+const LN2: f64 = std::f64::consts::LN_2;
+
+/// A model interpreted by the native engine.
+pub struct NativeModel {
+    meta: ModelMeta,
+    init: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------
+// quantizer primitives (must match python compile/kernels/ref.py)
+// ---------------------------------------------------------------------
+
+/// Clip + round the stored float bitwidth to its integer value; the
+/// bool is the clip-range gradient mask (zero gradient outside).
+fn use_f(f_fp: f32) -> (i32, bool) {
+    let v = f_fp as f64;
+    let f = round_half_up(v.clamp(F_MIN, F_MAX)) as i32;
+    (f, (F_MIN..=F_MAX).contains(&v))
+}
+
+/// Eq. 4 fake-quantization: round-half-up at step 2^-f (no wrap — the
+/// training-time semantics; range coverage comes from calibration).
+fn qz(x: f64, f: i32) -> f64 {
+    round_half_up(x * exp2i(f)) as f64 * exp2i(-f)
+}
+
+/// Index into a (possibly broadcast-scalar) per-group tensor.
+fn fidx(e: usize, f_size: usize) -> usize {
+    if f_size == 1 {
+        0
+    } else {
+        e
+    }
+}
+
+/// §III.D.3 group normalization scale: 1/sqrt(#values sharing one f).
+fn group_norm_scale(x_size: usize, f_size: usize) -> f64 {
+    ((x_size / f_size.max(1)).max(1) as f64).powf(-0.5)
+}
+
+/// Eq. 3 + EBOPs-bar activation width from running extremes: returns
+/// (bits, active) where active gates d(bits)/d(f) = 1.
+fn act_bits_eq3(nmin: f64, nmax: f64, f: i32, signed: bool) -> (f64, f64) {
+    const NEG: f64 = -1e9;
+    let hi = if nmax > 0.0 { nmax.max(1e-30).log2().floor() + 1.0 } else { NEG };
+    let lo = if nmin < 0.0 { (-nmin).max(1e-30).log2().ceil() } else { NEG };
+    let mut i = hi.max(lo);
+    if i < -1e8 {
+        return (0.0, 0.0); // dead value: nothing ever flows here
+    }
+    if signed {
+        i += 1.0;
+    }
+    let bw = (i + f as f64).max(0.0);
+    let active = if i + f as f64 > 0.0 { 1.0 } else { 0.0 };
+    (bw, active)
+}
+
+// ---------------------------------------------------------------------
+// per-run caches
+// ---------------------------------------------------------------------
+
+/// One activation-quantizer group evaluated on a batch.
+struct ActGroupRun {
+    /// index into meta.act_groups
+    gi: usize,
+    feat_dim: usize,
+    f_off: usize,
+    f_size: usize,
+    clip: Vec<bool>,
+    /// running extremes merged with this batch (len f_size)
+    nmin: Vec<f64>,
+    nmax: Vec<f64>,
+    bits: Vec<f64>,
+    active: Vec<f64>,
+    scale: f64,
+    /// quantization error per (batch, element) for the Eq. 15 surrogate
+    delta: Vec<f64>,
+    /// d(EBOPs-bar)/d(bits) accumulated when a layer consumes this group
+    ebops_wsum: Vec<f64>,
+}
+
+/// A quantized constant tensor (weights or biases).
+struct QwRun {
+    off: usize,
+    f_off: usize,
+    f_size: usize,
+    n: usize,
+    q: Vec<f64>,
+    mant: Vec<i64>,
+    delta: Vec<f64>,
+    bits: Vec<f64>,
+    clip: Vec<bool>,
+    scale: f64,
+}
+
+/// Backward-pass cache of one dense layer.
+struct DenseRun {
+    din: usize,
+    dout: usize,
+    w: QwRun,
+    b: QwRun,
+    /// quantized input activations (batch x din)
+    h_in: Vec<f64>,
+    /// relu gradient mask (batch x dout); all-ones for linear layers
+    mask: Vec<f64>,
+    in_group: usize,
+    out_group: usize,
+}
+
+struct RunOut {
+    logits: Vec<f64>,
+    groups: Vec<ActGroupRun>,
+    denses: Vec<DenseRun>,
+    ebops: f64,
+    l1: f64,
+    sp_num: f64,
+    sp_den: f64,
+}
+
+// ---------------------------------------------------------------------
+// engine
+// ---------------------------------------------------------------------
+
+fn quant_tensor(
+    meta: &ModelMeta,
+    state: &[f32],
+    wname: &str,
+    fname: &str,
+    scaled: bool,
+) -> Result<QwRun> {
+    let we = meta.tensor(wname)?;
+    let fe = meta.tensor(fname)?;
+    let n = we.size;
+    let f_size = fe.size;
+    if f_size != 1 && f_size != n {
+        bail!("fbit tensor '{fname}' size {f_size} incompatible with '{wname}' size {n}");
+    }
+    let w = &state[we.offset..we.offset + n];
+    let f_fp = &state[fe.offset..fe.offset + f_size];
+    let mut f_int = Vec::with_capacity(f_size);
+    let mut clip = Vec::with_capacity(f_size);
+    for &v in f_fp {
+        let (f, c) = use_f(v);
+        f_int.push(f);
+        clip.push(c);
+    }
+    let mut q = vec![0.0f64; n];
+    let mut mant = vec![0i64; n];
+    let mut delta = vec![0.0f64; n];
+    let mut bits = vec![0.0f64; n];
+    for e in 0..n {
+        let f = f_int[fidx(e, f_size)];
+        let m = round_half_up(w[e] as f64 * exp2i(f));
+        let qv = m as f64 * exp2i(-f);
+        mant[e] = m;
+        q[e] = qv;
+        delta[e] = w[e] as f64 - qv;
+        bits[e] = bit_length(m.unsigned_abs() as i64) as f64;
+    }
+    let scale = if scaled { group_norm_scale(n, f_size) } else { 1.0 };
+    Ok(QwRun { off: we.offset, f_off: fe.offset, f_size, n, q, mant, delta, bits, clip, scale })
+}
+
+/// Quantize a batch of activations through the group named `name`,
+/// merge its extremes with the running (or zero) statistics, and
+/// compute the EBOPs-bar widths. Returns the group cache plus the
+/// quantized activations.
+fn make_group(
+    meta: &ModelMeta,
+    state: &[f32],
+    name: &str,
+    feat_dim: usize,
+    h: &[f64],
+    batch: usize,
+    use_state_stats: bool,
+) -> Result<(ActGroupRun, Vec<f64>)> {
+    let gi = meta
+        .act_groups
+        .iter()
+        .position(|g| g.name == name)
+        .ok_or_else(|| anyhow!("act group '{name}' not in meta"))?;
+    let g = &meta.act_groups[gi];
+    let fe = meta.tensor(name)?;
+    let f_size = fe.size;
+    if f_size != g.size {
+        bail!("group '{name}': fbit size {f_size} != group size {}", g.size);
+    }
+    if f_size != 1 && f_size != feat_dim {
+        bail!("group '{name}': granularity {f_size} incompatible with feature dim {feat_dim}");
+    }
+    let f_fp = &state[fe.offset..fe.offset + f_size];
+    let mut f_int = Vec::with_capacity(f_size);
+    let mut clip = Vec::with_capacity(f_size);
+    for &v in f_fp {
+        let (f, c) = use_f(v);
+        f_int.push(f);
+        clip.push(c);
+    }
+
+    let mut hq = vec![0.0f64; batch * feat_dim];
+    let mut delta = vec![0.0f64; batch * feat_dim];
+    let (mut nmin, mut nmax) = if use_state_stats {
+        let amin = meta.tensor_slice(state, &format!("{name}.amin"))?;
+        let amax = meta.tensor_slice(state, &format!("{name}.amax"))?;
+        (
+            amin.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+            amax.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+        )
+    } else {
+        (vec![0.0f64; f_size], vec![0.0f64; f_size])
+    };
+    for bi in 0..batch {
+        for e in 0..feat_dim {
+            let k = fidx(e, f_size);
+            let v = h[bi * feat_dim + e];
+            let q = qz(v, f_int[k]);
+            hq[bi * feat_dim + e] = q;
+            delta[bi * feat_dim + e] = v - q;
+            if q < nmin[k] {
+                nmin[k] = q;
+            }
+            if q > nmax[k] {
+                nmax[k] = q;
+            }
+        }
+    }
+    let mut bits = vec![0.0f64; f_size];
+    let mut active = vec![0.0f64; f_size];
+    for k in 0..f_size {
+        let (b, a) = act_bits_eq3(nmin[k], nmax[k], f_int[k], g.signed);
+        bits[k] = b;
+        active[k] = a;
+    }
+    let scale = group_norm_scale(feat_dim, f_size);
+    let run = ActGroupRun {
+        gi,
+        feat_dim,
+        f_off: fe.offset,
+        f_size,
+        clip,
+        nmin,
+        nmax,
+        bits,
+        active,
+        scale,
+        delta,
+        ebops_wsum: vec![0.0f64; f_size],
+    };
+    Ok((run, hq))
+}
+
+impl NativeModel {
+    /// Full quantized forward pass with statistics/width bookkeeping.
+    fn run(&self, state: &[f32], x: &[f32], use_state_stats: bool) -> Result<RunOut> {
+        let meta = &self.meta;
+        let batch = meta.batch;
+        if state.len() != meta.state_size {
+            bail!("state size {} != meta {}", state.len(), meta.state_size);
+        }
+        if x.len() != batch * meta.input_dim() {
+            bail!("x has {} values, expected {} x {}", x.len(), batch, meta.input_dim());
+        }
+
+        let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let mut cur_shape: Vec<usize> = meta.input_shape.clone();
+        let mut cur_feat: usize = meta.input_dim();
+        let mut cur_group: Option<usize> = None;
+
+        let mut groups: Vec<ActGroupRun> = Vec::new();
+        let mut denses: Vec<DenseRun> = Vec::new();
+        let (mut ebops, mut l1) = (0.0f64, 0.0f64);
+        let (mut sp_num, mut sp_den) = (0.0f64, 0.0f64);
+
+        for lm in &meta.layers {
+            match lm {
+                LayerMeta::InputQuant { name, .. } => {
+                    let (group, hq) = make_group(
+                        meta,
+                        state,
+                        &format!("{name}.fa"),
+                        cur_feat,
+                        &h,
+                        batch,
+                        use_state_stats,
+                    )?;
+                    l1 += group.bits.iter().sum::<f64>();
+                    let idx = groups.len();
+                    groups.push(group);
+                    cur_group = Some(idx);
+                    h = hq;
+                }
+                LayerMeta::Dense { name, din, dout, relu } => {
+                    let (din, dout) = (*din, *dout);
+                    if cur_feat != din {
+                        bail!("dense '{name}': input dim {cur_feat} != din {din}");
+                    }
+                    let w = quant_tensor(
+                        meta,
+                        state,
+                        &format!("{name}.w"),
+                        &format!("{name}.fw"),
+                        true,
+                    )?;
+                    let b = quant_tensor(
+                        meta,
+                        state,
+                        &format!("{name}.b"),
+                        &format!("{name}.fb"),
+                        false,
+                    )?;
+                    let in_idx = cur_group
+                        .ok_or_else(|| anyhow!("dense '{name}' before input_quant"))?;
+                    {
+                        let ing = &mut groups[in_idx];
+                        if ing.f_size != 1 && ing.f_size != din {
+                            bail!("dense '{name}': input group granularity mismatch");
+                        }
+                        if ing.f_size == 1 {
+                            let tot: f64 = w.bits.iter().sum();
+                            ing.ebops_wsum[0] += tot;
+                            ebops += ing.bits[0] * tot;
+                        } else {
+                            for i in 0..din {
+                                let mut s = 0.0f64;
+                                for j in 0..dout {
+                                    s += w.bits[i * dout + j];
+                                }
+                                ing.ebops_wsum[i] += s;
+                                ebops += ing.bits[i] * s;
+                            }
+                        }
+                    }
+                    l1 += w.bits.iter().sum::<f64>() + b.bits.iter().sum::<f64>();
+                    sp_num += w.mant.iter().filter(|&&m| m == 0).count() as f64;
+                    sp_den += w.n as f64;
+
+                    let mut z = vec![0.0f64; batch * dout];
+                    for bi in 0..batch {
+                        let hrow = &h[bi * din..(bi + 1) * din];
+                        let zrow = &mut z[bi * dout..(bi + 1) * dout];
+                        zrow.copy_from_slice(&b.q);
+                        for i in 0..din {
+                            let a = hrow[i];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let wrow = &w.q[i * dout..(i + 1) * dout];
+                            for j in 0..dout {
+                                zrow[j] += a * wrow[j];
+                            }
+                        }
+                    }
+                    let mut mask = vec![1.0f64; batch * dout];
+                    if *relu {
+                        for (zv, mv) in z.iter_mut().zip(mask.iter_mut()) {
+                            if *zv <= 0.0 {
+                                *zv = 0.0;
+                                *mv = 0.0;
+                            }
+                        }
+                    }
+                    let (group, hq) = make_group(
+                        meta,
+                        state,
+                        &format!("{name}.fa"),
+                        dout,
+                        &z,
+                        batch,
+                        use_state_stats,
+                    )?;
+                    l1 += group.bits.iter().sum::<f64>();
+                    let out_idx = groups.len();
+                    groups.push(group);
+                    let h_in = std::mem::replace(&mut h, hq);
+                    denses.push(DenseRun {
+                        din,
+                        dout,
+                        w,
+                        b,
+                        h_in,
+                        mask,
+                        in_group: in_idx,
+                        out_group: out_idx,
+                    });
+                    cur_group = Some(out_idx);
+                    cur_feat = dout;
+                    cur_shape = vec![dout];
+                }
+                LayerMeta::Conv2d { name, k, cin, cout, relu, out_shape } => {
+                    let (k, cin, cout) = (*k, *cin, *cout);
+                    let [oh, ow, _] = *out_shape;
+                    let (in_h, in_w) = (oh + k - 1, ow + k - 1);
+                    if cur_shape != vec![in_h, in_w, cin] {
+                        bail!("conv '{name}': input shape {cur_shape:?} != [{in_h},{in_w},{cin}]");
+                    }
+                    let w = quant_tensor(
+                        meta,
+                        state,
+                        &format!("{name}.w"),
+                        &format!("{name}.fw"),
+                        true,
+                    )?;
+                    let b = quant_tensor(
+                        meta,
+                        state,
+                        &format!("{name}.b"),
+                        &format!("{name}.fb"),
+                        false,
+                    )?;
+                    let in_idx = cur_group
+                        .ok_or_else(|| anyhow!("conv '{name}' before input_quant"))?;
+                    {
+                        // stream-IO EBOPs: one multiplier per kernel weight
+                        let ing = &mut groups[in_idx];
+                        let mut bw_cin = vec![0.0f64; cin];
+                        if ing.f_size == 1 {
+                            bw_cin.fill(ing.bits[0]);
+                        } else {
+                            for e in 0..ing.f_size {
+                                let c = e % cin;
+                                bw_cin[c] = bw_cin[c].max(ing.bits[e]);
+                            }
+                        }
+                        let mut idx = 0usize;
+                        for _ky in 0..k {
+                            for _kx in 0..k {
+                                for c in 0..cin {
+                                    for _o in 0..cout {
+                                        ebops += bw_cin[c] * w.bits[idx];
+                                        idx += 1;
+                                    }
+                                }
+                            }
+                        }
+                        if ing.f_size == 1 {
+                            ing.ebops_wsum[0] += w.bits.iter().sum::<f64>();
+                        }
+                    }
+                    l1 += w.bits.iter().sum::<f64>() + b.bits.iter().sum::<f64>();
+                    sp_num += w.mant.iter().filter(|&&m| m == 0).count() as f64;
+                    sp_den += w.n as f64;
+
+                    let mut z = vec![0.0f64; batch * oh * ow * cout];
+                    for bi in 0..batch {
+                        let hb = &h[bi * in_h * in_w * cin..(bi + 1) * in_h * in_w * cin];
+                        let zb = &mut z[bi * oh * ow * cout..(bi + 1) * oh * ow * cout];
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                for co in 0..cout {
+                                    let mut acc = b.q[co];
+                                    for ky in 0..k {
+                                        for kx in 0..k {
+                                            let a_base = ((oy + ky) * in_w + ox + kx) * cin;
+                                            let w_base = ((ky * k + kx) * cin) * cout + co;
+                                            for ci in 0..cin {
+                                                acc += hb[a_base + ci]
+                                                    * w.q[w_base + ci * cout];
+                                            }
+                                        }
+                                    }
+                                    if *relu && acc < 0.0 {
+                                        acc = 0.0;
+                                    }
+                                    zb[(oy * ow + ox) * cout + co] = acc;
+                                }
+                            }
+                        }
+                    }
+                    let feat = oh * ow * cout;
+                    let (group, hq) = make_group(
+                        meta,
+                        state,
+                        &format!("{name}.fa"),
+                        feat,
+                        &z,
+                        batch,
+                        use_state_stats,
+                    )?;
+                    l1 += group.bits.iter().sum::<f64>();
+                    let out_idx = groups.len();
+                    groups.push(group);
+                    cur_group = Some(out_idx);
+                    h = hq;
+                    cur_feat = feat;
+                    cur_shape = vec![oh, ow, cout];
+                }
+                LayerMeta::MaxPool2 { out_shape } => {
+                    let [oh, ow, c] = *out_shape;
+                    let (ih, iw) = (cur_shape[0], cur_shape[1]);
+                    let mut nh = vec![0.0f64; batch * oh * ow * c];
+                    for bi in 0..batch {
+                        let hb = &h[bi * ih * iw * c..(bi + 1) * ih * iw * c];
+                        let nb = &mut nh[bi * oh * ow * c..(bi + 1) * oh * ow * c];
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                for ch in 0..c {
+                                    let mut best = f64::NEG_INFINITY;
+                                    for dy in 0..2 {
+                                        for dx in 0..2 {
+                                            let v =
+                                                hb[((oy * 2 + dy) * iw + ox * 2 + dx) * c + ch];
+                                            if v > best {
+                                                best = v;
+                                            }
+                                        }
+                                    }
+                                    nb[(oy * ow + ox) * c + ch] = best;
+                                }
+                            }
+                        }
+                    }
+                    h = nh;
+                    cur_feat = oh * ow * c;
+                    cur_shape = vec![oh, ow, c];
+                }
+                LayerMeta::Flatten => {
+                    cur_shape = vec![cur_feat];
+                }
+            }
+        }
+
+        if cur_feat != meta.output_dim {
+            bail!("final feature dim {cur_feat} != output_dim {}", meta.output_dim);
+        }
+        Ok(RunOut { logits: h, groups, denses, ebops, l1, sp_num, sp_den })
+    }
+}
+
+// ---------------------------------------------------------------------
+// built-in presets (mirror python/compile/model.py exactly)
+// ---------------------------------------------------------------------
+
+enum LayerCfg {
+    InputQuant { signed: bool },
+    Dense { name: &'static str, dout: usize, relu: bool },
+    Conv2d { name: &'static str, k: usize, cout: usize, relu: bool },
+    MaxPool2,
+    Flatten,
+}
+
+struct NetSpec {
+    name: &'static str,
+    task: &'static str,
+    batch: usize,
+    input_shape: Vec<usize>,
+    w_elem: bool,
+    a_elem: bool,
+    f_init_w: f32,
+    f_init_a: f32,
+    layers: Vec<LayerCfg>,
+}
+
+fn jets_layers() -> Vec<LayerCfg> {
+    vec![
+        LayerCfg::InputQuant { signed: true },
+        LayerCfg::Dense { name: "d0", dout: 64, relu: true },
+        LayerCfg::Dense { name: "d1", dout: 32, relu: true },
+        LayerCfg::Dense { name: "d2", dout: 32, relu: true },
+        LayerCfg::Dense { name: "d3", dout: 5, relu: false },
+    ]
+}
+
+fn muon_layers() -> Vec<LayerCfg> {
+    vec![
+        LayerCfg::InputQuant { signed: false },
+        LayerCfg::Dense { name: "s0", dout: 48, relu: true },
+        LayerCfg::Dense { name: "s1", dout: 32, relu: true },
+        LayerCfg::Dense { name: "head", dout: 1, relu: false },
+    ]
+}
+
+fn svhn_layers() -> Vec<LayerCfg> {
+    vec![
+        LayerCfg::InputQuant { signed: false },
+        LayerCfg::Conv2d { name: "c0", k: 3, cout: 16, relu: true },
+        LayerCfg::MaxPool2,
+        LayerCfg::Conv2d { name: "c1", k: 3, cout: 16, relu: true },
+        LayerCfg::MaxPool2,
+        LayerCfg::Conv2d { name: "c2", k: 3, cout: 24, relu: true },
+        LayerCfg::MaxPool2,
+        LayerCfg::Flatten,
+        LayerCfg::Dense { name: "d0", dout: 42, relu: true },
+        LayerCfg::Dense { name: "d1", dout: 64, relu: true },
+        LayerCfg::Dense { name: "d2", dout: 10, relu: false },
+    ]
+}
+
+fn preset_spec(model: &str) -> Result<NetSpec> {
+    let spec = match model {
+        "jets_pp" => NetSpec {
+            name: "jets_pp",
+            task: "cls",
+            batch: 512,
+            input_shape: vec![16],
+            w_elem: true,
+            a_elem: true,
+            f_init_w: 2.0,
+            f_init_a: 2.0,
+            layers: jets_layers(),
+        },
+        "jets_lw" => NetSpec {
+            name: "jets_lw",
+            task: "cls",
+            batch: 512,
+            input_shape: vec![16],
+            w_elem: false,
+            a_elem: false,
+            f_init_w: 6.0,
+            f_init_a: 6.0,
+            layers: jets_layers(),
+        },
+        "muon_pp" => NetSpec {
+            name: "muon_pp",
+            task: "reg",
+            batch: 512,
+            input_shape: vec![450],
+            w_elem: true,
+            a_elem: true,
+            f_init_w: 6.0,
+            f_init_a: 6.0,
+            layers: muon_layers(),
+        },
+        "muon_lw" => NetSpec {
+            name: "muon_lw",
+            task: "reg",
+            batch: 512,
+            input_shape: vec![450],
+            w_elem: false,
+            a_elem: false,
+            f_init_w: 6.0,
+            f_init_a: 6.0,
+            layers: muon_layers(),
+        },
+        "svhn_stream" => NetSpec {
+            name: "svhn_stream",
+            task: "cls",
+            batch: 128,
+            input_shape: vec![32, 32, 3],
+            w_elem: true,
+            a_elem: false,
+            f_init_w: 6.0,
+            f_init_a: 6.0,
+            layers: svhn_layers(),
+        },
+        other => bail!(
+            "no artifacts for model '{other}' and no built-in preset of that name \
+             (presets: jets_pp jets_lw muon_pp muon_lw svhn_stream)"
+        ),
+    };
+    Ok(spec)
+}
+
+fn prod1(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Packed-state layout, identical to python StateSpec:
+/// `[params | fbits | adam.m | adam.v | amin/group | amax/group | step]`.
+fn build_meta(spec: &NetSpec) -> Result<ModelMeta> {
+    let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut fbits: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut agroups: Vec<(String, Vec<usize>, bool)> = Vec::new();
+    let mut layers: Vec<LayerMeta> = Vec::new();
+    let mut shape = spec.input_shape.clone();
+
+    for lc in &spec.layers {
+        match lc {
+            LayerCfg::InputQuant { signed } => {
+                let fshape = if spec.a_elem { shape.clone() } else { Vec::new() };
+                fbits.push(("inq.fa".to_string(), fshape.clone()));
+                agroups.push(("inq.fa".to_string(), fshape, *signed));
+                layers.push(LayerMeta::InputQuant { name: "inq".to_string(), signed: *signed });
+            }
+            LayerCfg::Dense { name, dout, relu } => {
+                let din = prod1(&shape);
+                params.push((format!("{name}.w"), vec![din, *dout]));
+                params.push((format!("{name}.b"), vec![*dout]));
+                fbits.push((
+                    format!("{name}.fw"),
+                    if spec.w_elem { vec![din, *dout] } else { Vec::new() },
+                ));
+                fbits.push((
+                    format!("{name}.fb"),
+                    if spec.w_elem { vec![*dout] } else { Vec::new() },
+                ));
+                let fshape = if spec.a_elem { vec![*dout] } else { Vec::new() };
+                fbits.push((format!("{name}.fa"), fshape.clone()));
+                agroups.push((format!("{name}.fa"), fshape, !*relu));
+                layers.push(LayerMeta::Dense {
+                    name: name.to_string(),
+                    din,
+                    dout: *dout,
+                    relu: *relu,
+                });
+                shape = vec![*dout];
+            }
+            LayerCfg::Conv2d { name, k, cout, relu } => {
+                if shape.len() != 3 {
+                    bail!("conv2d '{name}' needs a HWC input, got {shape:?}");
+                }
+                let (h, w, cin) = (shape[0], shape[1], shape[2]);
+                let (oh, ow) = (h - k + 1, w - k + 1);
+                params.push((format!("{name}.w"), vec![*k, *k, cin, *cout]));
+                params.push((format!("{name}.b"), vec![*cout]));
+                fbits.push((
+                    format!("{name}.fw"),
+                    if spec.w_elem { vec![*k, *k, cin, *cout] } else { Vec::new() },
+                ));
+                fbits.push((
+                    format!("{name}.fb"),
+                    if spec.w_elem { vec![*cout] } else { Vec::new() },
+                ));
+                let fshape = if spec.a_elem { vec![oh, ow, *cout] } else { Vec::new() };
+                fbits.push((format!("{name}.fa"), fshape.clone()));
+                agroups.push((format!("{name}.fa"), fshape, !*relu));
+                layers.push(LayerMeta::Conv2d {
+                    name: name.to_string(),
+                    k: *k,
+                    cin,
+                    cout: *cout,
+                    relu: *relu,
+                    out_shape: [oh, ow, *cout],
+                });
+                shape = vec![oh, ow, *cout];
+            }
+            LayerCfg::MaxPool2 => {
+                if shape.len() != 3 {
+                    bail!("maxpool2 needs a HWC input, got {shape:?}");
+                }
+                shape = vec![shape[0] / 2, shape[1] / 2, shape[2]];
+                layers.push(LayerMeta::MaxPool2 { out_shape: [shape[0], shape[1], shape[2]] });
+            }
+            LayerCfg::Flatten => {
+                shape = vec![prod1(&shape)];
+                layers.push(LayerMeta::Flatten);
+            }
+        }
+    }
+    let output_dim = prod1(&shape);
+
+    let mut tensors: Vec<TensorEntry> = Vec::new();
+    let mut off = 0usize;
+    for (name, shp) in &params {
+        let size = prod1(shp);
+        tensors.push(TensorEntry {
+            name: name.clone(),
+            shape: shp.clone(),
+            offset: off,
+            size,
+            seg: "param".to_string(),
+        });
+        off += size;
+    }
+    let n_params = off;
+    for (name, shp) in &fbits {
+        let size = prod1(shp);
+        tensors.push(TensorEntry {
+            name: name.clone(),
+            shape: shp.clone(),
+            offset: off,
+            size,
+            seg: "fbit".to_string(),
+        });
+        off += size;
+    }
+    let n_train = off;
+    for opt_name in ["adam.m", "adam.v"] {
+        tensors.push(TensorEntry {
+            name: opt_name.to_string(),
+            shape: vec![n_train],
+            offset: off,
+            size: n_train,
+            seg: "opt".to_string(),
+        });
+        off += n_train;
+    }
+    let mut act_groups: Vec<ActGroup> = Vec::new();
+    let mut coff = 0usize;
+    for (name, fshape, signed) in &agroups {
+        let size = prod1(fshape);
+        act_groups.push(ActGroup {
+            name: name.clone(),
+            fshape: fshape.clone(),
+            signed: *signed,
+            size,
+            calib_offset: coff,
+        });
+        coff += size;
+    }
+    for stat in ["amin", "amax"] {
+        for g in &act_groups {
+            tensors.push(TensorEntry {
+                name: format!("{}.{stat}", g.name),
+                shape: g.fshape.clone(),
+                offset: off,
+                size: g.size,
+                seg: "stat".to_string(),
+            });
+            off += g.size;
+        }
+    }
+    tensors.push(TensorEntry {
+        name: "step".to_string(),
+        shape: Vec::new(),
+        offset: off,
+        size: 1,
+        seg: "opt".to_string(),
+    });
+    off += 1;
+
+    Ok(ModelMeta {
+        name: spec.name.to_string(),
+        task: spec.task.to_string(),
+        batch: spec.batch,
+        input_shape: spec.input_shape.clone(),
+        y_is_int: spec.task == "cls",
+        w_gran: if spec.w_elem { "element" } else { "layer" }.to_string(),
+        a_gran: if spec.a_elem { "element" } else { "layer" }.to_string(),
+        state_size: off,
+        n_params,
+        n_train,
+        calib_size: coff,
+        output_dim,
+        tensors,
+        act_groups,
+        layers,
+    })
+}
+
+/// He-init weights, zero biases/opt/stats, constant fbit init — the
+/// same recipe as python Net.init_tensors (different RNG stream).
+fn synth_init(meta: &ModelMeta, f_init_w: f32, f_init_a: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut out = vec![0.0f32; meta.state_size];
+    for t in &meta.tensors {
+        match t.seg.as_str() {
+            "param" if t.name.ends_with(".w") => {
+                let fan_in = prod1(&t.shape[..t.shape.len() - 1]).max(1);
+                let std = (2.0 / fan_in as f64).sqrt();
+                for v in out[t.offset..t.offset + t.size].iter_mut() {
+                    *v = rng.normal_scaled(0.0, std) as f32;
+                }
+            }
+            "fbit" => {
+                let f = if t.name.ends_with(".fa") { f_init_a } else { f_init_w };
+                out[t.offset..t.offset + t.size].fill(f);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+fn model_seed(model: &str) -> u64 {
+    model.bytes().fold(0xB17D_D0C5u64, |a, b| a.rotate_left(8) ^ b as u64)
+}
+
+fn default_f_inits(model: &str) -> (f32, f32) {
+    if model == "jets_pp" {
+        (2.0, 2.0)
+    } else {
+        (6.0, 6.0)
+    }
+}
+
+impl NativeModel {
+    /// Load from `artifacts/<model>/` (meta.json [+ init.bin]) when the
+    /// directory exists, else synthesize the built-in preset of that
+    /// name — the zero-artifact path.
+    pub fn load(artifacts: &Path, model: &str) -> Result<NativeModel> {
+        let dir = artifacts.join(model);
+        if dir.join("meta.json").exists() {
+            let meta = ModelMeta::load(&dir)?;
+            let init = match std::fs::read(dir.join("init.bin")) {
+                Ok(raw) => {
+                    if raw.len() != meta.state_size * 4 {
+                        bail!(
+                            "init.bin has {} bytes, expected {}",
+                            raw.len(),
+                            meta.state_size * 4
+                        );
+                    }
+                    raw.chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect()
+                }
+                Err(_) => {
+                    let (fw, fa) = default_f_inits(model);
+                    synth_init(&meta, fw, fa, model_seed(model))
+                }
+            };
+            Ok(NativeModel { meta, init })
+        } else {
+            NativeModel::from_preset(model)
+        }
+    }
+
+    /// Synthesize a built-in preset directly (no filesystem access).
+    pub fn from_preset(model: &str) -> Result<NativeModel> {
+        let spec = preset_spec(model)?;
+        let meta = build_meta(&spec)
+            .with_context(|| format!("building preset meta for '{model}'"))?;
+        let init = synth_init(&meta, spec.f_init_w, spec.f_init_a, model_seed(model));
+        Ok(NativeModel { meta, init })
+    }
+}
+
+impl ModelExec for NativeModel {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn forward(&self, state: &[f32], x: &[f32]) -> Result<Vec<f64>> {
+        Ok(self.run(state, x, true)?.logits)
+    }
+
+    fn calib_batch(&self, state: &[f32], x: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        // fresh zero statistics: the output reflects THIS batch only
+        // (merged with 0, exactly like the AOT calib graph)
+        let run = self.run(state, x, false)?;
+        let mut amin = vec![0.0f32; self.meta.calib_size];
+        let mut amax = vec![0.0f32; self.meta.calib_size];
+        for gr in &run.groups {
+            let co = self.meta.act_groups[gr.gi].calib_offset;
+            for k in 0..gr.f_size {
+                amin[co + k] = gr.nmin[k] as f32;
+                amax[co + k] = gr.nmax[k] as f32;
+            }
+        }
+        Ok((amin, amax))
+    }
+
+    fn train_step(&self, state: &[f32], x: &[f32], y: Target<'_>, h: Hypers) -> Result<StepOut> {
+        let meta = &self.meta;
+        let batch = meta.batch;
+        if meta
+            .layers
+            .iter()
+            .any(|l| matches!(l, LayerMeta::Conv2d { .. } | LayerMeta::MaxPool2 { .. }))
+        {
+            bail!(
+                "native backend trains MLP models only (conv/pool layers in '{}' need the \
+                 pjrt backend: build with --features pjrt)",
+                meta.name
+            );
+        }
+        let run = self.run(state, x, true)?;
+
+        // ---- loss + gradient wrt (quantized) logits ------------------
+        let k = meta.output_dim;
+        let mut g = vec![0.0f64; batch * k];
+        let (base_loss, metric) = match y {
+            Target::Cls(labels) => {
+                if meta.task != "cls" {
+                    bail!("classification targets passed to regression model '{}'", meta.name);
+                }
+                if labels.len() != batch {
+                    bail!("y has {} labels, expected {batch}", labels.len());
+                }
+                let mut ce = 0.0f64;
+                let mut correct = 0usize;
+                for bi in 0..batch {
+                    let row = &run.logits[bi * k..(bi + 1) * k];
+                    let label = labels[bi] as usize;
+                    if label >= k {
+                        bail!("label {label} out of range (output_dim {k})");
+                    }
+                    let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let mut denom = 0.0f64;
+                    for &v in row {
+                        denom += (v - mx).exp();
+                    }
+                    ce -= (row[label] - mx) - denom.ln();
+                    let mut am = 0usize;
+                    for j in 1..k {
+                        if row[j] > row[am] {
+                            am = j;
+                        }
+                    }
+                    if am == label {
+                        correct += 1;
+                    }
+                    for j in 0..k {
+                        let p = (row[j] - mx).exp() / denom;
+                        let t = if j == label { 1.0 } else { 0.0 };
+                        g[bi * k + j] = (p - t) / batch as f64;
+                    }
+                }
+                (ce / batch as f64, correct as f64 / batch as f64)
+            }
+            Target::Reg(ys) => {
+                if meta.task != "reg" {
+                    bail!("regression targets passed to classification model '{}'", meta.name);
+                }
+                if ys.len() != batch {
+                    bail!("y has {} values, expected {batch}", ys.len());
+                }
+                let mut mse = 0.0f64;
+                for bi in 0..batch {
+                    let err = run.logits[bi * k] - ys[bi] as f64;
+                    mse += err * err;
+                    g[bi * k] = 2.0 * err / batch as f64;
+                }
+                let mse = mse / batch as f64;
+                (mse, mse.sqrt())
+            }
+        };
+
+        // ---- backward: STE + Eq. 15 surrogates + regularizer grads ---
+        let bt = h.beta as f64;
+        let gm = h.gamma as f64;
+        let mut grad = vec![0.0f64; meta.n_train];
+
+        for dr in run.denses.iter().rev() {
+            let (din, dout) = (dr.din, dr.dout);
+            let og = &run.groups[dr.out_group];
+            let ing = &run.groups[dr.in_group];
+
+            // out-group quantizer: STE to z, ln2*delta to fa, relu mask
+            let mut gz = vec![0.0f64; batch * dout];
+            for bi in 0..batch {
+                for j in 0..dout {
+                    let gv = g[bi * dout + j];
+                    let fi = fidx(j, og.f_size);
+                    if og.clip[fi] {
+                        grad[og.f_off + fi] += gv * LN2 * og.delta[bi * dout + j];
+                    }
+                    gz[bi * dout + j] = gv * dr.mask[bi * dout + j];
+                }
+            }
+
+            // bias: data gradient + surrogate + L1 pressure (unscaled)
+            for j in 0..dout {
+                let mut gb = 0.0f64;
+                for bi in 0..batch {
+                    gb += gz[bi * dout + j];
+                }
+                grad[dr.b.off + j] += gb;
+                let fi = fidx(j, dr.b.f_size);
+                if dr.b.clip[fi] {
+                    grad[dr.b.f_off + fi] += gb * LN2 * dr.b.delta[j];
+                    if dr.b.mant[j] != 0 {
+                        grad[dr.b.f_off + fi] += gm;
+                    }
+                }
+            }
+
+            // weights: data gradient + surrogate + (beta·bw_a + gamma)·s
+            for i in 0..din {
+                let bw_a = ing.bits[fidx(i, ing.f_size)];
+                for j in 0..dout {
+                    let e = i * dout + j;
+                    let mut gw = 0.0f64;
+                    for bi in 0..batch {
+                        gw += dr.h_in[bi * din + i] * gz[bi * dout + j];
+                    }
+                    grad[dr.w.off + e] += gw;
+                    let fi = fidx(e, dr.w.f_size);
+                    if dr.w.clip[fi] {
+                        grad[dr.w.f_off + fi] += gw * LN2 * dr.w.delta[e];
+                        if dr.w.mant[e] != 0 {
+                            grad[dr.w.f_off + fi] += (gm + bt * bw_a) * dr.w.scale;
+                        }
+                    }
+                }
+            }
+
+            // propagate to the previous activation group's output
+            let mut gprev = vec![0.0f64; batch * din];
+            for bi in 0..batch {
+                for i in 0..din {
+                    let wrow = &dr.w.q[i * dout..(i + 1) * dout];
+                    let mut s = 0.0f64;
+                    for j in 0..dout {
+                        s += gz[bi * dout + j] * wrow[j];
+                    }
+                    gprev[bi * din + i] = s;
+                }
+            }
+            g = gprev;
+        }
+
+        // the remaining g is wrt the input-quant output: its surrogate
+        if let Some(first) = run.denses.first() {
+            let ig = &run.groups[first.in_group];
+            let n = ig.feat_dim;
+            for bi in 0..batch {
+                for e in 0..n {
+                    let fi = fidx(e, ig.f_size);
+                    if ig.clip[fi] {
+                        grad[ig.f_off + fi] += g[bi * n + e] * LN2 * ig.delta[bi * n + e];
+                    }
+                }
+            }
+        }
+
+        // activation-width pressure: d(gamma·L1 + beta·EBOPs)/d(fa)
+        for gr in &run.groups {
+            for k2 in 0..gr.f_size {
+                if gr.clip[k2] && gr.active[k2] > 0.0 {
+                    grad[gr.f_off + k2] += (gm + bt * gr.ebops_wsum[k2]) * gr.scale;
+                }
+            }
+        }
+
+        // ---- Adam with per-segment effective lr (fbits: lr * f_lr) ---
+        let m_e = meta.tensor("adam.m")?;
+        let v_e = meta.tensor("adam.v")?;
+        let s_e = meta.tensor("step")?;
+        let mut new_state: Vec<f32> = state.to_vec();
+        let step1 = state[s_e.offset] as f64 + 1.0;
+        let bc1 = 1.0 - ADAM_B1.powf(step1);
+        let bc2 = 1.0 - ADAM_B2.powf(step1);
+        let lr = h.lr as f64;
+        let f_lr = h.f_lr as f64;
+        for t in 0..meta.n_train {
+            let gi = grad[t];
+            let m1 = ADAM_B1 * state[m_e.offset + t] as f64 + (1.0 - ADAM_B1) * gi;
+            let v1 = ADAM_B2 * state[v_e.offset + t] as f64 + (1.0 - ADAM_B2) * gi * gi;
+            new_state[m_e.offset + t] = m1 as f32;
+            new_state[v_e.offset + t] = v1 as f32;
+            let lr_eff = if t >= meta.n_params { lr * f_lr } else { lr };
+            let upd = lr_eff * (m1 / bc1) / ((v1 / bc2).sqrt() + ADAM_EPS);
+            new_state[t] = (state[t] as f64 - upd) as f32;
+        }
+        new_state[s_e.offset] = step1 as f32;
+
+        // merged activation statistics back into the stat segment
+        for gr in &run.groups {
+            let gname = &meta.act_groups[gr.gi].name;
+            let amin_e = meta.tensor(&format!("{gname}.amin"))?;
+            let amax_e = meta.tensor(&format!("{gname}.amax"))?;
+            for k2 in 0..gr.f_size {
+                new_state[amin_e.offset + k2] = gr.nmin[k2] as f32;
+                new_state[amax_e.offset + k2] = gr.nmax[k2] as f32;
+            }
+        }
+
+        let loss = base_loss + bt * run.ebops + gm * run.l1;
+        Ok(StepOut {
+            state: new_state,
+            loss: loss as f32,
+            metric: metric as f32,
+            ebops: run.ebops as f32,
+            sparsity: (run.sp_num / run.sp_den.max(1.0)) as f32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jets_preset_layout_matches_python_protocol() {
+        let nm = NativeModel::from_preset("jets_pp").unwrap();
+        let m = nm.meta();
+        // params: (16*64+64) + (64*32+32) + (32*32+32) + (32*5+5)
+        assert_eq!(m.n_params, 4389);
+        // fbits: 16 + (1024+64+64) + (2048+32+32) + (1024+32+32) + (160+5+5)
+        assert_eq!(m.n_train, 4389 + 4538);
+        assert_eq!(m.calib_size, 16 + 64 + 32 + 32 + 5);
+        // [trainables | adam.m | adam.v | amin | amax | step]
+        assert_eq!(m.state_size, 3 * m.n_train + 2 * m.calib_size + 1);
+        assert_eq!(m.output_dim, 5);
+        assert_eq!(m.tensor("d0.w").unwrap().offset, 0);
+        assert_eq!(m.tensor("adam.m").unwrap().offset, m.n_train);
+        assert_eq!(m.tensor("step").unwrap().offset, m.state_size - 1);
+        let offs: Vec<usize> = m.act_groups.iter().map(|g| g.calib_offset).collect();
+        assert_eq!(offs, vec![0, 16, 80, 112, 144]);
+        assert_eq!(nm.init_state().len(), m.state_size);
+    }
+
+    #[test]
+    fn layerwise_preset_is_scalar_granularity() {
+        let nm = NativeModel::from_preset("jets_lw").unwrap();
+        let m = nm.meta();
+        assert_eq!(m.tensor("d0.fw").unwrap().size, 1);
+        assert_eq!(m.tensor("inq.fa").unwrap().size, 1);
+        assert!(m.act_groups.iter().all(|g| g.size == 1));
+        assert_eq!(m.calib_size, 5);
+        // fbit init is 6.0 for the layer-wise baselines
+        let s = nm.init_state();
+        let fe = m.tensor("d0.fw").unwrap();
+        assert_eq!(s[fe.offset], 6.0);
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_shaped() {
+        let nm = NativeModel::from_preset("jets_pp").unwrap();
+        let m = nm.meta().clone();
+        let state = nm.init_state();
+        let x = vec![0.5f32; m.batch * 16];
+        let a = nm.forward(&state, &x).unwrap();
+        let b = nm.forward(&state, &x).unwrap();
+        assert_eq!(a.len(), m.batch * 5);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn calib_extremes_are_ordered_and_include_zero() {
+        let nm = NativeModel::from_preset("muon_pp").unwrap();
+        let m = nm.meta().clone();
+        let state = nm.init_state();
+        let x: Vec<f32> = (0..m.batch * 450).map(|i| ((i % 3) as f32) * 0.5).collect();
+        let (amin, amax) = nm.calib_batch(&state, &x).unwrap();
+        assert_eq!(amin.len(), m.calib_size);
+        assert_eq!(amax.len(), m.calib_size);
+        for i in 0..amin.len() {
+            assert!(amin[i] <= 0.0, "zero-merged amin positive at {i}");
+            assert!(amax[i] >= 0.0, "zero-merged amax negative at {i}");
+            assert!(amin[i] <= amax[i]);
+        }
+    }
+
+    #[test]
+    fn train_step_adam_and_hyper_semantics() {
+        let nm = NativeModel::from_preset("jets_lw").unwrap();
+        let m = nm.meta().clone();
+        let state = nm.init_state();
+        let x: Vec<f32> =
+            (0..m.batch * 16).map(|i| ((i % 31) as f32 - 15.0) / 8.0).collect();
+        let y: Vec<i32> = (0..m.batch).map(|i| (i % 5) as i32).collect();
+        let step = |h: Hypers| nm.train_step(&state, &x, Target::Cls(&y), h).unwrap();
+
+        // lr = 0: trainables frozen, step counter advances, stats move
+        let o0 = step(Hypers { beta: 0.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 });
+        assert_eq!(&o0.state[..m.n_train], &state[..m.n_train]);
+        assert_eq!(o0.state[m.state_size - 1], state[m.state_size - 1] + 1.0);
+        assert!(o0.loss.is_finite() && o0.loss > 0.0);
+        assert!(o0.ebops > 0.0);
+
+        // f_lr = 0 freezes the bitwidth segment even at lr = 1
+        let of = step(Hypers { beta: 0.0, gamma: 0.0, lr: 1.0, f_lr: 0.0 });
+        assert_eq!(&of.state[m.n_params..m.n_train], &state[m.n_params..m.n_train]);
+        assert_ne!(&of.state[..m.n_params], &state[..m.n_params]);
+
+        // f_lr > 0 moves the bitwidths
+        let ol = step(Hypers { beta: 0.0, gamma: 0.0, lr: 1.0, f_lr: 1.0 });
+        assert_ne!(&ol.state[m.n_params..m.n_train], &state[m.n_params..m.n_train]);
+
+        // beta / gamma reach the loss through EBOPs-bar / L1
+        let base = step(Hypers { beta: 0.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 }).loss;
+        let lb = step(Hypers { beta: 1.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 }).loss;
+        let lg = step(Hypers { beta: 0.0, gamma: 1.0, lr: 0.0, f_lr: 0.0 }).loss;
+        assert!(lb > base + 1.0, "beta must reach the loss: {lb} vs {base}");
+        assert!(lg > base + 1.0, "gamma must reach the loss: {lg} vs {base}");
+    }
+
+    #[test]
+    fn conv_models_refuse_native_training() {
+        let nm = NativeModel::from_preset("svhn_stream").unwrap();
+        let m = nm.meta().clone();
+        let state = nm.init_state();
+        let x = vec![0.25f32; m.batch * m.input_dim()];
+        let y: Vec<i32> = vec![0; m.batch];
+        let err = nm
+            .train_step(&state, &x, Target::Cls(&y), Hypers {
+                beta: 0.0,
+                gamma: 0.0,
+                lr: 1e-3,
+                f_lr: 1.0,
+            })
+            .unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+
+    #[test]
+    fn unknown_model_without_artifacts_errors() {
+        let err =
+            NativeModel::load(Path::new("/nonexistent/artifacts"), "resnet50").unwrap_err();
+        assert!(format!("{err}").contains("preset"));
+    }
+}

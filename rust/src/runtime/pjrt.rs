@@ -1,0 +1,194 @@
+//! PJRT backend (cargo feature `pjrt`): executes the AOT HLO artifacts
+//! produced by `make artifacts` (python/compile/aot.py). Python never
+//! runs here.
+//!
+//! Interchange is HLO *text* — the xla crate's text parser reassigns
+//! instruction ids, sidestepping the 64-bit-id protos jax >= 0.5 emits.
+//! Every lowered function returns a tuple (return_tuple=True),
+//! decomposed on the host after execution.
+//!
+//! In the hermetic build this module compiles against the vendored
+//! `xla` API stub (rust/vendor/xla-stub) and fails at client bring-up;
+//! patch the path dependency to a real xla build to execute.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Hypers, ModelExec, StepOut, Target};
+use crate::nn::ModelMeta;
+
+/// Shared PJRT CPU client (compile once, execute many).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn new() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+}
+
+/// f32 slice -> literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {:?} != data len {}", dims, data.len());
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {:?} != data len {}", dims, data.len());
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Execute and return the decomposed output tuple as host literals.
+pub fn run_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let out = exe.execute::<&xla::Literal>(args).map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+}
+
+/// All artifacts of one model: metadata, compiled executables and the
+/// initial packed state.
+pub struct PjrtModel {
+    pub meta: ModelMeta,
+    pub dir: PathBuf,
+    train: xla::PjRtLoadedExecutable,
+    forward: xla::PjRtLoadedExecutable,
+    calib: xla::PjRtLoadedExecutable,
+    init_state: Vec<f32>,
+}
+
+impl PjrtModel {
+    pub fn load(rt: &PjrtRuntime, artifacts: &Path, model: &str) -> Result<PjrtModel> {
+        let dir = artifacts.join(model);
+        let meta = ModelMeta::load(&dir)?;
+        let train = rt.load_hlo(&dir.join("train.hlo.txt"))?;
+        let forward = rt.load_hlo(&dir.join("forward.hlo.txt"))?;
+        let calib = rt.load_hlo(&dir.join("calib.hlo.txt"))?;
+        let raw = std::fs::read(dir.join("init.bin"))
+            .with_context(|| format!("reading {}/init.bin", dir.display()))?;
+        if raw.len() != meta.state_size * 4 {
+            bail!("init.bin has {} bytes, expected {}", raw.len(), meta.state_size * 4);
+        }
+        let init_state: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(PjrtModel { meta, dir, train, forward, calib, init_state })
+    }
+
+    fn state_literal(&self, state: &[f32]) -> Result<xla::Literal> {
+        if state.len() != self.meta.state_size {
+            bail!("state size {} != meta {}", state.len(), self.meta.state_size);
+        }
+        literal_f32(state, &[state.len() as i64])
+    }
+
+    /// Batch feature literal of the artifact's fixed batch size; the
+    /// caller pads short batches.
+    fn x_literal(&self, x: &[f32]) -> Result<xla::Literal> {
+        let mut dims: Vec<i64> = vec![self.meta.batch as i64];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        literal_f32(x, &dims)
+    }
+
+    fn y_literal(&self, y: Target<'_>) -> Result<xla::Literal> {
+        match y {
+            Target::Cls(labels) => literal_i32(labels, &[self.meta.batch as i64]),
+            Target::Reg(vals) => literal_f32(vals, &[self.meta.batch as i64]),
+        }
+    }
+}
+
+/// Copy a literal's f32 payload back to the host.
+pub fn literal_to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+impl ModelExec for PjrtModel {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.init_state.clone()
+    }
+
+    fn train_step(&self, state: &[f32], x: &[f32], y: Target<'_>, h: Hypers) -> Result<StepOut> {
+        let state = self.state_literal(state)?;
+        let x = self.x_literal(x)?;
+        let y = self.y_literal(y)?;
+        let (beta, gamma, lr, f_lr) =
+            (scalar_f32(h.beta), scalar_f32(h.gamma), scalar_f32(h.lr), scalar_f32(h.f_lr));
+        let outs = run_tuple(&self.train, &[&state, &x, &y, &beta, &gamma, &lr, &f_lr])?;
+        if outs.len() != 5 {
+            bail!("train step returned {} outputs, expected 5", outs.len());
+        }
+        let mut it = outs.into_iter();
+        let new_state = literal_to_vec(&it.next().unwrap())?;
+        let scal = |l: xla::Literal| -> Result<f32> {
+            l.get_first_element::<f32>().map_err(|e| anyhow!("metric: {e:?}"))
+        };
+        Ok(StepOut {
+            state: new_state,
+            loss: scal(it.next().unwrap())?,
+            metric: scal(it.next().unwrap())?,
+            ebops: scal(it.next().unwrap())?,
+            sparsity: scal(it.next().unwrap())?,
+        })
+    }
+
+    fn forward(&self, state: &[f32], x: &[f32]) -> Result<Vec<f64>> {
+        let state = self.state_literal(state)?;
+        let x = self.x_literal(x)?;
+        let outs = run_tuple(&self.forward, &[&state, &x])?;
+        let logits = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("forward returned no outputs"))?;
+        Ok(logits
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?
+            .into_iter()
+            .map(|v| v as f64)
+            .collect())
+    }
+
+    fn calib_batch(&self, state: &[f32], x: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let state = self.state_literal(state)?;
+        let x = self.x_literal(x)?;
+        let outs = run_tuple(&self.calib, &[&state, &x])?;
+        if outs.len() != 2 {
+            bail!("calib returned {} outputs, expected 2", outs.len());
+        }
+        let amin = outs[0].to_vec::<f32>().map_err(|e| anyhow!("amin: {e:?}"))?;
+        let amax = outs[1].to_vec::<f32>().map_err(|e| anyhow!("amax: {e:?}"))?;
+        Ok((amin, amax))
+    }
+}

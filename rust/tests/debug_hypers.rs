@@ -1,10 +1,16 @@
-// probe: scalar hyper routing through the AOT artifact (regression
-// guard for the print_large_constants lowering bug)
-use hgq::runtime::{self, Hypers, ModelRuntime, Runtime};
+//! Probe: scalar hyper routing through the native train step
+//! (regression guard — originally caught a print_large_constants
+//! lowering bug on the AOT path; now also pins the native backend's
+//! effective-lr and loss-term semantics).
+
+use std::path::PathBuf;
+
+use hgq::runtime::{self, Hypers, ModelRuntime, Runtime, Target};
 
 #[test]
 fn scalar_hypers_reach_the_computation() {
-    let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    // no artifacts present: the native backend synthesizes the preset
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = Runtime::new().unwrap();
     let mr = ModelRuntime::load(&rt, &p, "jets_lw").unwrap();
     let mut s0 = mr.init_state();
@@ -13,15 +19,11 @@ fn scalar_hypers_reach_the_computation() {
             s0[t.offset..t.offset + t.size].fill(6.0);
         }
     }
-    let state = mr.state_literal(&s0).unwrap();
     let x: Vec<f32> = (0..mr.meta.batch * 16).map(|i| ((i % 31) as f32 - 15.0) / 8.0).collect();
     let y: Vec<i32> = (0..mr.meta.batch).map(|i| (i % 5) as i32).collect();
-    let xl = mr.x_literal(&x).unwrap();
-    let yl = mr.y_literal_cls(&y).unwrap();
     let run = |h: Hypers| -> (f32, Vec<f32>) {
-        let out = runtime::train_step(&mr, &state, &xl, &yl, h).unwrap();
-        let s1 = runtime::literal_to_vec(&out.state).unwrap();
-        (out.loss, s1[mr.meta.n_params..mr.meta.n_train].to_vec())
+        let out = runtime::train_step(&mr, &s0, &x, Target::Cls(&y), h).unwrap();
+        (out.loss, out.state[mr.meta.n_params..mr.meta.n_train].to_vec())
     };
     let base = run(Hypers { beta: 0.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 });
     // f_lr = 0 freezes bitwidths even at lr = 1

@@ -1,0 +1,139 @@
+//! Property tests for the fixed-point substrate's edge cases: cyclic
+//! wrap-overflow (paper Eq. 1/2 — no saturation) and negative
+//! `int_bits` types (all-fractional values < 1, which Eq. 3 assigns to
+//! small calibrated ranges). Driven by the in-tree property harness
+//! (util/prop.rs; proptest is unavailable offline).
+
+use hgq::fixed::arith::{accumulator_bits, dot, Fx};
+use hgq::fixed::{exp2i, FixedSpec};
+use hgq::util::prop::check;
+use hgq::{prop_assert, prop_assert_eq};
+
+#[test]
+fn negative_int_bits_examples_from_eq3() {
+    // calibrated range well below 1.0: integer bits go negative
+    let s = FixedSpec::from_range(-0.1, 0.09, 8);
+    assert!(s.signed);
+    assert!(s.int_bits < 0, "sub-unit range must give negative int bits: {s:?}");
+    assert_eq!(s.bits, s.int_bits + 8);
+    // the calibrated extremes stay representable
+    assert!(s.in_range(s.quantize_nowrap(-0.1)));
+    assert!(s.in_range(s.quantize_nowrap(0.09)));
+    // an unsigned sliver: [0, 0.05] at f = 10
+    let u = FixedSpec::from_range(0.0, 0.05, 10);
+    assert!(!u.signed);
+    assert!(u.int_bits < 0);
+    assert!(u.in_range(u.quantize_nowrap(0.05)));
+}
+
+#[test]
+fn prop_negative_int_bits_quantize_stays_exact() {
+    check("neg-int-bits-quantize", 500, |rng| {
+        // bits in [1, 12], int_bits in [-8, -1]: value range (0, 1)
+        let bits = 1 + rng.below(12) as i32;
+        let int_bits = -(1 + rng.below(8) as i32);
+        let signed = rng.bernoulli(0.5);
+        let s = FixedSpec::new(signed, bits, int_bits);
+        prop_assert!(s.frac_bits() > bits, "f = b - i must exceed b for negative i");
+        prop_assert!(s.max_value() < 1.0, "negative int bits bound values below 1");
+        let x = rng.range(s.min_value(), s.max_value() + 0.49 * s.step());
+        let m = s.quantize(x);
+        prop_assert!(s.in_range(m), "in-range value wrapped: {s:?} x={x}");
+        let v = s.to_f64(m);
+        prop_assert!(
+            (v - x).abs() <= s.step() / 2.0 + 1e-15,
+            "round error beyond half step: {s:?} x={x} v={v}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overflow_wraps_cyclically_not_saturates() {
+    check("wrap-overflow-cyclic", 500, |rng| {
+        let bits = 1 + rng.below(16) as i32;
+        let int_bits = rng.below(20) as i32 - 8; // negative through positive
+        let signed = rng.bernoulli(0.5);
+        let s = FixedSpec::new(signed, bits, int_bits);
+        // one step past the top wraps to the very bottom (Eq. 1/2)
+        let top_plus = s.max_value() + s.step();
+        let wrapped = s.quantize(top_plus);
+        let bottom = s.quantize(s.min_value());
+        prop_assert_eq!(wrapped, bottom);
+        // wrap is periodic in 2^bits mantissa steps and idempotent
+        let m = (rng.next_u64() >> 20) as i64 - (1i64 << 43);
+        let period = 1i64 << bits;
+        let w = s.wrap(m);
+        prop_assert!(s.in_range(w), "wrap left range: {s:?} m={m}");
+        prop_assert_eq!(s.wrap(w), w);
+        prop_assert_eq!(s.wrap(m + period), w);
+        prop_assert_eq!(s.wrap(m - 3 * period), w);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_requantize_wraps_like_the_f64_path() {
+    // narrowing with rounding + wrap must agree with quantizing the
+    // real value directly, including OUT-of-range values that overflow
+    check("requantize-overflow-vs-f64", 500, |rng| {
+        let f_src = rng.below(14) as i32;
+        let bits = 2 + rng.below(10) as i32;
+        let int_bits = rng.below(12) as i32 - 4;
+        let s = FixedSpec::new(true, bits, int_bits);
+        let m = (rng.next_u64() % 200_000) as i64 - 100_000;
+        let x = m as f64 * exp2i(-f_src);
+        prop_assert_eq!(s.quantize(x), s.requantize(m, f_src));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accumulator_bits_bound_holds() {
+    // adder-tree bit growth: an n-term dot of bounded-width operands
+    // fits in accumulator_bits(term_bits, n) magnitude bits
+    check("accumulator-bits-bound", 300, |rng| {
+        let n = 1 + rng.below(128);
+        let a_bits = 1 + rng.below(8) as u32;
+        let w_bits = 1 + rng.below(8) as u32;
+        let fa = rng.below(6) as i32;
+        let fw = rng.below(6) as i32;
+        let amax = (1i64 << a_bits) - 1;
+        let wmax = (1i64 << w_bits) - 1;
+        let a: Vec<Fx> = (0..n)
+            .map(|_| Fx::new((rng.next_u64() % (2 * amax as u64 + 1)) as i64 - amax, fa))
+            .collect();
+        let w: Vec<Fx> = (0..n)
+            .map(|_| Fx::new((rng.next_u64() % (2 * wmax as u64 + 1)) as i64 - wmax, fw))
+            .collect();
+        let acc = dot(fa + fw, a.iter().copied().zip(w.iter().copied()));
+        let bound_bits = accumulator_bits(a_bits + w_bits, n);
+        prop_assert!(bound_bits < 63, "guard overflowed the test itself");
+        let bound = 1i64 << bound_bits;
+        prop_assert!(
+            acc.m.abs() < bound,
+            "accumulator {} outside {}-bit bound (n={n})",
+            acc.m,
+            bound_bits
+        );
+        // and the accumulation itself is exact vs f64
+        let want: f64 = a.iter().zip(&w).map(|(x, y)| x.to_f64() * y.to_f64()).sum();
+        prop_assert!((acc.to_f64() - want).abs() < 1e-9, "dot inexact");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wrapped_arithmetic_matches_modular_model() {
+    // firmware accumulators narrow through FixedSpec::requantize: the
+    // wrap of a sum equals the wrap of the sum of wraps (mod 2^b)
+    check("wrap-is-ring-hom", 300, |rng| {
+        let bits = 2 + rng.below(12) as i32;
+        let s = FixedSpec::new(rng.bernoulli(0.5), bits, rng.below(6) as i32);
+        let a = (rng.next_u64() >> 30) as i64 - (1i64 << 33);
+        let b = (rng.next_u64() >> 30) as i64 - (1i64 << 33);
+        prop_assert_eq!(s.wrap(a + b), s.wrap(s.wrap(a) + s.wrap(b)));
+        prop_assert_eq!(s.wrap(a - b), s.wrap(s.wrap(a) - s.wrap(b)));
+        Ok(())
+    });
+}
