@@ -3,11 +3,12 @@
 //! activation bitwidths (the stream-IO limitation the paper describes),
 //! line-buffer BRAM accounting and position-count initiation interval.
 //!
-//! Training the CNN needs the PJRT backend (`HGQ_BACKEND=pjrt` on a
-//! `--features pjrt` build with artifacts). On the default native
-//! backend the sweep is skipped and the deployment pipeline — which is
-//! backend-independent — runs from the initial state instead, so the
-//! stream-IO structure, BRAM and II reporting still demonstrate.
+//! The CNN trains natively: the default pure-rust backend runs the full
+//! sweep → calibrate → deploy → emulate pipeline with zero artifacts
+//! (conv backward + batch-sharded executor; `HGQ_BACKEND=pjrt` on a
+//! `--features pjrt` build with artifacts selects the AOT path). If the
+//! selected backend cannot train, the backend-independent deployment
+//! pipeline still runs from the initial state.
 //!
 //!     cargo run --release --example svhn_stream [epochs]
 

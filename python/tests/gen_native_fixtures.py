@@ -1,0 +1,237 @@
+"""Generate the JAX reference fixtures for the rust native backend.
+
+Writes, per fixture model, into ``rust/tests/fixtures/<name>/``:
+
+    meta.json           packed-state layout (same format as compile/aot.py)
+    init.bin            initial packed state, little-endian f32
+    x.bin / y.bin       one fixed training batch (f32 / i32 LE)
+    expected_state.bin  packed state after `steps` JAX train steps
+    expected_logits.bin forward logits of the final state on the batch
+    expected_calib.bin  amin ‖ amax of calib(final_state, x)
+    expected.json       per-step {loss, metric, ebops, sparsity}, the
+                        hypers, and empirically-grounded tolerances
+
+The tolerances are derived by running the numpy mirror of the rust
+engine (native_mirror.py — f64 internals, same shard/reduction
+structure) over the same trajectory: the recorded atol is 10x the
+measured |mirror − JAX| deviation with a 1e-4 floor, so the rust test
+(rust/tests/native_jax_reference.rs) asserts "matches the JAX reference
+to f32 precision" with real margin, not a guessed bound.
+
+Run from the repo's python/ directory:
+
+    python3 tests/gen_native_fixtures.py
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp
+
+from compile.hgq.net import Net
+from compile.hgq.train import StateSpec, make_calib, make_forward, make_train_step
+from tests import native_mirror as mirror
+
+OUT_ROOT = Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures"
+
+CONV_MINI = {
+    "name": "conv_mini",
+    "task": "cls",
+    "input_shape": [11, 11, 2],
+    "layers": [
+        {"kind": "input_quant", "signed": False},
+        {"kind": "conv2d", "name": "c0", "cout": 3, "k": 3, "act": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "conv2d", "name": "c1", "cout": 4, "k": 3, "act": "relu"},
+        {"kind": "flatten"},
+        {"kind": "dense", "name": "d0", "dout": 6, "act": "relu"},
+        {"kind": "dense", "name": "d1", "dout": 3, "act": "linear"},
+    ],
+    "w_gran": "element",
+    "a_gran": "layer",
+    "f_init_w": 4.0,
+    "f_init_a": 4.0,
+    "batch": 8,
+    "y_dtype": "i32",
+}
+
+CONV_ELEM = {
+    "name": "conv_elem",
+    "task": "cls",
+    "input_shape": [8, 8, 2],
+    "layers": [
+        {"kind": "input_quant", "signed": True},
+        {"kind": "conv2d", "name": "c0", "cout": 3, "k": 3, "act": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "conv2d", "name": "c1", "cout": 4, "k": 2, "act": "linear"},
+        {"kind": "flatten"},
+        {"kind": "dense", "name": "d0", "dout": 3, "act": "linear"},
+    ],
+    "w_gran": "element",
+    "a_gran": "element",
+    "f_init_w": 4.0,
+    "f_init_a": 4.0,
+    "batch": 8,
+    "y_dtype": "i32",
+}
+
+# the SVHN streaming-CNN architecture (same layer stack / granularities
+# as the svhn_stream preset) at a fixture-sized batch
+SVHN_FIX = {
+    "name": "svhn_fix",
+    "task": "cls",
+    "input_shape": [32, 32, 3],
+    "layers": [
+        {"kind": "input_quant", "signed": False},
+        {"kind": "conv2d", "name": "c0", "cout": 16, "k": 3, "act": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "conv2d", "name": "c1", "cout": 16, "k": 3, "act": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "conv2d", "name": "c2", "cout": 24, "k": 3, "act": "relu"},
+        {"kind": "maxpool2"},
+        {"kind": "flatten"},
+        {"kind": "dense", "name": "d0", "dout": 42, "act": "relu"},
+        {"kind": "dense", "name": "d1", "dout": 64, "act": "relu"},
+        {"kind": "dense", "name": "d2", "dout": 10, "act": "linear"},
+    ],
+    "w_gran": "element",
+    "a_gran": "layer",
+    "f_init_w": 6.0,
+    "f_init_a": 6.0,
+    "batch": 16,
+    "y_dtype": "i32",
+}
+
+HYPERS = dict(beta=2e-4, gamma=1e-3, lr=0.008, f_lr=4.0)
+FIXTURES = [(CONV_MINI, 3), (CONV_ELEM, 3), (SVHN_FIX, 2)]
+
+
+def batch_for(cfg, seed):
+    rng = np.random.default_rng(seed)
+    feat = int(np.prod(cfg["input_shape"]))
+    lo = -1.0 if cfg["layers"][0].get("signed", True) else 0.0
+    x = rng.uniform(lo, 1.0, (cfg["batch"], feat)).astype(np.float32)
+    k_out = next(lc["dout"] for lc in reversed(cfg["layers"]) if lc["kind"] == "dense")
+    y = rng.integers(0, k_out, cfg["batch"]).astype(np.int32)
+    return x, y
+
+
+def write_meta(d, cfg, net, spec):
+    meta = {
+        "name": cfg["name"],
+        "task": net.task,
+        "batch": cfg["batch"],
+        "input_shape": list(net.input_shape),
+        "y_dtype": cfg["y_dtype"],
+        "w_gran": net.w_gran,
+        "a_gran": net.a_gran,
+        "state_size": spec.total,
+        "n_params": spec.n_params,
+        "n_train": spec.n_train,
+        "hypers": ["beta", "gamma", "lr", "f_lr"],
+        "metrics": ["loss", "metric", "ebops", "sparsity"],
+        "calib_size": sum(g["size"] for g in net.act_groups),
+        "tensors": spec.entries,
+        "act_groups": net.act_groups,
+        "layers": net.layers,
+        "output_dim": net.output_dim,
+    }
+    (d / "meta.json").write_text(json.dumps(meta, indent=1))
+
+
+def build_fixture(cfg, steps, seed=0):
+    net = Net(cfg)
+    spec = StateSpec(net)
+    ts = make_train_step(net, spec)
+    fwd = make_forward(net, spec)
+    calib = make_calib(net, spec)
+    x, y = batch_for(cfg, seed + 1)
+    xs = x.reshape(cfg["batch"], *net.input_shape)
+    state0 = spec.init_state(seed).astype(np.float32)
+
+    # JAX reference trajectory (the committed expectation)
+    j_state = state0
+    scalars = []
+    for _ in range(steps):
+        out = ts(
+            jnp.asarray(j_state),
+            jnp.asarray(xs),
+            jnp.asarray(y),
+            jnp.float32(HYPERS["beta"]),
+            jnp.float32(HYPERS["gamma"]),
+            jnp.float32(HYPERS["lr"]),
+            jnp.float32(HYPERS["f_lr"]),
+        )
+        j_state = np.asarray(out[0])
+        scalars.append([float(v) for v in out[1:]])
+
+    # mirror trajectory (stands in for the rust engine: f64 internals,
+    # same shard split) -> empirical tolerance for the rust test
+    m_state = state0
+    for _ in range(steps):
+        m_state = mirror.train_step(net, spec, m_state, x, y, **HYPERS)[0]
+    state_dev = float(np.abs(j_state - m_state).max())
+
+    j_logits = np.asarray(fwd(jnp.asarray(j_state), jnp.asarray(xs))).reshape(-1)
+    m_plan = mirror.Plan(net, spec, j_state, True)
+    m_logits = np.concatenate(
+        [
+            mirror.forward_shard(m_plan, x[s : s + r], r, False)["logits"]
+            for (s, r) in mirror.shard_ranges(cfg["batch"])
+        ]
+    ).reshape(-1)
+    logits_dev = float(np.abs(j_logits - m_logits).max())
+
+    j_amin, j_amax = (np.asarray(v) for v in calib(jnp.asarray(j_state), jnp.asarray(xs)))
+
+    state_atol = max(1e-4, 10.0 * state_dev)
+    logits_atol = max(1e-4, 10.0 * logits_dev)
+    assert state_dev < 5e-5, f"{cfg['name']}: mirror drifted {state_dev} from JAX"
+    assert logits_dev < 5e-5, f"{cfg['name']}: mirror logits drifted {logits_dev}"
+
+    d = OUT_ROOT / cfg["name"]
+    d.mkdir(parents=True, exist_ok=True)
+    write_meta(d, cfg, net, spec)
+    (d / "init.bin").write_bytes(state0.astype("<f4").tobytes())
+    (d / "x.bin").write_bytes(x.astype("<f4").tobytes())
+    (d / "y.bin").write_bytes(y.astype("<i4").tobytes())
+    (d / "expected_state.bin").write_bytes(j_state.astype("<f4").tobytes())
+    (d / "expected_logits.bin").write_bytes(j_logits.astype("<f4").tobytes())
+    calib_cat = np.concatenate([j_amin.reshape(-1), j_amax.reshape(-1)])
+    (d / "expected_calib.bin").write_bytes(calib_cat.astype("<f4").tobytes())
+    (d / "expected.json").write_text(
+        json.dumps(
+            {
+                "model": cfg["name"],
+                "steps": steps,
+                "hypers": HYPERS,
+                "scalars": scalars,  # per step: [loss, metric, ebops, sparsity]
+                "state_atol": state_atol,
+                "logits_atol": logits_atol,
+                "mirror_state_dev": state_dev,
+                "mirror_logits_dev": logits_dev,
+            },
+            indent=1,
+        )
+    )
+    print(
+        f"[fixtures] {cfg['name']}: state={spec.total} f32, {steps} steps, "
+        f"mirror dev state={state_dev:.2e} logits={logits_dev:.2e}"
+    )
+
+
+def main():
+    for cfg, steps in FIXTURES:
+        build_fixture(cfg, steps)
+    print(f"[fixtures] written under {OUT_ROOT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,530 @@
+"""Numpy mirror of the rust native backend's train step.
+
+This module re-implements rust/src/runtime/native/{engine,parallel}.rs
+loop-for-loop (vectorized where exactly equivalent) so the hand-derived
+conv/pool/dense backward pass can be validated against the in-repo JAX
+reference (`compile.hgq.train.make_train_step`) by autodiff —
+test_native_reference.py asserts the two match to f32 precision.
+
+Structure mirrors the rust engine:
+
+  * Plan        — batch-independent quantized weights + group quantizers
+  * forward     — per-shard quantized forward with backward caches
+  * backward    — per-shard data gradients + Eq. 15 surrogates
+  * regularizer — batch-independent EBOPs-bar / L1 pressure gradients
+  * train_step  — fixed 16-shard split, deterministic shard-order
+                  reduction, f64 Adam, f32 state writeback
+
+Gradient conventions replicated from JAX (see engine.rs header): relu
+subgradient 0 at 0, maxpool/per-channel-max gradients split evenly among
+ties, `max(x, 0)` carries derivative 1/2 at the exact tie.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+LN2 = 0.6931471805599453
+F_MIN, F_MAX = -8.0, 12.0
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-7
+BATCH_SHARDS = 16
+
+
+def round_half_up(x):
+    return np.floor(np.asarray(x, np.float64) + 0.5)
+
+
+def use_f(f_fp):
+    """(f_int, clip_mask) from the stored float bitwidths."""
+    v = np.asarray(f_fp, np.float64)
+    f = round_half_up(np.clip(v, F_MIN, F_MAX)).astype(np.int64)
+    clip = (v >= F_MIN) & (v <= F_MAX)
+    return f, clip
+
+
+def qz(x, f):
+    scale = np.exp2(f.astype(np.float64))
+    return round_half_up(x * scale) / scale
+
+
+def group_norm_scale(x_size, f_size):
+    return float(max(1, x_size // max(1, f_size))) ** -0.5
+
+
+def act_bits_eq3(nmin, nmax, f, signed):
+    """(bits, active) with the balanced tie derivative at i'+f == 0."""
+    NEG = -1e9
+    hi = np.where(nmax > 0, np.floor(np.log2(np.maximum(nmax, 1e-30))) + 1.0, NEG)
+    lo = np.where(nmin < 0, np.ceil(np.log2(np.maximum(-nmin, 1e-30))), NEG)
+    i = np.maximum(hi, lo)
+    dead = i < -1e8
+    if signed:
+        i = i + 1.0
+    raw = i + f.astype(np.float64)
+    bw = np.where(dead, 0.0, np.maximum(raw, 0.0))
+    active = np.where(dead, 0.0, np.where(raw > 0, 1.0, np.where(raw == 0, 0.5, 0.0)))
+    return bw, active
+
+
+class QwRun:
+    """Quantized constant tensor (mirror of engine.rs QwRun)."""
+
+    def __init__(self, spec, state, wname, fname, scaled):
+        self.off = spec.offset(wname)
+        self.f_off = spec.offset(fname)
+        we = spec._index[wname]
+        fe = spec._index[fname]
+        self.n = we["size"]
+        self.f_size = max(1, fe["size"])
+        w = state[self.off : self.off + self.n].astype(np.float64)
+        f_fp = state[self.f_off : self.f_off + self.f_size]
+        self.f_int, self.clip = use_f(f_fp)
+        f_b = self.f_int if self.f_size == self.n else np.full(self.n, self.f_int[0])
+        scale = np.exp2(f_b.astype(np.float64))
+        m = round_half_up(w * scale)
+        self.q = m / scale
+        self.mant = m.astype(np.int64)
+        self.delta = w - self.q
+        am = np.abs(self.mant)
+        self.bits = np.where(am > 0, np.floor(np.log2(np.maximum(am, 1))) + 1.0, 0.0)
+        self.scale = group_norm_scale(self.n, self.f_size) if scaled else 1.0
+
+    def fb(self):
+        """Per-element integer f (broadcast when scalar)."""
+        if self.f_size == self.n:
+            return self.f_int
+        return np.full(self.n, self.f_int[0])
+
+    def clipb(self):
+        if self.f_size == self.n:
+            return self.clip
+        return np.full(self.n, self.clip[0])
+
+    def reduce_df(self, df_elem):
+        """Sum-reduce an element-wise df to the f granularity."""
+        if self.f_size == 1:
+            return np.array([df_elem.sum()])
+        return df_elem
+
+
+class GroupQ:
+    """Activation quantizer group (mirror of engine.rs GroupQ)."""
+
+    def __init__(self, spec, net, name, feat_dim, state, use_state_stats):
+        self.name = name
+        self.gi = [g["name"] for g in net.act_groups].index(name)
+        g = net.act_groups[self.gi]
+        self.feat_dim = feat_dim
+        self.f_off = spec.offset(name)
+        self.f_size = max(1, spec._index[name]["size"])
+        f_fp = state[self.f_off : self.f_off + self.f_size]
+        self.f_int, self.clip = use_f(f_fp)
+        self.signed = g["signed"]
+        self.scale = group_norm_scale(feat_dim, self.f_size)
+        if use_state_stats:
+            a = spec.offset(name + ".amin")
+            b = spec.offset(name + ".amax")
+            self.init_min = state[a : a + self.f_size].astype(np.float64)
+            self.init_max = state[b : b + self.f_size].astype(np.float64)
+        else:
+            self.init_min = np.zeros(self.f_size)
+            self.init_max = np.zeros(self.f_size)
+
+    def f_elem(self):
+        if self.f_size == self.feat_dim:
+            return self.f_int
+        return np.full(self.feat_dim, self.f_int[0])
+
+    def reduce_df(self, df_elem):
+        if self.f_size == 1:
+            return np.array([df_elem.sum()])
+        return df_elem.reshape(-1, self.feat_dim).sum(axis=0) if df_elem.ndim > 1 else df_elem
+
+
+def shard_ranges(batch):
+    size = max(1, -(-batch // BATCH_SHARDS))
+    out = []
+    i = 0
+    while i < batch:
+        take = min(size, batch - i)
+        out.append((i, take))
+        i += take
+    return out
+
+
+class Plan:
+    """Batch-independent plan (mirror of engine.rs Plan)."""
+
+    def __init__(self, net, spec, state, use_state_stats):
+        self.net = net
+        self.spec = spec
+        self.groups = []
+        self.layers = []  # (kind, payload dict)
+        shape = list(net.input_shape)
+        cur_group = None
+        for lc in net.layers:
+            kind = lc["kind"]
+            if kind == "input_quant":
+                gq = GroupQ(spec, net, lc["name"] + ".fa", int(np.prod(shape)), state, use_state_stats)
+                cur_group = len(self.groups)
+                self.groups.append(gq)
+                self.layers.append(("input_quant", {"g": cur_group}))
+            elif kind == "dense":
+                din, dout = lc["din"], lc["dout"]
+                n = lc["name"]
+                w = QwRun(spec, state, n + ".w", n + ".fw", True)
+                b = QwRun(spec, state, n + ".b", n + ".fb", False)
+                og = GroupQ(spec, net, n + ".fa", dout, state, use_state_stats)
+                out_g = len(self.groups)
+                self.groups.append(og)
+                self.layers.append(
+                    (
+                        "dense",
+                        {
+                            "din": din,
+                            "dout": dout,
+                            "relu": lc.get("act") == "relu",
+                            "w": w,
+                            "b": b,
+                            "in_g": cur_group,
+                            "out_g": out_g,
+                        },
+                    )
+                )
+                cur_group = out_g
+                shape = [dout]
+            elif kind == "conv2d":
+                k, cin, cout = lc["k"], lc["cin"], lc["cout"]
+                oh, ow, _ = lc["out_shape"]
+                n = lc["name"]
+                w = QwRun(spec, state, n + ".w", n + ".fw", True)
+                b = QwRun(spec, state, n + ".b", n + ".fb", False)
+                og = GroupQ(spec, net, n + ".fa", oh * ow * cout, state, use_state_stats)
+                out_g = len(self.groups)
+                self.groups.append(og)
+                self.layers.append(
+                    (
+                        "conv2d",
+                        {
+                            "k": k,
+                            "cin": cin,
+                            "cout": cout,
+                            "oh": oh,
+                            "ow": ow,
+                            "in_h": oh + k - 1,
+                            "in_w": ow + k - 1,
+                            "relu": lc.get("act") == "relu",
+                            "w": w,
+                            "b": b,
+                            "in_g": cur_group,
+                            "out_g": out_g,
+                        },
+                    )
+                )
+                cur_group = out_g
+                shape = [oh, ow, cout]
+            elif kind == "maxpool2":
+                in_shape = list(shape)
+                shape = lc["out_shape"]
+                self.layers.append(("maxpool2", {"in_shape": in_shape, "out_shape": list(shape)}))
+            elif kind == "flatten":
+                shape = [int(np.prod(shape))]
+                self.layers.append(("flatten", {}))
+        self.output_dim = int(np.prod(shape))
+        self.n_params = spec.n_params
+        self.n_train = spec.n_train
+
+
+def quantize_group(gq, gs, h, rows, train):
+    """h: (rows, feat). Updates gs dict {nmin, nmax, delta}."""
+    f_e = gq.f_elem()
+    q = qz(h, f_e[None, :])
+    if train:
+        gs["delta"] = h - q
+    if gq.f_size == 1:
+        gs["nmin"] = np.minimum(gs["nmin"], q.min(initial=np.inf))
+        gs["nmax"] = np.maximum(gs["nmax"], q.max(initial=-np.inf))
+    else:
+        gs["nmin"] = np.minimum(gs["nmin"], q.min(axis=0))
+        gs["nmax"] = np.maximum(gs["nmax"], q.max(axis=0))
+    return q
+
+
+def forward_shard(plan, x, rows, train):
+    h = x.astype(np.float64).reshape(rows, -1)
+    caches = {"h_in": {}, "mask": {}}
+    groups = [
+        {"nmin": g.init_min.copy(), "nmax": g.init_max.copy(), "delta": None}
+        for g in plan.groups
+    ]
+    for li, (kind, p) in enumerate(plan.layers):
+        if kind == "input_quant":
+            h = quantize_group(plan.groups[p["g"]], groups[p["g"]], h, rows, train)
+        elif kind == "dense":
+            w, b = p["w"], p["b"]
+            wq = w.q.reshape(p["din"], p["dout"])
+            z = h @ wq + b.q[None, :]
+            mask = np.ones_like(z)
+            if p["relu"]:
+                mask = (z > 0).astype(np.float64)
+                z = z * mask
+            hq = quantize_group(plan.groups[p["out_g"]], groups[p["out_g"]], z, rows, train)
+            if train:
+                caches["h_in"][li] = h
+                caches["mask"][li] = mask
+            h = hq
+        elif kind == "conv2d":
+            k, cin, cout = p["k"], p["cin"], p["cout"]
+            oh, ow, ih, iw = p["oh"], p["ow"], p["in_h"], p["in_w"]
+            w, b = p["w"], p["b"]
+            wq = w.q.reshape(k, k, cin, cout)
+            hv = h.reshape(rows, ih, iw, cin)
+            z = np.zeros((rows, oh, ow, cout))
+            for ky in range(k):
+                for kx in range(k):
+                    z += np.tensordot(hv[:, ky : ky + oh, kx : kx + ow, :], wq[ky, kx], axes=1)
+            z += b.q[None, None, None, :]
+            z = z.reshape(rows, -1)
+            mask = np.ones_like(z)
+            if p["relu"]:
+                mask = (z > 0).astype(np.float64)
+                z = z * mask
+            hq = quantize_group(plan.groups[p["out_g"]], groups[p["out_g"]], z, rows, train)
+            if train:
+                caches["h_in"][li] = h
+                caches["mask"][li] = mask
+            h = hq
+        elif kind == "maxpool2":
+            ih, iw, c = p["in_shape"]
+            oh, ow, _ = p["out_shape"]
+            hv = h.reshape(rows, ih, iw, c)[:, : oh * 2, : ow * 2, :]
+            win = hv.reshape(rows, oh, 2, ow, 2, c)
+            nh = win.max(axis=(2, 4)).reshape(rows, -1)
+            if train:
+                caches["h_in"][li] = h
+            h = nh
+        # flatten: no-op
+    return {"rows": rows, "logits": h, "groups": groups, **caches}
+
+
+def backward_shard(plan, cache, g_logits):
+    rows = cache["rows"]
+    grad = np.zeros(plan.n_train)
+    g = g_logits.copy()
+
+    def group_surrogate(gq, gs, g2d):
+        clip_b = gq.clip if gq.f_size == gq.feat_dim else np.full(gq.feat_dim, gq.clip[0])
+        df_elem = (g2d * LN2 * gs["delta"]).sum(axis=0) * clip_b
+        grad[gq.f_off : gq.f_off + gq.f_size] += gq.reduce_df(df_elem)
+
+    for li in reversed(range(len(plan.layers))):
+        kind, p = plan.layers[li]
+        if kind == "flatten":
+            continue
+        if kind == "input_quant":
+            gq = plan.groups[p["g"]]
+            group_surrogate(gq, cache["groups"][p["g"]], g)
+        elif kind == "maxpool2":
+            ih, iw, c = p["in_shape"]
+            oh, ow, _ = p["out_shape"]
+            hin = cache["h_in"][li].reshape(rows, ih, iw, c)
+            win = hin[:, : oh * 2, : ow * 2, :].reshape(rows, oh, 2, ow, 2, c)
+            mx = win.max(axis=(2, 4), keepdims=True)
+            ind = (win == mx).astype(np.float64)
+            counts = ind.sum(axis=(2, 4), keepdims=True)
+            gv = g.reshape(rows, oh, 1, ow, 1, c)
+            gwin = ind * gv / counts
+            gin = np.zeros((rows, ih, iw, c))
+            gin[:, : oh * 2, : ow * 2, :] = gwin.reshape(rows, oh * 2, ow * 2, c)
+            g = gin.reshape(rows, -1)
+        elif kind == "dense":
+            w, b = p["w"], p["b"]
+            og = plan.groups[p["out_g"]]
+            group_surrogate(og, cache["groups"][p["out_g"]], g)
+            gz = g * cache["mask"][li]
+            hin = cache["h_in"][li]
+            gb = gz.sum(axis=0)
+            grad[b.off : b.off + b.n] += gb
+            dfb = gb * LN2 * b.delta * b.clipb()
+            grad[b.f_off : b.f_off + b.f_size] += b.reduce_df(dfb)
+            gw = (hin.T @ gz).reshape(-1)
+            grad[w.off : w.off + w.n] += gw
+            dfw = gw * LN2 * w.delta * w.clipb()
+            grad[w.f_off : w.f_off + w.f_size] += w.reduce_df(dfw)
+            g = gz @ w.q.reshape(p["din"], p["dout"]).T
+        elif kind == "conv2d":
+            k, cin, cout = p["k"], p["cin"], p["cout"]
+            oh, ow, ih, iw = p["oh"], p["ow"], p["in_h"], p["in_w"]
+            w, b = p["w"], p["b"]
+            og = plan.groups[p["out_g"]]
+            group_surrogate(og, cache["groups"][p["out_g"]], g)
+            gz = (g * cache["mask"][li]).reshape(rows, oh, ow, cout)
+            hin = cache["h_in"][li].reshape(rows, ih, iw, cin)
+            gb = gz.sum(axis=(0, 1, 2))
+            grad[b.off : b.off + b.n] += gb
+            dfb = gb * LN2 * b.delta * b.clipb()
+            grad[b.f_off : b.f_off + b.f_size] += b.reduce_df(dfb)
+            wq = w.q.reshape(k, k, cin, cout)
+            gw = np.zeros((k, k, cin, cout))
+            gin = np.zeros((rows, ih, iw, cin))
+            for ky in range(k):
+                for kx in range(k):
+                    patch = hin[:, ky : ky + oh, kx : kx + ow, :]
+                    gw[ky, kx] = np.tensordot(patch, gz, axes=([0, 1, 2], [0, 1, 2]))
+                    gin[:, ky : ky + oh, kx : kx + ow, :] += np.tensordot(
+                        gz, wq[ky, kx], axes=([3], [1])
+                    )
+            gw = gw.reshape(-1)
+            grad[w.off : w.off + w.n] += gw
+            dfw = gw * LN2 * w.delta * w.clipb()
+            grad[w.f_off : w.f_off + w.f_size] += w.reduce_df(dfw)
+            g = gin.reshape(rows, -1)
+    return grad
+
+
+def regularizer_pass(plan, stats, beta, gamma, grad):
+    bits, active = [], []
+    l1 = 0.0
+    for gq, st in zip(plan.groups, stats):
+        b, a = act_bits_eq3(st["nmin"], st["nmax"], gq.f_int, gq.signed)
+        bits.append(b)
+        active.append(a)
+        l1 += b.sum()
+    wsum = [np.zeros(g.f_size) for g in plan.groups]
+    ebops = sp_num = sp_den = 0.0
+    for kind, p in plan.layers:
+        if kind == "dense":
+            w, b = p["w"], p["b"]
+            din, dout = p["din"], p["dout"]
+            l1 += w.bits.sum() + b.bits.sum()
+            sp_num += (w.mant == 0).sum()
+            sp_den += w.n
+            ib = bits[p["in_g"]]
+            ifs = plan.groups[p["in_g"]].f_size
+            wb = w.bits.reshape(din, dout)
+            if ifs == 1:
+                tot = wb.sum()
+                wsum[p["in_g"]][0] += tot
+                ebops += ib[0] * tot
+            else:
+                s = wb.sum(axis=1)
+                wsum[p["in_g"]] += s
+                ebops += (ib * s).sum()
+            bw_a = np.broadcast_to(ib if ifs == din else np.full(din, ib[0]), (din,))
+            press = ((gamma + beta * bw_a[:, None]) * w.scale) * (
+                (w.mant.reshape(din, dout) != 0) & w.clipb().reshape(din, dout)
+            )
+            grad[w.f_off : w.f_off + w.f_size] += w.reduce_df(press.reshape(-1))
+            bpress = gamma * ((b.mant != 0) & b.clipb())
+            grad[b.f_off : b.f_off + b.f_size] += b.reduce_df(bpress)
+        elif kind == "conv2d":
+            w, b = p["w"], p["b"]
+            k, cin, cout = p["k"], p["cin"], p["cout"]
+            l1 += w.bits.sum() + b.bits.sum()
+            sp_num += (w.mant == 0).sum()
+            sp_den += w.n
+            ib = bits[p["in_g"]]
+            ifs = plan.groups[p["in_g"]].f_size
+            wb = w.bits.reshape(k, k, cin, cout)
+            if ifs == 1:
+                bw_cin = np.full(cin, ib[0])
+            else:
+                bw_cin = ib.reshape(-1, cin).max(axis=0)
+            wsum_c = wb.sum(axis=(0, 1, 3))
+            ebops += (bw_cin * wsum_c).sum()
+            if ifs == 1:
+                wsum[p["in_g"]][0] += wsum_c.sum()
+            else:
+                ib2 = ib.reshape(-1, cin)
+                ind = (ib2 == bw_cin[None, :]).astype(np.float64)
+                ties = ind.sum(axis=0)
+                share = ind * (wsum_c / ties)[None, :]
+                wsum[p["in_g"]] += share.reshape(-1)
+            press = ((gamma + beta * bw_cin[None, None, :, None]) * w.scale) * (
+                (w.mant.reshape(k, k, cin, cout) != 0)
+                & w.clipb().reshape(k, k, cin, cout)
+            )
+            grad[w.f_off : w.f_off + w.f_size] += w.reduce_df(press.reshape(-1))
+            bpress = gamma * ((b.mant != 0) & b.clipb())
+            grad[b.f_off : b.f_off + b.f_size] += b.reduce_df(bpress)
+    for g, gq in enumerate(plan.groups):
+        grad[gq.f_off : gq.f_off + gq.f_size] += (
+            (gamma + beta * wsum[g]) * gq.scale * active[g] * gq.clip
+        )
+    return {"ebops": ebops, "l1": l1, "sp_num": sp_num, "sp_den": max(sp_den, 1.0)}
+
+
+def train_step(net, spec, state, x, y, beta, gamma, lr, f_lr):
+    """Mirror of NativeModel::train_step. state/x f32; returns
+    (new_state f32, loss, metric, ebops, sparsity)."""
+    batch = x.shape[0]
+    plan = Plan(net, spec, state, True)
+    ranges = shard_ranges(batch)
+    shards = [forward_shard(plan, x[s : s + r], r, True) for (s, r) in ranges]
+
+    # deterministic stat merge in shard order
+    stats = []
+    for g, gq in enumerate(plan.groups):
+        nmin = gq.init_min.copy()
+        nmax = gq.init_max.copy()
+        for sh in shards:
+            nmin = np.minimum(nmin, sh["groups"][g]["nmin"])
+            nmax = np.maximum(nmax, sh["groups"][g]["nmax"])
+        stats.append({"nmin": nmin, "nmax": nmax})
+
+    k = plan.output_dim
+    logits = np.concatenate([sh["logits"] for sh in shards], axis=0)
+
+    if net.task == "cls":
+        mx = logits.max(axis=1, keepdims=True)
+        ex = np.exp(logits - mx)
+        denom = ex.sum(axis=1, keepdims=True)
+        logp = (logits - mx) - np.log(denom)
+        ce = -logp[np.arange(batch), y].mean()
+        metric = (logits.argmax(axis=1) == y).mean()
+        t = np.zeros((batch, k))
+        t[np.arange(batch), y] = 1.0
+        g_logits = (ex / denom - t) / batch
+        base_loss = ce
+    else:
+        err = logits[:, 0] - y
+        base_loss = (err * err).mean()
+        metric = np.sqrt(base_loss)
+        g_logits = np.zeros((batch, k))
+        g_logits[:, 0] = 2.0 * err / batch
+
+    grad = np.zeros(plan.n_train)
+    for si, (s, r) in enumerate(ranges):
+        grad += backward_shard(plan, shards[si], g_logits[s : s + r])
+
+    reg = regularizer_pass(plan, stats, beta, gamma, grad)
+
+    m_off = spec.offset("adam.m")
+    v_off = spec.offset("adam.v")
+    s_off = spec.offset("step")
+    new_state = state.copy()
+    step1 = float(state[s_off]) + 1.0
+    bc1 = 1.0 - ADAM_B1**step1
+    bc2 = 1.0 - ADAM_B2**step1
+    m1 = ADAM_B1 * state[m_off : m_off + plan.n_train].astype(np.float64) + (1 - ADAM_B1) * grad
+    v1 = ADAM_B2 * state[v_off : v_off + plan.n_train].astype(np.float64) + (
+        1 - ADAM_B2
+    ) * grad * grad
+    new_state[m_off : m_off + plan.n_train] = m1.astype(np.float32)
+    new_state[v_off : v_off + plan.n_train] = v1.astype(np.float32)
+    lr_eff = np.full(plan.n_train, lr, np.float64)
+    lr_eff[plan.n_params :] = lr * f_lr
+    upd = lr_eff * (m1 / bc1) / (np.sqrt(v1 / bc2) + ADAM_EPS)
+    new_state[: plan.n_train] = (
+        state[: plan.n_train].astype(np.float64) - upd
+    ).astype(np.float32)
+    new_state[s_off] = np.float32(step1)
+
+    for gq, st in zip(plan.groups, stats):
+        a = spec.offset(gq.name + ".amin")
+        b = spec.offset(gq.name + ".amax")
+        new_state[a : a + gq.f_size] = st["nmin"].astype(np.float32)
+        new_state[b : b + gq.f_size] = st["nmax"].astype(np.float32)
+
+    loss = base_loss + beta * reg["ebops"] + gamma * reg["l1"]
+    return new_state, loss, metric, reg["ebops"], reg["sp_num"] / reg["sp_den"]

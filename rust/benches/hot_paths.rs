@@ -7,6 +7,7 @@ use hgq::ebops::{dense_ebops, span_bits};
 use hgq::firmware::{ActQ, QuantWeights};
 use hgq::fixed::FixedSpec;
 use hgq::resource::{adder_tree, csd_nonzero_digits, dense_resources};
+use hgq::runtime::{self, Hypers, ModelRuntime, Runtime, Target};
 use hgq::util::bench::{bench, black_box};
 use hgq::util::rng::Rng;
 
@@ -87,6 +88,33 @@ fn main() {
         black_box(acc);
     });
     println!("{}   [{:.1} Mvals/s]", s.report(), s.per_sec(65536.0) / 1e6);
+
+    // ---- native train step (MLP) across worker threads ---------------
+    // fixed shard grid => bit-identical state at every thread count;
+    // the ratio is pure parallel speedup of the fwd+bwd hot path
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut base_ns = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let rt = Runtime::new().unwrap().with_threads(threads);
+        let mr = ModelRuntime::load(&rt, &artifacts, "jets_pp").unwrap();
+        let b = mr.meta.batch;
+        let state = mr.init_state();
+        let x: Vec<f32> = (0..b * 16).map(|i| ((i % 31) as f32 - 15.0) / 8.0).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % 5) as i32).collect();
+        let h = Hypers { beta: 1e-6, gamma: 2e-6, lr: 3e-3, f_lr: 8.0 };
+        let s = bench(&format!("jets train_step fwd+bwd threads={threads}"), 5, 50, || {
+            black_box(runtime::train_step(&mr, &state, &x, Target::Cls(&y), h).unwrap());
+        });
+        if threads == 1 {
+            base_ns = s.median_ns;
+        }
+        println!(
+            "{}   [{:.0} samples/s, {:.2}x vs 1 thread]",
+            s.report(),
+            s.per_sec(b as f64),
+            base_ns / s.median_ns,
+        );
+    }
 
     // ---- JSON parse of a real meta.json ------------------------------
     let meta_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))

@@ -1,12 +1,17 @@
-//! Bench: Table II / Fig. IV (SVHN stream-IO classifier) — reduced-
-//! budget rows plus conv hot-path timings. The CNN is the most
-//! expensive model; training it needs the pjrt backend, so on the
-//! native backend the sweep is skipped and the conv hot paths run from
-//! the initial state (forward, calibration and the firmware emulator
-//! are backend-independent).
+//! Bench: Table II / Fig. IV (SVHN stream-IO classifier) — native conv
+//! train-step thread scaling, reduced-budget sweep rows and the conv
+//! hot paths (EXPERIMENTS.md §Perf tracks these numbers).
+//!
+//! The CNN trains natively since the conv backward + batch-sharded
+//! executor landed: the scaling section times one full forward+backward
+//! train step (batch 128) at 1/2/4 worker threads — the shard grid is
+//! fixed, so every row computes bit-identical state and the ratio is
+//! pure parallel speedup.
 //!
 //!     cargo bench --bench table2_svhn
-//! Full-budget rows: `cargo run --release --features pjrt -- table2 --backend pjrt`.
+//!
+//! `HGQ_BENCH_EPOCHS=N` scales the sweep budget; `HGQ_BENCH_THREADS`
+//! (comma-separated, default "1,2,4") sets the scaling grid.
 
 use std::path::PathBuf;
 
@@ -15,20 +20,62 @@ use hgq::coordinator::experiment::{preset, run_hgq_sweep};
 use hgq::data::splits_for;
 use hgq::firmware::emulator::Emulator;
 use hgq::firmware::Graph;
-use hgq::runtime::{self, ModelRuntime, Runtime};
+use hgq::runtime::{self, Hypers, ModelRuntime, Runtime, Target};
 use hgq::util::bench::{bench, bench_budget, black_box};
 
 fn main() {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = Runtime::new().expect("backend");
     let mut p = preset("svhn");
-    p.n_train = 2048;
-    p.n_eval = 512;
+    p.n_train = 1024;
+    p.n_eval = 256;
+    p.rows = 2;
     let epochs =
-        std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(6);
+        std::env::var("HGQ_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let thread_grid: Vec<usize> = std::env::var("HGQ_BENCH_THREADS")
+        .unwrap_or_else(|_| "1,2,4".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
 
-    println!("== Table II / Fig. IV: SVHN stream IO (reduced budget: {epochs} epochs) ==");
     let mr = ModelRuntime::load(&rt, &artifacts, p.model).expect("load");
+    let splits = splits_for(p.model, 1, p.n_train, p.n_eval);
+    let b = mr.meta.batch;
+    let mut xbuf = vec![0.0f32; b * mr.meta.input_dim()];
+    let mut ybuf = vec![0i32; b];
+    for r in 0..b {
+        let src = r % splits.train.n;
+        splits.train.fill_row(src, r, &mut xbuf);
+        ybuf[r] = splits.train.y_cls[src];
+    }
+    let h = Hypers { beta: p.beta_from as f32, gamma: p.gamma, lr: p.lr, f_lr: p.f_lr };
+
+    // ---- forward+backward train-step thread scaling ------------------
+    println!("== native conv train step (batch {b}): thread scaling ==");
+    let mut base_ns = 0.0f64;
+    for &t in &thread_grid {
+        let rt_t = Runtime::new().unwrap().with_threads(t);
+        let mr_t = ModelRuntime::load(&rt_t, &artifacts, p.model).expect("load");
+        let state = mr_t.init_state();
+        let s = bench_budget(&format!("svhn train_step fwd+bwd threads={t}"), 6000, 3, || {
+            black_box(
+                runtime::train_step(&mr_t, &state, &xbuf, Target::Cls(&ybuf), h).unwrap(),
+            );
+        });
+        if base_ns == 0.0 {
+            base_ns = s.median_ns;
+        }
+        println!(
+            "{}   [{:.0} samples/s, {:.2}x vs {} threads]",
+            s.report(),
+            s.per_sec(b as f64),
+            base_ns / s.median_ns,
+            thread_grid[0],
+        );
+    }
+
+    // ---- reduced-budget Table II rows (native conv training) ---------
+    println!("\n== Table II / Fig. IV: SVHN stream IO (reduced budget: {epochs} epochs) ==");
     let state = match run_hgq_sweep(&rt, &artifacts, &p, Some(epochs), false) {
         Ok((_, _, outcome, reports)) => {
             for r in &reports {
@@ -41,14 +88,8 @@ fn main() {
             mr.init_state()
         }
     };
-    let splits = splits_for(p.model, 1, p.n_train, p.n_eval);
 
     println!("\n-- hot paths --");
-    let b = mr.meta.batch;
-    let mut xbuf = vec![0.0f32; b * mr.meta.input_dim()];
-    for r in 0..b {
-        splits.test.fill_row(r % splits.test.n, r, &mut xbuf);
-    }
     let s = bench_budget("svhn quantized forward (batch 128)", 3000, 5, || {
         black_box(runtime::forward(&mr, &state, &xbuf).unwrap());
     });

@@ -12,16 +12,24 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Metadata saved next to a checkpoint's packed state.
 #[derive(Debug, Clone)]
 pub struct CheckpointInfo {
+    /// model name (resolves the preset/artifacts on load)
     pub model: String,
+    /// human label, e.g. `"pareto-3"` or `"HGQ-1"`
     pub label: String,
+    /// validation quality at save time
     pub quality: f64,
+    /// EBOPs-bar cost at save time
     pub cost: f64,
+    /// epoch the state was captured at
     pub epoch: usize,
+    /// β in effect at capture
     pub beta: f64,
 }
 
+/// Write `<dir>/state.bin` + `<dir>/info.json`.
 pub fn save(dir: &Path, info: &CheckpointInfo, state: &[f32]) -> Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
     let mut bytes = Vec::with_capacity(state.len() * 4);
@@ -42,6 +50,7 @@ pub fn save(dir: &Path, info: &CheckpointInfo, state: &[f32]) -> Result<()> {
     Ok(())
 }
 
+/// Load a checkpoint directory written by [`save`], with length checks.
 pub fn load(dir: &Path) -> Result<(CheckpointInfo, Vec<f32>)> {
     let text = std::fs::read_to_string(dir.join("info.json"))
         .with_context(|| format!("reading {}/info.json", dir.display()))?;

@@ -13,15 +13,20 @@ use crate::metrics;
 use crate::resource::{self, ResourceReport};
 use crate::runtime::{self, ModelRuntime};
 
+/// One deployed model's table row (paper Tables I-III format).
 #[derive(Debug, Clone)]
 pub struct DeployReport {
+    /// model name
     pub model: String,
+    /// row label (HGQ-N, Qf*, LW-*)
     pub label: String,
     /// test quality: accuracy (cls) or RMS resolution in mrad (reg)
     pub quality: f64,
     /// exact EBOPs of the deployed firmware
     pub ebops: u64,
+    /// pruned-weight fraction of the deployed firmware
     pub sparsity: f64,
+    /// simulated place-and-route utilization + timing
     pub resources: ResourceReport,
     /// max |firmware - backend forward| logit difference on the probe
     /// batch (bit-exact = 0 inside the calibrated ranges)

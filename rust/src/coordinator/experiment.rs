@@ -12,16 +12,26 @@ use crate::baselines;
 use crate::data::{splits_for, Splits};
 use crate::runtime::{ModelRuntime, Runtime};
 
+/// One task's experiment protocol: model, budget, β ramp, table shape.
 #[derive(Debug, Clone)]
 pub struct Preset {
+    /// model name (per-element granularity variant)
     pub model: &'static str,
+    /// default epoch budget
     pub epochs: usize,
+    /// Adam learning rate
     pub lr: f32,
+    /// bitwidth learning-rate multiplier
     pub f_lr: f32,
+    /// L1 bitwidth-norm strength
     pub gamma: f32,
+    /// β at epoch 0 of the log ramp
     pub beta_from: f64,
+    /// β at the last epoch of the log ramp
     pub beta_to: f64,
+    /// training-set size
     pub n_train: usize,
+    /// validation/test-set size
     pub n_eval: usize,
     /// table rows to deploy from the Pareto front (HGQ-1..N)
     pub rows: usize,
@@ -76,6 +86,8 @@ pub fn preset(task: &str) -> Preset {
 }
 
 impl Preset {
+    /// The paper-protocol [`TrainConfig`] for this preset (log β ramp,
+    /// per-epoch validation + stat resets).
     pub fn train_config(&self) -> TrainConfig {
         TrainConfig {
             epochs: self.epochs,

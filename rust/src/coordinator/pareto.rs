@@ -7,21 +7,29 @@
 //! carries a snapshot of the packed training state so any front member
 //! can be deployed later.
 
+/// One checkpoint on the front: metrics + the packed state snapshot.
 #[derive(Debug, Clone)]
 pub struct ParetoPoint {
+    /// validation quality (higher better)
     pub quality: f64,
+    /// EBOPs-bar cost (lower better)
     pub cost: f64,
+    /// epoch the snapshot was taken at
     pub epoch: usize,
+    /// β in effect at the snapshot
     pub beta: f64,
+    /// packed training state, deployable as-is
     pub state: Vec<f32>,
 }
 
+/// The set of non-dominated (quality, cost) checkpoints.
 #[derive(Debug, Default, Clone)]
 pub struct ParetoFront {
     points: Vec<ParetoPoint>,
 }
 
 impl ParetoFront {
+    /// An empty front.
     pub fn new() -> Self {
         Self::default()
     }
@@ -44,10 +52,12 @@ impl ParetoFront {
         true
     }
 
+    /// Number of points currently on the front.
     pub fn len(&self) -> usize {
         self.points.len()
     }
 
+    /// True when no checkpoint has been accepted yet.
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }

@@ -2,14 +2,22 @@
 //! through the training", e.g. 1e-6 → 1e-4 for jets; constant-β
 //! ablations HGQ-c1/c2).
 
+/// How β evolves over a training run.
 #[derive(Debug, Clone, Copy)]
 pub enum BetaSchedule {
+    /// fixed β every epoch (the HGQ-c* ablations)
     Const(f64),
     /// log-linear ramp from `from` at epoch 0 to `to` at the last epoch
-    LogRamp { from: f64, to: f64 },
+    LogRamp {
+        /// β at epoch 0
+        from: f64,
+        /// β at the last epoch
+        to: f64,
+    },
 }
 
 impl BetaSchedule {
+    /// β in effect at `epoch` of a `total_epochs`-epoch run.
     pub fn at(&self, epoch: usize, total_epochs: usize) -> f64 {
         match *self {
             BetaSchedule::Const(b) => b,

@@ -15,15 +15,21 @@ use crate::metrics;
 use crate::runtime::{self, Hypers, ModelRuntime, Target};
 use crate::util::rng::Rng;
 
+/// Knobs of one training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// training epochs
     pub epochs: usize,
+    /// Adam learning rate for the parameter segment
     pub lr: f32,
     /// bitwidth learning-rate multiplier (0 freezes bitwidths — the
     /// uniform/static baselines)
     pub f_lr: f32,
+    /// L1 bitwidth-norm strength (γ)
     pub gamma: f32,
+    /// EBOPs-bar pressure schedule (β per epoch)
     pub beta: BetaSchedule,
+    /// batch-shuffling seed
     pub seed: u64,
     /// validate + offer to the Pareto front every `val_every` epochs
     pub val_every: usize,
@@ -49,22 +55,33 @@ impl Default for TrainConfig {
     }
 }
 
+/// Per-epoch training telemetry (batch-averaged).
 #[derive(Debug, Clone)]
 pub struct EpochLog {
+    /// epoch index
     pub epoch: usize,
+    /// β in effect this epoch
     pub beta: f64,
+    /// mean total loss (task + β·EBOPs-bar + γ·L1)
     pub loss: f64,
+    /// mean task metric (accuracy or RMS error)
     pub metric: f64,
+    /// mean differentiable EBOPs-bar
     pub ebops_bar: f64,
+    /// mean pruned-weight fraction
     pub sparsity: f64,
     /// validation quality (acc, or -rms for regression), when evaluated
     pub val_quality: Option<f64>,
 }
 
+/// Everything a training run produces.
 #[derive(Debug)]
 pub struct TrainOutcome {
+    /// final packed state
     pub state: Vec<f32>,
+    /// one entry per epoch
     pub logs: Vec<EpochLog>,
+    /// every validation checkpoint on the (quality, EBOPs-bar) front
     pub pareto: ParetoFront,
 }
 

@@ -12,9 +12,12 @@
 use super::Dataset;
 use crate::util::rng::Rng;
 
+/// Jet-substructure observables per sample.
 pub const FEAT: usize = 16;
+/// Jet classes {q, g, W, Z, t}.
 pub const CLASSES: usize = 5;
 
+/// Generate `n` labelled jets, deterministic per seed.
 pub fn generate(seed: u64, n: usize) -> Dataset {
     // class prototypes drawn from a *fixed* stream so every split sees
     // the same underlying physics

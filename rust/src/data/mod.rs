@@ -1,5 +1,5 @@
 //! Synthetic datasets standing in for the paper's evaluation data
-//! (DESIGN.md substitutions): the real hls4ml LHC jet set, SVHN and the
+//! (ARCHITECTURE.md substitutions): the real hls4ml LHC jet set, SVHN and the
 //! muon detector simulation of [65] are not available offline, so each
 //! generator produces a task with the same input geometry, label
 //! structure and difficulty knobs, exercising the identical code paths.
@@ -17,15 +17,19 @@ pub struct Dataset {
     pub y_cls: Vec<i32>,
     /// regression targets (empty for classification)
     pub y_reg: Vec<f32>,
+    /// sample count
     pub n: usize,
+    /// features per sample
     pub feat_dim: usize,
 }
 
 impl Dataset {
+    /// Feature row of sample `i`.
     pub fn sample(&self, i: usize) -> &[f32] {
         &self.x[i * self.feat_dim..(i + 1) * self.feat_dim]
     }
 
+    /// True when the labels are classes (vs regression targets).
     pub fn is_classification(&self) -> bool {
         !self.y_cls.is_empty()
     }
@@ -40,11 +44,17 @@ impl Dataset {
 /// Standard splits used across all experiments.
 #[derive(Debug, Clone)]
 pub struct Splits {
+    /// training split
     pub train: Dataset,
+    /// validation split (per-epoch quality, Pareto offers)
     pub val: Dataset,
+    /// held-out test split (reported quality)
     pub test: Dataset,
 }
 
+/// Generate train/val/test splits for a model's task (the task is the
+/// model-name prefix: `jets_*`, `muon_*`, `svhn_*`), on disjoint
+/// deterministic RNG streams.
 pub fn splits_for(model: &str, seed: u64, n_train: usize, n_eval: usize) -> Splits {
     let task = model.split('_').next().unwrap_or(model);
     let gen = |split_tag: u64, n: usize| -> Dataset {

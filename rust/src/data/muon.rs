@@ -11,10 +11,14 @@
 use super::Dataset;
 use crate::util::rng::Rng;
 
+/// Detector stations along the track.
 pub const STATIONS: usize = 3;
+/// Strip layers per station.
 pub const LAYERS: usize = 3;
+/// Binary strips per layer.
 pub const STRIPS: usize = 50;
-pub const FEAT: usize = STATIONS * LAYERS * STRIPS; // 450
+/// Input features: one hit bit per strip (450).
+pub const FEAT: usize = STATIONS * LAYERS * STRIPS;
 
 /// max |angle| generated, mrad
 pub const MAX_ANGLE_MRAD: f64 = 250.0;
@@ -28,6 +32,8 @@ const EFFICIENCY: f64 = 0.96;
 /// probability of a noise hit per layer
 const NOISE: f64 = 0.04;
 
+/// Simulate `n` tracks, deterministic per seed; regression target is
+/// the incidence angle in mrad.
 pub fn generate(seed: u64, n: usize) -> Dataset {
     let mut rng = Rng::new(seed ^ 0x3100);
     let mut x = vec![0.0f32; n * FEAT];

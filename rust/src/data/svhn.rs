@@ -5,14 +5,24 @@
 //! per-pixel sensor noise and distractor edges — the same 10-class,
 //! same-geometry task the paper's LeNet-like CNN consumes (values
 //! normalized to [0, 1)).
+//!
+//! Every sample draws from its own seeded RNG stream, so generation is
+//! embarrassingly parallel (scoped threads over sample chunks) while
+//! staying bit-deterministic for a given seed regardless of core count
+//! — the same contract as the native backend's sharded executor.
 
 use super::Dataset;
 use crate::util::rng::Rng;
 
+/// Image height in pixels.
 pub const H: usize = 32;
+/// Image width in pixels.
 pub const W: usize = 32;
+/// Color channels (RGB).
 pub const C: usize = 3;
+/// Input features per image (HWC row-major).
 pub const FEAT: usize = H * W * C;
+/// Digit classes 0-9.
 pub const CLASSES: usize = 10;
 
 /// 5x7 glyphs, row-major, '1' = ink.
@@ -39,47 +49,67 @@ const GLYPHS: [[u8; 35]; 10] = [
     [0,1,1,1,0, 1,0,0,0,1, 1,0,0,0,1, 0,1,1,1,1, 0,0,0,0,1, 0,0,0,1,0, 0,1,1,0,0],
 ];
 
+/// Independent RNG stream for sample `s` (splitmix-style index mix).
+fn sample_rng(seed: u64, s: usize) -> Rng {
+    Rng::new(seed ^ 0x5148 ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Generate `n` labelled images. Deterministic per seed, parallel over
+/// all available cores (per-sample RNG streams).
 pub fn generate(seed: u64, n: usize) -> Dataset {
-    let mut rng = Rng::new(seed ^ 0x5148);
     let mut x = vec![0.0f32; n * FEAT];
-    let mut y = Vec::with_capacity(n);
-    for s in 0..n {
-        let digit = rng.below(CLASSES);
-        y.push(digit as i32);
-        let img = &mut x[s * FEAT..(s + 1) * FEAT];
-
-        // background + digit colors (street-sign-like, moderate contrast)
-        let bg: [f64; 3] = [rng.range(0.1, 0.6), rng.range(0.1, 0.6), rng.range(0.1, 0.6)];
-        let mut fg = [0.0; 3];
-        for c in 0..3 {
-            let delta = rng.range(0.3, 0.45) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
-            fg[c] = (bg[c] + delta).clamp(0.0, 0.999);
-        }
-
-        for py in 0..H {
-            for px in 0..W {
-                for c in 0..C {
-                    img[(py * W + px) * C + c] =
-                        (bg[c] + rng.normal_scaled(0.0, 0.03)).clamp(0.0, 0.999) as f32;
+    let mut y = vec![0i32; n];
+    let threads =
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(n.max(1));
+    let chunk = n.div_ceil(threads).max(1);
+    std::thread::scope(|sc| {
+        for (ci, (xc, yc)) in x.chunks_mut(chunk * FEAT).zip(y.chunks_mut(chunk)).enumerate() {
+            sc.spawn(move || {
+                for (j, (img, yv)) in xc.chunks_mut(FEAT).zip(yc.iter_mut()).enumerate() {
+                    let mut rng = sample_rng(seed, ci * chunk + j);
+                    *yv = synth_sample(&mut rng, img) as i32;
                 }
+            });
+        }
+    });
+    Dataset { x, y_cls: y, y_reg: Vec::new(), n, feat_dim: FEAT }
+}
+
+/// Draw one image into `img`, returning its digit label.
+fn synth_sample(rng: &mut Rng, img: &mut [f32]) -> usize {
+    let digit = rng.below(CLASSES);
+
+    // background + digit colors (street-sign-like, moderate contrast)
+    let bg: [f64; 3] = [rng.range(0.1, 0.6), rng.range(0.1, 0.6), rng.range(0.1, 0.6)];
+    let mut fg = [0.0; 3];
+    for c in 0..3 {
+        let delta = rng.range(0.3, 0.45) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        fg[c] = (bg[c] + delta).clamp(0.0, 0.999);
+    }
+
+    for py in 0..H {
+        for px in 0..W {
+            for c in 0..C {
+                img[(py * W + px) * C + c] =
+                    (bg[c] + rng.normal_scaled(0.0, 0.03)).clamp(0.0, 0.999) as f32;
             }
         }
-
-        // distractor partial digits at the edges (SVHN crops contain
-        // neighbours)
-        if rng.bernoulli(0.5) {
-            let other = rng.below(CLASSES);
-            let ox = -10 + rng.below(4) as i64;
-            let oy = rng.below(8) as i64 - 4;
-            stamp(&mut rng, img, other, ox, oy, &fg);
-        }
-
-        // main digit: scale x4 with jitter, centered-ish
-        let dx = rng.below(9) as i64 - 4;
-        let dy = rng.below(7) as i64 - 3;
-        stamp(&mut rng, img, digit, 6 + dx, 2 + dy, &fg);
     }
-    Dataset { x, y_cls: y, y_reg: Vec::new(), n, feat_dim: FEAT }
+
+    // distractor partial digits at the edges (SVHN crops contain
+    // neighbours)
+    if rng.bernoulli(0.5) {
+        let other = rng.below(CLASSES);
+        let ox = -10 + rng.below(4) as i64;
+        let oy = rng.below(8) as i64 - 4;
+        stamp(rng, img, other, ox, oy, &fg);
+    }
+
+    // main digit: scale x4 with jitter, centered-ish
+    let dx = rng.below(9) as i64 - 4;
+    let dy = rng.below(7) as i64 - 3;
+    stamp(rng, img, digit, 6 + dx, 2 + dy, &fg);
+    digit
 }
 
 /// Draw glyph `digit` scaled x4 (20x28 px) at top-left (ox, oy), with

@@ -25,6 +25,14 @@ use crate::fixed::bit_length;
 
 /// Effective bits of a single constant mantissa: MSB-to-LSB span of the
 /// magnitude. 0 for a pruned (zero) weight.
+///
+/// ```
+/// use hgq::ebops::span_bits;
+///
+/// assert_eq!(span_bits(0b001101000), 4); // bits 3..=6 enclose the magnitude
+/// assert_eq!(span_bits(-8), 1);          // 0b1000: a power of two spans 1 bit
+/// assert_eq!(span_bits(0), 0);           // pruned weight: no hardware
+/// ```
 pub fn span_bits(m: i64) -> u32 {
     let a = m.unsigned_abs();
     if a == 0 {
@@ -58,6 +66,14 @@ pub fn group_span_bits(ms: &[i64]) -> u32 {
 /// EBOPs of a fully-unrolled dense layer: weight (din, dout) mantissas
 /// in row-major, per-input-element activation widths. Every (i, j)
 /// weight has its own multiplier fed by input element i.
+///
+/// ```
+/// use hgq::ebops::dense_ebops;
+///
+/// // 2x2 weights [[1, 6], [0, 3]] (spans 1, 2, 0, 2) with 4- and 5-bit inputs:
+/// let w = [1, 6, 0, 3];
+/// assert_eq!(dense_ebops(&w, 2, 2, &[4, 5]), 4 * 1 + 4 * 2 + 5 * 0 + 5 * 2);
+/// ```
 pub fn dense_ebops(w_mantissas: &[i64], din: usize, dout: usize, act_bits: &[u32]) -> u64 {
     assert_eq!(w_mantissas.len(), din * dout);
     assert_eq!(act_bits.len(), din);

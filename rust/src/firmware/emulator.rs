@@ -24,6 +24,7 @@ pub struct Emulator<'g> {
 }
 
 impl<'g> Emulator<'g> {
+    /// Engine over a built graph; buffers sized to its widest tensor.
     pub fn new(g: &'g Graph) -> Self {
         let cap = max_width(g);
         Emulator {

@@ -15,9 +15,11 @@ use crate::ebops;
 use crate::fixed::{round_half_up, FixedSpec};
 use crate::nn::{LayerMeta, ModelMeta};
 
-/// Trainable-bitwidth clipping range — MUST match python
-/// compile/kernels/ref.py (F_MIN / F_MAX).
+/// Lower trainable-bitwidth clip — MUST match python
+/// compile/kernels/ref.py (F_MIN).
 pub const F_MIN: f64 = -8.0;
+/// Upper trainable-bitwidth clip — MUST match python
+/// compile/kernels/ref.py (F_MAX).
 pub const F_MAX: f64 = 12.0;
 
 /// Per-element quantized constants (weights / biases).
@@ -53,6 +55,7 @@ impl QuantWeights {
         self.m[i] as f64 * crate::fixed::exp2i(-self.frac[i])
     }
 
+    /// Fraction of elements quantized to exactly zero (pruned).
     pub fn sparsity(&self) -> f64 {
         let zeros = self.m.iter().filter(|&&m| m == 0).count();
         zeros as f64 / self.m.len().max(1) as f64
@@ -63,11 +66,14 @@ impl QuantWeights {
 /// or a single broadcast spec (layer granularity / stream IO).
 #[derive(Debug, Clone)]
 pub struct ActQ {
+    /// per-element specs, or a single spec when `scalar`
     pub specs: Vec<FixedSpec>,
+    /// true when one spec broadcasts over the whole tensor
     pub scalar: bool,
 }
 
 impl ActQ {
+    /// Spec of element `i` (the broadcast spec when scalar).
     pub fn spec(&self, i: usize) -> FixedSpec {
         if self.scalar {
             self.specs[0]
@@ -76,20 +82,25 @@ impl ActQ {
         }
     }
 
+    /// Finest (largest) fractional-bit count across the tensor.
     pub fn max_frac(&self) -> i32 {
         self.specs.iter().map(|s| s.frac_bits()).max().unwrap_or(0)
     }
 
+    /// Widest total bit count across the tensor.
     pub fn max_bits(&self) -> i32 {
         self.specs.iter().map(|s| s.bits).max().unwrap_or(0)
     }
 }
 
+/// One layer of the deployed firmware graph. All widths/specs are
+/// frozen at build time from the trained state + calibration.
 #[derive(Debug, Clone)]
+#[allow(missing_docs)] // field names mirror LayerMeta / the HLS generator
 pub enum FwLayer {
-    InputQuant {
-        out: ActQ,
-    },
+    /// Input quantizer: real-valued features into fixed-point.
+    InputQuant { out: ActQ },
+    /// Fully-unrolled dense layer (one multiplier per weight).
     Dense {
         din: usize,
         dout: usize,
@@ -100,6 +111,7 @@ pub enum FwLayer {
         /// common accumulator LSB (fractional bits)
         acc_frac: i32,
     },
+    /// Stream-IO valid conv (one physical MAC set, reused per position).
     Conv2d {
         k: usize,
         cin: usize,
@@ -110,11 +122,12 @@ pub enum FwLayer {
         b: QuantWeights,
         relu: bool,
         out: ActQ,
+        /// common accumulator LSB (fractional bits)
         acc_frac: i32,
     },
-    MaxPool2 {
-        in_shape: [usize; 3],
-    },
+    /// 2x2 max pooling over an HWC tensor.
+    MaxPool2 { in_shape: [usize; 3] },
+    /// Shape-only reshape (buffers are already flat).
     Flatten,
 }
 
@@ -122,11 +135,14 @@ pub enum FwLayer {
 /// act-group order (the calib.hlo artifact's output, batch-reduced).
 #[derive(Debug, Clone)]
 pub struct Calib {
+    /// per-element minimum of the quantized activations
     pub amin: Vec<f32>,
+    /// per-element maximum of the quantized activations
     pub amax: Vec<f32>,
 }
 
 impl Calib {
+    /// Widen the running extremes with another batch's extremes.
     pub fn merge(&mut self, amin: &[f32], amax: &[f32]) {
         for (a, &b) in self.amin.iter_mut().zip(amin) {
             *a = a.min(b);
@@ -136,6 +152,7 @@ impl Calib {
         }
     }
 
+    /// All-zero extremes over `n` activation elements (merge identity).
     pub fn empty(n: usize) -> Calib {
         Calib { amin: vec![0.0; n], amax: vec![0.0; n] }
     }
@@ -157,11 +174,17 @@ impl Calib {
     }
 }
 
+/// The deployed, fully-quantized network: what the firmware emulator
+/// executes and the resource model costs.
 #[derive(Debug, Clone)]
 pub struct Graph {
+    /// model name (from meta.json)
     pub name: String,
+    /// typed fixed-point layers in execution order
     pub layers: Vec<FwLayer>,
+    /// flattened input feature count
     pub input_dim: usize,
+    /// logit count
     pub output_dim: usize,
 }
 
@@ -190,6 +213,10 @@ impl Graph {
 
         let mut layers = Vec::new();
         let mut cur_act: Option<ActQ> = None;
+        // track the true running tensor shape: pool inputs can be odd
+        // (e.g. 13x13 -> 6x6 drops the last row/col), so reconstructing
+        // them as out_shape * 2 would mis-stride the emulator
+        let mut cur_shape: Vec<usize> = meta.input_shape.clone();
         for lm in &meta.layers {
             match lm {
                 LayerMeta::InputQuant { name, .. } => {
@@ -211,6 +238,7 @@ impl Graph {
                         cur_act.as_ref().ok_or_else(|| anyhow!("dense before input_quant"))?;
                     let acc_frac = acc_frac_for(&w, &b, in_act);
                     cur_act = Some(out.clone());
+                    cur_shape = vec![*dout];
                     layers.push(FwLayer::Dense {
                         din: *din,
                         dout: *dout,
@@ -237,6 +265,7 @@ impl Graph {
                     let in_h = out_shape[0] + k - 1;
                     let in_w = out_shape[1] + k - 1;
                     cur_act = Some(out.clone());
+                    cur_shape = out_shape.to_vec();
                     layers.push(FwLayer::Conv2d {
                         k: *k,
                         cin: *cin,
@@ -251,10 +280,17 @@ impl Graph {
                     });
                 }
                 LayerMeta::MaxPool2 { out_shape } => {
-                    let in_shape = [out_shape[0] * 2, out_shape[1] * 2, out_shape[2]];
+                    if cur_shape.len() != 3 {
+                        bail!("maxpool2 needs a HWC input, got {cur_shape:?}");
+                    }
+                    let in_shape = [cur_shape[0], cur_shape[1], cur_shape[2]];
+                    cur_shape = out_shape.to_vec();
                     layers.push(FwLayer::MaxPool2 { in_shape });
                 }
-                LayerMeta::Flatten => layers.push(FwLayer::Flatten),
+                LayerMeta::Flatten => {
+                    cur_shape = vec![cur_shape.iter().product()];
+                    layers.push(FwLayer::Flatten);
+                }
             }
         }
         Ok(Graph {

@@ -11,19 +11,24 @@ use super::bit_length;
 /// A fixed-point value: mantissa at scale 2^-frac.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Fx {
+    /// integer mantissa
     pub m: i64,
+    /// fractional bits: value = m · 2^-frac
     pub frac: i32,
 }
 
 impl Fx {
+    /// Value `m · 2^-frac`.
     pub fn new(m: i64, frac: i32) -> Self {
         Fx { m, frac }
     }
 
+    /// Zero at the given LSB scale.
     pub fn zero(frac: i32) -> Self {
         Fx { m: 0, frac }
     }
 
+    /// Exact real value (all our mantissas fit f64's 53-bit window).
     pub fn to_f64(self) -> f64 {
         self.m as f64 * super::exp2i(-self.frac)
     }
@@ -49,6 +54,7 @@ impl Fx {
         Fx { m: align(self.m, self.frac, frac), frac }
     }
 
+    /// ReLU on the exact value (clamp the mantissa at zero).
     pub fn relu(self) -> Fx {
         Fx { m: self.m.max(0), frac: self.frac }
     }

@@ -19,6 +19,7 @@ pub mod arith;
 /// (always-zero / pruned) value.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FixedSpec {
+    /// whether the type carries a sign bit
     pub signed: bool,
     /// total bits b (0 = dead value)
     pub bits: i32,
@@ -27,6 +28,7 @@ pub struct FixedSpec {
 }
 
 impl FixedSpec {
+    /// A `fixed<bits, int_bits>` / `ufixed<bits, int_bits>` descriptor.
     pub fn new(signed: bool, bits: i32, int_bits: i32) -> Self {
         FixedSpec { signed, bits, int_bits }
     }
@@ -67,6 +69,15 @@ impl FixedSpec {
 
     /// Eq. (1)/(2): quantize a real number, round-half-up then cyclic
     /// wrap into the representable range. Returns the mantissa.
+    ///
+    /// ```
+    /// use hgq::fixed::FixedSpec;
+    ///
+    /// let s = FixedSpec::new(true, 8, 4); // fixed<8,4>: step 1/16
+    /// assert_eq!(s.quantize(1.0), 16);
+    /// assert_eq!(s.to_f64(s.quantize(0.03125)), 0.0625); // half step rounds up
+    /// assert_eq!(s.quantize(8.0), -128); // overflow wraps (Eq. 1), not saturates
+    /// ```
     pub fn quantize(&self, x: f64) -> i64 {
         if self.bits <= 0 {
             return 0;

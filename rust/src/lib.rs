@@ -16,8 +16,8 @@
 //! * [`nn`]        — model metadata (meta.json) shared with the python
 //!                   build path.
 //! * [`data`]      — synthetic datasets standing in for the paper's
-//!                   (jets / SVHN / muon tracking; see DESIGN.md
-//!                   substitutions).
+//!                   (jets / SVHN / muon tracking; see the
+//!                   ARCHITECTURE.md substitutions section).
 //! * [`runtime`]   — multi-backend execution: the pure-rust native HGQ
 //!                   engine (default, hermetic, built-in model presets)
 //!                   and the PJRT/HLO path behind the `pjrt` feature
@@ -29,6 +29,12 @@
 //!                   magnitude-pruning baselines from the evaluation.
 //! * [`metrics`], [`util`] — shared helpers (accuracy/resolution; JSON,
 //!                   RNG, CLI, bench harness, property testing).
+//!
+//! The packed-state protocol every module speaks, the backend execution
+//! contract and the full module map are documented in ARCHITECTURE.md;
+//! experiment/bench protocols in EXPERIMENTS.md.
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod coordinator;

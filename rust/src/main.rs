@@ -10,11 +10,14 @@
 //!   ablate   constant-β (HGQ-c*) and granularity ablations
 //!   info     print model/backend info
 //!
-//! Every command takes `--backend native|pjrt`. The default native
-//! backend is pure rust and needs no artifacts: model presets are built
-//! in, so the full train → calibrate → deploy → firmware-emulate
-//! pipeline runs hermetically. The pjrt backend executes AOT HLO
-//! artifacts (build with `--features pjrt`).
+//! Every command takes `--backend native|pjrt` and `--threads N` (the
+//! native backend's batch-sharded worker count; 0 = all cores, results
+//! are bit-identical for any value). The default native backend is pure
+//! rust and needs no artifacts: model presets are built in — including
+//! the SVHN CNN — so the full train → calibrate → deploy →
+//! firmware-emulate pipeline runs hermetically for every preset. The
+//! pjrt backend executes AOT HLO artifacts (build with
+//! `--features pjrt`).
 
 use std::path::PathBuf;
 
@@ -54,8 +57,9 @@ fn run() -> Result<()> {
         "help" | _ => {
             println!(
                 "usage: hgq <info|train|sweep|table1|table2|table3|fig2|ablate|deploy|emulate> \
-                 [--backend native|pjrt] [--artifacts DIR] [--model NAME] [--preset TASK] \
-                 [--epochs N] [--beta B] [--seed S] [--checkpoint DIR] [--json FILE] [--verbose]"
+                 [--backend native|pjrt] [--threads N] [--artifacts DIR] [--model NAME] \
+                 [--preset TASK] [--epochs N] [--beta B] [--seed S] [--checkpoint DIR] \
+                 [--json FILE] [--verbose]"
             );
             Ok(())
         }
@@ -63,7 +67,9 @@ fn run() -> Result<()> {
 }
 
 fn backend_from(args: &mut Args) -> Result<Runtime> {
-    Runtime::from_name(&args.str("backend", "native"))
+    let rt = Runtime::from_name(&args.str("backend", "native"))?;
+    // 0 = auto (all cores); any value produces bit-identical results
+    Ok(rt.with_threads(args.usize("threads", 0)))
 }
 
 fn cmd_info(artifacts: &PathBuf, mut args: Args) -> Result<()> {

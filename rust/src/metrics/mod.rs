@@ -15,6 +15,7 @@ pub fn accuracy(logits: &[f64], labels: &[i32], k: usize) -> f64 {
     correct as f64 / n.max(1) as f64
 }
 
+/// Index of the largest value (first wins ties).
 pub fn argmax(row: &[f64]) -> usize {
     let mut best = 0;
     for (j, &v) in row.iter().enumerate() {

@@ -12,9 +12,13 @@ use crate::util::json::Json;
 /// One named tensor inside the packed state vector.
 #[derive(Debug, Clone)]
 pub struct TensorEntry {
+    /// tensor name, e.g. `"d0.w"` or `"adam.m"`
     pub name: String,
+    /// logical shape (empty = scalar)
     pub shape: Vec<usize>,
+    /// start index inside the packed state vector
     pub offset: usize,
+    /// element count (product of shape, 1 for scalars)
     pub size: usize,
     /// "param" | "fbit" | "opt" | "stat"
     pub seg: String,
@@ -25,24 +29,36 @@ pub struct TensorEntry {
 /// layer granularity => size == 1).
 #[derive(Debug, Clone)]
 pub struct ActGroup {
+    /// group name == its fbit tensor, e.g. `"d0.fa"`
     pub name: String,
+    /// fbit tensor shape (empty = scalar / layer granularity)
     pub fshape: Vec<usize>,
+    /// whether the quantized values can be negative (no relu upstream)
     pub signed: bool,
+    /// element count of the group's fbit/stat tensors
     pub size: usize,
     /// offset of this group inside the concatenated calib vectors
     pub calib_offset: usize,
 }
 
+/// One layer of the model graph as described by meta.json.
 #[derive(Debug, Clone)]
+#[allow(missing_docs)] // field names mirror the meta.json schema
 pub enum LayerMeta {
+    /// Input quantizer.
     InputQuant { name: String, signed: bool },
+    /// Dense layer (optionally relu-activated).
     Dense { name: String, din: usize, dout: usize, relu: bool },
+    /// Valid (no-padding) kxk conv over an HWC tensor.
     Conv2d { name: String, k: usize, cin: usize, cout: usize, relu: bool, out_shape: [usize; 3] },
+    /// 2x2 max pooling.
     MaxPool2 { out_shape: [usize; 3] },
+    /// Shape-only flatten.
     Flatten,
 }
 
 impl LayerMeta {
+    /// Layer name for diagnostics (fixed strings for unnamed layers).
     pub fn name(&self) -> &str {
         match self {
             LayerMeta::InputQuant { name, .. } => name,
@@ -54,27 +70,45 @@ impl LayerMeta {
     }
 }
 
+/// Full model description: the packed-state symbol table, activation
+/// groups and layer graph (the contract of ARCHITECTURE.md
+/// §Packed-state protocol).
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
+    /// model name, e.g. `"jets_pp"`
     pub name: String,
     /// "cls" | "reg"
     pub task: String,
+    /// fixed batch size every backend call uses
     pub batch: usize,
+    /// input tensor shape (flattened to `input_dim()` on the wire)
     pub input_shape: Vec<usize>,
+    /// whether training targets are integer class labels
     pub y_is_int: bool,
+    /// weight-bitwidth granularity: "element" | "layer"
     pub w_gran: String,
+    /// activation-bitwidth granularity: "element" | "layer"
     pub a_gran: String,
+    /// total packed-state length (== 3·n_train + 2·calib_size + 1)
     pub state_size: usize,
+    /// length of the weights+biases segment
     pub n_params: usize,
+    /// length of the trainable prefix `[params | fbits]`
     pub n_train: usize,
+    /// total activation elements across all calib groups
     pub calib_size: usize,
+    /// logit count
     pub output_dim: usize,
+    /// every named tensor inside the packed state
     pub tensors: Vec<TensorEntry>,
+    /// activation quantizer groups in calib order
     pub act_groups: Vec<ActGroup>,
+    /// the layer graph
     pub layers: Vec<LayerMeta>,
 }
 
 impl ModelMeta {
+    /// Parse `<dir>/meta.json`.
     pub fn load(dir: &Path) -> Result<ModelMeta> {
         let path = dir.join("meta.json");
         let text = std::fs::read_to_string(&path)
@@ -83,6 +117,7 @@ impl ModelMeta {
         Self::from_json(&j)
     }
 
+    /// Build from an already-parsed meta.json document.
     pub fn from_json(j: &Json) -> Result<ModelMeta> {
         let s = |k: &str| -> Result<String> {
             Ok(j.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("meta missing {k}"))?.into())
@@ -185,6 +220,7 @@ impl ModelMeta {
         })
     }
 
+    /// Look up a named tensor's state-vector entry.
     pub fn tensor(&self, name: &str) -> Result<&TensorEntry> {
         self.tensors
             .iter()
@@ -200,6 +236,7 @@ impl ModelMeta {
             .ok_or_else(|| anyhow!("state too short for '{name}'"))
     }
 
+    /// Look up an activation group by name.
     pub fn act_group(&self, name: &str) -> Result<&ActGroup> {
         self.act_groups
             .iter()
@@ -207,6 +244,7 @@ impl ModelMeta {
             .ok_or_else(|| anyhow!("act group '{name}' not in meta"))
     }
 
+    /// Flattened input feature count (product of `input_shape`).
     pub fn input_dim(&self) -> usize {
         self.input_shape.iter().product()
     }

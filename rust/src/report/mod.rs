@@ -36,6 +36,7 @@ pub fn reports_to_json(title: &str, reports: &[DeployReport]) -> Json {
     Json::obj(vec![("title", Json::str(title)), ("rows", Json::Arr(rows))])
 }
 
+/// Write [`reports_to_json`] output to disk, creating parent dirs.
 pub fn write_json(path: &Path, title: &str, reports: &[DeployReport]) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;

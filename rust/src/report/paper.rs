@@ -1,18 +1,25 @@
 //! The paper's published numbers (Tables I-III), kept as data so the
 //! regenerated tables can be printed side by side with the original in
 //! EXPERIMENTS.md. Absolute values are NOT expected to match (different
-//! datasets/substrate — see DESIGN.md); the comparisons check the
+//! datasets/substrate — see ARCHITECTURE.md); the comparisons check the
 //! *shape*: orderings, ratios, crossovers.
 
 /// One published row: (label, quality, dsp, lut, ff, latency_cc, ii).
 /// quality is accuracy% for cls tasks, mrad resolution for muon.
 pub struct PaperRow {
+    /// row label as printed in the paper (HGQ-N, Q*, baselines)
     pub label: &'static str,
+    /// accuracy % (cls) or mrad resolution (muon, lower better)
     pub quality: f64,
+    /// DSP blocks
     pub dsp: u64,
+    /// lookup tables
     pub lut: u64,
+    /// flip-flops
     pub ff: u64,
+    /// latency in clock cycles
     pub latency_cc: u64,
+    /// initiation interval in clock cycles
     pub ii: u64,
 }
 

@@ -6,12 +6,18 @@ use crate::firmware::{FwLayer, Graph};
 
 use super::{conv2d_stream_resources, dense_resources, ResourceReport};
 
+/// One MAC layer's share of the deployed model's cost.
 #[derive(Debug, Clone)]
 pub struct LayerUsage {
+    /// display name with layer index and geometry
     pub name: String,
+    /// simulated utilization + timing of this layer
     pub report: ResourceReport,
+    /// exact EBOPs of this layer
     pub ebops: u64,
+    /// weights with non-zero quantized mantissa
     pub weights_alive: usize,
+    /// total weight count
     pub weights_total: usize,
 }
 

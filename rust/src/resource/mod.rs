@@ -1,5 +1,5 @@
 //! FPGA resource + latency model — the Vivado/Vitis place-and-route
-//! substitute (DESIGN.md substitutions table).
+//! substitute (ARCHITECTURE.md substitutions section).
 //!
 //! Models the arithmetic structures Vitis HLS emits for fully-unrolled
 //! fixed-point neural networks:
@@ -33,21 +33,31 @@ pub const ADDER_LEVELS_PER_CC: u32 = 3;
 /// the paper's 2 cc = 10 ns tables).
 pub const NS_PER_CC: f64 = 5.0;
 
+/// Simulated utilization + timing of one layer or a whole graph.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ResourceReport {
+    /// lookup tables
     pub lut: u64,
+    /// DSP48-style blocks
     pub dsp: u64,
+    /// flip-flops (pipeline registers)
     pub ff: u64,
+    /// 18k-bit BRAM blocks (fractional: bits / 18432)
     pub bram_18k: f64,
+    /// end-to-end latency in clock cycles
     pub latency_cc: u64,
+    /// initiation interval in clock cycles (1 = fully pipelined)
     pub ii_cc: u64,
 }
 
 impl ResourceReport {
+    /// Latency in ns at the assumed [`NS_PER_CC`] clock.
     pub fn latency_ns(&self) -> f64 {
         self.latency_cc as f64 * NS_PER_CC
     }
 
+    /// Compose with a downstream layer: resources add, latencies chain,
+    /// the II is the bottleneck max.
     pub fn add(&mut self, other: &ResourceReport) {
         self.lut += other.lut;
         self.dsp += other.dsp;
@@ -93,6 +103,7 @@ fn csd_nonzero_digits_serial(m: i64) -> u32 {
     count
 }
 
+/// Hardware class of one const×var multiplier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MultKind {
     /// weight == 0: no hardware at all
@@ -100,7 +111,10 @@ pub enum MultKind {
     /// power-of-two weight: pure wiring (shift)
     Wire,
     /// CSD shift-add network in fabric
-    LutAdders { adders: u32 },
+    LutAdders {
+        /// 2-input adders in the shift-add network (CSD digits - 1)
+        adders: u32,
+    },
     /// wide product: DSP block
     Dsp,
 }
@@ -316,9 +330,10 @@ pub fn estimate(g: &Graph) -> ResourceReport {
                 // (window-1) comparators per output value, streamed
                 let [h, w, c] = *in_shape;
                 let width = cur.map(|a| a.max_bits().max(0) as u64).unwrap_or(8);
+                let positions = ((h / 2) * (w / 2)) as u64;
                 total.lut += 3 * c as u64 * width;
-                total.latency_cc += (h / 2 * w / 2) as u64 * if is_stream { 0 } else { 1 };
-                total.ii_cc = total.ii_cc.max((h / 2 * w / 2) as u64);
+                total.latency_cc += positions * if is_stream { 0 } else { 1 };
+                total.ii_cc = total.ii_cc.max(positions);
             }
             FwLayer::Flatten => {}
         }

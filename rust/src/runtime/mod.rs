@@ -6,17 +6,19 @@
 //!
 //! * [`native`] — pure-rust HGQ engine (default). Interprets the packed
 //!   state protocol directly: quantized forward, Adam training step
-//!   with the paper's Eq. 4 surrogate bitwidth gradients, calibration.
-//!   Ships built-in model presets, so the entire sweep → calibrate →
-//!   deploy → firmware-emulate pipeline runs with **zero external
-//!   artifacts** (hermetic CI, CPU-only deployment).
-//! * [`pjrt`] — the PJRT/HLO path (cargo feature `pjrt`): executes the
+//!   with the paper's Eq. 4 surrogate bitwidth gradients (dense AND
+//!   conv/pool layers), calibration. Batches are sharded across worker
+//!   threads ([`Runtime::with_threads`]) with deterministic reduction,
+//!   and built-in model presets ship in-process, so the entire sweep →
+//!   calibrate → deploy → firmware-emulate pipeline runs with **zero
+//!   external artifacts** (hermetic CI, CPU-only deployment).
+//! * `pjrt` — the PJRT/HLO path (cargo feature `pjrt`): executes the
 //!   AOT artifacts compiled from the L2 JAX model by
 //!   python/compile/aot.py. Compiles against the vendored `xla` stub
 //!   unless the dependency is patched to a real xla build.
 //!
 //! State is always a flat host `Vec<f32>` in the packed layout of
-//! DESIGN.md (`[params | fbits | adam_m | adam_v | amin | amax |
+//! ARCHITECTURE.md (`[params | fbits | adam_m | adam_v | amin | amax |
 //! step]`), so checkpoints, baselines and the firmware builder are
 //! backend-agnostic.
 
@@ -33,19 +35,28 @@ use crate::nn::ModelMeta;
 /// Hyperparameters of one training step, in artifact order.
 #[derive(Debug, Clone, Copy)]
 pub struct Hypers {
+    /// EBOPs-bar regularization strength (β of Eq. 16).
     pub beta: f32,
+    /// L1 bitwidth-norm strength (γ of §III.D.4).
     pub gamma: f32,
+    /// Adam learning rate for the parameter segment.
     pub lr: f32,
+    /// Bitwidth learning-rate multiplier: fbits train at `lr * f_lr`.
     pub f_lr: f32,
 }
 
 /// One train-step outcome: the updated packed state plus batch metrics.
 #[derive(Debug, Clone)]
 pub struct StepOut {
+    /// The updated packed state vector.
     pub state: Vec<f32>,
+    /// Total loss (task + β·EBOPs-bar + γ·L1) on this batch.
     pub loss: f32,
+    /// Task metric: accuracy (cls) or RMS error (reg).
     pub metric: f32,
+    /// Differentiable EBOPs-bar estimate for this batch.
     pub ebops: f32,
+    /// Fraction of weights quantized to exactly zero (pruned).
     pub sparsity: f32,
 }
 
@@ -53,13 +64,19 @@ pub struct StepOut {
 /// values, matching `ModelMeta::task`).
 #[derive(Debug, Clone, Copy)]
 pub enum Target<'a> {
+    /// class labels, one per batch row
     Cls(&'a [i32]),
+    /// regression targets, one per batch row
     Reg(&'a [f32]),
 }
 
 /// A loaded model on some backend. `x` is always a row-major batch of
 /// `meta().batch` samples; `state` the packed f32 state vector.
+///
+/// The full contract (shapes, packed-state layout, determinism
+/// guarantees) is documented in ARCHITECTURE.md §Backend contract.
 pub trait ModelExec {
+    /// Static metadata: state layout, layers, activation groups.
     fn meta(&self) -> &ModelMeta;
 
     /// The model's initial packed state.
@@ -90,15 +107,18 @@ pub enum BackendKind {
 /// default (native); the PJRT path is explicit opt-in.
 pub struct Runtime {
     kind: BackendKind,
+    /// worker threads for the native batch-sharded executor (0 = auto)
+    threads: usize,
     #[cfg(feature = "pjrt")]
     pjrt: Option<pjrt::PjrtRuntime>,
 }
 
 impl Runtime {
-    /// Default runtime: the pure-rust native backend.
+    /// Default runtime: the pure-rust native backend, auto threads.
     pub fn new() -> Result<Runtime> {
         Ok(Runtime {
             kind: BackendKind::Native,
+            threads: 0,
             #[cfg(feature = "pjrt")]
             pjrt: None,
         })
@@ -112,7 +132,7 @@ impl Runtime {
             #[cfg(feature = "pjrt")]
             "pjrt" => {
                 let rt = pjrt::PjrtRuntime::new()?;
-                Ok(Runtime { kind: BackendKind::Pjrt, pjrt: Some(rt) })
+                Ok(Runtime { kind: BackendKind::Pjrt, threads: 0, pjrt: Some(rt) })
             }
             #[cfg(not(feature = "pjrt"))]
             "pjrt" => bail!(
@@ -123,10 +143,27 @@ impl Runtime {
         }
     }
 
+    /// Set the worker-thread count for the native batch-sharded
+    /// executor (`--threads` on the CLI). `0` selects all available
+    /// cores. Results are bit-identical for every value — the batch is
+    /// split into a fixed shard grid and reduced in fixed order, so
+    /// threads only change wall-clock time.
+    pub fn with_threads(mut self, threads: usize) -> Runtime {
+        self.threads = threads;
+        self
+    }
+
+    /// Configured worker-thread count (0 = auto).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Which execution engine this runtime dispatches to.
     pub fn backend(&self) -> BackendKind {
         self.kind
     }
 
+    /// Human-readable execution-platform description.
     pub fn platform(&self) -> String {
         match self.kind {
             BackendKind::Native => "native-cpu".to_string(),
@@ -145,6 +182,7 @@ impl Runtime {
 /// A model loaded through some backend: stable `meta` access for the
 /// coordinator plus the dynamic execution handle.
 pub struct ModelRuntime {
+    /// Static metadata of the loaded model (state layout, layers).
     pub meta: ModelMeta,
     exec: Box<dyn ModelExec>,
 }
@@ -156,7 +194,9 @@ impl ModelRuntime {
     /// so the hermetic build needs no files at all.
     pub fn load(rt: &Runtime, artifacts: &Path, model: &str) -> Result<ModelRuntime> {
         let exec: Box<dyn ModelExec> = match rt.kind {
-            BackendKind::Native => Box::new(native::NativeModel::load(artifacts, model)?),
+            BackendKind::Native => {
+                Box::new(native::NativeModel::load(artifacts, model)?.with_threads(rt.threads))
+            }
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => {
                 let client = rt
@@ -172,6 +212,7 @@ impl ModelRuntime {
         Ok(ModelRuntime { meta, exec })
     }
 
+    /// The model's initial packed state through its backend.
     pub fn init_state(&self) -> Vec<f32> {
         self.exec.init_state()
     }
@@ -208,6 +249,13 @@ mod tests {
         let rt = Runtime::new().unwrap();
         assert_eq!(rt.backend(), BackendKind::Native);
         assert_eq!(rt.platform(), "native-cpu");
+        assert_eq!(rt.threads(), 0); // auto
+    }
+
+    #[test]
+    fn threads_setting_is_plumbed() {
+        let rt = Runtime::new().unwrap().with_threads(3);
+        assert_eq!(rt.threads(), 3);
     }
 
     #[test]

@@ -1,0 +1,1006 @@
+//! Per-shard compute kernels of the native backend.
+//!
+//! The engine is organized around a [`Plan`]: the batch-independent part
+//! of one forward/backward evaluation (quantized weights, activation
+//! group quantizers, layer topology), built once per call from the
+//! packed state. Batch shards then run [`forward_shard`] /
+//! [`backward_shard`] independently — embarrassingly parallel — and the
+//! batch-independent regularizer gradients ([`regularizer_pass`]) are
+//! applied once on the merged activation extremes.
+//!
+//! Gradient semantics mirror the in-repo JAX reference
+//! (`python/compile/hgq/`) operation by operation, including the
+//! tie-splitting derivatives JAX uses for `max`:
+//!
+//! * quantizer (Eq. 4): STE to `x`, `ln2·δ` surrogate to `f` (Eq. 15),
+//!   gated by the `[F_MIN, F_MAX]` clip range;
+//! * relu: subgradient 0 at exactly 0;
+//! * maxpool: gradient split evenly among window elements attaining the
+//!   max (`reduce_max` semantics — quantized activations tie often);
+//! * EBOPs-bar / L1 widths: `d(bw)/d(f) = 1` on the active branch, `1/2`
+//!   at the exact `max(i'+f, 0)` tie, scaled by the §III.D.3
+//!   `1/sqrt(‖g‖)` group normalization;
+//! * stream-IO conv EBOPs with per-element activation groups: the
+//!   per-channel `max` over spatial positions splits its gradient evenly
+//!   among tied positions.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::firmware::{F_MAX, F_MIN};
+use crate::fixed::{bit_length, exp2i, round_half_up};
+use crate::nn::{LayerMeta, ModelMeta};
+
+pub(super) const LN2: f64 = std::f64::consts::LN_2;
+
+// ---------------------------------------------------------------------
+// quantizer primitives (must match python compile/kernels/ref.py)
+// ---------------------------------------------------------------------
+
+/// Clip + round the stored float bitwidth to its integer value; the
+/// bool is the clip-range gradient mask (zero gradient outside).
+pub(super) fn use_f(f_fp: f32) -> (i32, bool) {
+    let v = f_fp as f64;
+    let f = round_half_up(v.clamp(F_MIN, F_MAX)) as i32;
+    (f, (F_MIN..=F_MAX).contains(&v))
+}
+
+/// Eq. 4 fake-quantization: round-half-up at step 2^-f (no wrap — the
+/// training-time semantics; range coverage comes from calibration).
+pub(super) fn qz(x: f64, f: i32) -> f64 {
+    round_half_up(x * exp2i(f)) as f64 * exp2i(-f)
+}
+
+/// Index into a (possibly broadcast-scalar) per-group tensor.
+pub(super) fn fidx(e: usize, f_size: usize) -> usize {
+    if f_size == 1 {
+        0
+    } else {
+        e
+    }
+}
+
+/// §III.D.3 group normalization scale: 1/sqrt(#values sharing one f).
+pub(super) fn group_norm_scale(x_size: usize, f_size: usize) -> f64 {
+    ((x_size / f_size.max(1)).max(1) as f64).powf(-0.5)
+}
+
+/// Eq. 3 + EBOPs-bar activation width from running extremes: returns
+/// (bits, active) where `active` is d(bits)/d(f): 1 on the active
+/// branch, 1/2 at the exact `max(i'+f, 0)` tie (the balanced derivative
+/// JAX assigns to `maximum`), 0 otherwise.
+pub(super) fn act_bits_eq3(nmin: f64, nmax: f64, f: i32, signed: bool) -> (f64, f64) {
+    const NEG: f64 = -1e9;
+    let hi = if nmax > 0.0 { nmax.max(1e-30).log2().floor() + 1.0 } else { NEG };
+    let lo = if nmin < 0.0 { (-nmin).max(1e-30).log2().ceil() } else { NEG };
+    let mut i = hi.max(lo);
+    if i < -1e8 {
+        return (0.0, 0.0); // dead value: nothing ever flows here
+    }
+    if signed {
+        i += 1.0;
+    }
+    let raw = i + f as f64;
+    let bw = raw.max(0.0);
+    let active = if raw > 0.0 {
+        1.0
+    } else if raw == 0.0 {
+        0.5
+    } else {
+        0.0
+    };
+    (bw, active)
+}
+
+// ---------------------------------------------------------------------
+// batch-independent plan
+// ---------------------------------------------------------------------
+
+/// A quantized constant tensor (weights or biases) with everything the
+/// backward pass and the regularizer need.
+pub(super) struct QwRun {
+    pub off: usize,
+    pub f_off: usize,
+    pub f_size: usize,
+    pub n: usize,
+    pub q: Vec<f64>,
+    pub mant: Vec<i64>,
+    pub delta: Vec<f64>,
+    pub bits: Vec<f64>,
+    pub clip: Vec<bool>,
+    pub scale: f64,
+}
+
+/// One activation quantizer group: integer bitwidths, clip masks and the
+/// running extremes every shard starts from.
+pub(super) struct GroupQ {
+    /// index into meta.act_groups
+    pub gi: usize,
+    pub feat_dim: usize,
+    pub f_off: usize,
+    pub f_size: usize,
+    pub f_int: Vec<i32>,
+    pub clip: Vec<bool>,
+    pub signed: bool,
+    pub scale: f64,
+    /// running extremes to merge with (state stats, or zeros for the
+    /// fresh-statistics calibration pass)
+    pub init_min: Vec<f64>,
+    pub init_max: Vec<f64>,
+}
+
+/// One layer of the batch-independent execution plan.
+pub(super) enum PlanLayer {
+    InputQuant {
+        g: usize,
+    },
+    Dense {
+        din: usize,
+        dout: usize,
+        relu: bool,
+        w: QwRun,
+        b: QwRun,
+        in_g: usize,
+        out_g: usize,
+    },
+    Conv2d {
+        k: usize,
+        cin: usize,
+        cout: usize,
+        oh: usize,
+        ow: usize,
+        in_h: usize,
+        in_w: usize,
+        relu: bool,
+        w: QwRun,
+        b: QwRun,
+        in_g: usize,
+        out_g: usize,
+    },
+    MaxPool2 {
+        in_shape: [usize; 3],
+        out_shape: [usize; 3],
+    },
+    Flatten,
+}
+
+/// The batch-independent part of one evaluation: quantized constants +
+/// group quantizers + topology, shared read-only by every shard.
+pub(super) struct Plan {
+    pub groups: Vec<GroupQ>,
+    pub layers: Vec<PlanLayer>,
+    pub output_dim: usize,
+    pub n_train: usize,
+}
+
+fn quant_tensor(
+    meta: &ModelMeta,
+    state: &[f32],
+    wname: &str,
+    fname: &str,
+    scaled: bool,
+) -> Result<QwRun> {
+    let we = meta.tensor(wname)?;
+    let fe = meta.tensor(fname)?;
+    let n = we.size;
+    let f_size = fe.size;
+    if f_size != 1 && f_size != n {
+        bail!("fbit tensor '{fname}' size {f_size} incompatible with '{wname}' size {n}");
+    }
+    let w = &state[we.offset..we.offset + n];
+    let f_fp = &state[fe.offset..fe.offset + f_size];
+    let mut f_int = Vec::with_capacity(f_size);
+    let mut clip = Vec::with_capacity(f_size);
+    for &v in f_fp {
+        let (f, c) = use_f(v);
+        f_int.push(f);
+        clip.push(c);
+    }
+    let mut q = vec![0.0f64; n];
+    let mut mant = vec![0i64; n];
+    let mut delta = vec![0.0f64; n];
+    let mut bits = vec![0.0f64; n];
+    for e in 0..n {
+        let f = f_int[fidx(e, f_size)];
+        let m = round_half_up(w[e] as f64 * exp2i(f));
+        let qv = m as f64 * exp2i(-f);
+        mant[e] = m;
+        q[e] = qv;
+        delta[e] = w[e] as f64 - qv;
+        bits[e] = bit_length(m.unsigned_abs() as i64) as f64;
+    }
+    let scale = if scaled { group_norm_scale(n, f_size) } else { 1.0 };
+    Ok(QwRun { off: we.offset, f_off: fe.offset, f_size, n, q, mant, delta, bits, clip, scale })
+}
+
+fn group_q(
+    meta: &ModelMeta,
+    state: &[f32],
+    name: &str,
+    feat_dim: usize,
+    use_state_stats: bool,
+) -> Result<GroupQ> {
+    let gi = meta
+        .act_groups
+        .iter()
+        .position(|g| g.name == name)
+        .ok_or_else(|| anyhow!("act group '{name}' not in meta"))?;
+    let g = &meta.act_groups[gi];
+    let fe = meta.tensor(name)?;
+    let f_size = fe.size;
+    if f_size != g.size {
+        bail!("group '{name}': fbit size {f_size} != group size {}", g.size);
+    }
+    if f_size != 1 && f_size != feat_dim {
+        bail!("group '{name}': granularity {f_size} incompatible with feature dim {feat_dim}");
+    }
+    let f_fp = &state[fe.offset..fe.offset + f_size];
+    let mut f_int = Vec::with_capacity(f_size);
+    let mut clip = Vec::with_capacity(f_size);
+    for &v in f_fp {
+        let (f, c) = use_f(v);
+        f_int.push(f);
+        clip.push(c);
+    }
+    let (init_min, init_max) = if use_state_stats {
+        let amin = meta.tensor_slice(state, &format!("{name}.amin"))?;
+        let amax = meta.tensor_slice(state, &format!("{name}.amax"))?;
+        (
+            amin.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+            amax.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+        )
+    } else {
+        (vec![0.0f64; f_size], vec![0.0f64; f_size])
+    };
+    let scale = group_norm_scale(feat_dim, f_size);
+    Ok(GroupQ {
+        gi,
+        feat_dim,
+        f_off: fe.offset,
+        f_size,
+        f_int,
+        clip,
+        signed: g.signed,
+        scale,
+        init_min,
+        init_max,
+    })
+}
+
+impl Plan {
+    /// Build the batch-independent plan from the packed state.
+    /// `use_state_stats`: seed the running extremes from the state's
+    /// amin/amax segments (training/inference) or from zeros (the
+    /// fresh-statistics calibration pass).
+    pub(super) fn build(meta: &ModelMeta, state: &[f32], use_state_stats: bool) -> Result<Plan> {
+        if state.len() != meta.state_size {
+            bail!("state size {} != meta {}", state.len(), meta.state_size);
+        }
+        let mut groups: Vec<GroupQ> = Vec::new();
+        let mut layers: Vec<PlanLayer> = Vec::new();
+        let mut cur_shape: Vec<usize> = meta.input_shape.clone();
+        let mut cur_feat: usize = meta.input_dim();
+        let mut cur_group: Option<usize> = None;
+
+        for lm in &meta.layers {
+            match lm {
+                LayerMeta::InputQuant { name, .. } => {
+                    let g = group_q(meta, state, &format!("{name}.fa"), cur_feat, use_state_stats)?;
+                    let idx = groups.len();
+                    groups.push(g);
+                    cur_group = Some(idx);
+                    layers.push(PlanLayer::InputQuant { g: idx });
+                }
+                LayerMeta::Dense { name, din, dout, relu } => {
+                    let (din, dout) = (*din, *dout);
+                    if cur_feat != din {
+                        bail!("dense '{name}': input dim {cur_feat} != din {din}");
+                    }
+                    let w = quant_tensor(
+                        meta,
+                        state,
+                        &format!("{name}.w"),
+                        &format!("{name}.fw"),
+                        true,
+                    )?;
+                    let b = quant_tensor(
+                        meta,
+                        state,
+                        &format!("{name}.b"),
+                        &format!("{name}.fb"),
+                        false,
+                    )?;
+                    let in_g = cur_group
+                        .ok_or_else(|| anyhow!("dense '{name}' before input_quant"))?;
+                    if groups[in_g].f_size != 1 && groups[in_g].f_size != din {
+                        bail!("dense '{name}': input group granularity mismatch");
+                    }
+                    let og = group_q(meta, state, &format!("{name}.fa"), dout, use_state_stats)?;
+                    let out_g = groups.len();
+                    groups.push(og);
+                    layers.push(PlanLayer::Dense { din, dout, relu: *relu, w, b, in_g, out_g });
+                    cur_group = Some(out_g);
+                    cur_feat = dout;
+                    cur_shape = vec![dout];
+                }
+                LayerMeta::Conv2d { name, k, cin, cout, relu, out_shape } => {
+                    let (k, cin, cout) = (*k, *cin, *cout);
+                    let [oh, ow, _] = *out_shape;
+                    let (in_h, in_w) = (oh + k - 1, ow + k - 1);
+                    if cur_shape != vec![in_h, in_w, cin] {
+                        bail!("conv '{name}': input shape {cur_shape:?} != [{in_h},{in_w},{cin}]");
+                    }
+                    let w = quant_tensor(
+                        meta,
+                        state,
+                        &format!("{name}.w"),
+                        &format!("{name}.fw"),
+                        true,
+                    )?;
+                    let b = quant_tensor(
+                        meta,
+                        state,
+                        &format!("{name}.b"),
+                        &format!("{name}.fb"),
+                        false,
+                    )?;
+                    let in_g = cur_group
+                        .ok_or_else(|| anyhow!("conv '{name}' before input_quant"))?;
+                    let feat = oh * ow * cout;
+                    let og = group_q(meta, state, &format!("{name}.fa"), feat, use_state_stats)?;
+                    let out_g = groups.len();
+                    groups.push(og);
+                    layers.push(PlanLayer::Conv2d {
+                        k,
+                        cin,
+                        cout,
+                        oh,
+                        ow,
+                        in_h,
+                        in_w,
+                        relu: *relu,
+                        w,
+                        b,
+                        in_g,
+                        out_g,
+                    });
+                    cur_group = Some(out_g);
+                    cur_feat = feat;
+                    cur_shape = vec![oh, ow, cout];
+                }
+                LayerMeta::MaxPool2 { out_shape } => {
+                    let [oh, ow, c] = *out_shape;
+                    if cur_shape.len() != 3 {
+                        bail!("maxpool2 needs a HWC input, got {cur_shape:?}");
+                    }
+                    let in_shape = [cur_shape[0], cur_shape[1], cur_shape[2]];
+                    layers.push(PlanLayer::MaxPool2 { in_shape, out_shape: [oh, ow, c] });
+                    cur_feat = oh * ow * c;
+                    cur_shape = vec![oh, ow, c];
+                }
+                LayerMeta::Flatten => {
+                    cur_shape = vec![cur_feat];
+                    layers.push(PlanLayer::Flatten);
+                }
+            }
+        }
+
+        if cur_feat != meta.output_dim {
+            bail!("final feature dim {cur_feat} != output_dim {}", meta.output_dim);
+        }
+        Ok(Plan { groups, layers, output_dim: meta.output_dim, n_train: meta.n_train })
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-shard forward
+// ---------------------------------------------------------------------
+
+/// Per-shard view of one activation group: the shard's extremes (merged
+/// with the plan's running stats) and, in training mode, the per-element
+/// quantization error for the Eq. 15 surrogate.
+pub(super) struct GroupShard {
+    pub nmin: Vec<f64>,
+    pub nmax: Vec<f64>,
+    /// rows * feat_dim quantization errors (training mode only)
+    pub delta: Vec<f64>,
+}
+
+/// Everything one batch shard produces in the forward pass: logits plus
+/// (in training mode) the caches the backward pass replays.
+pub(super) struct ShardRun {
+    pub rows: usize,
+    pub logits: Vec<f64>,
+    pub groups: Vec<GroupShard>,
+    /// per plan layer: quantized layer input (dense/conv) or pre-pool
+    /// activations (maxpool); empty outside training mode
+    pub h_in: Vec<Vec<f64>>,
+    /// per plan layer: relu gradient mask (dense/conv); empty otherwise
+    pub mask: Vec<Vec<f64>>,
+}
+
+fn quantize_group(
+    gq: &GroupQ,
+    gs: &mut GroupShard,
+    h: &[f64],
+    rows: usize,
+    train: bool,
+) -> Vec<f64> {
+    let feat = gq.feat_dim;
+    let mut hq = vec![0.0f64; rows * feat];
+    if train {
+        gs.delta = vec![0.0f64; rows * feat];
+    }
+    for bi in 0..rows {
+        for e in 0..feat {
+            let k = fidx(e, gq.f_size);
+            let v = h[bi * feat + e];
+            let q = qz(v, gq.f_int[k]);
+            hq[bi * feat + e] = q;
+            if train {
+                gs.delta[bi * feat + e] = v - q;
+            }
+            if q < gs.nmin[k] {
+                gs.nmin[k] = q;
+            }
+            if q > gs.nmax[k] {
+                gs.nmax[k] = q;
+            }
+        }
+    }
+    hq
+}
+
+/// Quantized forward pass over one batch shard (`rows` samples).
+/// `train` keeps the backward-pass caches (quantization errors, layer
+/// inputs, relu masks); without it only logits + extremes are produced.
+pub(super) fn forward_shard(plan: &Plan, x: &[f32], rows: usize, train: bool) -> ShardRun {
+    let n_layers = plan.layers.len();
+    let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let mut h_in: Vec<Vec<f64>> = Vec::new();
+    let mut mask: Vec<Vec<f64>> = Vec::new();
+    h_in.resize_with(n_layers, Vec::new);
+    mask.resize_with(n_layers, Vec::new);
+    let mut groups: Vec<GroupShard> = plan
+        .groups
+        .iter()
+        .map(|g| GroupShard {
+            nmin: g.init_min.clone(),
+            nmax: g.init_max.clone(),
+            delta: Vec::new(),
+        })
+        .collect();
+
+    for (li, layer) in plan.layers.iter().enumerate() {
+        match layer {
+            PlanLayer::InputQuant { g } => {
+                h = quantize_group(&plan.groups[*g], &mut groups[*g], &h, rows, train);
+            }
+            PlanLayer::Dense { din, dout, relu, w, b, out_g, .. } => {
+                let (din, dout) = (*din, *dout);
+                let mut z = vec![0.0f64; rows * dout];
+                for bi in 0..rows {
+                    let hrow = &h[bi * din..(bi + 1) * din];
+                    let zrow = &mut z[bi * dout..(bi + 1) * dout];
+                    zrow.copy_from_slice(&b.q);
+                    for i in 0..din {
+                        let a = hrow[i];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let wrow = &w.q[i * dout..(i + 1) * dout];
+                        for j in 0..dout {
+                            zrow[j] += a * wrow[j];
+                        }
+                    }
+                }
+                // the relu mask only feeds the backward pass
+                let mut m = if train { vec![1.0f64; rows * dout] } else { Vec::new() };
+                if *relu {
+                    for (e, zv) in z.iter_mut().enumerate() {
+                        if *zv <= 0.0 {
+                            *zv = 0.0;
+                            if train {
+                                m[e] = 0.0;
+                            }
+                        }
+                    }
+                }
+                let hq = quantize_group(&plan.groups[*out_g], &mut groups[*out_g], &z, rows, train);
+                if train {
+                    h_in[li] = std::mem::replace(&mut h, hq);
+                    mask[li] = m;
+                } else {
+                    h = hq;
+                }
+            }
+            PlanLayer::Conv2d { k, cin, cout, oh, ow, in_h, in_w, relu, w, b, out_g, .. } => {
+                let (k, cin, cout) = (*k, *cin, *cout);
+                let (oh, ow, in_h, in_w) = (*oh, *ow, *in_h, *in_w);
+                let in_feat = in_h * in_w * cin;
+                let feat = oh * ow * cout;
+                let mut z = vec![0.0f64; rows * feat];
+                let mut m = if train { vec![1.0f64; rows * feat] } else { Vec::new() };
+                for bi in 0..rows {
+                    let hb = &h[bi * in_feat..(bi + 1) * in_feat];
+                    let zb = &mut z[bi * feat..(bi + 1) * feat];
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for co in 0..cout {
+                                let mut acc = b.q[co];
+                                for ky in 0..k {
+                                    for kx in 0..k {
+                                        let a_base = ((oy + ky) * in_w + ox + kx) * cin;
+                                        let w_base = ((ky * k + kx) * cin) * cout + co;
+                                        for ci in 0..cin {
+                                            acc += hb[a_base + ci] * w.q[w_base + ci * cout];
+                                        }
+                                    }
+                                }
+                                let e = (oy * ow + ox) * cout + co;
+                                if *relu && acc <= 0.0 {
+                                    acc = 0.0;
+                                    if train {
+                                        m[bi * feat + e] = 0.0;
+                                    }
+                                }
+                                zb[e] = acc;
+                            }
+                        }
+                    }
+                }
+                let hq = quantize_group(&plan.groups[*out_g], &mut groups[*out_g], &z, rows, train);
+                if train {
+                    h_in[li] = std::mem::replace(&mut h, hq);
+                    mask[li] = m;
+                } else {
+                    h = hq;
+                }
+            }
+            PlanLayer::MaxPool2 { in_shape, out_shape } => {
+                let [ih, iw, c] = *in_shape;
+                let [oh, ow, _] = *out_shape;
+                let mut nh = vec![0.0f64; rows * oh * ow * c];
+                for bi in 0..rows {
+                    let hb = &h[bi * ih * iw * c..(bi + 1) * ih * iw * c];
+                    let nb = &mut nh[bi * oh * ow * c..(bi + 1) * oh * ow * c];
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ch in 0..c {
+                                let mut best = f64::NEG_INFINITY;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let v =
+                                            hb[((oy * 2 + dy) * iw + ox * 2 + dx) * c + ch];
+                                        if v > best {
+                                            best = v;
+                                        }
+                                    }
+                                }
+                                nb[(oy * ow + ox) * c + ch] = best;
+                            }
+                        }
+                    }
+                }
+                if train {
+                    h_in[li] = std::mem::replace(&mut h, nh);
+                } else {
+                    h = nh;
+                }
+            }
+            PlanLayer::Flatten => {}
+        }
+    }
+
+    ShardRun { rows, logits: h, groups, h_in, mask }
+}
+
+// ---------------------------------------------------------------------
+// per-shard backward
+// ---------------------------------------------------------------------
+
+/// Eq. 15 quantizer surrogate of one group: `df += g · ln2 · δ`,
+/// reduced over the elements sharing each f, gated by the clip mask.
+fn group_surrogate(gq: &GroupQ, gs: &GroupShard, g: &[f64], rows: usize, grad: &mut [f64]) {
+    let feat = gq.feat_dim;
+    for bi in 0..rows {
+        for e in 0..feat {
+            let fi = fidx(e, gq.f_size);
+            if gq.clip[fi] {
+                grad[gq.f_off + fi] += g[bi * feat + e] * LN2 * gs.delta[bi * feat + e];
+            }
+        }
+    }
+}
+
+/// Backward pass over one batch shard: data gradients (STE through the
+/// quantizers) plus the Eq. 15 bitwidth surrogates. Returns this shard's
+/// partial gradient over the trainable segment `[params | fbits]`; the
+/// batch-independent regularizer terms live in [`regularizer_pass`].
+pub(super) fn backward_shard(plan: &Plan, cache: &ShardRun, g_logits: &[f64]) -> Vec<f64> {
+    let rows = cache.rows;
+    let mut grad = vec![0.0f64; plan.n_train];
+    let mut g: Vec<f64> = g_logits.to_vec();
+
+    for (li, layer) in plan.layers.iter().enumerate().rev() {
+        match layer {
+            PlanLayer::Flatten => {}
+            PlanLayer::InputQuant { g: gi } => {
+                group_surrogate(&plan.groups[*gi], &cache.groups[*gi], &g, rows, &mut grad);
+            }
+            PlanLayer::MaxPool2 { in_shape, out_shape } => {
+                let [ih, iw, c] = *in_shape;
+                let [oh, ow, _] = *out_shape;
+                let hin = &cache.h_in[li];
+                let mut gin = vec![0.0f64; rows * ih * iw * c];
+                for bi in 0..rows {
+                    let hb = &hin[bi * ih * iw * c..(bi + 1) * ih * iw * c];
+                    let gb = &g[bi * oh * ow * c..(bi + 1) * oh * ow * c];
+                    let nb = &mut gin[bi * ih * iw * c..(bi + 1) * ih * iw * c];
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ch in 0..c {
+                                let mut best = f64::NEG_INFINITY;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let v =
+                                            hb[((oy * 2 + dy) * iw + ox * 2 + dx) * c + ch];
+                                        if v > best {
+                                            best = v;
+                                        }
+                                    }
+                                }
+                                let mut ties = 0u32;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let idx = ((oy * 2 + dy) * iw + ox * 2 + dx) * c + ch;
+                                        if hb[idx] == best {
+                                            ties += 1;
+                                        }
+                                    }
+                                }
+                                // reduce_max semantics: split evenly
+                                let share = gb[(oy * ow + ox) * c + ch] / ties as f64;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let idx = ((oy * 2 + dy) * iw + ox * 2 + dx) * c + ch;
+                                        if hb[idx] == best {
+                                            nb[idx] += share;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                g = gin;
+            }
+            PlanLayer::Dense { din, dout, w, b, out_g, .. } => {
+                let (din, dout) = (*din, *dout);
+                let og = &plan.groups[*out_g];
+                let ogs = &cache.groups[*out_g];
+                let msk = &cache.mask[li];
+                let hin = &cache.h_in[li];
+
+                // out-group quantizer: STE to z, ln2·δ to fa, relu mask
+                let mut gz = vec![0.0f64; rows * dout];
+                for bi in 0..rows {
+                    for j in 0..dout {
+                        let gv = g[bi * dout + j];
+                        let fi = fidx(j, og.f_size);
+                        if og.clip[fi] {
+                            grad[og.f_off + fi] += gv * LN2 * ogs.delta[bi * dout + j];
+                        }
+                        gz[bi * dout + j] = gv * msk[bi * dout + j];
+                    }
+                }
+
+                // bias: data gradient + Eq. 15 surrogate
+                for j in 0..dout {
+                    let mut gb = 0.0f64;
+                    for bi in 0..rows {
+                        gb += gz[bi * dout + j];
+                    }
+                    grad[b.off + j] += gb;
+                    let fi = fidx(j, b.f_size);
+                    if b.clip[fi] {
+                        grad[b.f_off + fi] += gb * LN2 * b.delta[j];
+                    }
+                }
+
+                // weights: data gradient + Eq. 15 surrogate
+                for i in 0..din {
+                    for j in 0..dout {
+                        let e = i * dout + j;
+                        let mut gw = 0.0f64;
+                        for bi in 0..rows {
+                            gw += hin[bi * din + i] * gz[bi * dout + j];
+                        }
+                        grad[w.off + e] += gw;
+                        let fi = fidx(e, w.f_size);
+                        if w.clip[fi] {
+                            grad[w.f_off + fi] += gw * LN2 * w.delta[e];
+                        }
+                    }
+                }
+
+                // propagate to the previous activation group's output
+                let mut gprev = vec![0.0f64; rows * din];
+                for bi in 0..rows {
+                    for i in 0..din {
+                        let wrow = &w.q[i * dout..(i + 1) * dout];
+                        let mut s = 0.0f64;
+                        for j in 0..dout {
+                            s += gz[bi * dout + j] * wrow[j];
+                        }
+                        gprev[bi * din + i] = s;
+                    }
+                }
+                g = gprev;
+            }
+            PlanLayer::Conv2d { k, cin, cout, oh, ow, in_h, in_w, w, b, out_g, .. } => {
+                let (k, cin, cout) = (*k, *cin, *cout);
+                let (oh, ow, in_h, in_w) = (*oh, *ow, *in_h, *in_w);
+                let og = &plan.groups[*out_g];
+                let ogs = &cache.groups[*out_g];
+                let msk = &cache.mask[li];
+                let hin = &cache.h_in[li];
+                let in_feat = in_h * in_w * cin;
+                let feat = oh * ow * cout;
+
+                let mut gz = vec![0.0f64; rows * feat];
+                for bi in 0..rows {
+                    for e in 0..feat {
+                        let gv = g[bi * feat + e];
+                        let fi = fidx(e, og.f_size);
+                        if og.clip[fi] {
+                            grad[og.f_off + fi] += gv * LN2 * ogs.delta[bi * feat + e];
+                        }
+                        gz[bi * feat + e] = gv * msk[bi * feat + e];
+                    }
+                }
+
+                // bias: data gradient + Eq. 15 surrogate
+                for co in 0..cout {
+                    let mut gb = 0.0f64;
+                    for bi in 0..rows {
+                        let zb = &gz[bi * feat..(bi + 1) * feat];
+                        for p in 0..oh * ow {
+                            gb += zb[p * cout + co];
+                        }
+                    }
+                    grad[b.off + co] += gb;
+                    let fi = fidx(co, b.f_size);
+                    if b.clip[fi] {
+                        grad[b.f_off + fi] += gb * LN2 * b.delta[co];
+                    }
+                }
+
+                // weights + input propagation in one sweep over positions
+                let mut gw_acc = vec![0.0f64; w.n];
+                let mut gin = vec![0.0f64; rows * in_feat];
+                for bi in 0..rows {
+                    let hb = &hin[bi * in_feat..(bi + 1) * in_feat];
+                    let gzb = &gz[bi * feat..(bi + 1) * feat];
+                    let ginb = &mut gin[bi * in_feat..(bi + 1) * in_feat];
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let gzrow = &gzb[(oy * ow + ox) * cout..(oy * ow + ox + 1) * cout];
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    let a_base = ((oy + ky) * in_w + ox + kx) * cin;
+                                    let w_base = (ky * k + kx) * cin * cout;
+                                    for ci in 0..cin {
+                                        let wrow =
+                                            &w.q[w_base + ci * cout..w_base + (ci + 1) * cout];
+                                        let grow = &mut gw_acc
+                                            [w_base + ci * cout..w_base + (ci + 1) * cout];
+                                        let a = hb[a_base + ci];
+                                        let mut gh = 0.0f64;
+                                        for co in 0..cout {
+                                            let gzv = gzrow[co];
+                                            grow[co] += a * gzv;
+                                            gh += wrow[co] * gzv;
+                                        }
+                                        ginb[a_base + ci] += gh;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                for e in 0..w.n {
+                    let gw = gw_acc[e];
+                    grad[w.off + e] += gw;
+                    let fi = fidx(e, w.f_size);
+                    if w.clip[fi] {
+                        grad[w.f_off + fi] += gw * LN2 * w.delta[e];
+                    }
+                }
+                g = gin;
+            }
+        }
+    }
+    grad
+}
+
+// ---------------------------------------------------------------------
+// batch-independent regularizer pass
+// ---------------------------------------------------------------------
+
+/// Merged running extremes of one activation group (across all shards).
+pub(super) struct GroupStats {
+    pub nmin: Vec<f64>,
+    pub nmax: Vec<f64>,
+}
+
+/// Scalar outputs of the regularizer pass (per-batch loss terms).
+pub(super) struct RegOut {
+    pub ebops: f64,
+    pub l1: f64,
+    pub sp_num: f64,
+    pub sp_den: f64,
+}
+
+/// Compute EBOPs-bar, the L1 bitwidth norm and weight sparsity from the
+/// merged activation extremes, and accumulate the resource-pressure
+/// gradients `d(β·EBOPs + γ·L1)/d(f)` into `grad` (clip-gated, scaled by
+/// the §III.D.3 group normalization, with the balanced tie derivative on
+/// the active-branch gate).
+pub(super) fn regularizer_pass(
+    plan: &Plan,
+    stats: &[GroupStats],
+    beta: f64,
+    gamma: f64,
+    grad: &mut [f64],
+) -> RegOut {
+    // per-group widths from the merged extremes
+    let ng = plan.groups.len();
+    let mut bits: Vec<Vec<f64>> = Vec::with_capacity(ng);
+    let mut active: Vec<Vec<f64>> = Vec::with_capacity(ng);
+    let mut l1 = 0.0f64;
+    for (gq, st) in plan.groups.iter().zip(stats.iter()) {
+        let mut b = vec![0.0f64; gq.f_size];
+        let mut a = vec![0.0f64; gq.f_size];
+        for kk in 0..gq.f_size {
+            let (bw, act) = act_bits_eq3(st.nmin[kk], st.nmax[kk], gq.f_int[kk], gq.signed);
+            b[kk] = bw;
+            a[kk] = act;
+            l1 += bw;
+        }
+        bits.push(b);
+        active.push(a);
+    }
+
+    // d(EBOPs-bar)/d(bits) per activation element, accumulated as each
+    // layer consumes its input group
+    let mut wsum: Vec<Vec<f64>> = plan.groups.iter().map(|g| vec![0.0f64; g.f_size]).collect();
+    let (mut ebops, mut sp_num, mut sp_den) = (0.0f64, 0.0f64, 0.0f64);
+
+    for layer in &plan.layers {
+        match layer {
+            PlanLayer::Dense { din, dout, w, b, in_g, .. } => {
+                let (din, dout) = (*din, *dout);
+                l1 += w.bits.iter().sum::<f64>() + b.bits.iter().sum::<f64>();
+                sp_num += w.mant.iter().filter(|&&m| m == 0).count() as f64;
+                sp_den += w.n as f64;
+                let ib = &bits[*in_g];
+                let ifs = plan.groups[*in_g].f_size;
+                if ifs == 1 {
+                    let tot: f64 = w.bits.iter().sum();
+                    wsum[*in_g][0] += tot;
+                    ebops += ib[0] * tot;
+                } else {
+                    for i in 0..din {
+                        let mut s = 0.0f64;
+                        for j in 0..dout {
+                            s += w.bits[i * dout + j];
+                        }
+                        wsum[*in_g][i] += s;
+                        ebops += ib[i] * s;
+                    }
+                }
+                // weight pressure: (γ + β·bw_a) on alive weights
+                for i in 0..din {
+                    let bw_a = ib[fidx(i, ifs)];
+                    for j in 0..dout {
+                        let e = i * dout + j;
+                        let fi = fidx(e, w.f_size);
+                        if w.clip[fi] && w.mant[e] != 0 {
+                            grad[w.f_off + fi] += (gamma + beta * bw_a) * w.scale;
+                        }
+                    }
+                }
+                for j in 0..dout {
+                    let fi = fidx(j, b.f_size);
+                    if b.clip[fi] && b.mant[j] != 0 {
+                        grad[b.f_off + fi] += gamma;
+                    }
+                }
+            }
+            PlanLayer::Conv2d { k, cin, cout, w, b, in_g, .. } => {
+                let (k, cin, cout) = (*k, *cin, *cout);
+                l1 += w.bits.iter().sum::<f64>() + b.bits.iter().sum::<f64>();
+                sp_num += w.mant.iter().filter(|&&m| m == 0).count() as f64;
+                sp_den += w.n as f64;
+                let ib = &bits[*in_g];
+                let ifs = plan.groups[*in_g].f_size;
+                // stream-IO EBOPs: one multiplier per kernel weight, fed
+                // at the per-channel max activation width
+                let mut bw_cin = vec![0.0f64; cin];
+                if ifs == 1 {
+                    bw_cin.fill(ib[0]);
+                } else {
+                    for c in 0..cin {
+                        for e in (c..ib.len()).step_by(cin) {
+                            if ib[e] > bw_cin[c] {
+                                bw_cin[c] = ib[e];
+                            }
+                        }
+                    }
+                }
+                // one walk over the (ky, kx, cin, cout) kernel grid:
+                // EBOPs + its wsum routing AND the weight pressure share
+                // the same per-multiplier terms
+                let mut wsum_c = vec![0.0f64; cin];
+                let mut idx = 0usize;
+                for _ky in 0..k {
+                    for _kx in 0..k {
+                        for c in 0..cin {
+                            for _o in 0..cout {
+                                ebops += bw_cin[c] * w.bits[idx];
+                                wsum_c[c] += w.bits[idx];
+                                let fi = fidx(idx, w.f_size);
+                                if w.clip[fi] && w.mant[idx] != 0 {
+                                    grad[w.f_off + fi] += (gamma + beta * bw_cin[c]) * w.scale;
+                                }
+                                idx += 1;
+                            }
+                        }
+                    }
+                }
+                // route d(EBOPs)/d(bits) back into the producing group;
+                // the per-channel max splits evenly among spatial ties
+                if ifs == 1 {
+                    wsum[*in_g][0] += wsum_c.iter().sum::<f64>();
+                } else {
+                    for c in 0..cin {
+                        let mut ties = 0usize;
+                        for e in (c..ib.len()).step_by(cin) {
+                            if ib[e] == bw_cin[c] {
+                                ties += 1;
+                            }
+                        }
+                        if ties == 0 {
+                            continue;
+                        }
+                        let share = wsum_c[c] / ties as f64;
+                        for e in (c..ib.len()).step_by(cin) {
+                            if ib[e] == bw_cin[c] {
+                                wsum[*in_g][e] += share;
+                            }
+                        }
+                    }
+                }
+                // bias pressure
+                for co in 0..cout {
+                    let fi = fidx(co, b.f_size);
+                    if b.clip[fi] && b.mant[co] != 0 {
+                        grad[b.f_off + fi] += gamma;
+                    }
+                }
+            }
+            PlanLayer::InputQuant { .. } | PlanLayer::MaxPool2 { .. } | PlanLayer::Flatten => {}
+        }
+    }
+
+    // activation-width pressure: d(γ·L1 + β·EBOPs)/d(fa)
+    for (g, gq) in plan.groups.iter().enumerate() {
+        for kk in 0..gq.f_size {
+            if gq.clip[kk] {
+                grad[gq.f_off + kk] += (gamma + beta * wsum[g][kk]) * gq.scale * active[g][kk];
+            }
+        }
+    }
+
+    RegOut { ebops, l1, sp_num, sp_den }
+}

@@ -1,0 +1,516 @@
+//! Pure-rust native backend: the HGQ training/inference engine with no
+//! external artifacts.
+//!
+//! Interprets the packed-state protocol (ARCHITECTURE.md / python
+//! compile/hgq/train.py) directly from [`ModelMeta`]:
+//!
+//! * **forward** — quantized inference with the paper's Eq. 4
+//!   fake-quantizer `f^q(x) = floor(x·2^f + 1/2)·2^-f` on weights,
+//!   biases and activations, computed in f64 so every value is an exact
+//!   fixed-point number (this is what makes the software↔firmware
+//!   correspondence check bit-exact).
+//! * **train_step** — Adam on `[params | fbits]` with the surrogate
+//!   bitwidth gradients of Eq. 15 (`d x^q / d f = ln2 · δ`, STE to x)
+//!   plus the resource-pressure gradients of the β·EBOPs-bar + γ·L1
+//!   regularizer (d bw / d f = 1 on the active branch, scaled by the
+//!   1/√‖g‖ group normalization of §III.D.3). Dense, conv2d and
+//!   maxpool layers all train natively; gradients match the in-repo
+//!   JAX reference to f32 precision (tests/native_jax_reference.rs).
+//! * **calib_batch** — per-batch extremes of the quantized activations
+//!   (Eq. 3 inputs), zero-initialized exactly like the AOT calib graph.
+//!
+//! Every pass is **batch-sharded across worker threads** (see
+//! `parallel.rs`): the batch is split into a fixed number of shards,
+//! shards run on `std::thread` scoped workers, and gradients/extremes
+//! are reduced in fixed shard order — so results are bit-identical for
+//! any `--threads` value.
+//!
+//! Models load from `artifacts/<model>/` when present; otherwise the
+//! built-in presets mirroring python/compile/model.py are synthesized
+//! in-process (same tensor layout, he-init weights), so `hgq train
+//! --preset svhn --backend native` runs with zero files on disk.
+
+mod engine;
+mod parallel;
+mod presets;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use self::engine::{backward_shard, forward_shard, regularizer_pass, GroupStats, Plan, ShardRun};
+use self::parallel::{default_threads, run_shards, shard_ranges};
+use super::{Hypers, ModelExec, StepOut, Target};
+use crate::nn::ModelMeta;
+
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const ADAM_EPS: f64 = 1e-7;
+
+/// A model interpreted by the native engine.
+pub struct NativeModel {
+    meta: ModelMeta,
+    init: Vec<f32>,
+    threads: usize,
+}
+
+impl NativeModel {
+    /// Load from `artifacts/<model>/` (meta.json [+ init.bin]) when the
+    /// directory exists, else synthesize the built-in preset of that
+    /// name — the zero-artifact path.
+    pub fn load(artifacts: &Path, model: &str) -> Result<NativeModel> {
+        let dir = artifacts.join(model);
+        if dir.join("meta.json").exists() {
+            let meta = ModelMeta::load(&dir)?;
+            let init = match std::fs::read(dir.join("init.bin")) {
+                Ok(raw) => {
+                    if raw.len() != meta.state_size * 4 {
+                        bail!(
+                            "init.bin has {} bytes, expected {}",
+                            raw.len(),
+                            meta.state_size * 4
+                        );
+                    }
+                    raw.chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect()
+                }
+                // only a MISSING init.bin falls back to the synthesized
+                // preset init; unreadable/corrupt files must surface
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    let (fw, fa) = presets::default_f_inits(model);
+                    presets::synth_init(&meta, fw, fa, presets::model_seed(model))
+                }
+                Err(e) => {
+                    bail!("reading {}: {e}", dir.join("init.bin").display());
+                }
+            };
+            Ok(NativeModel { meta, init, threads: default_threads() })
+        } else {
+            NativeModel::from_preset(model)
+        }
+    }
+
+    /// Synthesize a built-in preset directly (no filesystem access).
+    pub fn from_preset(model: &str) -> Result<NativeModel> {
+        use anyhow::Context;
+        let spec = presets::preset_spec(model)?;
+        let meta = presets::build_meta(&spec)
+            .with_context(|| format!("building preset meta for '{model}'"))?;
+        let seed = presets::model_seed(model);
+        let init = presets::synth_init(&meta, spec.f_init_w, spec.f_init_a, seed);
+        Ok(NativeModel { meta, init, threads: default_threads() })
+    }
+
+    /// Set the worker-thread count for the batch-sharded executor.
+    /// `0` selects all available cores. Results are bit-identical for
+    /// every setting — threads only change wall-clock time.
+    pub fn with_threads(mut self, threads: usize) -> NativeModel {
+        self.threads = if threads == 0 { default_threads() } else { threads };
+        self
+    }
+
+    /// The worker-thread count this model executes with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn check_x(&self, x: &[f32]) -> Result<()> {
+        let want = self.meta.batch * self.meta.input_dim();
+        if x.len() != want {
+            bail!(
+                "x has {} values, expected {} x {}",
+                x.len(),
+                self.meta.batch,
+                self.meta.input_dim()
+            );
+        }
+        Ok(())
+    }
+
+    /// Run all batch shards through the forward pass.
+    fn forward_all(&self, plan: &Plan, x: &[f32], train: bool) -> Vec<ShardRun> {
+        let ranges = shard_ranges(self.meta.batch);
+        let feat = self.meta.input_dim();
+        run_shards(self.threads, ranges.len(), |si| {
+            let (start, rows) = ranges[si];
+            forward_shard(plan, &x[start * feat..(start + rows) * feat], rows, train)
+        })
+    }
+
+    /// Merge per-shard activation extremes in fixed shard order.
+    fn merge_stats(&self, plan: &Plan, shards: &[ShardRun]) -> Vec<GroupStats> {
+        plan.groups
+            .iter()
+            .enumerate()
+            .map(|(g, gq)| {
+                let mut nmin = gq.init_min.clone();
+                let mut nmax = gq.init_max.clone();
+                for sh in shards {
+                    for k in 0..gq.f_size {
+                        if sh.groups[g].nmin[k] < nmin[k] {
+                            nmin[k] = sh.groups[g].nmin[k];
+                        }
+                        if sh.groups[g].nmax[k] > nmax[k] {
+                            nmax[k] = sh.groups[g].nmax[k];
+                        }
+                    }
+                }
+                GroupStats { nmin, nmax }
+            })
+            .collect()
+    }
+}
+
+impl ModelExec for NativeModel {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn init_state(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn forward(&self, state: &[f32], x: &[f32]) -> Result<Vec<f64>> {
+        self.check_x(x)?;
+        let plan = Plan::build(&self.meta, state, true)?;
+        let shards = self.forward_all(&plan, x, false);
+        let ranges = shard_ranges(self.meta.batch);
+        let k = self.meta.output_dim;
+        let mut logits = vec![0.0f64; self.meta.batch * k];
+        for (si, sh) in shards.iter().enumerate() {
+            let (start, rows) = ranges[si];
+            logits[start * k..(start + rows) * k].copy_from_slice(&sh.logits);
+        }
+        Ok(logits)
+    }
+
+    fn calib_batch(&self, state: &[f32], x: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.check_x(x)?;
+        // fresh zero statistics: the output reflects THIS batch only
+        // (merged with 0, exactly like the AOT calib graph)
+        let plan = Plan::build(&self.meta, state, false)?;
+        let shards = self.forward_all(&plan, x, false);
+        let stats = self.merge_stats(&plan, &shards);
+        let mut amin = vec![0.0f32; self.meta.calib_size];
+        let mut amax = vec![0.0f32; self.meta.calib_size];
+        for (gq, st) in plan.groups.iter().zip(stats.iter()) {
+            let co = self.meta.act_groups[gq.gi].calib_offset;
+            for k in 0..gq.f_size {
+                amin[co + k] = st.nmin[k] as f32;
+                amax[co + k] = st.nmax[k] as f32;
+            }
+        }
+        Ok((amin, amax))
+    }
+
+    fn train_step(&self, state: &[f32], x: &[f32], y: Target<'_>, h: Hypers) -> Result<StepOut> {
+        let meta = &self.meta;
+        let batch = meta.batch;
+        self.check_x(x)?;
+        let plan = Plan::build(meta, state, true)?;
+        let ranges = shard_ranges(batch);
+
+        // ---- sharded forward + deterministic stat merge --------------
+        let shards = self.forward_all(&plan, x, true);
+        let stats = self.merge_stats(&plan, &shards);
+        let k = meta.output_dim;
+        let mut logits = vec![0.0f64; batch * k];
+        for (si, sh) in shards.iter().enumerate() {
+            let (start, rows) = ranges[si];
+            logits[start * k..(start + rows) * k].copy_from_slice(&sh.logits);
+        }
+
+        // ---- loss + gradient wrt (quantized) logits ------------------
+        let mut g = vec![0.0f64; batch * k];
+        let (base_loss, metric) = match y {
+            Target::Cls(labels) => {
+                if meta.task != "cls" {
+                    bail!("classification targets passed to regression model '{}'", meta.name);
+                }
+                if labels.len() != batch {
+                    bail!("y has {} labels, expected {batch}", labels.len());
+                }
+                let mut ce = 0.0f64;
+                let mut correct = 0usize;
+                for bi in 0..batch {
+                    let row = &logits[bi * k..(bi + 1) * k];
+                    let label = labels[bi] as usize;
+                    if label >= k {
+                        bail!("label {label} out of range (output_dim {k})");
+                    }
+                    let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let mut denom = 0.0f64;
+                    for &v in row {
+                        denom += (v - mx).exp();
+                    }
+                    ce -= (row[label] - mx) - denom.ln();
+                    let mut am = 0usize;
+                    for j in 1..k {
+                        if row[j] > row[am] {
+                            am = j;
+                        }
+                    }
+                    if am == label {
+                        correct += 1;
+                    }
+                    for j in 0..k {
+                        let p = (row[j] - mx).exp() / denom;
+                        let t = if j == label { 1.0 } else { 0.0 };
+                        g[bi * k + j] = (p - t) / batch as f64;
+                    }
+                }
+                (ce / batch as f64, correct as f64 / batch as f64)
+            }
+            Target::Reg(ys) => {
+                if meta.task != "reg" {
+                    bail!("regression targets passed to classification model '{}'", meta.name);
+                }
+                if ys.len() != batch {
+                    bail!("y has {} values, expected {batch}", ys.len());
+                }
+                let mut mse = 0.0f64;
+                for bi in 0..batch {
+                    let err = logits[bi * k] - ys[bi] as f64;
+                    mse += err * err;
+                    g[bi * k] = 2.0 * err / batch as f64;
+                }
+                let mse = mse / batch as f64;
+                (mse, mse.sqrt())
+            }
+        };
+
+        // ---- sharded backward, reduced in fixed shard order ----------
+        let shard_grads = run_shards(self.threads, ranges.len(), |si| {
+            let (start, rows) = ranges[si];
+            backward_shard(&plan, &shards[si], &g[start * k..(start + rows) * k])
+        });
+        let mut grad = vec![0.0f64; meta.n_train];
+        for sg in &shard_grads {
+            for (gv, sv) in grad.iter_mut().zip(sg.iter()) {
+                *gv += sv;
+            }
+        }
+
+        // ---- batch-independent regularizer terms ---------------------
+        let bt = h.beta as f64;
+        let gm = h.gamma as f64;
+        let reg = regularizer_pass(&plan, &stats, bt, gm, &mut grad);
+
+        // ---- Adam with per-segment effective lr (fbits: lr * f_lr) ---
+        let m_e = meta.tensor("adam.m")?;
+        let v_e = meta.tensor("adam.v")?;
+        let s_e = meta.tensor("step")?;
+        let mut new_state: Vec<f32> = state.to_vec();
+        let step1 = state[s_e.offset] as f64 + 1.0;
+        let bc1 = 1.0 - ADAM_B1.powf(step1);
+        let bc2 = 1.0 - ADAM_B2.powf(step1);
+        let lr = h.lr as f64;
+        let f_lr = h.f_lr as f64;
+        for t in 0..meta.n_train {
+            let gi = grad[t];
+            let m1 = ADAM_B1 * state[m_e.offset + t] as f64 + (1.0 - ADAM_B1) * gi;
+            let v1 = ADAM_B2 * state[v_e.offset + t] as f64 + (1.0 - ADAM_B2) * gi * gi;
+            new_state[m_e.offset + t] = m1 as f32;
+            new_state[v_e.offset + t] = v1 as f32;
+            let lr_eff = if t >= meta.n_params { lr * f_lr } else { lr };
+            let upd = lr_eff * (m1 / bc1) / ((v1 / bc2).sqrt() + ADAM_EPS);
+            new_state[t] = (state[t] as f64 - upd) as f32;
+        }
+        new_state[s_e.offset] = step1 as f32;
+
+        // merged activation statistics back into the stat segment
+        for (gq, st) in plan.groups.iter().zip(stats.iter()) {
+            let gname = &meta.act_groups[gq.gi].name;
+            let amin_e = meta.tensor(&format!("{gname}.amin"))?;
+            let amax_e = meta.tensor(&format!("{gname}.amax"))?;
+            for k2 in 0..gq.f_size {
+                new_state[amin_e.offset + k2] = st.nmin[k2] as f32;
+                new_state[amax_e.offset + k2] = st.nmax[k2] as f32;
+            }
+        }
+
+        let loss = base_loss + bt * reg.ebops + gm * reg.l1;
+        Ok(StepOut {
+            state: new_state,
+            loss: loss as f32,
+            metric: metric as f32,
+            ebops: reg.ebops as f32,
+            sparsity: (reg.sp_num / reg.sp_den.max(1.0)) as f32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jets_preset_layout_matches_python_protocol() {
+        let nm = NativeModel::from_preset("jets_pp").unwrap();
+        let m = nm.meta();
+        // params: (16*64+64) + (64*32+32) + (32*32+32) + (32*5+5)
+        assert_eq!(m.n_params, 4389);
+        // fbits: 16 + (1024+64+64) + (2048+32+32) + (1024+32+32) + (160+5+5)
+        assert_eq!(m.n_train, 4389 + 4538);
+        assert_eq!(m.calib_size, 16 + 64 + 32 + 32 + 5);
+        // [trainables | adam.m | adam.v | amin | amax | step]
+        assert_eq!(m.state_size, 3 * m.n_train + 2 * m.calib_size + 1);
+        assert_eq!(m.output_dim, 5);
+        assert_eq!(m.tensor("d0.w").unwrap().offset, 0);
+        assert_eq!(m.tensor("adam.m").unwrap().offset, m.n_train);
+        assert_eq!(m.tensor("step").unwrap().offset, m.state_size - 1);
+        let offs: Vec<usize> = m.act_groups.iter().map(|g| g.calib_offset).collect();
+        assert_eq!(offs, vec![0, 16, 80, 112, 144]);
+        assert_eq!(nm.init_state().len(), m.state_size);
+    }
+
+    #[test]
+    fn svhn_preset_layout_matches_python_protocol() {
+        let nm = NativeModel::from_preset("svhn_stream").unwrap();
+        let m = nm.meta().clone();
+        // conv stack: 32x32x3 ->c0 30x30x16 ->pool 15x15x16 ->c1 13x13x16
+        // ->pool 6x6x16 ->c2 4x4x24 ->pool 2x2x24 ->flatten 96
+        // params: c0 (3*3*3*16+16) c1 (3*3*16*16+16) c2 (3*3*16*24+24)
+        //         d0 (96*42+42) d1 (42*64+64) d2 (64*10+10)
+        let n_params =
+            (432 + 16) + (2304 + 16) + (3456 + 24) + (96 * 42 + 42) + (42 * 64 + 64) + 650;
+        assert_eq!(m.n_params, n_params);
+        // element weights + scalar (layer-wise) activation groups
+        assert_eq!(m.tensor("c0.fw").unwrap().size, 432);
+        assert_eq!(m.tensor("c0.fa").unwrap().size, 1);
+        assert_eq!(m.calib_size, 7); // inq + c0..c2 + d0..d2, scalar each
+        assert_eq!(m.output_dim, 10);
+        assert_eq!(m.state_size, 3 * m.n_train + 2 * m.calib_size + 1);
+    }
+
+    #[test]
+    fn layerwise_preset_is_scalar_granularity() {
+        let nm = NativeModel::from_preset("jets_lw").unwrap();
+        let m = nm.meta();
+        assert_eq!(m.tensor("d0.fw").unwrap().size, 1);
+        assert_eq!(m.tensor("inq.fa").unwrap().size, 1);
+        assert!(m.act_groups.iter().all(|g| g.size == 1));
+        assert_eq!(m.calib_size, 5);
+        // fbit init is 6.0 for the layer-wise baselines
+        let s = nm.init_state();
+        let fe = m.tensor("d0.fw").unwrap();
+        assert_eq!(s[fe.offset], 6.0);
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_shaped() {
+        let nm = NativeModel::from_preset("jets_pp").unwrap();
+        let m = nm.meta().clone();
+        let state = nm.init_state();
+        let x = vec![0.5f32; m.batch * 16];
+        let a = nm.forward(&state, &x).unwrap();
+        let b = nm.forward(&state, &x).unwrap();
+        assert_eq!(a.len(), m.batch * 5);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn forward_is_thread_count_invariant() {
+        let m1 = NativeModel::from_preset("jets_pp").unwrap().with_threads(1);
+        let m4 = NativeModel::from_preset("jets_pp").unwrap().with_threads(4);
+        let state = m1.init_state();
+        let x: Vec<f32> =
+            (0..m1.meta().batch * 16).map(|i| ((i % 13) as f32 - 6.0) / 4.0).collect();
+        assert_eq!(m1.forward(&state, &x).unwrap(), m4.forward(&state, &x).unwrap());
+    }
+
+    #[test]
+    fn calib_extremes_are_ordered_and_include_zero() {
+        let nm = NativeModel::from_preset("muon_pp").unwrap();
+        let m = nm.meta().clone();
+        let state = nm.init_state();
+        let x: Vec<f32> = (0..m.batch * 450).map(|i| ((i % 3) as f32) * 0.5).collect();
+        let (amin, amax) = nm.calib_batch(&state, &x).unwrap();
+        assert_eq!(amin.len(), m.calib_size);
+        assert_eq!(amax.len(), m.calib_size);
+        for i in 0..amin.len() {
+            assert!(amin[i] <= 0.0, "zero-merged amin positive at {i}");
+            assert!(amax[i] >= 0.0, "zero-merged amax negative at {i}");
+            assert!(amin[i] <= amax[i]);
+        }
+    }
+
+    #[test]
+    fn train_step_adam_and_hyper_semantics() {
+        let nm = NativeModel::from_preset("jets_lw").unwrap();
+        let m = nm.meta().clone();
+        let state = nm.init_state();
+        let x: Vec<f32> =
+            (0..m.batch * 16).map(|i| ((i % 31) as f32 - 15.0) / 8.0).collect();
+        let y: Vec<i32> = (0..m.batch).map(|i| (i % 5) as i32).collect();
+        let step = |h: Hypers| nm.train_step(&state, &x, Target::Cls(&y), h).unwrap();
+
+        // lr = 0: trainables frozen, step counter advances, stats move
+        let o0 = step(Hypers { beta: 0.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 });
+        assert_eq!(&o0.state[..m.n_train], &state[..m.n_train]);
+        assert_eq!(o0.state[m.state_size - 1], state[m.state_size - 1] + 1.0);
+        assert!(o0.loss.is_finite() && o0.loss > 0.0);
+        assert!(o0.ebops > 0.0);
+
+        // f_lr = 0 freezes the bitwidth segment even at lr = 1
+        let of = step(Hypers { beta: 0.0, gamma: 0.0, lr: 1.0, f_lr: 0.0 });
+        assert_eq!(&of.state[m.n_params..m.n_train], &state[m.n_params..m.n_train]);
+        assert_ne!(&of.state[..m.n_params], &state[..m.n_params]);
+
+        // f_lr > 0 moves the bitwidths
+        let ol = step(Hypers { beta: 0.0, gamma: 0.0, lr: 1.0, f_lr: 1.0 });
+        assert_ne!(&ol.state[m.n_params..m.n_train], &state[m.n_params..m.n_train]);
+
+        // beta / gamma reach the loss through EBOPs-bar / L1
+        let base = step(Hypers { beta: 0.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 }).loss;
+        let lb = step(Hypers { beta: 1.0, gamma: 0.0, lr: 0.0, f_lr: 0.0 }).loss;
+        let lg = step(Hypers { beta: 0.0, gamma: 1.0, lr: 0.0, f_lr: 0.0 }).loss;
+        assert!(lb > base + 1.0, "beta must reach the loss: {lb} vs {base}");
+        assert!(lg > base + 1.0, "gamma must reach the loss: {lg} vs {base}");
+    }
+
+    #[test]
+    fn conv_models_train_natively() {
+        // the former "conv refuses native training" limitation is gone:
+        // one svhn_stream train step moves conv weights AND conv
+        // bitwidths, and the loss/EBOPs are finite
+        let nm = NativeModel::from_preset("svhn_stream").unwrap();
+        let m = nm.meta().clone();
+        let state = nm.init_state();
+        let x: Vec<f32> = (0..m.batch * m.input_dim())
+            .map(|i| ((i % 17) as f32) / 17.0)
+            .collect();
+        let y: Vec<i32> = (0..m.batch).map(|i| (i % 10) as i32).collect();
+        let out = nm
+            .train_step(&state, &x, Target::Cls(&y), Hypers {
+                beta: 1e-6,
+                gamma: 1e-6,
+                lr: 1e-3,
+                f_lr: 1.0,
+            })
+            .unwrap();
+        assert!(out.loss.is_finite());
+        assert!(out.ebops > 0.0);
+        let w0 = m.tensor("c0.w").unwrap();
+        let f0 = m.tensor("c0.fw").unwrap();
+        assert_ne!(
+            &out.state[w0.offset..w0.offset + w0.size],
+            &state[w0.offset..w0.offset + w0.size],
+            "conv weights did not move"
+        );
+        assert_ne!(
+            &out.state[f0.offset..f0.offset + f0.size],
+            &state[f0.offset..f0.offset + f0.size],
+            "conv weight bitwidths did not move"
+        );
+    }
+
+    #[test]
+    fn unknown_model_without_artifacts_errors() {
+        let err =
+            NativeModel::load(Path::new("/nonexistent/artifacts"), "resnet50").unwrap_err();
+        assert!(format!("{err}").contains("preset"));
+    }
+}

@@ -1,0 +1,346 @@
+//! Built-in model presets mirroring `python/compile/model.py` exactly:
+//! the same layer stacks, tensor shapes and packed-state layout, so the
+//! native backend can synthesize every paper model in-process and the
+//! whole pipeline runs with zero files on disk.
+
+use anyhow::{bail, Result};
+
+use crate::nn::{ActGroup, LayerMeta, ModelMeta, TensorEntry};
+use crate::util::rng::Rng;
+
+/// One layer of a preset network description (the in-process mirror of
+/// the python layer-config dicts).
+pub(super) enum LayerCfg {
+    InputQuant { signed: bool },
+    Dense { name: &'static str, dout: usize, relu: bool },
+    Conv2d { name: &'static str, k: usize, cout: usize, relu: bool },
+    MaxPool2,
+    Flatten,
+}
+
+/// A complete preset: task, batch, granularities and layer stack.
+pub(super) struct NetSpec {
+    pub name: &'static str,
+    pub task: &'static str,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub w_elem: bool,
+    pub a_elem: bool,
+    pub f_init_w: f32,
+    pub f_init_a: f32,
+    pub layers: Vec<LayerCfg>,
+}
+
+fn jets_layers() -> Vec<LayerCfg> {
+    vec![
+        LayerCfg::InputQuant { signed: true },
+        LayerCfg::Dense { name: "d0", dout: 64, relu: true },
+        LayerCfg::Dense { name: "d1", dout: 32, relu: true },
+        LayerCfg::Dense { name: "d2", dout: 32, relu: true },
+        LayerCfg::Dense { name: "d3", dout: 5, relu: false },
+    ]
+}
+
+fn muon_layers() -> Vec<LayerCfg> {
+    vec![
+        LayerCfg::InputQuant { signed: false },
+        LayerCfg::Dense { name: "s0", dout: 48, relu: true },
+        LayerCfg::Dense { name: "s1", dout: 32, relu: true },
+        LayerCfg::Dense { name: "head", dout: 1, relu: false },
+    ]
+}
+
+fn svhn_layers() -> Vec<LayerCfg> {
+    vec![
+        LayerCfg::InputQuant { signed: false },
+        LayerCfg::Conv2d { name: "c0", k: 3, cout: 16, relu: true },
+        LayerCfg::MaxPool2,
+        LayerCfg::Conv2d { name: "c1", k: 3, cout: 16, relu: true },
+        LayerCfg::MaxPool2,
+        LayerCfg::Conv2d { name: "c2", k: 3, cout: 24, relu: true },
+        LayerCfg::MaxPool2,
+        LayerCfg::Flatten,
+        LayerCfg::Dense { name: "d0", dout: 42, relu: true },
+        LayerCfg::Dense { name: "d1", dout: 64, relu: true },
+        LayerCfg::Dense { name: "d2", dout: 10, relu: false },
+    ]
+}
+
+pub(super) fn preset_spec(model: &str) -> Result<NetSpec> {
+    let spec = match model {
+        "jets_pp" => NetSpec {
+            name: "jets_pp",
+            task: "cls",
+            batch: 512,
+            input_shape: vec![16],
+            w_elem: true,
+            a_elem: true,
+            f_init_w: 2.0,
+            f_init_a: 2.0,
+            layers: jets_layers(),
+        },
+        "jets_lw" => NetSpec {
+            name: "jets_lw",
+            task: "cls",
+            batch: 512,
+            input_shape: vec![16],
+            w_elem: false,
+            a_elem: false,
+            f_init_w: 6.0,
+            f_init_a: 6.0,
+            layers: jets_layers(),
+        },
+        "muon_pp" => NetSpec {
+            name: "muon_pp",
+            task: "reg",
+            batch: 512,
+            input_shape: vec![450],
+            w_elem: true,
+            a_elem: true,
+            f_init_w: 6.0,
+            f_init_a: 6.0,
+            layers: muon_layers(),
+        },
+        "muon_lw" => NetSpec {
+            name: "muon_lw",
+            task: "reg",
+            batch: 512,
+            input_shape: vec![450],
+            w_elem: false,
+            a_elem: false,
+            f_init_w: 6.0,
+            f_init_a: 6.0,
+            layers: muon_layers(),
+        },
+        "svhn_stream" => NetSpec {
+            name: "svhn_stream",
+            task: "cls",
+            batch: 128,
+            input_shape: vec![32, 32, 3],
+            w_elem: true,
+            a_elem: false,
+            f_init_w: 6.0,
+            f_init_a: 6.0,
+            layers: svhn_layers(),
+        },
+        other => bail!(
+            "no artifacts for model '{other}' and no built-in preset of that name \
+             (presets: jets_pp jets_lw muon_pp muon_lw svhn_stream)"
+        ),
+    };
+    Ok(spec)
+}
+
+fn prod1(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Packed-state layout, identical to python StateSpec (see
+/// ARCHITECTURE.md §Packed-state protocol):
+/// `[params | fbits | adam.m | adam.v | amin/group | amax/group | step]`.
+pub(super) fn build_meta(spec: &NetSpec) -> Result<ModelMeta> {
+    let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut fbits: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut agroups: Vec<(String, Vec<usize>, bool)> = Vec::new();
+    let mut layers: Vec<LayerMeta> = Vec::new();
+    let mut shape = spec.input_shape.clone();
+
+    for lc in &spec.layers {
+        match lc {
+            LayerCfg::InputQuant { signed } => {
+                let fshape = if spec.a_elem { shape.clone() } else { Vec::new() };
+                fbits.push(("inq.fa".to_string(), fshape.clone()));
+                agroups.push(("inq.fa".to_string(), fshape, *signed));
+                layers.push(LayerMeta::InputQuant { name: "inq".to_string(), signed: *signed });
+            }
+            LayerCfg::Dense { name, dout, relu } => {
+                let din = prod1(&shape);
+                params.push((format!("{name}.w"), vec![din, *dout]));
+                params.push((format!("{name}.b"), vec![*dout]));
+                fbits.push((
+                    format!("{name}.fw"),
+                    if spec.w_elem { vec![din, *dout] } else { Vec::new() },
+                ));
+                fbits.push((
+                    format!("{name}.fb"),
+                    if spec.w_elem { vec![*dout] } else { Vec::new() },
+                ));
+                let fshape = if spec.a_elem { vec![*dout] } else { Vec::new() };
+                fbits.push((format!("{name}.fa"), fshape.clone()));
+                agroups.push((format!("{name}.fa"), fshape, !*relu));
+                layers.push(LayerMeta::Dense {
+                    name: name.to_string(),
+                    din,
+                    dout: *dout,
+                    relu: *relu,
+                });
+                shape = vec![*dout];
+            }
+            LayerCfg::Conv2d { name, k, cout, relu } => {
+                if shape.len() != 3 {
+                    bail!("conv2d '{name}' needs a HWC input, got {shape:?}");
+                }
+                let (h, w, cin) = (shape[0], shape[1], shape[2]);
+                let (oh, ow) = (h - k + 1, w - k + 1);
+                params.push((format!("{name}.w"), vec![*k, *k, cin, *cout]));
+                params.push((format!("{name}.b"), vec![*cout]));
+                fbits.push((
+                    format!("{name}.fw"),
+                    if spec.w_elem { vec![*k, *k, cin, *cout] } else { Vec::new() },
+                ));
+                fbits.push((
+                    format!("{name}.fb"),
+                    if spec.w_elem { vec![*cout] } else { Vec::new() },
+                ));
+                let fshape = if spec.a_elem { vec![oh, ow, *cout] } else { Vec::new() };
+                fbits.push((format!("{name}.fa"), fshape.clone()));
+                agroups.push((format!("{name}.fa"), fshape, !*relu));
+                layers.push(LayerMeta::Conv2d {
+                    name: name.to_string(),
+                    k: *k,
+                    cin,
+                    cout: *cout,
+                    relu: *relu,
+                    out_shape: [oh, ow, *cout],
+                });
+                shape = vec![oh, ow, *cout];
+            }
+            LayerCfg::MaxPool2 => {
+                if shape.len() != 3 {
+                    bail!("maxpool2 needs a HWC input, got {shape:?}");
+                }
+                shape = vec![shape[0] / 2, shape[1] / 2, shape[2]];
+                layers.push(LayerMeta::MaxPool2 { out_shape: [shape[0], shape[1], shape[2]] });
+            }
+            LayerCfg::Flatten => {
+                shape = vec![prod1(&shape)];
+                layers.push(LayerMeta::Flatten);
+            }
+        }
+    }
+    let output_dim = prod1(&shape);
+
+    let mut tensors: Vec<TensorEntry> = Vec::new();
+    let mut off = 0usize;
+    for (name, shp) in &params {
+        let size = prod1(shp);
+        tensors.push(TensorEntry {
+            name: name.clone(),
+            shape: shp.clone(),
+            offset: off,
+            size,
+            seg: "param".to_string(),
+        });
+        off += size;
+    }
+    let n_params = off;
+    for (name, shp) in &fbits {
+        let size = prod1(shp);
+        tensors.push(TensorEntry {
+            name: name.clone(),
+            shape: shp.clone(),
+            offset: off,
+            size,
+            seg: "fbit".to_string(),
+        });
+        off += size;
+    }
+    let n_train = off;
+    for opt_name in ["adam.m", "adam.v"] {
+        tensors.push(TensorEntry {
+            name: opt_name.to_string(),
+            shape: vec![n_train],
+            offset: off,
+            size: n_train,
+            seg: "opt".to_string(),
+        });
+        off += n_train;
+    }
+    let mut act_groups: Vec<ActGroup> = Vec::new();
+    let mut coff = 0usize;
+    for (name, fshape, signed) in &agroups {
+        let size = prod1(fshape);
+        act_groups.push(ActGroup {
+            name: name.clone(),
+            fshape: fshape.clone(),
+            signed: *signed,
+            size,
+            calib_offset: coff,
+        });
+        coff += size;
+    }
+    for stat in ["amin", "amax"] {
+        for g in &act_groups {
+            tensors.push(TensorEntry {
+                name: format!("{}.{stat}", g.name),
+                shape: g.fshape.clone(),
+                offset: off,
+                size: g.size,
+                seg: "stat".to_string(),
+            });
+            off += g.size;
+        }
+    }
+    tensors.push(TensorEntry {
+        name: "step".to_string(),
+        shape: Vec::new(),
+        offset: off,
+        size: 1,
+        seg: "opt".to_string(),
+    });
+    off += 1;
+
+    Ok(ModelMeta {
+        name: spec.name.to_string(),
+        task: spec.task.to_string(),
+        batch: spec.batch,
+        input_shape: spec.input_shape.clone(),
+        y_is_int: spec.task == "cls",
+        w_gran: if spec.w_elem { "element" } else { "layer" }.to_string(),
+        a_gran: if spec.a_elem { "element" } else { "layer" }.to_string(),
+        state_size: off,
+        n_params,
+        n_train,
+        calib_size: coff,
+        output_dim,
+        tensors,
+        act_groups,
+        layers,
+    })
+}
+
+/// He-init weights, zero biases/opt/stats, constant fbit init — the
+/// same recipe as python Net.init_tensors (different RNG stream).
+pub(super) fn synth_init(meta: &ModelMeta, f_init_w: f32, f_init_a: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut out = vec![0.0f32; meta.state_size];
+    for t in &meta.tensors {
+        match t.seg.as_str() {
+            "param" if t.name.ends_with(".w") => {
+                let fan_in = prod1(&t.shape[..t.shape.len() - 1]).max(1);
+                let std = (2.0 / fan_in as f64).sqrt();
+                for v in out[t.offset..t.offset + t.size].iter_mut() {
+                    *v = rng.normal_scaled(0.0, std) as f32;
+                }
+            }
+            "fbit" => {
+                let f = if t.name.ends_with(".fa") { f_init_a } else { f_init_w };
+                out[t.offset..t.offset + t.size].fill(f);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+pub(super) fn model_seed(model: &str) -> u64 {
+    model.bytes().fold(0xB17D_D0C5u64, |a, b| a.rotate_left(8) ^ b as u64)
+}
+
+pub(super) fn default_f_inits(model: &str) -> (f32, f32) {
+    if model == "jets_pp" {
+        (2.0, 2.0)
+    } else {
+        (6.0, 6.0)
+    }
+}

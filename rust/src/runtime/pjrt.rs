@@ -24,11 +24,13 @@ pub struct PjrtRuntime {
 }
 
 impl PjrtRuntime {
+    /// Bring up the PJRT CPU client (fails on the vendored stub).
     pub fn new() -> Result<PjrtRuntime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(PjrtRuntime { client })
     }
 
+    /// The client's platform description.
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }
@@ -51,6 +53,7 @@ pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
 }
 
+/// i32 slice -> literal of the given shape.
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     let n: i64 = dims.iter().product();
     if n as usize != data.len() {
@@ -59,6 +62,7 @@ pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
 }
 
+/// f32 scalar literal (hyperparameter inputs).
 pub fn scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
@@ -76,7 +80,9 @@ pub fn run_tuple(
 /// All artifacts of one model: metadata, compiled executables and the
 /// initial packed state.
 pub struct PjrtModel {
+    /// parsed meta.json of the loaded artifacts
     pub meta: ModelMeta,
+    /// artifact directory the model was loaded from
     pub dir: PathBuf,
     train: xla::PjRtLoadedExecutable,
     forward: xla::PjRtLoadedExecutable,
@@ -85,6 +91,8 @@ pub struct PjrtModel {
 }
 
 impl PjrtModel {
+    /// Load and compile `artifacts/<model>/` (meta.json, init.bin and
+    /// the three HLO-text programs).
     pub fn load(rt: &PjrtRuntime, artifacts: &Path, model: &str) -> Result<PjrtModel> {
         let dir = artifacts.join(model);
         let meta = ModelMeta::load(&dir)?;

@@ -8,21 +8,30 @@
 use std::hint::black_box as std_black_box;
 use std::time::Instant;
 
+/// Optimization barrier (re-export of `std::hint::black_box`).
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
 }
 
+/// Timing summary of one benched closure.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// bench name as printed
     pub name: String,
+    /// measured iterations
     pub iters: usize,
+    /// mean iteration time, ns
     pub mean_ns: f64,
+    /// median iteration time, ns
     pub median_ns: f64,
+    /// 95th-percentile iteration time, ns
     pub p95_ns: f64,
+    /// fastest iteration, ns
     pub min_ns: f64,
 }
 
 impl Stats {
+    /// The uniform one-line report the bench binaries print.
     pub fn report(&self) -> String {
         format!(
             "bench {:<40} iters={:<6} median={:>12} mean={:>12} p95={:>12} min={:>12}",
@@ -41,6 +50,7 @@ impl Stats {
     }
 }
 
+/// Human-readable duration (ns / µs / ms / s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{:.0} ns", ns)

@@ -6,9 +6,12 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand + `--key value` pairs + bare flags.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// first bare word, e.g. `train`
     pub subcommand: Option<String>,
+    /// bare words after the subcommand
     pub positional: Vec<String>,
     kv: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -16,10 +19,12 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse the process arguments (skipping argv\[0\]).
     pub fn parse_env() -> Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Parse an explicit token stream (tests, embedding).
     pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
         let mut out = Args::default();
         let mut iter = it.into_iter().peekable();
@@ -41,28 +46,34 @@ impl Args {
         out
     }
 
+    /// True when the bare flag `--name` was passed.
     pub fn flag(&mut self, name: &str) -> bool {
         self.consumed.push(name.to_string());
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name value` / `--name=value`, if present.
     pub fn str_opt(&mut self, name: &str) -> Option<String> {
         self.consumed.push(name.to_string());
         self.kv.get(name).cloned()
     }
 
+    /// String option with a default.
     pub fn str(&mut self, name: &str, default: &str) -> String {
         self.str_opt(name).unwrap_or_else(|| default.to_string())
     }
 
+    /// f64 option with a default (unparseable values fall back).
     pub fn f64(&mut self, name: &str, default: f64) -> f64 {
         self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// usize option with a default (unparseable values fall back).
     pub fn usize(&mut self, name: &str, default: usize) -> usize {
         self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// u64 option with a default (unparseable values fall back).
     pub fn u64(&mut self, name: &str, default: u64) -> u64 {
         self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }

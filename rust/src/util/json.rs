@@ -8,7 +8,9 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value. Objects preserve key order.
 #[derive(Debug, Clone, PartialEq)]
+#[allow(missing_docs)] // variants are the JSON grammar
 pub enum Json {
     Null,
     Bool(bool),
@@ -18,9 +20,12 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
+/// Parse failure with a byte position into the input.
 #[derive(Debug)]
 pub struct JsonError {
+    /// what went wrong
     pub msg: String,
+    /// byte offset of the failure
     pub pos: usize,
 }
 
@@ -33,6 +38,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
@@ -45,48 +51,57 @@ impl Json {
     }
 
     // ------------- accessors -------------
+    /// Object member by key (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
             _ => None,
         }
     }
+    /// Array element by index (None for non-arrays / out of range).
     pub fn at(&self, idx: usize) -> Option<&Json> {
         match self {
             Json::Arr(a) => a.get(idx),
             _ => None,
         }
     }
+    /// String payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Number truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
+    /// Number truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// Bool payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Key/value slice, if this is an object.
     pub fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(o) => Some(o),
@@ -99,28 +114,35 @@ impl Json {
     }
 
     // ------------- construction helpers -------------
+    /// Object from (key, value) pairs.
     pub fn obj(kv: Vec<(&str, Json)>) -> Json {
         Json::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
+    /// Number value.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
+    /// Array of numbers from an f64 slice.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }
+    /// Array of numbers from a usize slice.
     pub fn arr_usize(v: &[usize]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
     // ------------- serialization -------------
+    /// Compact single-line serialization.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);
         out
     }
+    /// Indented serialization with a trailing newline.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(1), 0);

@@ -7,6 +7,8 @@
 
 use super::rng::Rng;
 
+/// Run `f` over `cases` seeded random inputs; panics (with the failing
+/// seed) on the first `Err`.
 pub fn check<F>(name: &str, cases: u64, mut f: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
@@ -47,6 +49,8 @@ macro_rules! prop_assert {
     };
 }
 
+/// Equality counterpart of `prop_assert!`: returns `Err` with both
+/// values on mismatch.
 #[macro_export]
 macro_rules! prop_assert_eq {
     ($a:expr, $b:expr) => {{

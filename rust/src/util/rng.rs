@@ -2,6 +2,7 @@
 //! Box-Muller normals, Fisher-Yates shuffle. Stream-stable across runs
 //! (dataset generation and experiment reproducibility depend on it).
 
+/// Seeded xoshiro256** generator with derived-stream support.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
@@ -17,6 +18,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator (SplitMix64 state expansion).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -33,6 +35,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit draw (xoshiro256** step).
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -75,6 +78,7 @@ impl Rng {
         r * theta.cos()
     }
 
+    /// Normal with the given mean and standard deviation.
     pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
     }
@@ -84,6 +88,7 @@ impl Rng {
         self.uniform() < p
     }
 
+    /// Fisher-Yates in-place shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             xs.swap(i, self.below(i + 1));

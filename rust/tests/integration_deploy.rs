@@ -51,6 +51,31 @@ fn firmware_bit_exact_vs_forward_on_calibration_data_mlp() {
 }
 
 #[test]
+fn firmware_bit_exact_vs_forward_on_calibration_data_conv() {
+    // same §IV contract for the streaming CNN. Regression test for the
+    // odd-pool stride bug: svhn's second pool consumes a 13x13 tensor
+    // (dropping the last row/col); reconstructing its input shape as
+    // out_shape * 2 = 12x12 mis-strided the emulator and silently broke
+    // firmware↔forward agreement for every conv model
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "svhn_stream").unwrap();
+    let splits = splits_for("svhn_stream", 7, 256, 64);
+    let state = mr.init_state();
+    let (graph, rep) = deploy(&mr, "t", &state, &[&splits.train], &splits.test).unwrap();
+    assert_eq!(rep.fw_vs_hlo_max_abs, 0.0, "conv firmware must match the forward bit-exactly");
+    // the pool layers carry the TRUE (possibly odd) input shapes
+    let pool_ins: Vec<[usize; 3]> = graph
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            FwLayer::MaxPool2 { in_shape } => Some(*in_shape),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(pool_ins, vec![[30, 30, 16], [13, 13, 16], [4, 4, 24]]);
+}
+
+#[test]
 fn exact_ebops_bounded_by_train_estimate_shape() {
     // EBOPs-bar (training) uses declared widths — the exact span-based
     // EBOPs of the deployed model must not exceed ~it by much, and both

@@ -8,7 +8,7 @@ use std::path::PathBuf;
 use hgq::baselines;
 use hgq::coordinator::{evaluate, train, BetaSchedule, TrainConfig};
 use hgq::data::splits_for;
-use hgq::runtime::{ModelRuntime, Runtime};
+use hgq::runtime::{self, Hypers, ModelRuntime, Runtime, Target};
 
 fn artifacts() -> PathBuf {
     // may or may not exist: the native backend falls back to presets
@@ -96,6 +96,37 @@ fn evaluate_is_deterministic() {
     let a = evaluate(&mr, &state, &splits.val).unwrap();
     let b = evaluate(&mr, &state, &splits.val).unwrap();
     assert_eq!(a, b);
+}
+
+#[test]
+fn jets_train_step_is_bit_identical_across_thread_counts() {
+    // the batch is split into a FIXED shard grid and reduced in fixed
+    // shard order, so the worker count must not change a single bit of
+    // the training state (see runtime/native/parallel.rs)
+    let rt1 = Runtime::new().unwrap().with_threads(1);
+    let rt4 = Runtime::new().unwrap().with_threads(4);
+    let mr1 = ModelRuntime::load(&rt1, &artifacts(), "jets_pp").unwrap();
+    let mr4 = ModelRuntime::load(&rt4, &artifacts(), "jets_pp").unwrap();
+    let b = mr1.meta.batch;
+    let x: Vec<f32> = (0..b * 16).map(|i| ((i % 29) as f32 - 14.0) / 7.0).collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % 5) as i32).collect();
+    let h = Hypers { beta: 1e-5, gamma: 2e-6, lr: 3e-3, f_lr: 8.0 };
+    let mut s1 = mr1.init_state();
+    let mut s4 = mr4.init_state();
+    for step in 0..3 {
+        s1 = runtime::train_step(&mr1, &s1, &x, Target::Cls(&y), h).unwrap().state;
+        s4 = runtime::train_step(&mr4, &s4, &x, Target::Cls(&y), h).unwrap().state;
+        assert_eq!(s1, s4, "state diverged at step {step}");
+    }
+    // forward + calibration are likewise thread-count invariant
+    assert_eq!(
+        runtime::forward(&mr1, &s1, &x).unwrap(),
+        runtime::forward(&mr4, &s4, &x).unwrap()
+    );
+    assert_eq!(
+        runtime::calib_batch(&mr1, &s1, &x).unwrap(),
+        runtime::calib_batch(&mr4, &s4, &x).unwrap()
+    );
 }
 
 #[test]
