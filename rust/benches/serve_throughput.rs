@@ -1,0 +1,78 @@
+//! Bench: the serving hot path — single-sample sequential emulator vs
+//! the layer-major `BatchEmulator` vs the full micro-batching pipeline
+//! — plus the PR acceptance gate: batched serving throughput must be a
+//! multiple of sequential single-sample inference on the same graph.
+//!
+//!     cargo bench --bench serve_throughput
+//!
+//! Gate: `HGQ_SERVE_MIN_SPEEDUP` (default 5.0 on >= 4 cores, scaled
+//! down on smaller CI boxes where the parallel term cannot reach 5x).
+//! CI's `perf-smoke` job runs this bench, then `hgq serve --json
+//! BENCH_serve.json` for the uploaded artifact.
+
+use std::time::Instant;
+
+use hgq::data::splits_for;
+use hgq::serve::batch::infer_all;
+use hgq::serve::{sequential_baseline, serve_closed_loop, Registry, ServeConfig};
+
+fn main() {
+    let registry = Registry::new("artifacts").with_calib_samples(512);
+    let graph = registry.get("jets").expect("jets graph builds hermetically");
+    let splits = splits_for("jets_pp", 0xBE7C, 1, 512);
+    let pool = &splits.test.x;
+    let n_pool = splits.test.n;
+    let k = graph.output_dim;
+
+    // ---- single-sample sequential baseline --------------------------
+    sequential_baseline(&graph, pool, 500).expect("warmup"); // warm caches
+    let seq_rps = sequential_baseline(&graph, pool, 4000).expect("baseline");
+    println!("sequential emulator                  {seq_rps:>10.0} inf/s");
+
+    // ---- batched emulator, 1 thread (pure batching gain) ------------
+    let mut logits = vec![0.0f64; n_pool * k];
+    infer_all(&graph, pool, &mut logits, 1, 32).expect("warmup");
+    let t0 = Instant::now();
+    let mut total = 0usize;
+    while t0.elapsed().as_millis() < 800 {
+        infer_all(&graph, pool, &mut logits, 1, 32).expect("batched inference");
+        total += n_pool;
+    }
+    let batch_rps = total as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "batched emulator (1 thread, batch 32) {batch_rps:>9.0} inf/s   [{:.2}x]",
+        batch_rps / seq_rps
+    );
+
+    // ---- full micro-batching pipeline -------------------------------
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let cfg = ServeConfig {
+        batch: 32,
+        workers: cores,
+        queue_depth: 256,
+        flush_us: 200,
+        requests: 20_000,
+        record_logits: false,
+    };
+    serve_closed_loop(&graph, pool, &cfg).expect("warmup run");
+    let outcome = serve_closed_loop(&graph, pool, &cfg).expect("serve run");
+    let report = outcome.report.with_baseline(seq_rps);
+    println!("{}", report.summary());
+
+    // ---- acceptance gate --------------------------------------------
+    let min_speedup = std::env::var("HGQ_SERVE_MIN_SPEEDUP")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(if cores >= 4 { 5.0 } else { 1.2 * cores as f64 });
+    assert!(
+        report.speedup_vs_sequential >= min_speedup,
+        "serving speedup {:.2}x below the {min_speedup:.2}x gate \
+         (sequential {seq_rps:.0} inf/s, pipeline {:.0} req/s, {cores} cores)",
+        report.speedup_vs_sequential,
+        report.throughput_rps
+    );
+    println!(
+        "PASS: serving speedup {:.2}x >= {min_speedup:.2}x gate ({cores} cores)",
+        report.speedup_vs_sequential
+    );
+}

@@ -8,10 +8,15 @@ use anyhow::Result;
 use crate::coordinator::calibrate::calibrate;
 use crate::coordinator::trainer::quality_of;
 use crate::data::Dataset;
-use crate::firmware::{emulator::Emulator, Graph};
+use crate::firmware::Graph;
 use crate::metrics;
 use crate::resource::{self, ResourceReport};
 use crate::runtime::{self, ModelRuntime};
+use crate::serve::batch::infer_all;
+
+/// Micro-batch size of the deployment-time batched emulator runs (test
+/// quality + probe); any value is bit-identical (tests/serve_batch.rs).
+const DEPLOY_MICRO_BATCH: usize = 64;
 
 /// One deployed model's table row (paper Tables I-III format).
 #[derive(Debug, Clone)]
@@ -75,10 +80,12 @@ pub fn deploy(
     let graph = Graph::build(&mr.meta, state_host, &calib)?;
 
     // --- test quality through the firmware emulator ------------------
+    // batched + sharded over the runtime's --threads setting;
+    // bit-identical to sequential Emulator::infer for any batch size /
+    // thread count
     let k = mr.meta.output_dim;
-    let mut em = Emulator::new(&graph);
     let mut logits = vec![0.0f64; test_data.n * k];
-    em.infer_batch(&test_data.x, &mut logits)?;
+    infer_all(&graph, &test_data.x, &mut logits, mr.threads, DEPLOY_MICRO_BATCH)?;
     let quality_raw = quality_of(mr, &logits, test_data, test_data.n);
     // regression reports positive mrad resolution
     let quality = if test_data.is_classification() { quality_raw } else { -quality_raw };
@@ -97,7 +104,7 @@ pub fn deploy(
     }
     let hlo_logits = runtime::forward(mr, state_host, &xbuf)?;
     let mut fw_logits = vec![0.0f64; mr.meta.batch * k];
-    em.infer_batch(&xbuf, &mut fw_logits)?;
+    infer_all(&graph, &xbuf, &mut fw_logits, mr.threads, DEPLOY_MICRO_BATCH)?;
     let mut max_abs: f64 = 0.0;
     for i in 0..probe * k {
         max_abs = max_abs.max((hlo_logits[i] - fw_logits[i]).abs());
@@ -117,11 +124,10 @@ pub fn deploy(
 }
 
 /// Classification probe helper for examples: firmware accuracy +
-/// confusion matrix.
+/// confusion matrix (batched over all cores).
 pub fn firmware_confusion(graph: &Graph, data: &Dataset, k: usize) -> Result<(f64, Vec<u64>)> {
-    let mut em = Emulator::new(graph);
     let mut logits = vec![0.0f64; data.n * k];
-    em.infer_batch(&data.x, &mut logits)?;
+    infer_all(graph, &data.x, &mut logits, 0, DEPLOY_MICRO_BATCH)?;
     let acc = metrics::accuracy(&logits, &data.y_cls, k);
     Ok((acc, metrics::confusion(&logits, &data.y_cls, k)))
 }

@@ -16,6 +16,9 @@ use super::{FwLayer, Graph};
 /// zero allocation per sample once warmed up).
 pub struct Emulator<'g> {
     g: &'g Graph,
+    /// warmed scratch capacity (elements) — the widest tensor of the
+    /// graph the buffers were sized for
+    cap: usize,
     // ping-pong activation buffers: mantissa + per-element frac bits
     m_a: Vec<i64>,
     f_a: Vec<i32>,
@@ -26,14 +29,40 @@ pub struct Emulator<'g> {
 impl<'g> Emulator<'g> {
     /// Engine over a built graph; buffers sized to its widest tensor.
     pub fn new(g: &'g Graph) -> Self {
-        let cap = max_width(g);
+        let cap = g.max_width();
         Emulator {
             g,
+            cap,
             m_a: vec![0; cap],
             f_a: vec![0; cap],
             m_b: vec![0; cap],
             f_b: vec![0; cap],
         }
+    }
+
+    /// Warmed scratch capacity (elements of the widest tensor).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Point the warmed engine at another built graph — the serving
+    /// registry swaps recalibrated/redeployed graphs under a live
+    /// engine. Errors (instead of a later out-of-bounds panic in
+    /// [`Self::infer`]) when the new graph needs wider scratch buffers
+    /// than this engine was warmed for; build a fresh [`Emulator::new`]
+    /// in that case.
+    pub fn retarget(&mut self, g: &'g Graph) -> Result<()> {
+        let need = g.max_width();
+        if need > self.cap {
+            bail!(
+                "graph '{}' needs scratch width {need} but emulator was warmed for {} \
+                 — construct a new Emulator for the wider graph",
+                g.name,
+                self.cap
+            );
+        }
+        self.g = g;
+        Ok(())
     }
 
     /// Run one sample; `out` receives the dequantized logits.
@@ -163,6 +192,12 @@ impl<'g> Emulator<'g> {
                 }
                 FwLayer::Flatten => { /* buffers are already flat */ }
             }
+            debug_assert!(
+                n_cur <= self.cap,
+                "tensor width {n_cur} exceeds warmed capacity {} (graph changed under the \
+                 emulator — see Emulator::retarget)",
+                self.cap
+            );
         }
 
         for (j, o) in out.iter_mut().enumerate() {
@@ -186,22 +221,6 @@ impl<'g> Emulator<'g> {
         std::mem::swap(&mut self.m_a, &mut self.m_b);
         std::mem::swap(&mut self.f_a, &mut self.f_b);
     }
-}
-
-/// Widest intermediate tensor in the graph (buffer sizing).
-fn max_width(g: &Graph) -> usize {
-    let mut cap = g.input_dim.max(g.output_dim);
-    for l in &g.layers {
-        cap = cap.max(match l {
-            FwLayer::Dense { dout, .. } => *dout,
-            FwLayer::Conv2d { k, cout, in_h, in_w, cin, .. } => {
-                ((in_h - k + 1) * (in_w - k + 1) * cout).max(in_h * in_w * cin)
-            }
-            FwLayer::MaxPool2 { in_shape } => in_shape.iter().product(),
-            _ => 0,
-        });
-    }
-    cap
 }
 
 #[cfg(test)]
@@ -327,6 +346,46 @@ mod tests {
         em.infer(&[-3.0, -3.0], &mut out).unwrap();
         // h = relu([-3*0.5 - 3*0.25 + 0.25, 3 - 6 - 0.5]) = [0, 0]; y = 0
         assert_eq!(out[0], 0.0);
+    }
+
+    #[test]
+    fn retarget_guards_warmed_capacity() {
+        let small = tiny_graph();
+        // a wider graph: 8->8 dense needs more scratch than tiny's 2
+        let wq = QuantWeights { m: vec![1; 64], frac: vec![1; 64] };
+        let bq = QuantWeights { m: vec![0; 8], frac: vec![0; 8] };
+        let wide = Graph {
+            name: "wide".into(),
+            input_dim: 8,
+            output_dim: 8,
+            layers: vec![
+                FwLayer::InputQuant {
+                    out: ActQ { scalar: true, specs: vec![FixedSpec::new(true, 8, 4)] },
+                },
+                FwLayer::Dense {
+                    din: 8,
+                    dout: 8,
+                    w: wq,
+                    b: bq,
+                    relu: false,
+                    out: ActQ { scalar: true, specs: vec![FixedSpec::new(true, 16, 8)] },
+                    acc_frac: 6,
+                },
+            ],
+        };
+        assert_eq!(Emulator::new(&small).capacity(), small.max_width());
+
+        // warmed-for-small engine must refuse the wider graph...
+        let mut em = Emulator::new(&small);
+        let err = em.retarget(&wide).unwrap_err();
+        assert!(format!("{err}").contains("warmed"), "{err}");
+
+        // ...while warmed-for-wide runs either graph, bit-exactly
+        let mut em = Emulator::new(&wide);
+        em.retarget(&small).unwrap();
+        let mut out = [0.0];
+        em.infer(&[1.0, 0.5], &mut out).unwrap();
+        assert_eq!(out[0], 1.3125); // same value as tiny_network_hand_checked
     }
 
     #[test]

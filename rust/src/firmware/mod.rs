@@ -345,6 +345,26 @@ impl Graph {
         total
     }
 
+    /// Widest intermediate tensor (element count): the scratch-buffer
+    /// capacity the emulators must warm up to run this graph. Depends
+    /// only on the layer topology — recalibrating the same architecture
+    /// never changes it, but a different architecture does (the
+    /// [`emulator::Emulator::retarget`] guard).
+    pub fn max_width(&self) -> usize {
+        let mut cap = self.input_dim.max(self.output_dim);
+        for l in &self.layers {
+            cap = cap.max(match l {
+                FwLayer::Dense { dout, .. } => *dout,
+                FwLayer::Conv2d { k, cout, in_h, in_w, cin, .. } => {
+                    ((in_h - k + 1) * (in_w - k + 1) * cout).max(in_h * in_w * cin)
+                }
+                FwLayer::MaxPool2 { in_shape } => in_shape.iter().product(),
+                _ => 0,
+            });
+        }
+        cap
+    }
+
     /// Overall weight sparsity (pruned fraction, §III.D.4).
     pub fn sparsity(&self) -> f64 {
         let (mut zeros, mut total) = (0usize, 0usize);

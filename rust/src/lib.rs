@@ -25,6 +25,10 @@
 //!                   runs at inference/training time).
 //! * [`coordinator`] — the training loop, β schedule, Pareto-front
 //!                   checkpointing, calibration (Eq. 3) and deployment.
+//! * [`serve`]     — the batched firmware serving engine: model
+//!                   registry, layer-major [`serve::BatchEmulator`]
+//!                   (bit-identical to sequential inference), bounded
+//!                   micro-batching request pipeline (`hgq serve`).
 //! * [`baselines`] — QKeras-style uniform / layer-wise quantization and
 //!                   magnitude-pruning baselines from the evaluation.
 //! * [`metrics`], [`util`] — shared helpers (accuracy/resolution; JSON,
@@ -47,4 +51,5 @@ pub mod nn;
 pub mod report;
 pub mod resource;
 pub mod runtime;
+pub mod serve;
 pub mod util;

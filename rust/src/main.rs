@@ -8,6 +8,8 @@
 //!   table3   muon tracker (Table III / Fig. V)
 //!   fig2     EBOPs vs LUT + c·DSP linearity (Fig. II)
 //!   ablate   constant-β (HGQ-c*) and granularity ablations
+//!   serve    batched firmware serving: closed-loop load through the
+//!            micro-batching pipeline, throughput/latency report
 //!   info     print model/backend info
 //!
 //! Every command takes `--backend native|pjrt` and `--threads N` (the
@@ -30,6 +32,7 @@ use hgq::coordinator::{deploy, BetaSchedule, TrainConfig};
 use hgq::data::splits_for;
 use hgq::resource::linear_fit;
 use hgq::runtime::{ModelRuntime, Runtime};
+use hgq::serve::{sequential_baseline, serve_closed_loop, Registry, ServeConfig};
 use hgq::util::cli::Args;
 
 fn main() {
@@ -54,12 +57,17 @@ fn run() -> Result<()> {
         "ablate" => cmd_ablate(&artifacts, args),
         "deploy" => cmd_deploy(&artifacts, args),
         "emulate" => cmd_emulate(&artifacts, args),
+        "serve" => cmd_serve(&artifacts, args),
         "help" | _ => {
             println!(
-                "usage: hgq <info|train|sweep|table1|table2|table3|fig2|ablate|deploy|emulate> \
+                "usage: hgq <info|train|sweep|table1|table2|table3|fig2|ablate|deploy|emulate\
+                 |serve> \
                  [--backend native|pjrt] [--threads N] [--artifacts DIR] [--model NAME] \
                  [--preset TASK] [--epochs N] [--beta B] [--seed S] [--checkpoint DIR] \
-                 [--json FILE] [--verbose]"
+                 [--json FILE] [--verbose]\n\
+                 serve: [--preset TASK|MODEL] [--checkpoint DIR] [--batch B] [--threads N] \
+                 [--requests R] [--queue-depth Q] [--flush-us U] [--calib-n N] [--pool-n N] \
+                 [--baseline-n N] [--json FILE]"
             );
             Ok(())
         }
@@ -279,6 +287,63 @@ fn cmd_emulate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
         } else {
             println!("  sample {i}: angle {:.2} mrad (truth {:.2})", out[0], splits.test.y_reg[i]);
         }
+    }
+    Ok(())
+}
+
+/// Batched firmware serving: resolve a deployed graph through the
+/// model registry (preset init-state deployment or a trained
+/// checkpoint), push a synthetic closed-loop load through the bounded
+/// micro-batching pipeline, and report throughput + latency — the CI
+/// `perf-smoke` job writes this report to `BENCH_serve.json`.
+fn cmd_serve(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    // serving always runs the bit-exact firmware emulator (native); the
+    // global --backend flag is accepted for CLI uniformity but only the
+    // native engine can back it
+    let backend = args.str("backend", "native");
+    if backend != "native" {
+        bail!("serve executes the firmware emulator and supports --backend native only");
+    }
+    let preset_key = args.str("preset", "jets");
+    let ckpt = args.str_opt("checkpoint");
+    let batch = args.usize("batch", 32);
+    let threads = args.usize("threads", 0);
+    let requests = args.usize("requests", 2000);
+    let queue_depth = args.usize("queue-depth", 256);
+    let flush_us = args.u64("flush-us", 200);
+    let calib_n = args.usize("calib-n", 512);
+    let pool_n = args.usize("pool-n", 512);
+    let baseline_n = args.usize("baseline-n", 256);
+    let json_out = args.str_opt("json");
+    args.finish()?;
+
+    let registry = Registry::new(artifacts.clone()).with_calib_samples(calib_n);
+    let graph = match &ckpt {
+        Some(dir) => registry.load_checkpoint(&preset_key, &PathBuf::from(dir))?,
+        None => registry.get(&preset_key)?,
+    };
+    let model = graph.name.clone();
+    println!(
+        "== serve {model} == ({} layers, {} -> {}, exact EBOPs {})",
+        graph.layers.len(),
+        graph.input_dim,
+        graph.output_dim,
+        graph.exact_ebops()
+    );
+
+    // deterministic synthetic request pool from the model's test stream
+    let splits = splits_for(&model, 0x5E12BE, 1, pool_n.max(1));
+    let pool = &splits.test.x;
+
+    let workers = if threads == 0 { hgq::util::shards::default_threads() } else { threads };
+    let cfg = ServeConfig { batch, workers, queue_depth, flush_us, requests, record_logits: false };
+    let seq_rps = sequential_baseline(&graph, pool, baseline_n)?;
+    let outcome = serve_closed_loop(&graph, pool, &cfg)?;
+    let report = outcome.report.with_baseline(seq_rps);
+    println!("{}", report.summary());
+    if let Some(path) = json_out {
+        std::fs::write(&path, report.to_json(&hgq::serve::git_sha()).to_string_pretty())?;
+        println!("(wrote {path})");
     }
     Ok(())
 }

@@ -184,6 +184,10 @@ impl Runtime {
 pub struct ModelRuntime {
     /// Static metadata of the loaded model (state layout, layers).
     pub meta: ModelMeta,
+    /// Worker-thread setting inherited from the loading [`Runtime`]
+    /// (`--threads N`, 0 = all cores). Deployment-time batched firmware
+    /// inference honors it alongside the backend's own executor.
+    pub threads: usize,
     exec: Box<dyn ModelExec>,
 }
 
@@ -209,7 +213,7 @@ impl ModelRuntime {
             BackendKind::Pjrt => bail!("pjrt backend not compiled in"),
         };
         let meta = exec.meta().clone();
-        Ok(ModelRuntime { meta, exec })
+        Ok(ModelRuntime { meta, threads: rt.threads, exec })
     }
 
     /// The model's initial packed state through its backend.

@@ -1,0 +1,372 @@
+//! Batched firmware inference: N samples advance through each layer
+//! together.
+//!
+//! The single-sample [`Emulator`](crate::firmware::emulator::Emulator)
+//! walks the whole layer stack once per sample, so every weight
+//! mantissa is re-fetched (and its zero-skip re-branched) per sample.
+//! [`BatchEmulator`] restructures the walk layer-major over
+//! **contiguous mantissa planes**: activations live as
+//! `[element][sample]` rows, so each weight is loaded once and swept
+//! across the whole micro-batch in a tight contiguous loop. Arithmetic
+//! is the identical exact i64 mantissa math — addition order only ever
+//! changes across *independent* accumulators — so the logits are
+//! **bit-identical** to sequential `Emulator::infer` calls for every
+//! batch size (proved in tests/serve_batch.rs).
+//!
+//! [`infer_all`] layers the fixed shard grid of [`crate::util::shards`]
+//! on top: a sample set is split into the fixed 16-shard partition,
+//! each shard runs its own `BatchEmulator`, and logits are gathered in
+//! ascending shard order — bit-identical for any `--threads N`.
+
+use anyhow::{bail, Result};
+
+use crate::firmware::{FwLayer, Graph};
+use crate::util::shards::{default_threads, run_shards, shard_ranges};
+
+/// Batched inference engine over one built graph: scratch planes are
+/// warmed once for `max_batch` rows and reused across calls (zero
+/// allocation per micro-batch).
+pub struct BatchEmulator<'g> {
+    g: &'g Graph,
+    /// widest tensor of the warmed graph (elements)
+    cap: usize,
+    /// allocated sample rows per element plane
+    rows: usize,
+    // ping-pong activation planes, element-major: value of element `i`
+    // for sample `s` lives at `i * rows + s`
+    m_a: Vec<i64>,
+    f_a: Vec<i32>,
+    m_b: Vec<i64>,
+    f_b: Vec<i32>,
+    /// accumulator row: one output element across the batch
+    acc: Vec<i64>,
+}
+
+impl<'g> BatchEmulator<'g> {
+    /// Engine over a built graph, warmed for micro-batches of up to
+    /// `max_batch` samples.
+    pub fn new(g: &'g Graph, max_batch: usize) -> Self {
+        let cap = g.max_width();
+        let rows = max_batch.max(1);
+        BatchEmulator {
+            g,
+            cap,
+            rows,
+            m_a: vec![0; cap * rows],
+            f_a: vec![0; cap * rows],
+            m_b: vec![0; cap * rows],
+            f_b: vec![0; cap * rows],
+            acc: vec![0; rows],
+        }
+    }
+
+    /// Largest micro-batch this engine was warmed for.
+    pub fn batch_capacity(&self) -> usize {
+        self.rows
+    }
+
+    /// Point the warmed engine at another built graph (the registry
+    /// swaps redeployed graphs under live workers). Errors when the new
+    /// graph needs wider scratch planes than warmed for, instead of
+    /// panicking out-of-bounds mid-batch.
+    pub fn retarget(&mut self, g: &'g Graph) -> Result<()> {
+        let need = g.max_width();
+        if need > self.cap {
+            bail!(
+                "graph '{}' needs scratch width {need} but batch emulator was warmed for {} \
+                 — construct a new BatchEmulator for the wider graph",
+                g.name,
+                self.cap
+            );
+        }
+        self.g = g;
+        Ok(())
+    }
+
+    /// Run a micro-batch: samples are rows of `x` (row-major,
+    /// `n * input_dim` values), logits rows of `out`. Returns the
+    /// number of samples inferred.
+    pub fn infer_batch(&mut self, x: &[f32], out: &mut [f64]) -> Result<usize> {
+        let g = self.g;
+        let din = g.input_dim;
+        if din == 0 || x.len() % din != 0 {
+            bail!("x has {} values, not a multiple of input dim {din}", x.len());
+        }
+        let n = x.len() / din;
+        if n > self.rows {
+            bail!("micro-batch {n} exceeds warmed capacity {} rows", self.rows);
+        }
+        if out.len() != n * g.output_dim {
+            bail!("out has {} values, expected {} x {}", out.len(), n, g.output_dim);
+        }
+        if n == 0 {
+            return Ok(0);
+        }
+        let r = self.rows;
+        let mut n_cur = 0usize;
+
+        for layer in &g.layers {
+            match layer {
+                FwLayer::InputQuant { out: q } => {
+                    n_cur = din;
+                    for i in 0..din {
+                        let s = q.spec(i);
+                        let fb = s.frac_bits();
+                        for sa in 0..n {
+                            self.m_a[i * r + sa] = s.quantize(x[sa * din + i] as f64);
+                        }
+                        self.f_a[i * r..i * r + n].fill(fb);
+                    }
+                }
+                FwLayer::Dense { din: d_in, dout, w, b, relu, out: q, acc_frac } => {
+                    debug_assert_eq!(n_cur, *d_in);
+                    for j in 0..*dout {
+                        // bias aligned to the accumulator LSB; integer
+                        // addition commutes exactly, so folding it in
+                        // first is bit-identical to the sequential path
+                        self.acc[..n].fill(b.m[j] << (acc_frac - b.frac[j]));
+                        for i in 0..*d_in {
+                            let idx = i * dout + j;
+                            let mw = w.m[idx];
+                            if mw == 0 {
+                                continue;
+                            }
+                            let wf = w.frac[idx];
+                            for sa in 0..n {
+                                let ma = self.m_a[i * r + sa];
+                                if ma == 0 {
+                                    continue;
+                                }
+                                let shift = acc_frac - (self.f_a[i * r + sa] + wf);
+                                debug_assert!(shift >= 0);
+                                self.acc[sa] += (ma * mw) << shift;
+                            }
+                        }
+                        let s = q.spec(j);
+                        let fb = s.frac_bits();
+                        for sa in 0..n {
+                            let mut a = self.acc[sa];
+                            if *relu {
+                                a = a.max(0);
+                            }
+                            self.m_b[j * r + sa] = s.requantize(a, *acc_frac);
+                        }
+                        self.f_b[j * r..j * r + n].fill(fb);
+                    }
+                    n_cur = *dout;
+                    self.swap();
+                }
+                FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, b, relu, out: q, acc_frac } => {
+                    let (oh, ow) = (in_h - k + 1, in_w - k + 1);
+                    debug_assert_eq!(n_cur, in_h * in_w * cin);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for co in 0..*cout {
+                                self.acc[..n].fill(b.m[co] << (acc_frac - b.frac[co]));
+                                for ky in 0..*k {
+                                    let iy = oy + ky;
+                                    for kx in 0..*k {
+                                        let ix = ox + kx;
+                                        let a_base = (iy * in_w + ix) * cin;
+                                        let w_base = ((ky * k + kx) * cin) * cout + co;
+                                        for ci in 0..*cin {
+                                            let widx = w_base + ci * cout;
+                                            let mw = w.m[widx];
+                                            if mw == 0 {
+                                                continue;
+                                            }
+                                            let wf = w.frac[widx];
+                                            let e = (a_base + ci) * r;
+                                            for sa in 0..n {
+                                                let ma = self.m_a[e + sa];
+                                                if ma == 0 {
+                                                    continue;
+                                                }
+                                                let shift = acc_frac - (self.f_a[e + sa] + wf);
+                                                self.acc[sa] += (ma * mw) << shift;
+                                            }
+                                        }
+                                    }
+                                }
+                                let oidx = (oy * ow + ox) * cout + co;
+                                let s = q.spec(oidx);
+                                let fb = s.frac_bits();
+                                for sa in 0..n {
+                                    let mut a = self.acc[sa];
+                                    if *relu {
+                                        a = a.max(0);
+                                    }
+                                    self.m_b[oidx * r + sa] = s.requantize(a, *acc_frac);
+                                }
+                                self.f_b[oidx * r..oidx * r + n].fill(fb);
+                            }
+                        }
+                    }
+                    n_cur = oh * ow * cout;
+                    self.swap();
+                }
+                FwLayer::MaxPool2 { in_shape } => {
+                    let [h, w, c] = *in_shape;
+                    let (oh, ow) = (h / 2, w / 2);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ch in 0..c {
+                                let oidx = (oy * ow + ox) * c + ch;
+                                for sa in 0..n {
+                                    let mut best = i64::MIN;
+                                    let mut bf = 0i32;
+                                    for dy in 0..2 {
+                                        for dx in 0..2 {
+                                            let idx = ((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ch;
+                                            // uniform frac within a pooled
+                                            // group (layer-gran act
+                                            // quantizers), as in Emulator
+                                            debug_assert!(
+                                                best == i64::MIN || self.f_a[idx * r + sa] == bf,
+                                                "maxpool over mixed LSBs"
+                                            );
+                                            if self.m_a[idx * r + sa] > best {
+                                                best = self.m_a[idx * r + sa];
+                                                bf = self.f_a[idx * r + sa];
+                                            }
+                                        }
+                                    }
+                                    self.m_b[oidx * r + sa] = best;
+                                    self.f_b[oidx * r + sa] = bf;
+                                }
+                            }
+                        }
+                    }
+                    n_cur = oh * ow * c;
+                    self.swap();
+                }
+                FwLayer::Flatten => { /* planes are already flat */ }
+            }
+            debug_assert!(
+                n_cur <= self.cap,
+                "tensor width {n_cur} exceeds warmed capacity {}",
+                self.cap
+            );
+        }
+
+        for j in 0..g.output_dim {
+            for sa in 0..n {
+                out[sa * g.output_dim + j] =
+                    self.m_a[j * r + sa] as f64 * crate::fixed::exp2i(-self.f_a[j * r + sa]);
+            }
+        }
+        Ok(n)
+    }
+
+    fn swap(&mut self) {
+        std::mem::swap(&mut self.m_a, &mut self.m_b);
+        std::mem::swap(&mut self.f_a, &mut self.f_b);
+    }
+}
+
+/// Bulk batched inference over a whole sample set, sharded across
+/// worker threads on the fixed 16-shard grid: each shard runs its own
+/// [`BatchEmulator`] in micro-batches of `micro_batch`, and logits are
+/// gathered in ascending shard order. `threads == 0` selects all
+/// cores; results are bit-identical for every value.
+pub fn infer_all(
+    g: &Graph,
+    x: &[f32],
+    out: &mut [f64],
+    threads: usize,
+    micro_batch: usize,
+) -> Result<()> {
+    let din = g.input_dim;
+    let k = g.output_dim;
+    if din == 0 || x.len() % din != 0 {
+        bail!("x has {} values, not a multiple of input dim {din}", x.len());
+    }
+    let n = x.len() / din;
+    if out.len() != n * k {
+        bail!("out has {} values, expected {} x {k}", out.len(), n);
+    }
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let mb = micro_batch.max(1);
+    let ranges = shard_ranges(n);
+    let shard_logits = run_shards(threads, ranges.len(), |si| -> Result<Vec<f64>> {
+        let (start, rows) = ranges[si];
+        let mut em = BatchEmulator::new(g, mb.min(rows));
+        let mut logits = vec![0.0f64; rows * k];
+        let mut done = 0usize;
+        while done < rows {
+            let take = mb.min(rows - done);
+            let s0 = start + done;
+            em.infer_batch(
+                &x[s0 * din..(s0 + take) * din],
+                &mut logits[done * k..(done + take) * k],
+            )?;
+            done += take;
+        }
+        Ok(logits)
+    });
+    for (si, sl) in shard_logits.into_iter().enumerate() {
+        let (start, rows) = ranges[si];
+        out[start * k..(start + rows) * k].copy_from_slice(&sl?);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::firmware::emulator::Emulator;
+    use crate::serve::testutil::{samples, tiny_graph as graph};
+
+    #[test]
+    fn batch_matches_sequential_bitwise() {
+        let g = graph();
+        let x = samples(9);
+        let mut seq = vec![0.0f64; 9 * 2];
+        let mut em = Emulator::new(&g);
+        for s in 0..9 {
+            let (xi, oi) = (&x[s * 3..(s + 1) * 3], &mut seq[s * 2..(s + 1) * 2]);
+            em.infer(xi, oi).unwrap();
+        }
+        for bsz in [1usize, 3, 4, 9] {
+            let mut bem = BatchEmulator::new(&g, bsz);
+            let mut got = vec![0.0f64; 9 * 2];
+            let mut done = 0;
+            while done < 9 {
+                let take = bsz.min(9 - done);
+                let (xs, os) =
+                    (&x[done * 3..(done + take) * 3], &mut got[done * 2..(done + take) * 2]);
+                bem.infer_batch(xs, os).unwrap();
+                done += take;
+            }
+            assert_eq!(got, seq, "batch size {bsz} diverged from sequential");
+        }
+    }
+
+    #[test]
+    fn infer_all_is_thread_count_invariant() {
+        let g = graph();
+        let x = samples(37); // odd count: uneven shards
+        let mut want = vec![0.0f64; 37 * 2];
+        infer_all(&g, &x, &mut want, 1, 5).unwrap();
+        for threads in [2usize, 3, 16] {
+            let mut got = vec![0.0f64; 37 * 2];
+            infer_all(&g, &x, &mut got, threads, 4).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn shape_and_capacity_errors() {
+        let g = graph();
+        let mut bem = BatchEmulator::new(&g, 2);
+        let mut out = vec![0.0f64; 6];
+        // 3 samples through a 2-row engine
+        assert!(bem.infer_batch(&samples(3), &mut out).is_err());
+        // ragged x
+        assert!(bem.infer_batch(&[0.0; 4], &mut out[..2]).is_err());
+        // wrong out size
+        assert!(bem.infer_batch(&samples(1), &mut out[..3]).is_err());
+        // empty batch is a no-op
+        assert_eq!(bem.infer_batch(&[], &mut []).unwrap(), 0);
+    }
+}

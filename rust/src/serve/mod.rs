@@ -1,0 +1,121 @@
+//! Batched firmware serving engine (`hgq serve`).
+//!
+//! The throughput layer over the bit-exact firmware emulator — the
+//! "millions of users" path of the ROADMAP north star. Three pieces,
+//! each independently testable:
+//!
+//! * [`registry`] — named, cached deployed graphs: built in-process
+//!   from presets (zero artifacts) or loaded from
+//!   `coordinator::checkpoint` directories, shared behind `Arc`.
+//! * [`batch`] — [`BatchEmulator`]: N samples advance through each
+//!   layer together over contiguous element-major mantissa planes,
+//!   amortizing per-layer dispatch and weight fetches; logits are
+//!   **bit-identical** to sequential `Emulator::infer` calls for every
+//!   batch size and (via [`batch::infer_all`]'s fixed shard grid)
+//!   every thread count.
+//! * [`pipeline`] — the request path: bounded MPSC queue
+//!   (backpressure), micro-batching worker shards (flush on batch-full
+//!   or deadline), per-request latency accounting, and a synthetic
+//!   closed-loop load generator emitting the `BENCH_serve.json`
+//!   throughput/latency report.
+//!
+//! The full serving contract is documented in ARCHITECTURE.md §Serving
+//! layer; CI's `perf-smoke` job runs `hgq serve --preset jets` every
+//! push and uploads the report, seeding the bench trajectory.
+
+pub mod batch;
+pub mod pipeline;
+pub mod registry;
+
+pub use batch::{infer_all, BatchEmulator};
+pub use pipeline::{sequential_baseline, serve_closed_loop, ServeConfig, ServeOutcome, ServeReport};
+pub use registry::Registry;
+
+/// Git revision for bench provenance: `GITHUB_SHA` in CI, else
+/// `git rev-parse HEAD`, else `"unknown"`.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Shared fixtures for the serve test modules.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::firmware::{ActQ, FwLayer, Graph, QuantWeights};
+    use crate::fixed::FixedSpec;
+
+    /// Small 3->4->2 dense graph with per-element activation specs.
+    pub fn tiny_graph() -> Graph {
+        let in_q = ActQ {
+            scalar: false,
+            specs: vec![
+                FixedSpec::new(true, 8, 4),
+                FixedSpec::new(true, 7, 3),
+                FixedSpec::new(true, 6, 3),
+            ],
+        };
+        let w0 = QuantWeights {
+            m: vec![2, -4, 1, 8, 3, 0, -2, 5, 1, 1, -1, 2],
+            frac: vec![2; 12],
+        };
+        let b0 = QuantWeights { m: vec![1, -2, 0, 3], frac: vec![2; 4] };
+        let hid_q = ActQ {
+            scalar: false,
+            specs: vec![
+                FixedSpec::new(false, 8, 4),
+                FixedSpec::new(false, 9, 5),
+                FixedSpec::new(false, 8, 4),
+                FixedSpec::new(false, 7, 4),
+            ],
+        };
+        let w1 = QuantWeights { m: vec![3, -3, 1, 2, -1, 4, 0, -2], frac: vec![1; 8] };
+        let b1 = QuantWeights { m: vec![1, 0], frac: vec![1, 0] };
+        let out_q = ActQ {
+            scalar: false,
+            specs: vec![FixedSpec::new(true, 14, 7), FixedSpec::new(true, 14, 7)],
+        };
+        Graph {
+            name: "tiny_serve".into(),
+            input_dim: 3,
+            output_dim: 2,
+            layers: vec![
+                FwLayer::InputQuant { out: in_q },
+                FwLayer::Dense {
+                    din: 3,
+                    dout: 4,
+                    w: w0,
+                    b: b0,
+                    relu: true,
+                    out: hid_q,
+                    acc_frac: 6,
+                },
+                FwLayer::Dense {
+                    din: 4,
+                    dout: 2,
+                    w: w1,
+                    b: b1,
+                    relu: false,
+                    out: out_q,
+                    acc_frac: 7,
+                },
+            ],
+        }
+    }
+
+    /// `n` deterministic 3-feature sample rows.
+    pub fn samples(n: usize) -> Vec<f32> {
+        (0..n * 3).map(|i| ((i * 7 % 23) as f32 - 11.0) / 8.0).collect()
+    }
+}

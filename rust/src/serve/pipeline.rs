@@ -1,0 +1,433 @@
+//! Request pipeline: bounded queue → micro-batching worker shards →
+//! per-request latency accounting.
+//!
+//! The serving contract (also documented in ARCHITECTURE.md §Serving
+//! layer):
+//!
+//! * **backpressure** — requests enter a *bounded* MPSC queue
+//!   (`queue_depth`); when workers fall behind, `send` blocks the load
+//!   generator instead of growing an unbounded backlog. The closed
+//!   loop therefore degrades to the pipeline's sustainable throughput,
+//!   never to OOM.
+//! * **micro-batching** — a worker takes the queue lock, blocks for
+//!   the first request, then drains until its micro-batch is full
+//!   (`batch`) or the flush deadline (`flush_us`) expires — whichever
+//!   comes first. Low load flushes near-singleton batches (latency
+//!   bound); high load flushes full batches (throughput bound).
+//! * **accounting** — per-request latency is enqueue→batch-completion
+//!   (queueing + batching + inference), reported as p50/p99/mean/max.
+//! * **determinism** — each request's logits come from one
+//!   [`BatchEmulator`] micro-batch, which is bit-identical to a
+//!   sequential `Emulator::infer` of that sample regardless of batch
+//!   fill, worker count or scheduling (tests/serve_batch.rs).
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::batch::BatchEmulator;
+use crate::firmware::emulator::Emulator;
+use crate::firmware::Graph;
+use crate::util::json::Json;
+use crate::util::shards::default_threads;
+
+/// Knobs of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// micro-batch flush size (requests per emulator call)
+    pub batch: usize,
+    /// worker shards, each owning a warmed [`BatchEmulator`]
+    pub workers: usize,
+    /// bounded request-queue capacity (backpressure threshold)
+    pub queue_depth: usize,
+    /// micro-batch flush deadline in µs (latency bound under low load)
+    pub flush_us: u64,
+    /// total closed-loop requests to serve
+    pub requests: usize,
+    /// keep every response's logits (tests / verification; costs memory)
+    pub record_logits: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch: 32,
+            workers: default_threads(),
+            queue_depth: 256,
+            flush_us: 200,
+            requests: 2000,
+            record_logits: false,
+        }
+    }
+}
+
+/// Throughput/latency report of one serving run (the `BENCH_serve.json`
+/// payload).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// served graph name
+    pub model: String,
+    /// requests completed
+    pub requests: usize,
+    /// micro-batch flush size
+    pub batch: usize,
+    /// worker shard count
+    pub workers: usize,
+    /// bounded queue capacity
+    pub queue_depth: usize,
+    /// flush deadline (µs)
+    pub flush_us: u64,
+    /// end-to-end wall clock (ms)
+    pub wall_ms: f64,
+    /// served requests per second
+    pub throughput_rps: f64,
+    /// median request latency (µs)
+    pub p50_us: f64,
+    /// 99th-percentile request latency (µs)
+    pub p99_us: f64,
+    /// mean request latency (µs)
+    pub mean_us: f64,
+    /// worst request latency (µs)
+    pub max_us: f64,
+    /// micro-batches flushed
+    pub batches: usize,
+    /// mean requests per flushed micro-batch
+    pub mean_batch_fill: f64,
+    /// single-sample sequential `Emulator` throughput on the same graph
+    /// (inferences per second; 0 when not measured)
+    pub seq_baseline_rps: f64,
+    /// `throughput_rps / seq_baseline_rps` (0 when no baseline)
+    pub speedup_vs_sequential: f64,
+}
+
+impl ServeReport {
+    /// Attach the sequential-emulator baseline and derive the speedup.
+    pub fn with_baseline(mut self, seq_rps: f64) -> ServeReport {
+        self.seq_baseline_rps = seq_rps;
+        self.speedup_vs_sequential =
+            if seq_rps > 0.0 { self.throughput_rps / seq_rps } else { 0.0 };
+        self
+    }
+
+    /// Machine-readable report (the CI `BENCH_serve.json` artifact).
+    pub fn to_json(&self, git_sha: &str) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("git_sha", Json::str(git_sha)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("flush_us", Json::Num(self.flush_us as f64)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("p50", Json::Num(self.p50_us)),
+                    ("p99", Json::Num(self.p99_us)),
+                    ("mean", Json::Num(self.mean_us)),
+                    ("max", Json::Num(self.max_us)),
+                ]),
+            ),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
+            ("seq_baseline_rps", Json::Num(self.seq_baseline_rps)),
+            ("speedup_vs_sequential", Json::Num(self.speedup_vs_sequential)),
+        ])
+    }
+
+    /// Human-readable multi-line summary for the CLI.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "served {} requests in {:.1} ms: {:.0} req/s ({} workers, batch {}, queue {})\n\
+             latency  p50 {:.1} µs  p99 {:.1} µs  mean {:.1} µs  max {:.1} µs\n\
+             micro-batches: {} (mean fill {:.1} / {})",
+            self.requests,
+            self.wall_ms,
+            self.throughput_rps,
+            self.workers,
+            self.batch,
+            self.queue_depth,
+            self.p50_us,
+            self.p99_us,
+            self.mean_us,
+            self.max_us,
+            self.batches,
+            self.mean_batch_fill,
+            self.batch,
+        );
+        if self.seq_baseline_rps > 0.0 {
+            s.push_str(&format!(
+                "\nsequential baseline: {:.0} inf/s -> {:.2}x speedup",
+                self.seq_baseline_rps, self.speedup_vs_sequential
+            ));
+        }
+        s
+    }
+}
+
+/// A serving run's outputs: the report plus (when requested) every
+/// response's logits indexed by request id.
+pub struct ServeOutcome {
+    /// throughput/latency report
+    pub report: ServeReport,
+    /// logits per request id (`Some` iff `record_logits` was set)
+    pub logits: Option<Vec<Vec<f64>>>,
+}
+
+struct Request {
+    id: u32,
+    row: usize,
+    t_enq: Instant,
+}
+
+#[derive(Default)]
+struct WorkerOut {
+    lat_ns: Vec<u64>,
+    logits: Vec<(u32, Vec<f64>)>,
+    batches: usize,
+    served: usize,
+}
+
+/// Synthetic closed-loop load run: `cfg.requests` requests drawn
+/// round-robin from the sample `pool` (row-major, `rows × input_dim`)
+/// are pushed through the bounded queue and served by `cfg.workers`
+/// micro-batching shards. Backpressure comes from the bounded queue:
+/// the generator blocks when it outruns the workers.
+pub fn serve_closed_loop(g: &Graph, pool: &[f32], cfg: &ServeConfig) -> Result<ServeOutcome> {
+    let din = g.input_dim;
+    if din == 0 || pool.is_empty() || pool.len() % din != 0 {
+        bail!("sample pool has {} values, not a multiple of input dim {din}", pool.len());
+    }
+    if cfg.requests == 0 {
+        bail!("requests must be >= 1");
+    }
+    let pool_rows = pool.len() / din;
+    let workers = cfg.workers.max(1);
+    let batch = cfg.batch.max(1);
+    let depth = cfg.queue_depth.max(1);
+
+    let (tx, rx) = mpsc::sync_channel::<Request>(depth);
+    let rx = Mutex::new(rx);
+    let t0 = Instant::now();
+    let outs: Vec<WorkerOut> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let rx = &rx;
+                s.spawn(move || worker_loop(g, pool, batch, cfg, rx))
+            })
+            .collect();
+        // closed-loop generator: a full queue blocks the send (the
+        // backpressure contract), so offered load tracks service rate
+        for i in 0..cfg.requests {
+            let req = Request { id: i as u32, row: i % pool_rows, t_enq: Instant::now() };
+            if tx.send(req).is_err() {
+                break; // all workers gone (can only happen on panic)
+            }
+        }
+        drop(tx); // hang up: workers drain the queue, then exit
+        handles.into_iter().map(|h| h.join().expect("serve worker panicked")).collect()
+    });
+    let wall = t0.elapsed();
+
+    let mut lat: Vec<u64> = outs.iter().flat_map(|o| o.lat_ns.iter().copied()).collect();
+    lat.sort_unstable();
+    let served: usize = outs.iter().map(|o| o.served).sum();
+    let batches: usize = outs.iter().map(|o| o.batches).sum();
+    if served != cfg.requests {
+        bail!("served {served} of {} requests (worker loss?)", cfg.requests);
+    }
+    let mut logits_by_id = cfg.record_logits.then(|| vec![Vec::new(); cfg.requests]);
+    if let Some(v) = logits_by_id.as_mut() {
+        for o in outs {
+            for (id, lg) in o.logits {
+                v[id as usize] = lg;
+            }
+        }
+    }
+
+    let us = |ns: u64| ns as f64 / 1e3;
+    let pct = |q: f64| -> f64 {
+        let idx = ((lat.len() - 1) as f64 * q).round() as usize;
+        us(lat[idx])
+    };
+    let mean_ns = lat.iter().sum::<u64>() as f64 / lat.len() as f64;
+    let report = ServeReport {
+        model: g.name.clone(),
+        requests: served,
+        batch,
+        workers,
+        queue_depth: depth,
+        flush_us: cfg.flush_us,
+        wall_ms: wall.as_secs_f64() * 1e3,
+        throughput_rps: served as f64 / wall.as_secs_f64().max(1e-9),
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+        mean_us: mean_ns / 1e3,
+        max_us: us(*lat.last().expect("non-empty latencies")),
+        batches,
+        mean_batch_fill: served as f64 / batches.max(1) as f64,
+        seq_baseline_rps: 0.0,
+        speedup_vs_sequential: 0.0,
+    };
+    Ok(ServeOutcome { report, logits: logits_by_id })
+}
+
+/// One worker shard: drain micro-batches off the shared queue and run
+/// them through a warmed [`BatchEmulator`].
+fn worker_loop(
+    g: &Graph,
+    pool: &[f32],
+    batch: usize,
+    cfg: &ServeConfig,
+    rx: &Mutex<Receiver<Request>>,
+) -> WorkerOut {
+    let din = g.input_dim;
+    let k = g.output_dim;
+    let mut em = BatchEmulator::new(g, batch);
+    let mut xbuf = vec![0.0f32; batch * din];
+    let mut obuf = vec![0.0f64; batch * k];
+    let mut reqs: Vec<Request> = Vec::with_capacity(batch);
+    let mut out = WorkerOut::default();
+    loop {
+        reqs.clear();
+        {
+            // micro-batcher: exactly one worker holds the queue lock,
+            // blocking for the first request then draining until
+            // batch-full or deadline
+            let q = rx.lock().expect("serve queue lock");
+            match q.recv() {
+                Ok(r) => reqs.push(r),
+                Err(_) => break, // queue drained and generator hung up
+            }
+            let deadline = Instant::now() + Duration::from_micros(cfg.flush_us);
+            while reqs.len() < batch {
+                let wait = deadline.saturating_duration_since(Instant::now());
+                if wait.is_zero() {
+                    break;
+                }
+                match q.recv_timeout(wait) {
+                    Ok(r) => reqs.push(r),
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        } // queue lock released before the compute phase
+        let nb = reqs.len();
+        for (bi, rq) in reqs.iter().enumerate() {
+            xbuf[bi * din..(bi + 1) * din]
+                .copy_from_slice(&pool[rq.row * din..(rq.row + 1) * din]);
+        }
+        em.infer_batch(&xbuf[..nb * din], &mut obuf[..nb * k])
+            .expect("batch emulator shapes are pre-validated");
+        let done = Instant::now();
+        for (bi, rq) in reqs.iter().enumerate() {
+            out.lat_ns.push(done.saturating_duration_since(rq.t_enq).as_nanos() as u64);
+            if cfg.record_logits {
+                out.logits.push((rq.id, obuf[bi * k..(bi + 1) * k].to_vec()));
+            }
+        }
+        out.batches += 1;
+        out.served += nb;
+    }
+    out
+}
+
+/// Single-sample sequential baseline on the same graph: `samples`
+/// inferences through the scalar [`Emulator`], returned as
+/// inferences/second (the denominator of `speedup_vs_sequential`).
+pub fn sequential_baseline(g: &Graph, pool: &[f32], samples: usize) -> Result<f64> {
+    let din = g.input_dim;
+    if din == 0 || pool.is_empty() || pool.len() % din != 0 {
+        bail!("sample pool has {} values, not a multiple of input dim {din}", pool.len());
+    }
+    let pool_rows = pool.len() / din;
+    let n = samples.max(1);
+    let mut em = Emulator::new(g);
+    let mut out = vec![0.0f64; g.output_dim];
+    let t0 = Instant::now();
+    for i in 0..n {
+        let row = i % pool_rows;
+        em.infer(&pool[row * din..(row + 1) * din], &mut out)?;
+    }
+    Ok(n as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::testutil::{samples, tiny_graph};
+
+    #[test]
+    fn closed_loop_serves_every_request_bit_exactly() {
+        let g = tiny_graph();
+        let pool = samples(11);
+        // sequential reference for every pool row
+        let mut em = Emulator::new(&g);
+        let mut want = vec![0.0f64; 11 * 2];
+        for i in 0..11 {
+            let (xi, oi) = (&pool[i * 3..(i + 1) * 3], &mut want[i * 2..(i + 1) * 2]);
+            em.infer(xi, oi).unwrap();
+        }
+        for workers in [1usize, 3, 16] {
+            let cfg = ServeConfig {
+                batch: 5, // odd fill vs 64 requests
+                workers,
+                queue_depth: 8,
+                flush_us: 50,
+                requests: 64,
+                record_logits: true,
+            };
+            let outcome = serve_closed_loop(&g, &pool, &cfg).unwrap();
+            let r = &outcome.report;
+            assert_eq!(r.requests, 64);
+            assert!(r.throughput_rps > 0.0);
+            assert!(r.p50_us <= r.p99_us && r.p99_us <= r.max_us + 1e-9);
+            assert!(r.mean_batch_fill <= 5.0 + 1e-9);
+            assert!(r.batches >= 64 / 5);
+            let logits = outcome.logits.expect("recorded");
+            assert_eq!(logits.len(), 64);
+            for (id, lg) in logits.iter().enumerate() {
+                let row = id % 11;
+                assert_eq!(&lg[..], &want[row * 2..(row + 1) * 2], "workers={workers} id={id}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_queue_backpressures_but_completes() {
+        let g = tiny_graph();
+        let pool = samples(4);
+        let cfg = ServeConfig {
+            batch: 2,
+            workers: 2,
+            queue_depth: 1, // generator must block on nearly every send
+            flush_us: 10,
+            requests: 40,
+            record_logits: false,
+        };
+        let outcome = serve_closed_loop(&g, &pool, &cfg).unwrap();
+        assert_eq!(outcome.report.requests, 40);
+        assert!(outcome.logits.is_none());
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let g = tiny_graph();
+        let cfg = ServeConfig::default();
+        assert!(serve_closed_loop(&g, &[], &cfg).is_err());
+        assert!(serve_closed_loop(&g, &[0.0; 4], &cfg).is_err()); // ragged pool
+        let zero = ServeConfig { requests: 0, ..cfg };
+        assert!(serve_closed_loop(&g, &samples(2), &zero).is_err());
+        assert!(sequential_baseline(&g, &[], 10).is_err());
+    }
+
+    #[test]
+    fn baseline_measures_positive_rate() {
+        let g = tiny_graph();
+        let rps = sequential_baseline(&g, &samples(3), 50).unwrap();
+        assert!(rps > 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Model registry: named, cached deployed firmware graphs.
+//!
+//! The serving engine never trains — it executes **deployed** graphs.
+//! The registry resolves a model key to a built [`Graph`] from one of
+//! two sources and caches the result behind an `Arc`, so concurrent
+//! workers share one immutable graph:
+//!
+//! * **presets** — the built-in zero-artifact path: synthesize the
+//!   named preset through the native backend, calibrate its packed
+//!   state on a deterministic calibration split, and build the firmware
+//!   graph in-process (`hgq serve --preset jets` needs no files). The
+//!   packed state is the preset's init state — serving throughput and
+//!   bit-exactness do not depend on training quality.
+//! * **checkpoints** — `coordinator::deploy`-style real deployments:
+//!   [`Registry::load_checkpoint`] reads a `checkpoint::save` directory
+//!   (`state.bin` + `info.json`), calibrates that trained state and
+//!   builds its graph.
+//!
+//! Task aliases (`jets`, `muon`, `svhn`) resolve to the per-parameter
+//! paper models, so the CLI accepts either spelling.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{calibrate, checkpoint};
+use crate::data::splits_for;
+use crate::firmware::Graph;
+use crate::runtime::{ModelRuntime, Runtime};
+
+/// Seed of the deterministic calibration split every registry build
+/// uses (distinct from the training-split seeds).
+const CALIB_SEED: u64 = 0xCA11B;
+
+/// Named cache of deployed firmware graphs (see module docs).
+pub struct Registry {
+    artifacts: PathBuf,
+    calib_n: usize,
+    cache: Mutex<HashMap<String, Arc<Graph>>>,
+}
+
+impl Registry {
+    /// Registry over an artifacts directory (presets synthesize
+    /// in-process when no artifacts exist there — the hermetic path).
+    pub fn new(artifacts: impl Into<PathBuf>) -> Registry {
+        Registry { artifacts: artifacts.into(), calib_n: 512, cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Number of calibration samples graph builds run through the
+    /// quantized forward pass (default 512; lower it for fast tests,
+    /// raise it for tighter Eq. 3 integer bits).
+    pub fn with_calib_samples(mut self, n: usize) -> Registry {
+        self.calib_n = n.max(1);
+        self
+    }
+
+    /// Resolve task aliases to preset model names (`jets` → `jets_pp`);
+    /// full model names pass through unchanged.
+    pub fn resolve(key: &str) -> &str {
+        match key {
+            "jets" => "jets_pp",
+            "muon" => "muon_pp",
+            "svhn" => "svhn_stream",
+            other => other,
+        }
+    }
+
+    /// The deployed graph for `key`, building and caching it on first
+    /// use. The cache lock is held across the build — concurrent
+    /// callers of a cold key wait instead of building twice.
+    pub fn get(&self, key: &str) -> Result<Arc<Graph>> {
+        let model = Self::resolve(key).to_string();
+        let mut cache = self.cache.lock().expect("registry lock");
+        if let Some(g) = cache.get(&model) {
+            return Ok(g.clone());
+        }
+        let g = Arc::new(
+            self.build(&model, None).with_context(|| format!("building graph '{model}'"))?,
+        );
+        cache.insert(model, g.clone());
+        Ok(g)
+    }
+
+    /// Build, cache (under `key`, alias-resolved exactly like
+    /// [`Registry::get`] so the two paths share entries) and return the
+    /// graph of a trained checkpoint directory written by
+    /// `coordinator::checkpoint::save`.
+    pub fn load_checkpoint(&self, key: &str, dir: &Path) -> Result<Arc<Graph>> {
+        let key = Self::resolve(key).to_string();
+        let (info, state) = checkpoint::load(dir)?;
+        let g = Arc::new(
+            self.build(&info.model, Some(&state))
+                .with_context(|| format!("deploying checkpoint {}", dir.display()))?,
+        );
+        let mut cache = self.cache.lock().expect("registry lock");
+        cache.insert(key, g.clone());
+        Ok(g)
+    }
+
+    /// Register an externally built graph under `key` (tests, custom
+    /// deployments).
+    pub fn insert(&self, key: &str, g: Graph) -> Arc<Graph> {
+        let g = Arc::new(g);
+        self.cache.lock().expect("registry lock").insert(key.to_string(), g.clone());
+        g
+    }
+
+    /// Names currently cached (sorted, for `serve` listings).
+    pub fn cached(&self) -> Vec<String> {
+        let mut keys: Vec<String> =
+            self.cache.lock().expect("registry lock").keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Calibrate `state` (or the preset init state) and build the
+    /// firmware graph — the deploy pipeline minus quality reporting.
+    fn build(&self, model: &str, state: Option<&[f32]>) -> Result<Graph> {
+        let rt = Runtime::new()?;
+        let mr = ModelRuntime::load(&rt, &self.artifacts, model)?;
+        let owned;
+        let state = match state {
+            Some(s) => s,
+            None => {
+                owned = mr.init_state();
+                owned.as_slice()
+            }
+        };
+        let splits = splits_for(model, CALIB_SEED, self.calib_n, 1);
+        let calib = calibrate(&mr, state, &[&splits.train])?;
+        Graph::build(&mr.meta, state, &calib)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Registry {
+        // tiny calibration split keeps dev-profile tests fast
+        Registry::new("artifacts").with_calib_samples(32)
+    }
+
+    #[test]
+    fn get_builds_once_and_caches() {
+        let r = reg();
+        let a = r.get("jets").unwrap();
+        let b = r.get("jets_pp").unwrap(); // alias and model share an entry
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.name, "jets_pp");
+        assert_eq!(a.input_dim, 16);
+        assert_eq!(a.output_dim, 5);
+        assert_eq!(r.cached(), vec!["jets_pp".to_string()]);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let err = reg().get("resnet50").unwrap_err();
+        assert!(format!("{err:#}").contains("preset"), "{err:#}");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_deploys() {
+        let dir = std::env::temp_dir().join(format!("hgq_serve_reg_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rt = Runtime::new().unwrap();
+        let mr = ModelRuntime::load(&rt, Path::new("artifacts"), "jets_lw").unwrap();
+        let info = checkpoint::CheckpointInfo {
+            model: "jets_lw".into(),
+            label: "t".into(),
+            quality: 0.0,
+            cost: 0.0,
+            epoch: 0,
+            beta: 0.0,
+        };
+        checkpoint::save(&dir.join("c0"), &info, &mr.init_state()).unwrap();
+        let r = reg();
+        let g = r.load_checkpoint("lw", &dir.join("c0")).unwrap();
+        assert_eq!(g.name, "jets_lw");
+        assert!(r.cached().contains(&"lw".to_string()));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_key_resolves_aliases_like_get() {
+        let dir = std::env::temp_dir().join(format!("hgq_serve_alias_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rt = Runtime::new().unwrap();
+        let mr = ModelRuntime::load(&rt, Path::new("artifacts"), "jets_pp").unwrap();
+        let info = checkpoint::CheckpointInfo {
+            model: "jets_pp".into(),
+            label: "t".into(),
+            quality: 0.0,
+            cost: 0.0,
+            epoch: 0,
+            beta: 0.0,
+        };
+        checkpoint::save(&dir.join("c0"), &info, &mr.init_state()).unwrap();
+        let r = reg();
+        // deploying under the task alias must claim the same cache slot
+        // get("jets") resolves to, so get() returns the deployed graph
+        // instead of silently rebuilding an init-state preset
+        let deployed = r.load_checkpoint("jets", &dir.join("c0")).unwrap();
+        let got = r.get("jets").unwrap();
+        assert!(Arc::ptr_eq(&deployed, &got));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -15,9 +15,13 @@
 //!               `harness = false`.
 //! * [`prop`]  — minimal property-testing driver (seeded case
 //!               generation + shrinking-free failure reporting).
+//! * [`shards`] — the fixed shard grid + scoped-thread executor shared
+//!               by the native training engine and the serving layer
+//!               (bit-identical results for any worker count).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod shards;

@@ -1,0 +1,113 @@
+//! Fixed-shard-grid parallel execution — the determinism substrate
+//! shared by the native training engine and the serving layer.
+//!
+//! Work (a training batch, a test set, a stream of serving requests) is
+//! split into a **fixed** number of shards — independent of how many
+//! worker threads run them — and every reduction (gradient partials,
+//! activation extremes, logit gathers) happens on the main thread in
+//! ascending shard order. f64 addition is not associative, so a
+//! thread-count-dependent grouping would change results; with fixed
+//! shard boundaries and a fixed reduction order, `--threads 1` and
+//! `--threads N` produce bit-identical outputs (see
+//! tests/integration_train.rs and tests/serve_batch.rs).
+//!
+//! Threads are plain `std::thread` scoped workers over contiguous
+//! chunks of the shard list (shards are equal-cost, so static chunking
+//! balances well); no extra dependencies, no unsafe.
+
+/// Number of shards every sharded workload is split into. Fixed (NOT
+/// the thread count) so that results are independent of the worker
+/// count; the paper models' batches (128 / 512) divide evenly.
+pub const BATCH_SHARDS: usize = 16;
+
+/// Split `batch` rows into up to [`BATCH_SHARDS`] contiguous
+/// `(start, rows)` ranges of equal size (the last may be short).
+pub fn shard_ranges(batch: usize) -> Vec<(usize, usize)> {
+    let size = batch.div_ceil(BATCH_SHARDS).max(1);
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < batch {
+        let take = size.min(batch - i);
+        out.push((i, take));
+        i += take;
+    }
+    out
+}
+
+/// Evaluate `f(0..n)` across up to `threads` scoped worker threads and
+/// return the results in index order. `threads <= 1` runs inline; the
+/// shard→thread assignment never affects the output order, so callers
+/// reducing over the returned Vec are deterministic by construction.
+pub fn run_shards<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let workers = threads.min(n);
+    let per = n.div_ceil(workers);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        let f = &f;
+        for (ti, chunk) in out.chunks_mut(per).enumerate() {
+            s.spawn(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(ti * per + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("shard worker completed")).collect()
+}
+
+/// Default worker count: all available cores (capped later by the shard
+/// count). `--threads 0` on the CLI resolves to this.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_batch_exactly() {
+        for batch in [1usize, 7, 16, 128, 200, 512] {
+            let ranges = shard_ranges(batch);
+            assert!(ranges.len() <= BATCH_SHARDS);
+            let mut next = 0usize;
+            for (start, rows) in &ranges {
+                assert_eq!(*start, next);
+                assert!(*rows > 0);
+                next += rows;
+            }
+            assert_eq!(next, batch);
+        }
+    }
+
+    #[test]
+    fn shard_ranges_are_thread_count_independent_constants() {
+        // the partition depends ONLY on the batch size
+        assert_eq!(shard_ranges(128).len(), 16);
+        assert_eq!(shard_ranges(128)[0], (0, 8));
+        assert_eq!(shard_ranges(512)[15], (480, 32));
+    }
+
+    #[test]
+    fn run_shards_preserves_index_order() {
+        for threads in [1usize, 2, 3, 8] {
+            let got = run_shards(threads, 13, |i| i * i);
+            let want: Vec<usize> = (0..13).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_shards_handles_more_threads_than_shards() {
+        let got = run_shards(64, 3, |i| i + 1);
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+}

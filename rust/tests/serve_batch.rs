@@ -1,0 +1,120 @@
+//! Batch-invariance property of the serving engine: the layer-major
+//! `BatchEmulator` (and everything stacked on it — the fixed shard
+//! grid of `infer_all`, the micro-batching request pipeline) produces
+//! logits **bit-identical** to sequential `Emulator::infer` calls, for
+//! every preset graph, for odd batch sizes, and for `--threads` ∈
+//! {1, 3, 16}. This is the guarantee that lets `hgq serve` and
+//! `coordinator::deploy` batch freely without touching the paper's
+//! software↔firmware correspondence.
+
+use std::sync::Arc;
+
+use hgq::data::splits_for;
+use hgq::firmware::emulator::Emulator;
+use hgq::firmware::Graph;
+use hgq::serve::batch::{infer_all, BatchEmulator};
+use hgq::serve::{serve_closed_loop, Registry, ServeConfig};
+
+/// Zero-artifact deployed graph of a preset (init state, calibrated on
+/// a small deterministic split — small keeps the dev-profile conv
+/// forward affordable).
+fn graph_for(model: &str, calib_n: usize) -> Arc<Graph> {
+    Registry::new("artifacts").with_calib_samples(calib_n).get(model).unwrap()
+}
+
+/// Reference logits: one sample at a time through the scalar emulator.
+fn sequential(g: &Graph, x: &[f32], n: usize) -> Vec<f64> {
+    let (din, k) = (g.input_dim, g.output_dim);
+    let mut em = Emulator::new(g);
+    let mut out = vec![0.0f64; n * k];
+    for s in 0..n {
+        let (xi, oi) = (&x[s * din..(s + 1) * din], &mut out[s * k..(s + 1) * k]);
+        em.infer(xi, oi).unwrap();
+    }
+    out
+}
+
+#[test]
+fn batch_invariance_across_presets() {
+    // (preset, calibration samples, K test samples) — K odd or prime so
+    // micro-batches of 3 leave ragged tails
+    for (model, calib_n, kk) in [
+        ("jets_pp", 128, 9usize),
+        ("jets_lw", 128, 7),
+        ("muon_pp", 64, 7),
+        ("svhn_stream", 32, 5),
+    ] {
+        let g = graph_for(model, calib_n);
+        let (din, k) = (g.input_dim, g.output_dim);
+        let splits = splits_for(model, 3, 1, kk);
+        let x = &splits.test.x[..kk * din];
+        let want = sequential(&g, x, kk);
+
+        // batch of K vs K sequential infer calls, plus odd fills
+        for bsz in [1usize, 3, kk] {
+            let mut bem = BatchEmulator::new(&g, bsz);
+            let mut got = vec![0.0f64; kk * k];
+            let mut done = 0;
+            while done < kk {
+                let take = bsz.min(kk - done);
+                let (xs, os) =
+                    (&x[done * din..(done + take) * din], &mut got[done * k..(done + take) * k]);
+                bem.infer_batch(xs, os).unwrap();
+                done += take;
+            }
+            assert_eq!(got, want, "{model}: batch size {bsz} diverged from sequential");
+        }
+
+        // fixed shard grid: bit-identical for any worker-thread count
+        for threads in [1usize, 3, 16] {
+            let mut got = vec![0.0f64; kk * k];
+            infer_all(&g, x, &mut got, threads, 4).unwrap();
+            assert_eq!(got, want, "{model}: threads={threads} diverged from sequential");
+        }
+    }
+}
+
+#[test]
+fn pipeline_matches_sequential_on_jets() {
+    let g = graph_for("jets_pp", 128);
+    let k = g.output_dim;
+    let n_pool = 13;
+    let splits = splits_for("jets_pp", 9, 1, n_pool);
+    let pool = &splits.test.x;
+    let want = sequential(&g, pool, n_pool);
+    for workers in [1usize, 3, 16] {
+        let cfg = ServeConfig {
+            batch: 5, // odd fill vs 39 requests
+            workers,
+            queue_depth: 4,
+            flush_us: 100,
+            requests: 39,
+            record_logits: true,
+        };
+        let outcome = serve_closed_loop(&g, pool, &cfg).unwrap();
+        assert_eq!(outcome.report.requests, 39);
+        let logits = outcome.logits.expect("recorded logits");
+        for (id, lg) in logits.iter().enumerate() {
+            let row = id % n_pool;
+            assert_eq!(&lg[..], &want[row * k..(row + 1) * k], "workers={workers} id={id}");
+        }
+    }
+}
+
+#[test]
+fn batch_emulator_capacity_guard_across_graphs() {
+    let jets = graph_for("jets_pp", 64);
+    let svhn = graph_for("svhn_stream", 32);
+    let jets_lw = graph_for("jets_lw", 64);
+    let mut bem = BatchEmulator::new(&jets, 4);
+    // the CNN needs far wider scratch planes: refuse instead of panic
+    let err = bem.retarget(&svhn).unwrap_err();
+    assert!(format!("{err}").contains("warmed"), "{err}");
+    // same-architecture graph (different granularity) retargets fine
+    bem.retarget(&jets_lw).unwrap();
+    let splits = splits_for("jets_lw", 5, 1, 3);
+    let want = sequential(&jets_lw, &splits.test.x, 3);
+    let mut got = vec![0.0f64; 3 * jets_lw.output_dim];
+    bem.infer_batch(&splits.test.x, &mut got).unwrap();
+    assert_eq!(got, want);
+}
