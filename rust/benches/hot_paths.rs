@@ -89,6 +89,23 @@ fn main() {
     });
     println!("{}   [{:.1} Mvals/s]", s.report(), s.per_sec(65536.0) / 1e6);
 
+    // ---- native forward: cached topology, refilled workspace ---------
+    // the layer IR is resolved once per model; each call only refills
+    // the requantization workspace in place (no per-call topology
+    // rebuild, no per-layer constant allocations — §Perf iteration log)
+    {
+        let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let rt = Runtime::new().unwrap().with_threads(1);
+        let mr = ModelRuntime::load(&rt, &artifacts, "jets_pp").unwrap();
+        let b = mr.meta.batch;
+        let state = mr.init_state();
+        let x: Vec<f32> = (0..b * 16).map(|i| ((i % 29) as f32 - 14.0) / 7.0).collect();
+        let s = bench("jets forward (cached plan topology)", 10, 200, || {
+            black_box(runtime::forward(&mr, &state, &x).unwrap());
+        });
+        println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
+    }
+
     // ---- native train step (MLP) across worker threads ---------------
     // fixed shard grid => bit-identical state at every thread count;
     // the ratio is pure parallel speedup of the fwd+bwd hot path

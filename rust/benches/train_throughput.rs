@@ -1,0 +1,58 @@
+//! Bench: native train-step throughput per preset -> `BENCH_train.json`.
+//!
+//!     cargo bench --bench train_throughput
+//!
+//! Times one full optimizer step (sharded forward + backward +
+//! regularizer + Adam) for each built-in preset and writes a
+//! machine-readable report tagged with the git sha. CI's `perf-smoke`
+//! job uploads it next to `BENCH_serve.json`, so the bench trajectory
+//! tracks training speed alongside serving throughput. Override the
+//! output path with `HGQ_TRAIN_BENCH_OUT`.
+
+use hgq::runtime::{self, Hypers, ModelRuntime, Runtime, Target};
+use hgq::util::bench::{bench_budget, black_box};
+use hgq::util::json::Json;
+
+fn main() {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new().unwrap(); // auto worker threads
+    let h = Hypers { beta: 1e-6, gamma: 2e-6, lr: 3e-3, f_lr: 8.0 };
+    let mut rows: Vec<Json> = Vec::new();
+
+    for model in ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"] {
+        let mr = ModelRuntime::load(&rt, &artifacts, model).unwrap();
+        let b = mr.meta.batch;
+        let feat = mr.meta.input_dim();
+        let state = mr.init_state();
+        let x: Vec<f32> = (0..b * feat).map(|i| ((i % 31) as f32 - 15.0) / 8.0).collect();
+        let is_cls = mr.meta.task == "cls";
+        let y_cls: Vec<i32> = (0..b).map(|i| (i % mr.meta.output_dim) as i32).collect();
+        let y_reg: Vec<f32> = (0..b).map(|i| (i % 7) as f32 / 7.0).collect();
+        // time-budgeted: the conv preset costs seconds per step, the
+        // MLPs milliseconds — the budget keeps total wall time bounded
+        let s = bench_budget(&format!("{model} train_step"), 1000, 2, || {
+            let y = if is_cls { Target::Cls(&y_cls) } else { Target::Reg(&y_reg) };
+            black_box(runtime::train_step(&mr, &state, &x, y, h).unwrap());
+        });
+        let sps = s.per_sec(b as f64);
+        println!("{}   [{:.0} samples/s]", s.report(), sps);
+        rows.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("batch", Json::Num(b as f64)),
+            ("iters", Json::Num(s.iters as f64)),
+            ("median_ns", Json::Num(s.median_ns)),
+            ("p95_ns", Json::Num(s.p95_ns)),
+            ("samples_per_sec", Json::Num(sps)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("train_throughput")),
+        ("git_sha", Json::str(hgq::serve::git_sha())),
+        ("presets", Json::Arr(rows)),
+    ]);
+    let path =
+        std::env::var("HGQ_TRAIN_BENCH_OUT").unwrap_or_else(|_| "BENCH_train.json".to_string());
+    std::fs::write(&path, report.to_string_pretty()).unwrap();
+    println!("(wrote {path})");
+}

@@ -77,7 +77,8 @@ pub fn deploy(
     test_data: &Dataset,
 ) -> Result<(Graph, DeployReport)> {
     let calib = calibrate(mr, state_host, calib_data)?;
-    let graph = Graph::build(&mr.meta, state_host, &calib)?;
+    // the runtime's cached layer IR is the structural source of truth
+    let graph = Graph::from_ir(&mr.ir, state_host, &calib)?;
 
     // --- test quality through the firmware emulator ------------------
     // batched + sharded over the runtime's --threads setting;

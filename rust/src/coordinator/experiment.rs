@@ -3,13 +3,13 @@
 //! GPU; the shape of the protocol — a single run with a log-ramped β,
 //! Pareto checkpointing, N table rows — is preserved exactly).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::deploy::{deploy, DeployReport};
 use super::schedule::BetaSchedule;
 use super::trainer::{train, TrainConfig, TrainOutcome};
 use crate::baselines;
-use crate::data::{splits_for, Splits};
+use crate::data::{try_splits_for, Splits};
 use crate::runtime::{ModelRuntime, Runtime};
 
 /// One task's experiment protocol: model, budget, β ramp, table shape.
@@ -40,8 +40,10 @@ pub struct Preset {
 }
 
 /// β endpoints follow the paper (§V.B-D); epochs/lr are CPU-scaled.
-pub fn preset(task: &str) -> Preset {
-    match task {
+/// Errors on an unknown task name — the CLI surfaces this as a clean
+/// `error: …` message instead of a panic.
+pub fn try_preset(task: &str) -> Result<Preset> {
+    let p = match task {
         "jets" => Preset {
             model: "jets_pp",
             epochs: 60,
@@ -81,8 +83,16 @@ pub fn preset(task: &str) -> Preset {
             rows: 6,
             uniform_bits: &[7.0],
         },
-        other => panic!("unknown task '{other}' (expected jets|muon|svhn)"),
-    }
+        other => bail!("unknown task '{other}' (expected jets|muon|svhn)"),
+    };
+    Ok(p)
+}
+
+/// Infallible convenience wrapper over [`try_preset`] for benches and
+/// examples with known-good task names; panics with the same message on
+/// an unknown task. Fallible callers (the CLI) use [`try_preset`].
+pub fn preset(task: &str) -> Preset {
+    try_preset(task).unwrap_or_else(|e| panic!("{e}"))
 }
 
 impl Preset {
@@ -113,7 +123,7 @@ pub fn run_hgq_sweep(
     verbose: bool,
 ) -> Result<(ModelRuntime, Splits, TrainOutcome, Vec<DeployReport>)> {
     let mr = ModelRuntime::load(rt, artifacts, p.model)?;
-    let splits = splits_for(p.model, 1, p.n_train, p.n_eval);
+    let splits = try_splits_for(p.model, 1, p.n_train, p.n_eval)?;
     let mut cfg = p.train_config();
     if let Some(e) = epochs_override {
         cfg.epochs = e;
@@ -154,7 +164,7 @@ pub fn run_uniform_baseline(
     // homogeneous per layer)
     let lw_model: String = p.model.replace("_pp", "_lw");
     let mr = ModelRuntime::load(rt, artifacts, &lw_model)?;
-    let splits = splits_for(&lw_model, 1, p.n_train, p.n_eval);
+    let splits = try_splits_for(&lw_model, 1, p.n_train, p.n_eval)?;
     let mut init = mr.init_state();
     baselines::set_uniform_bits(&mr.meta, &mut init, bits, bits);
     let mut cfg = p.train_config();
@@ -191,7 +201,7 @@ pub fn run_layerwise_baseline(
 ) -> Result<Vec<DeployReport>> {
     let lw_model: String = p.model.replace("_pp", "_lw");
     let mr = ModelRuntime::load(rt, artifacts, &lw_model)?;
-    let splits = splits_for(&lw_model, 1, p.n_train, p.n_eval);
+    let splits = try_splits_for(&lw_model, 1, p.n_train, p.n_eval)?;
     let mut cfg = p.train_config();
     if let Some(e) = epochs_override {
         cfg.epochs = e;

@@ -8,6 +8,8 @@ pub mod jets;
 pub mod muon;
 pub mod svhn;
 
+use anyhow::{bail, Result};
+
 /// A deterministic, fully-materialized dataset split.
 #[derive(Debug, Clone)]
 pub struct Dataset {
@@ -54,18 +56,30 @@ pub struct Splits {
 
 /// Generate train/val/test splits for a model's task (the task is the
 /// model-name prefix: `jets_*`, `muon_*`, `svhn_*`), on disjoint
-/// deterministic RNG streams.
-pub fn splits_for(model: &str, seed: u64, n_train: usize, n_eval: usize) -> Splits {
+/// deterministic RNG streams. Errors on an unknown task prefix — the
+/// CLI surfaces this as a clean `error: …` message instead of a panic.
+pub fn try_splits_for(model: &str, seed: u64, n_train: usize, n_eval: usize) -> Result<Splits> {
     let task = model.split('_').next().unwrap_or(model);
-    let gen = |split_tag: u64, n: usize| -> Dataset {
-        match task {
+    let gen = |split_tag: u64, n: usize| -> Result<Dataset> {
+        Ok(match task {
             "jets" => jets::generate(seed ^ (split_tag << 32), n),
             "muon" => muon::generate(seed ^ (split_tag << 32), n),
             "svhn" => svhn::generate(seed ^ (split_tag << 32), n),
-            other => panic!("unknown task '{other}'"),
-        }
+            other => bail!(
+                "unknown task '{other}' for model '{model}' \
+                 (expected a jets_* / muon_* / svhn_* model name)"
+            ),
+        })
     };
-    Splits { train: gen(1, n_train), val: gen(2, n_eval), test: gen(3, n_eval) }
+    Ok(Splits { train: gen(1, n_train)?, val: gen(2, n_eval)?, test: gen(3, n_eval)? })
+}
+
+/// Infallible convenience wrapper over [`try_splits_for`] for tests,
+/// benches and examples with known-good model names; panics with the
+/// same message on an unknown task. Fallible callers (the CLI, the
+/// serving registry) use [`try_splits_for`].
+pub fn splits_for(model: &str, seed: u64, n_train: usize, n_eval: usize) -> Splits {
+    try_splits_for(model, seed, n_train, n_eval).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
@@ -82,6 +96,12 @@ mod tests {
         // same seed reproduces
         let s2 = splits_for("jets_pp", 7, 64, 32);
         assert_eq!(s.train.x, s2.train.x);
+    }
+
+    #[test]
+    fn unknown_task_is_a_clean_error() {
+        let err = try_splits_for("resnet_pp", 1, 4, 4).unwrap_err();
+        assert!(format!("{err}").contains("unknown task"), "{err}");
     }
 
     #[test]

@@ -115,8 +115,20 @@ impl<'g> Emulator<'g> {
                     n_cur = *dout;
                     self.swap();
                 }
-                FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, b, relu, out: q, acc_frac } => {
-                    let (oh, ow) = (in_h - k + 1, in_w - k + 1);
+                FwLayer::Conv2d {
+                    k,
+                    cin,
+                    cout,
+                    in_h,
+                    in_w,
+                    out_shape,
+                    w,
+                    b,
+                    relu,
+                    out: q,
+                    acc_frac,
+                } => {
+                    let [oh, ow, _] = *out_shape;
                     debug_assert_eq!(n_cur, in_h * in_w * cin);
                     for oy in 0..oh {
                         for ox in 0..ow {

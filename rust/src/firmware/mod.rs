@@ -6,6 +6,12 @@
 //! bits). All arithmetic in [`emulator`] is exact i64 mantissa math, so
 //! software↔firmware correspondence is bit-exact by construction — the
 //! same guarantee the paper's proxy models provide.
+//!
+//! Structure comes from the shared layer IR ([`crate::ir::ModelIr`]):
+//! [`Graph::from_ir`] walks the resolved nodes, so shapes and tensor
+//! offsets are never re-derived here, and the emitted [`FwLayer`]s
+//! carry the IR-resolved geometry (true pool input shapes, conv
+//! `out_shape`) for the emulators and estimators downstream.
 
 pub mod emulator;
 
@@ -13,7 +19,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::ebops;
 use crate::fixed::{round_half_up, FixedSpec};
-use crate::nn::{LayerMeta, ModelMeta};
+use crate::ir::{GroupRef, IrOp, ModelIr, ParamRef};
+use crate::nn::ModelMeta;
 
 /// Lower trainable-bitwidth clip — MUST match python
 /// compile/kernels/ref.py (F_MIN).
@@ -118,6 +125,9 @@ pub enum FwLayer {
         cout: usize,
         in_h: usize,
         in_w: usize,
+        /// IR-resolved output HWC shape (`[oh, ow, cout]`) — consumers
+        /// read it instead of re-deriving `in_h - k + 1` locally
+        out_shape: [usize; 3],
         w: QuantWeights,
         b: QuantWeights,
         relu: bool,
@@ -189,56 +199,67 @@ pub struct Graph {
 }
 
 impl Graph {
-    /// Assemble the firmware graph from trained state + calibration.
+    /// Assemble the firmware graph from trained state + calibration,
+    /// resolving the layer IR from the metadata first. Callers that
+    /// already hold a resolved [`ModelIr`] (the runtime, the serving
+    /// registry) should use [`Graph::from_ir`] instead.
     pub fn build(meta: &ModelMeta, state: &[f32], calib: &Calib) -> Result<Graph> {
-        if state.len() != meta.state_size {
-            bail!("state size {} != meta {}", state.len(), meta.state_size);
+        let ir = ModelIr::build(meta)?;
+        Graph::from_ir(&ir, state, calib)
+    }
+
+    /// Assemble the firmware graph by walking a resolved layer IR: all
+    /// shapes (including the true, possibly odd pool input shapes) and
+    /// tensor offsets come from the IR — nothing is re-derived from the
+    /// layer metadata here.
+    pub fn from_ir(ir: &ModelIr, state: &[f32], calib: &Calib) -> Result<Graph> {
+        if state.len() != ir.state_size {
+            bail!("state size {} != meta {}", state.len(), ir.state_size);
         }
-        if calib.amin.len() != meta.calib_size {
-            bail!("calib size {} != meta {}", calib.amin.len(), meta.calib_size);
+        if calib.amin.len() != ir.calib_size || calib.amax.len() != ir.calib_size {
+            bail!(
+                "calib size {}/{} != meta {}",
+                calib.amin.len(),
+                calib.amax.len(),
+                ir.calib_size
+            );
         }
 
-        let act_q = |gname: &str| -> Result<ActQ> {
-            let g = meta.act_group(gname)?;
-            let f_fp = meta.tensor_slice(state, gname)?;
-            let mut specs = Vec::with_capacity(g.size);
-            for i in 0..g.size {
+        let act_q = |g: &GroupRef| -> ActQ {
+            let f_fp = &state[g.f_offset..g.f_offset + g.f_size];
+            let mut specs = Vec::with_capacity(g.f_size);
+            for i in 0..g.f_size {
                 let f = round_half_up((f_fp[i] as f64).clamp(F_MIN, F_MAX)) as i32;
                 let (lo, hi) =
                     (calib.amin[g.calib_offset + i] as f64, calib.amax[g.calib_offset + i] as f64);
                 specs.push(FixedSpec::from_range(lo, hi, f));
             }
-            Ok(ActQ { scalar: g.size == 1, specs })
+            ActQ { scalar: g.f_size == 1, specs }
+        };
+        let quant = |p: &ParamRef| -> Result<QuantWeights> {
+            QuantWeights::quantize(
+                &state[p.offset..p.offset + p.size],
+                &state[p.f_offset..p.f_offset + p.f_size],
+            )
         };
 
         let mut layers = Vec::new();
         let mut cur_act: Option<ActQ> = None;
-        // track the true running tensor shape: pool inputs can be odd
-        // (e.g. 13x13 -> 6x6 drops the last row/col), so reconstructing
-        // them as out_shape * 2 would mis-stride the emulator
-        let mut cur_shape: Vec<usize> = meta.input_shape.clone();
-        for lm in &meta.layers {
-            match lm {
-                LayerMeta::InputQuant { name, .. } => {
-                    let out = act_q(&format!("{name}.fa"))?;
+        for node in &ir.nodes {
+            match &node.op {
+                IrOp::InputQuant { group } => {
+                    let out = act_q(&ir.groups[*group]);
                     cur_act = Some(out.clone());
                     layers.push(FwLayer::InputQuant { out });
                 }
-                LayerMeta::Dense { name, din, dout, relu } => {
-                    let w = QuantWeights::quantize(
-                        meta.tensor_slice(state, &format!("{name}.w"))?,
-                        meta.tensor_slice(state, &format!("{name}.fw"))?,
-                    )?;
-                    let b = QuantWeights::quantize(
-                        meta.tensor_slice(state, &format!("{name}.b"))?,
-                        meta.tensor_slice(state, &format!("{name}.fb"))?,
-                    )?;
-                    let out = act_q(&format!("{name}.fa"))?;
+                IrOp::Dense { din, dout, relu, w, b, out_group, .. } => {
+                    let w = quant(w)?;
+                    let b = quant(b)?;
+                    let out = act_q(&ir.groups[*out_group]);
                     let in_act =
                         cur_act.as_ref().ok_or_else(|| anyhow!("dense before input_quant"))?;
                     let acc_frac = acc_frac_for(&w, &b, in_act);
                     cur_act = Some(out.clone());
-                    cur_shape = vec![*dout];
                     layers.push(FwLayer::Dense {
                         din: *din,
                         dout: *dout,
@@ -249,29 +270,21 @@ impl Graph {
                         acc_frac,
                     });
                 }
-                LayerMeta::Conv2d { name, k, cin, cout, relu, out_shape } => {
-                    let w = QuantWeights::quantize(
-                        meta.tensor_slice(state, &format!("{name}.w"))?,
-                        meta.tensor_slice(state, &format!("{name}.fw"))?,
-                    )?;
-                    let b = QuantWeights::quantize(
-                        meta.tensor_slice(state, &format!("{name}.b"))?,
-                        meta.tensor_slice(state, &format!("{name}.fb"))?,
-                    )?;
-                    let out = act_q(&format!("{name}.fa"))?;
+                IrOp::Conv2d { k, cin, cout, oh, ow, in_h, in_w, relu, w, b, out_group, .. } => {
+                    let w = quant(w)?;
+                    let b = quant(b)?;
+                    let out = act_q(&ir.groups[*out_group]);
                     let in_act =
                         cur_act.as_ref().ok_or_else(|| anyhow!("conv before input_quant"))?;
                     let acc_frac = acc_frac_for(&w, &b, in_act);
-                    let in_h = out_shape[0] + k - 1;
-                    let in_w = out_shape[1] + k - 1;
                     cur_act = Some(out.clone());
-                    cur_shape = out_shape.to_vec();
                     layers.push(FwLayer::Conv2d {
                         k: *k,
                         cin: *cin,
                         cout: *cout,
-                        in_h,
-                        in_w,
+                        in_h: *in_h,
+                        in_w: *in_w,
+                        out_shape: [*oh, *ow, *cout],
                         w,
                         b,
                         relu: *relu,
@@ -279,25 +292,17 @@ impl Graph {
                         acc_frac,
                     });
                 }
-                LayerMeta::MaxPool2 { out_shape } => {
-                    if cur_shape.len() != 3 {
-                        bail!("maxpool2 needs a HWC input, got {cur_shape:?}");
-                    }
-                    let in_shape = [cur_shape[0], cur_shape[1], cur_shape[2]];
-                    cur_shape = out_shape.to_vec();
-                    layers.push(FwLayer::MaxPool2 { in_shape });
+                IrOp::MaxPool2 { in_shape, .. } => {
+                    layers.push(FwLayer::MaxPool2 { in_shape: *in_shape });
                 }
-                LayerMeta::Flatten => {
-                    cur_shape = vec![cur_shape.iter().product()];
-                    layers.push(FwLayer::Flatten);
-                }
+                IrOp::Flatten => layers.push(FwLayer::Flatten),
             }
         }
         Ok(Graph {
-            name: meta.name.clone(),
+            name: ir.name.clone(),
             layers,
-            input_dim: meta.input_dim(),
-            output_dim: meta.output_dim,
+            input_dim: ir.input_dim,
+            output_dim: ir.output_dim,
         })
     }
 
@@ -355,8 +360,8 @@ impl Graph {
         for l in &self.layers {
             cap = cap.max(match l {
                 FwLayer::Dense { dout, .. } => *dout,
-                FwLayer::Conv2d { k, cout, in_h, in_w, cin, .. } => {
-                    ((in_h - k + 1) * (in_w - k + 1) * cout).max(in_h * in_w * cin)
+                FwLayer::Conv2d { cin, in_h, in_w, out_shape, .. } => {
+                    (out_shape[0] * out_shape[1] * out_shape[2]).max(in_h * in_w * cin)
                 }
                 FwLayer::MaxPool2 { in_shape } => in_shape.iter().product(),
                 _ => 0,

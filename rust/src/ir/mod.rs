@@ -1,0 +1,394 @@
+//! Unified layer IR: the typed, shape-inferred model graph every
+//! structural consumer walks (ARCHITECTURE.md §Layer IR).
+//!
+//! [`ModelIr::build`] resolves a parsed [`ModelMeta`] **once** into a
+//! validated graph: every layer gets concrete input/output shapes,
+//! every trainable tensor pair a resolved packed-state location
+//! ([`ParamRef`]), and every activation quantizer group its feature
+//! dimension, signedness and stat/calib offsets ([`GroupRef`]) — with
+//! the shape inference of [`shape`] checked against the metadata at
+//! every step. Downstream, the native engine's execution plan, the
+//! firmware builder (`firmware::Graph::from_ir`), and the resource /
+//! EBOPs estimators (through the firmware graph's resolved shapes) all
+//! walk this IR instead of re-interpreting `LayerMeta`, so a new layer
+//! kind is added in one module instead of four hand-synchronized
+//! walkers — and shape bugs like the odd-pool mis-stride fixed in the
+//! firmware builder cannot re-diverge between consumers.
+
+pub mod shape;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::nn::{LayerMeta, ModelMeta};
+
+/// Resolved packed-state location of one trainable tensor pair: the
+/// value tensor plus its fractional-bit tensor (broadcast scalar when
+/// `f_size == 1`, i.e. layer granularity).
+#[derive(Debug, Clone)]
+pub struct ParamRef {
+    /// value tensor name, e.g. `"d0.w"`
+    pub name: String,
+    /// start of the value tensor inside the packed state
+    pub offset: usize,
+    /// element count of the value tensor
+    pub size: usize,
+    /// start of the fbit tensor inside the packed state
+    pub f_offset: usize,
+    /// fbit element count: 1 (layer granularity) or `size`
+    pub f_size: usize,
+}
+
+/// Resolved activation quantizer group: granularity, signedness and
+/// every packed-state / calib-vector offset a consumer needs.
+#[derive(Debug, Clone)]
+pub struct GroupRef {
+    /// group name == its fbit tensor, e.g. `"d0.fa"`
+    pub name: String,
+    /// index into `meta.act_groups`
+    pub index: usize,
+    /// elements this group quantizes (the producing tensor's size)
+    pub feat_dim: usize,
+    /// start of the fbit tensor inside the packed state
+    pub f_offset: usize,
+    /// fbit element count: 1 (layer granularity) or `feat_dim`
+    pub f_size: usize,
+    /// whether quantized values can be negative (no relu upstream)
+    pub signed: bool,
+    /// offset inside the concatenated calibration vectors
+    pub calib_offset: usize,
+    /// start of the running-minimum stat tensor inside the packed state
+    pub amin_offset: usize,
+    /// start of the running-maximum stat tensor inside the packed state
+    pub amax_offset: usize,
+}
+
+/// The typed operation of one IR node. Group fields index
+/// [`ModelIr::groups`]; geometry is fully resolved at build time.
+#[derive(Debug, Clone)]
+pub enum IrOp {
+    /// Input quantizer producing activation group `group`.
+    InputQuant {
+        /// output activation group
+        group: usize,
+    },
+    /// Dense layer (optionally relu-activated).
+    Dense {
+        /// input feature count
+        din: usize,
+        /// output feature count
+        dout: usize,
+        /// relu on the accumulator
+        relu: bool,
+        /// weight tensor (din x dout, row-major)
+        w: ParamRef,
+        /// bias tensor (dout)
+        b: ParamRef,
+        /// activation group feeding this layer
+        in_group: usize,
+        /// activation group this layer produces
+        out_group: usize,
+    },
+    /// Valid (no-padding) kxk convolution over an HWC tensor.
+    Conv2d {
+        /// kernel size
+        k: usize,
+        /// input channels
+        cin: usize,
+        /// output channels
+        cout: usize,
+        /// output height
+        oh: usize,
+        /// output width
+        ow: usize,
+        /// input height (`oh + k - 1`)
+        in_h: usize,
+        /// input width (`ow + k - 1`)
+        in_w: usize,
+        /// relu on the accumulator
+        relu: bool,
+        /// weight tensor (k, k, cin, cout, row-major)
+        w: ParamRef,
+        /// bias tensor (cout)
+        b: ParamRef,
+        /// activation group feeding this layer
+        in_group: usize,
+        /// activation group this layer produces
+        out_group: usize,
+    },
+    /// 2x2 max pooling with the TRUE (possibly odd) input shape.
+    MaxPool2 {
+        /// input HWC shape (odd spatial sizes drop the last row/col)
+        in_shape: [usize; 3],
+        /// output HWC shape (floor halved)
+        out_shape: [usize; 3],
+    },
+    /// Shape-only flatten.
+    Flatten,
+}
+
+/// One node of the IR graph: the resolved operation plus its inferred
+/// input/output shapes.
+#[derive(Debug, Clone)]
+pub struct IrNode {
+    /// layer name for diagnostics (`"maxpool2"`/`"flatten"` when unnamed)
+    pub name: String,
+    /// inferred input shape
+    pub in_shape: Vec<usize>,
+    /// inferred output shape
+    pub out_shape: Vec<usize>,
+    /// the typed operation
+    pub op: IrOp,
+}
+
+/// The whole-model IR: shape-inferred nodes, resolved activation
+/// groups, and the packed-state layout constants every consumer needs.
+/// Built **once** per model (see module docs).
+#[derive(Debug, Clone)]
+pub struct ModelIr {
+    /// model name (from meta.json)
+    pub name: String,
+    /// "cls" | "reg"
+    pub task: String,
+    /// fixed batch size every backend call uses
+    pub batch: usize,
+    /// input tensor shape
+    pub input_shape: Vec<usize>,
+    /// flattened input feature count
+    pub input_dim: usize,
+    /// logit count
+    pub output_dim: usize,
+    /// length of the weights+biases segment
+    pub n_params: usize,
+    /// length of the trainable prefix `[params | fbits]`
+    pub n_train: usize,
+    /// total activation elements across all calib groups
+    pub calib_size: usize,
+    /// total packed-state length
+    pub state_size: usize,
+    /// activation quantizer groups in creation (layer) order
+    pub groups: Vec<GroupRef>,
+    /// shape-inferred nodes in execution order
+    pub nodes: Vec<IrNode>,
+}
+
+fn param_ref(meta: &ModelMeta, wname: &str, fname: &str) -> Result<ParamRef> {
+    let we = meta.tensor(wname)?;
+    let fe = meta.tensor(fname)?;
+    if fe.size != 1 && fe.size != we.size {
+        bail!(
+            "fbit tensor '{fname}' size {} incompatible with '{wname}' size {}",
+            fe.size,
+            we.size
+        );
+    }
+    Ok(ParamRef {
+        name: wname.to_string(),
+        offset: we.offset,
+        size: we.size,
+        f_offset: fe.offset,
+        f_size: fe.size,
+    })
+}
+
+fn group_ref(meta: &ModelMeta, name: &str, feat_dim: usize) -> Result<GroupRef> {
+    let index = meta
+        .act_groups
+        .iter()
+        .position(|g| g.name == name)
+        .ok_or_else(|| anyhow!("act group '{name}' not in meta"))?;
+    let g = &meta.act_groups[index];
+    let fe = meta.tensor(name)?;
+    if fe.size != g.size {
+        bail!("group '{name}': fbit size {} != group size {}", fe.size, g.size);
+    }
+    if fe.size != 1 && fe.size != feat_dim {
+        bail!("group '{name}': granularity {} incompatible with feature dim {feat_dim}", fe.size);
+    }
+    let amin = meta.tensor(&format!("{name}.amin"))?;
+    let amax = meta.tensor(&format!("{name}.amax"))?;
+    if amin.size != fe.size || amax.size != fe.size {
+        bail!(
+            "group '{name}': stat tensor sizes {}/{} != fbit size {}",
+            amin.size,
+            amax.size,
+            fe.size
+        );
+    }
+    Ok(GroupRef {
+        name: name.to_string(),
+        index,
+        feat_dim,
+        f_offset: fe.offset,
+        f_size: fe.size,
+        signed: g.signed,
+        calib_offset: g.calib_offset,
+        amin_offset: amin.offset,
+        amax_offset: amax.offset,
+    })
+}
+
+impl ModelIr {
+    /// Resolve and validate the layer graph of a parsed [`ModelMeta`]:
+    /// infer every shape, wire the activation groups, and resolve every
+    /// tensor to its packed-state offsets. Errors on any structural
+    /// inconsistency (shape mismatches, missing tensors, granularity
+    /// conflicts) — consumers can then walk the IR unchecked.
+    pub fn build(meta: &ModelMeta) -> Result<ModelIr> {
+        let mut groups: Vec<GroupRef> = Vec::new();
+        let mut nodes: Vec<IrNode> = Vec::new();
+        let mut cur_shape: Vec<usize> = meta.input_shape.clone();
+        let mut cur_group: Option<usize> = None;
+
+        for lm in &meta.layers {
+            let in_shape = cur_shape.clone();
+            let op = match lm {
+                LayerMeta::InputQuant { name, .. } => {
+                    let feat = shape::flatten_dim(&cur_shape);
+                    let g = group_ref(meta, &format!("{name}.fa"), feat)?;
+                    let idx = groups.len();
+                    groups.push(g);
+                    cur_group = Some(idx);
+                    IrOp::InputQuant { group: idx }
+                }
+                LayerMeta::Dense { name, din, dout, relu } => {
+                    let (din, dout) = (*din, *dout);
+                    let cur_feat = shape::flatten_dim(&cur_shape);
+                    if cur_feat != din {
+                        bail!("dense '{name}': input dim {cur_feat} != din {din}");
+                    }
+                    let w = param_ref(meta, &format!("{name}.w"), &format!("{name}.fw"))?;
+                    let b = param_ref(meta, &format!("{name}.b"), &format!("{name}.fb"))?;
+                    if w.size != din * dout {
+                        bail!("dense '{name}': weight size {} != {din}x{dout}", w.size);
+                    }
+                    if b.size != dout {
+                        bail!("dense '{name}': bias size {} != dout {dout}", b.size);
+                    }
+                    let in_group =
+                        cur_group.ok_or_else(|| anyhow!("dense '{name}' before input_quant"))?;
+                    if groups[in_group].f_size != 1 && groups[in_group].f_size != din {
+                        bail!("dense '{name}': input group granularity mismatch");
+                    }
+                    let og = group_ref(meta, &format!("{name}.fa"), dout)?;
+                    let out_group = groups.len();
+                    groups.push(og);
+                    cur_group = Some(out_group);
+                    cur_shape = vec![dout];
+                    IrOp::Dense { din, dout, relu: *relu, w, b, in_group, out_group }
+                }
+                LayerMeta::Conv2d { name, k, cin, cout, relu, out_shape } => {
+                    let (k, cin, cout) = (*k, *cin, *cout);
+                    let inferred = shape::conv2d_out_shape(&cur_shape, k, cout)
+                        .map_err(|e| anyhow!("conv '{name}': {e}"))?;
+                    if cur_shape[2] != cin {
+                        bail!("conv '{name}': input channels {} != cin {cin}", cur_shape[2]);
+                    }
+                    if inferred != *out_shape {
+                        bail!(
+                            "conv '{name}': inferred out shape {inferred:?} != meta {out_shape:?}"
+                        );
+                    }
+                    let [oh, ow, _] = inferred;
+                    let (in_h, in_w) = (cur_shape[0], cur_shape[1]);
+                    let w = param_ref(meta, &format!("{name}.w"), &format!("{name}.fw"))?;
+                    let b = param_ref(meta, &format!("{name}.b"), &format!("{name}.fb"))?;
+                    if w.size != k * k * cin * cout {
+                        bail!("conv '{name}': weight size {} != {k}x{k}x{cin}x{cout}", w.size);
+                    }
+                    if b.size != cout {
+                        bail!("conv '{name}': bias size {} != cout {cout}", b.size);
+                    }
+                    let in_group =
+                        cur_group.ok_or_else(|| anyhow!("conv '{name}' before input_quant"))?;
+                    let og = group_ref(meta, &format!("{name}.fa"), oh * ow * cout)?;
+                    let out_group = groups.len();
+                    groups.push(og);
+                    cur_group = Some(out_group);
+                    cur_shape = inferred.to_vec();
+                    IrOp::Conv2d {
+                        k,
+                        cin,
+                        cout,
+                        oh,
+                        ow,
+                        in_h,
+                        in_w,
+                        relu: *relu,
+                        w,
+                        b,
+                        in_group,
+                        out_group,
+                    }
+                }
+                LayerMeta::MaxPool2 { out_shape } => {
+                    let in_hwc = shape::hwc(&cur_shape, "maxpool2")?;
+                    let inferred = shape::maxpool2_out_shape(&cur_shape)?;
+                    if inferred != *out_shape {
+                        bail!("maxpool2: inferred out shape {inferred:?} != meta {out_shape:?}");
+                    }
+                    cur_shape = inferred.to_vec();
+                    IrOp::MaxPool2 { in_shape: in_hwc, out_shape: inferred }
+                }
+                LayerMeta::Flatten => {
+                    cur_shape = vec![shape::flatten_dim(&cur_shape)];
+                    IrOp::Flatten
+                }
+            };
+            nodes.push(IrNode {
+                name: lm.name().to_string(),
+                in_shape,
+                out_shape: cur_shape.clone(),
+                op,
+            });
+        }
+
+        let final_dim = shape::flatten_dim(&cur_shape);
+        if final_dim != meta.output_dim {
+            bail!("final feature dim {final_dim} != output_dim {}", meta.output_dim);
+        }
+
+        // every resolved range must fit the packed state: consumers
+        // slice unchecked after a successful build
+        let fits = |name: &str, off: usize, size: usize| -> Result<()> {
+            if off + size > meta.state_size {
+                bail!(
+                    "tensor '{name}' [{off}..{}] exceeds state size {}",
+                    off + size,
+                    meta.state_size
+                );
+            }
+            Ok(())
+        };
+        for g in &groups {
+            fits(&g.name, g.f_offset, g.f_size)?;
+            fits(&g.name, g.amin_offset, g.f_size)?;
+            fits(&g.name, g.amax_offset, g.f_size)?;
+            if g.calib_offset + g.f_size > meta.calib_size {
+                bail!("group '{}' calib slot exceeds calib size {}", g.name, meta.calib_size);
+            }
+        }
+        for node in &nodes {
+            if let IrOp::Dense { w, b, .. } | IrOp::Conv2d { w, b, .. } = &node.op {
+                fits(&w.name, w.offset, w.size)?;
+                fits(&w.name, w.f_offset, w.f_size)?;
+                fits(&b.name, b.offset, b.size)?;
+                fits(&b.name, b.f_offset, b.f_size)?;
+            }
+        }
+
+        Ok(ModelIr {
+            name: meta.name.clone(),
+            task: meta.task.clone(),
+            batch: meta.batch,
+            input_shape: meta.input_shape.clone(),
+            input_dim: meta.input_dim(),
+            output_dim: meta.output_dim,
+            n_params: meta.n_params,
+            n_train: meta.n_train,
+            calib_size: meta.calib_size,
+            state_size: meta.state_size,
+            groups,
+            nodes,
+        })
+    }
+}

@@ -1,0 +1,72 @@
+//! Shape-inference helpers shared by the IR builder ([`super::ModelIr`])
+//! and the preset meta builder (`runtime/native/presets.rs`) — the one
+//! place the conv/pool/flatten output-shape arithmetic lives.
+
+use anyhow::{bail, Result};
+
+/// Interpret a shape as an HWC tensor, naming the consumer in the error.
+pub fn hwc(shape: &[usize], what: &str) -> Result<[usize; 3]> {
+    match shape {
+        &[h, w, c] => Ok([h, w, c]),
+        other => bail!("{what} needs a HWC input, got {other:?}"),
+    }
+}
+
+/// Output HWC shape of a valid (no-padding) `k`x`k` convolution with
+/// `cout` output channels over an HWC input.
+pub fn conv2d_out_shape(in_shape: &[usize], k: usize, cout: usize) -> Result<[usize; 3]> {
+    let [h, w, _] = hwc(in_shape, "conv2d")?;
+    if k == 0 {
+        bail!("conv2d kernel size must be >= 1");
+    }
+    if h < k || w < k {
+        bail!("conv2d kernel {k}x{k} larger than input {h}x{w}");
+    }
+    Ok([h - k + 1, w - k + 1, cout])
+}
+
+/// Output HWC shape of 2x2 max pooling: floor halving — odd inputs drop
+/// the last row/column (the 13x13 -> 6x6 case of the svhn stack).
+pub fn maxpool2_out_shape(in_shape: &[usize]) -> Result<[usize; 3]> {
+    let [h, w, c] = hwc(in_shape, "maxpool2")?;
+    if h < 2 || w < 2 {
+        bail!("maxpool2 needs at least a 2x2 spatial input, got {h}x{w}");
+    }
+    Ok([h / 2, w / 2, c])
+}
+
+/// Flattened element count of a shape (empty shape = scalar = 1).
+pub fn flatten_dim(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_shapes() {
+        assert_eq!(conv2d_out_shape(&[32, 32, 3], 3, 16).unwrap(), [30, 30, 16]);
+        assert_eq!(conv2d_out_shape(&[6, 6, 16], 3, 24).unwrap(), [4, 4, 24]);
+        assert_eq!(conv2d_out_shape(&[3, 3, 2], 3, 4).unwrap(), [1, 1, 4]);
+        assert!(conv2d_out_shape(&[16], 3, 8).is_err()); // not HWC
+        assert!(conv2d_out_shape(&[2, 2, 3], 3, 8).is_err()); // kernel too big
+        assert!(conv2d_out_shape(&[4, 4, 3], 0, 8).is_err());
+    }
+
+    #[test]
+    fn pool_floor_halves_odd_inputs() {
+        assert_eq!(maxpool2_out_shape(&[30, 30, 16]).unwrap(), [15, 15, 16]);
+        assert_eq!(maxpool2_out_shape(&[13, 13, 16]).unwrap(), [6, 6, 16]);
+        assert_eq!(maxpool2_out_shape(&[5, 4, 2]).unwrap(), [2, 2, 2]);
+        assert!(maxpool2_out_shape(&[1, 8, 3]).is_err());
+        assert!(maxpool2_out_shape(&[8, 8]).is_err());
+    }
+
+    #[test]
+    fn flatten_products() {
+        assert_eq!(flatten_dim(&[2, 2, 24]), 96);
+        assert_eq!(flatten_dim(&[16]), 16);
+        assert_eq!(flatten_dim(&[]), 1);
+    }
+}

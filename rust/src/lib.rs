@@ -15,6 +15,10 @@
 //!                   software↔firmware correspondence (hls4ml contract).
 //! * [`nn`]        — model metadata (meta.json) shared with the python
 //!                   build path.
+//! * [`ir`]        — the unified layer IR: a typed, shape-inferred
+//!                   graph built once from [`nn::ModelMeta`] — the
+//!                   single structural source of truth the engine,
+//!                   firmware builder and estimators walk.
 //! * [`data`]      — synthetic datasets standing in for the paper's
 //!                   (jets / SVHN / muon tracking; see the
 //!                   ARCHITECTURE.md substitutions section).
@@ -46,6 +50,7 @@ pub mod data;
 pub mod ebops;
 pub mod firmware;
 pub mod fixed;
+pub mod ir;
 pub mod metrics;
 pub mod nn;
 pub mod report;

@@ -26,10 +26,10 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use hgq::coordinator::experiment::{
-    preset, run_hgq_sweep, run_layerwise_baseline, run_uniform_baseline, Preset,
+    run_hgq_sweep, run_layerwise_baseline, run_uniform_baseline, try_preset, Preset,
 };
 use hgq::coordinator::{deploy, BetaSchedule, TrainConfig};
-use hgq::data::splits_for;
+use hgq::data::try_splits_for;
 use hgq::resource::linear_fit;
 use hgq::runtime::{ModelRuntime, Runtime};
 use hgq::serve::{sequential_baseline, serve_closed_loop, Registry, ServeConfig};
@@ -109,7 +109,7 @@ fn cmd_train(artifacts: &PathBuf, mut args: Args) -> Result<()> {
         let epochs = args.usize("epochs", 12);
         let verbose = args.flag("verbose");
         args.finish()?;
-        let p = preset(&task);
+        let p = try_preset(&task)?;
         println!("== preset {task} on {} (short sweep, {epochs} epochs) ==", rt.platform());
         let (_, _, outcome, reports) = run_hgq_sweep(&rt, artifacts, &p, Some(epochs), verbose)?;
         println!("pareto front: {} checkpoints", outcome.pareto.len());
@@ -135,7 +135,7 @@ fn cmd_train(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     args.finish()?;
 
     let mr = ModelRuntime::load(&rt, artifacts, &model)?;
-    let splits = splits_for(&model, seed ^ 1, n_train, n_eval);
+    let splits = try_splits_for(&model, seed ^ 1, n_train, n_eval)?;
     let cfg = TrainConfig {
         epochs,
         lr,
@@ -162,7 +162,7 @@ fn cmd_sweep(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     let epochs = args.str_opt("epochs").and_then(|s| s.parse().ok());
     let verbose = args.flag("verbose");
     args.finish()?;
-    let p = preset(&task);
+    let p = try_preset(&task)?;
     let (_, _, outcome, reports) = run_hgq_sweep(&rt, artifacts, &p, epochs, verbose)?;
     println!("pareto front: {} checkpoints", outcome.pareto.len());
     for r in &reports {
@@ -187,7 +187,7 @@ fn cmd_table(artifacts: &PathBuf, mut args: Args, task: &str) -> Result<()> {
     let json_out = args.str_opt("json");
     let ckpt_root = args.str_opt("save-checkpoints");
     args.finish()?;
-    let p = preset(task);
+    let p = try_preset(task)?;
 
     table_header(task);
     let (_, _, outcome, mut reports) = run_hgq_sweep(&rt, artifacts, &p, epochs, verbose)?;
@@ -241,7 +241,7 @@ fn cmd_deploy(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     args.finish()?;
     let (info, state) = hgq::coordinator::checkpoint::load(&PathBuf::from(&ckpt))?;
     let mr = ModelRuntime::load(&rt, artifacts, &info.model)?;
-    let splits = splits_for(&info.model, 1, n_eval * 2, n_eval);
+    let splits = try_splits_for(&info.model, 1, n_eval * 2, n_eval)?;
     let (graph, rep) = deploy(
         &mr,
         &info.label,
@@ -269,9 +269,9 @@ fn cmd_emulate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     args.finish()?;
     let (info, state) = hgq::coordinator::checkpoint::load(&PathBuf::from(&ckpt))?;
     let mr = ModelRuntime::load(&rt, artifacts, &info.model)?;
-    let splits = splits_for(&info.model, 99, 1024, n.max(16));
+    let splits = try_splits_for(&info.model, 99, 1024, n.max(16))?;
     let calib = hgq::coordinator::calibrate(&mr, &state, &[&splits.train])?;
-    let graph = hgq::firmware::Graph::build(&mr.meta, &state, &calib)?;
+    let graph = hgq::firmware::Graph::from_ir(&mr.ir, &state, &calib)?;
     let mut em = hgq::firmware::emulator::Emulator::new(&graph);
     let mut out = vec![0.0f64; graph.output_dim];
     println!("emulating {} samples through {} ({} layers):", n, info.model, graph.layers.len());
@@ -332,7 +332,7 @@ fn cmd_serve(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     );
 
     // deterministic synthetic request pool from the model's test stream
-    let splits = splits_for(&model, 0x5E12BE, 1, pool_n.max(1));
+    let splits = try_splits_for(&model, 0x5E12BE, 1, pool_n.max(1))?;
     let pool = &splits.test.x;
 
     let workers = if threads == 0 { hgq::util::shards::default_threads() } else { threads };
@@ -359,7 +359,7 @@ fn cmd_fig2(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     );
     let mut all_reports = Vec::new();
     for task in ["jets", "muon", "svhn"] {
-        let p: Preset = preset(task);
+        let p: Preset = try_preset(task)?;
         match run_hgq_sweep(&rt, artifacts, &p, epochs, false) {
             Ok((_, _, _, reports)) => all_reports.extend(reports),
             Err(err) => eprintln!("{task}: {err}"),
@@ -387,9 +387,9 @@ fn cmd_ablate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     let rt = backend_from(&mut args)?;
     let epochs = args.usize("epochs", 40);
     args.finish()?;
-    let p = preset("jets");
+    let p = try_preset("jets")?;
     let mr = ModelRuntime::load(&rt, artifacts, p.model)?;
-    let splits = splits_for(p.model, 1, p.n_train, p.n_eval);
+    let splits = try_splits_for(p.model, 1, p.n_train, p.n_eval)?;
 
     println!("== ablation: constant beta (HGQ-c*) vs ramp ==");
     for (label, beta) in [("HGQ-c1", 2.1e-6), ("HGQ-c2", 1.2e-5)] {

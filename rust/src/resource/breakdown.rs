@@ -46,9 +46,19 @@ pub fn breakdown(g: &Graph) -> Vec<LayerUsage> {
                 });
                 cur = Some(q);
             }
-            FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, out: q, .. } => {
+            FwLayer::Conv2d { k, cin, cout, in_h, in_w, out_shape, w, out: q, .. } => {
                 let in_act = cur.expect("conv before input");
-                let r = conv2d_stream_resources(*k, *cin, *cout, *in_h, *in_w, w, in_act, q);
+                let r = conv2d_stream_resources(
+                    *k,
+                    *cin,
+                    *cout,
+                    *in_h,
+                    *in_w,
+                    *out_shape,
+                    w,
+                    in_act,
+                    q,
+                );
                 let act_bits: Vec<u32> = (0..*cin)
                     .map(|c| {
                         if in_act.scalar {

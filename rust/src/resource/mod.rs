@@ -239,6 +239,7 @@ pub fn dense_resources(
 
 /// Resource estimate of a stream-IO conv layer (one physical MAC set,
 /// multiplier reuse across positions; line buffers in BRAM).
+/// `out_shape` is the IR-resolved `[oh, ow, cout]` of the layer.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_stream_resources(
     k: usize,
@@ -246,6 +247,7 @@ pub fn conv2d_stream_resources(
     cout: usize,
     in_h: usize,
     in_w: usize,
+    out_shape: [usize; 3],
     w: &QuantWeights,
     in_act: &ActQ,
     out_act: &ActQ,
@@ -295,8 +297,10 @@ pub fn conv2d_stream_resources(
     };
     let buffer_bits = (k - 1) as u64 * in_w as u64 * cin as u64 * act_bits;
     r.bram_18k += buffer_bits as f64 / 18_432.0;
-    // II: one output position per cycle
-    let (oh, ow) = (in_h - k + 1, in_w - k + 1);
+    // II: one output position per cycle (IR-resolved output geometry;
+    // the valid-conv invariant ties it to the input window)
+    let [oh, ow, _] = out_shape;
+    debug_assert_eq!((oh, ow), (in_h - k + 1, in_w - k + 1));
     r.ii_cc = (oh * ow) as u64;
     r.latency_cc = r.ii_cc + mac_latency_cc(max_levels, any_dsp) + in_w as u64 * (k - 1) as u64;
     r
@@ -320,9 +324,19 @@ pub fn estimate(g: &Graph) -> ResourceReport {
                 total.add(&r);
                 cur = Some(out);
             }
-            FwLayer::Conv2d { k, cin, cout, in_h, in_w, w, out, .. } => {
+            FwLayer::Conv2d { k, cin, cout, in_h, in_w, out_shape, w, out, .. } => {
                 is_stream = true;
-                let r = conv2d_stream_resources(*k, *cin, *cout, *in_h, *in_w, w, cur.unwrap(), out);
+                let r = conv2d_stream_resources(
+                    *k,
+                    *cin,
+                    *cout,
+                    *in_h,
+                    *in_w,
+                    *out_shape,
+                    w,
+                    cur.unwrap(),
+                    out,
+                );
                 total.add(&r);
                 cur = Some(out);
             }

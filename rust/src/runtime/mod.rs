@@ -27,9 +27,11 @@ pub mod native;
 pub mod pjrt;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::ir::ModelIr;
 use crate::nn::ModelMeta;
 
 /// Hyperparameters of one training step, in artifact order.
@@ -184,6 +186,12 @@ impl Runtime {
 pub struct ModelRuntime {
     /// Static metadata of the loaded model (state layout, layers).
     pub meta: ModelMeta,
+    /// Resolved layer IR (ARCHITECTURE.md §Layer IR): the structural
+    /// source of truth shared by the firmware builder, estimators and
+    /// deployment. On the native backend this is the SAME `Arc` the
+    /// engine's cached plan was built from (one canonical instance);
+    /// other backends resolve it once from `meta` at load time.
+    pub ir: Arc<ModelIr>,
     /// Worker-thread setting inherited from the loading [`Runtime`]
     /// (`--threads N`, 0 = all cores). Deployment-time batched firmware
     /// inference honors it alongside the backend's own executor.
@@ -197,9 +205,11 @@ impl ModelRuntime {
     /// back to its built-in presets when no artifact directory exists,
     /// so the hermetic build needs no files at all.
     pub fn load(rt: &Runtime, artifacts: &Path, model: &str) -> Result<ModelRuntime> {
-        let exec: Box<dyn ModelExec> = match rt.kind {
+        let (exec, shared_ir): (Box<dyn ModelExec>, Option<Arc<ModelIr>>) = match rt.kind {
             BackendKind::Native => {
-                Box::new(native::NativeModel::load(artifacts, model)?.with_threads(rt.threads))
+                let nm = native::NativeModel::load(artifacts, model)?.with_threads(rt.threads);
+                let ir = nm.shared_ir();
+                (Box::new(nm), Some(ir))
             }
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => {
@@ -207,13 +217,17 @@ impl ModelRuntime {
                     .pjrt
                     .as_ref()
                     .ok_or_else(|| anyhow::anyhow!("pjrt runtime not initialized"))?;
-                Box::new(pjrt::PjrtModel::load(client, artifacts, model)?)
+                (Box::new(pjrt::PjrtModel::load(client, artifacts, model)?), None)
             }
             #[cfg(not(feature = "pjrt"))]
             BackendKind::Pjrt => bail!("pjrt backend not compiled in"),
         };
         let meta = exec.meta().clone();
-        Ok(ModelRuntime { meta, threads: rt.threads, exec })
+        let ir = match shared_ir {
+            Some(ir) => ir,
+            None => Arc::new(ModelIr::build(&meta)?),
+        };
+        Ok(ModelRuntime { meta, ir, threads: rt.threads, exec })
     }
 
     /// The model's initial packed state through its backend.

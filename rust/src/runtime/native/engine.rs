@@ -1,12 +1,16 @@
 //! Per-shard compute kernels of the native backend.
 //!
-//! The engine is organized around a [`Plan`]: the batch-independent part
-//! of one forward/backward evaluation (quantized weights, activation
-//! group quantizers, layer topology), built once per call from the
-//! packed state. Batch shards then run [`forward_shard`] /
-//! [`backward_shard`] independently — embarrassingly parallel — and the
-//! batch-independent regularizer gradients ([`regularizer_pass`]) are
-//! applied once on the merged activation extremes.
+//! Topology and numerics are split along the IR seam: the layer graph
+//! ([`crate::ir::ModelIr`]) is resolved **once** per model, while the
+//! state-dependent quantization data lives in a [`Plan`] — a reusable
+//! requantization workspace (quantized weights, activation group
+//! quantizers) allocated once and *refilled in place* from the packed
+//! state on every call, so the train-step hot path neither re-derives
+//! the topology nor re-allocates per-layer buffers. Batch shards then
+//! run [`forward_shard`] / [`backward_shard`] independently —
+//! embarrassingly parallel — and the batch-independent regularizer
+//! gradients ([`regularizer_pass`]) are applied once on the merged
+//! activation extremes.
 //!
 //! Gradient semantics mirror the in-repo JAX reference
 //! (`python/compile/hgq/`) operation by operation, including the
@@ -24,11 +28,11 @@
 //!   per-channel `max` over spatial positions splits its gradient evenly
 //!   among tied positions.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::firmware::{F_MAX, F_MIN};
 use crate::fixed::{bit_length, exp2i, round_half_up};
-use crate::nn::{LayerMeta, ModelMeta};
+use crate::ir::{GroupRef, IrOp, ModelIr, ParamRef};
 
 pub(super) const LN2: f64 = std::f64::consts::LN_2;
 
@@ -92,11 +96,12 @@ pub(super) fn act_bits_eq3(nmin: f64, nmax: f64, f: i32, signed: bool) -> (f64, 
 }
 
 // ---------------------------------------------------------------------
-// batch-independent plan
+// requantization workspace (state-dependent, topology-free)
 // ---------------------------------------------------------------------
 
 /// A quantized constant tensor (weights or biases) with everything the
-/// backward pass and the regularizer need.
+/// backward pass and the regularizer need. Buffers are allocated once
+/// (from the IR) and refilled in place from each packed state.
 pub(super) struct QwRun {
     pub off: usize,
     pub f_off: usize,
@@ -106,15 +111,52 @@ pub(super) struct QwRun {
     pub mant: Vec<i64>,
     pub delta: Vec<f64>,
     pub bits: Vec<f64>,
+    pub f_int: Vec<i32>,
     pub clip: Vec<bool>,
     pub scale: f64,
 }
 
+impl QwRun {
+    fn new(p: &ParamRef, scaled: bool) -> QwRun {
+        QwRun {
+            off: p.offset,
+            f_off: p.f_offset,
+            f_size: p.f_size,
+            n: p.size,
+            q: vec![0.0; p.size],
+            mant: vec![0; p.size],
+            delta: vec![0.0; p.size],
+            bits: vec![0.0; p.size],
+            f_int: vec![0; p.f_size],
+            clip: vec![false; p.f_size],
+            scale: if scaled { group_norm_scale(p.size, p.f_size) } else { 1.0 },
+        }
+    }
+
+    /// Requantize from a packed state (in place, no allocation).
+    fn refill(&mut self, state: &[f32]) {
+        let w = &state[self.off..self.off + self.n];
+        let f_fp = &state[self.f_off..self.f_off + self.f_size];
+        for (k, &v) in f_fp.iter().enumerate() {
+            let (f, c) = use_f(v);
+            self.f_int[k] = f;
+            self.clip[k] = c;
+        }
+        for e in 0..self.n {
+            let f = self.f_int[fidx(e, self.f_size)];
+            let m = round_half_up(w[e] as f64 * exp2i(f));
+            let qv = m as f64 * exp2i(-f);
+            self.mant[e] = m;
+            self.q[e] = qv;
+            self.delta[e] = w[e] as f64 - qv;
+            self.bits[e] = bit_length(m.unsigned_abs() as i64) as f64;
+        }
+    }
+}
+
 /// One activation quantizer group: integer bitwidths, clip masks and the
-/// running extremes every shard starts from.
+/// running extremes every shard starts from. Refilled in place per call.
 pub(super) struct GroupQ {
-    /// index into meta.act_groups
-    pub gi: usize,
     pub feat_dim: usize,
     pub f_off: usize,
     pub f_size: usize,
@@ -126,268 +168,114 @@ pub(super) struct GroupQ {
     /// fresh-statistics calibration pass)
     pub init_min: Vec<f64>,
     pub init_max: Vec<f64>,
+    /// resolved offset of the `amin` stat tensor inside the state
+    pub amin_off: usize,
+    /// resolved offset of the `amax` stat tensor inside the state
+    pub amax_off: usize,
+    /// offset of this group inside the concatenated calib vectors
+    pub calib_off: usize,
 }
 
-/// One layer of the batch-independent execution plan.
-pub(super) enum PlanLayer {
-    InputQuant {
-        g: usize,
-    },
-    Dense {
-        din: usize,
-        dout: usize,
-        relu: bool,
-        w: QwRun,
-        b: QwRun,
-        in_g: usize,
-        out_g: usize,
-    },
-    Conv2d {
-        k: usize,
-        cin: usize,
-        cout: usize,
-        oh: usize,
-        ow: usize,
-        in_h: usize,
-        in_w: usize,
-        relu: bool,
-        w: QwRun,
-        b: QwRun,
-        in_g: usize,
-        out_g: usize,
-    },
-    MaxPool2 {
-        in_shape: [usize; 3],
-        out_shape: [usize; 3],
-    },
-    Flatten,
+impl GroupQ {
+    fn new(g: &GroupRef) -> GroupQ {
+        GroupQ {
+            feat_dim: g.feat_dim,
+            f_off: g.f_offset,
+            f_size: g.f_size,
+            f_int: vec![0; g.f_size],
+            clip: vec![false; g.f_size],
+            signed: g.signed,
+            scale: group_norm_scale(g.feat_dim, g.f_size),
+            init_min: vec![0.0; g.f_size],
+            init_max: vec![0.0; g.f_size],
+            amin_off: g.amin_offset,
+            amax_off: g.amax_offset,
+            calib_off: g.calib_offset,
+        }
+    }
+
+    /// Re-read bitwidths (+ optionally running stats) from a state.
+    fn refill(&mut self, state: &[f32], use_state_stats: bool) {
+        let f_fp = &state[self.f_off..self.f_off + self.f_size];
+        for (k, &v) in f_fp.iter().enumerate() {
+            let (f, c) = use_f(v);
+            self.f_int[k] = f;
+            self.clip[k] = c;
+        }
+        if use_state_stats {
+            let amin = &state[self.amin_off..self.amin_off + self.f_size];
+            let amax = &state[self.amax_off..self.amax_off + self.f_size];
+            for k in 0..self.f_size {
+                self.init_min[k] = amin[k] as f64;
+                self.init_max[k] = amax[k] as f64;
+            }
+        } else {
+            self.init_min.fill(0.0);
+            self.init_max.fill(0.0);
+        }
+    }
 }
 
-/// The batch-independent part of one evaluation: quantized constants +
-/// group quantizers + topology, shared read-only by every shard.
+/// Quantized weight + bias runs of one MAC (dense/conv) node.
+pub(super) struct MacConsts {
+    pub w: QwRun,
+    pub b: QwRun,
+}
+
+/// The state-dependent half of one evaluation: quantized constants +
+/// group quantizers, shared read-only by every shard. The topology half
+/// lives in the cached [`ModelIr`]; a `Plan` is allocated once per
+/// model and [`Plan::refill`]ed per call.
 pub(super) struct Plan {
     pub groups: Vec<GroupQ>,
-    pub layers: Vec<PlanLayer>,
-    pub output_dim: usize,
+    /// per IR node: quantized weight/bias runs (MAC layers only)
+    pub consts: Vec<Option<MacConsts>>,
     pub n_train: usize,
-}
-
-fn quant_tensor(
-    meta: &ModelMeta,
-    state: &[f32],
-    wname: &str,
-    fname: &str,
-    scaled: bool,
-) -> Result<QwRun> {
-    let we = meta.tensor(wname)?;
-    let fe = meta.tensor(fname)?;
-    let n = we.size;
-    let f_size = fe.size;
-    if f_size != 1 && f_size != n {
-        bail!("fbit tensor '{fname}' size {f_size} incompatible with '{wname}' size {n}");
-    }
-    let w = &state[we.offset..we.offset + n];
-    let f_fp = &state[fe.offset..fe.offset + f_size];
-    let mut f_int = Vec::with_capacity(f_size);
-    let mut clip = Vec::with_capacity(f_size);
-    for &v in f_fp {
-        let (f, c) = use_f(v);
-        f_int.push(f);
-        clip.push(c);
-    }
-    let mut q = vec![0.0f64; n];
-    let mut mant = vec![0i64; n];
-    let mut delta = vec![0.0f64; n];
-    let mut bits = vec![0.0f64; n];
-    for e in 0..n {
-        let f = f_int[fidx(e, f_size)];
-        let m = round_half_up(w[e] as f64 * exp2i(f));
-        let qv = m as f64 * exp2i(-f);
-        mant[e] = m;
-        q[e] = qv;
-        delta[e] = w[e] as f64 - qv;
-        bits[e] = bit_length(m.unsigned_abs() as i64) as f64;
-    }
-    let scale = if scaled { group_norm_scale(n, f_size) } else { 1.0 };
-    Ok(QwRun { off: we.offset, f_off: fe.offset, f_size, n, q, mant, delta, bits, clip, scale })
-}
-
-fn group_q(
-    meta: &ModelMeta,
-    state: &[f32],
-    name: &str,
-    feat_dim: usize,
-    use_state_stats: bool,
-) -> Result<GroupQ> {
-    let gi = meta
-        .act_groups
-        .iter()
-        .position(|g| g.name == name)
-        .ok_or_else(|| anyhow!("act group '{name}' not in meta"))?;
-    let g = &meta.act_groups[gi];
-    let fe = meta.tensor(name)?;
-    let f_size = fe.size;
-    if f_size != g.size {
-        bail!("group '{name}': fbit size {f_size} != group size {}", g.size);
-    }
-    if f_size != 1 && f_size != feat_dim {
-        bail!("group '{name}': granularity {f_size} incompatible with feature dim {feat_dim}");
-    }
-    let f_fp = &state[fe.offset..fe.offset + f_size];
-    let mut f_int = Vec::with_capacity(f_size);
-    let mut clip = Vec::with_capacity(f_size);
-    for &v in f_fp {
-        let (f, c) = use_f(v);
-        f_int.push(f);
-        clip.push(c);
-    }
-    let (init_min, init_max) = if use_state_stats {
-        let amin = meta.tensor_slice(state, &format!("{name}.amin"))?;
-        let amax = meta.tensor_slice(state, &format!("{name}.amax"))?;
-        (
-            amin.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
-            amax.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
-        )
-    } else {
-        (vec![0.0f64; f_size], vec![0.0f64; f_size])
-    };
-    let scale = group_norm_scale(feat_dim, f_size);
-    Ok(GroupQ {
-        gi,
-        feat_dim,
-        f_off: fe.offset,
-        f_size,
-        f_int,
-        clip,
-        signed: g.signed,
-        scale,
-        init_min,
-        init_max,
-    })
+    state_size: usize,
 }
 
 impl Plan {
-    /// Build the batch-independent plan from the packed state.
+    /// Allocate the workspace for a resolved model topology.
+    pub(super) fn new(ir: &ModelIr) -> Plan {
+        let groups = ir.groups.iter().map(GroupQ::new).collect();
+        let consts = ir
+            .nodes
+            .iter()
+            .map(|node| match &node.op {
+                IrOp::Dense { w, b, .. } => {
+                    Some(MacConsts { w: QwRun::new(w, true), b: QwRun::new(b, false) })
+                }
+                IrOp::Conv2d { w, b, .. } => {
+                    Some(MacConsts { w: QwRun::new(w, true), b: QwRun::new(b, false) })
+                }
+                _ => None,
+            })
+            .collect();
+        Plan { groups, consts, n_train: ir.n_train, state_size: ir.state_size }
+    }
+
+    /// Requantize every constant and group from the packed state.
     /// `use_state_stats`: seed the running extremes from the state's
     /// amin/amax segments (training/inference) or from zeros (the
     /// fresh-statistics calibration pass).
-    pub(super) fn build(meta: &ModelMeta, state: &[f32], use_state_stats: bool) -> Result<Plan> {
-        if state.len() != meta.state_size {
-            bail!("state size {} != meta {}", state.len(), meta.state_size);
+    pub(super) fn refill(&mut self, state: &[f32], use_state_stats: bool) -> Result<()> {
+        if state.len() != self.state_size {
+            bail!("state size {} != meta {}", state.len(), self.state_size);
         }
-        let mut groups: Vec<GroupQ> = Vec::new();
-        let mut layers: Vec<PlanLayer> = Vec::new();
-        let mut cur_shape: Vec<usize> = meta.input_shape.clone();
-        let mut cur_feat: usize = meta.input_dim();
-        let mut cur_group: Option<usize> = None;
+        for g in self.groups.iter_mut() {
+            g.refill(state, use_state_stats);
+        }
+        for mc in self.consts.iter_mut().flatten() {
+            mc.w.refill(state);
+            mc.b.refill(state);
+        }
+        Ok(())
+    }
 
-        for lm in &meta.layers {
-            match lm {
-                LayerMeta::InputQuant { name, .. } => {
-                    let g = group_q(meta, state, &format!("{name}.fa"), cur_feat, use_state_stats)?;
-                    let idx = groups.len();
-                    groups.push(g);
-                    cur_group = Some(idx);
-                    layers.push(PlanLayer::InputQuant { g: idx });
-                }
-                LayerMeta::Dense { name, din, dout, relu } => {
-                    let (din, dout) = (*din, *dout);
-                    if cur_feat != din {
-                        bail!("dense '{name}': input dim {cur_feat} != din {din}");
-                    }
-                    let w = quant_tensor(
-                        meta,
-                        state,
-                        &format!("{name}.w"),
-                        &format!("{name}.fw"),
-                        true,
-                    )?;
-                    let b = quant_tensor(
-                        meta,
-                        state,
-                        &format!("{name}.b"),
-                        &format!("{name}.fb"),
-                        false,
-                    )?;
-                    let in_g = cur_group
-                        .ok_or_else(|| anyhow!("dense '{name}' before input_quant"))?;
-                    if groups[in_g].f_size != 1 && groups[in_g].f_size != din {
-                        bail!("dense '{name}': input group granularity mismatch");
-                    }
-                    let og = group_q(meta, state, &format!("{name}.fa"), dout, use_state_stats)?;
-                    let out_g = groups.len();
-                    groups.push(og);
-                    layers.push(PlanLayer::Dense { din, dout, relu: *relu, w, b, in_g, out_g });
-                    cur_group = Some(out_g);
-                    cur_feat = dout;
-                    cur_shape = vec![dout];
-                }
-                LayerMeta::Conv2d { name, k, cin, cout, relu, out_shape } => {
-                    let (k, cin, cout) = (*k, *cin, *cout);
-                    let [oh, ow, _] = *out_shape;
-                    let (in_h, in_w) = (oh + k - 1, ow + k - 1);
-                    if cur_shape != vec![in_h, in_w, cin] {
-                        bail!("conv '{name}': input shape {cur_shape:?} != [{in_h},{in_w},{cin}]");
-                    }
-                    let w = quant_tensor(
-                        meta,
-                        state,
-                        &format!("{name}.w"),
-                        &format!("{name}.fw"),
-                        true,
-                    )?;
-                    let b = quant_tensor(
-                        meta,
-                        state,
-                        &format!("{name}.b"),
-                        &format!("{name}.fb"),
-                        false,
-                    )?;
-                    let in_g = cur_group
-                        .ok_or_else(|| anyhow!("conv '{name}' before input_quant"))?;
-                    let feat = oh * ow * cout;
-                    let og = group_q(meta, state, &format!("{name}.fa"), feat, use_state_stats)?;
-                    let out_g = groups.len();
-                    groups.push(og);
-                    layers.push(PlanLayer::Conv2d {
-                        k,
-                        cin,
-                        cout,
-                        oh,
-                        ow,
-                        in_h,
-                        in_w,
-                        relu: *relu,
-                        w,
-                        b,
-                        in_g,
-                        out_g,
-                    });
-                    cur_group = Some(out_g);
-                    cur_feat = feat;
-                    cur_shape = vec![oh, ow, cout];
-                }
-                LayerMeta::MaxPool2 { out_shape } => {
-                    let [oh, ow, c] = *out_shape;
-                    if cur_shape.len() != 3 {
-                        bail!("maxpool2 needs a HWC input, got {cur_shape:?}");
-                    }
-                    let in_shape = [cur_shape[0], cur_shape[1], cur_shape[2]];
-                    layers.push(PlanLayer::MaxPool2 { in_shape, out_shape: [oh, ow, c] });
-                    cur_feat = oh * ow * c;
-                    cur_shape = vec![oh, ow, c];
-                }
-                LayerMeta::Flatten => {
-                    cur_shape = vec![cur_feat];
-                    layers.push(PlanLayer::Flatten);
-                }
-            }
-        }
-
-        if cur_feat != meta.output_dim {
-            bail!("final feature dim {cur_feat} != output_dim {}", meta.output_dim);
-        }
-        Ok(Plan { groups, layers, output_dim: meta.output_dim, n_train: meta.n_train })
+    /// The quantized constants of MAC node `li` (panics on non-MAC
+    /// nodes — the IR guarantees the indices the walkers use).
+    fn mac(&self, li: usize) -> &MacConsts {
+        self.consts[li].as_ref().expect("MAC consts for dense/conv node")
     }
 }
 
@@ -411,10 +299,10 @@ pub(super) struct ShardRun {
     pub rows: usize,
     pub logits: Vec<f64>,
     pub groups: Vec<GroupShard>,
-    /// per plan layer: quantized layer input (dense/conv) or pre-pool
+    /// per IR node: quantized layer input (dense/conv) or pre-pool
     /// activations (maxpool); empty outside training mode
     pub h_in: Vec<Vec<f64>>,
-    /// per plan layer: relu gradient mask (dense/conv); empty otherwise
+    /// per IR node: relu gradient mask (dense/conv); empty otherwise
     pub mask: Vec<Vec<f64>>,
 }
 
@@ -453,8 +341,14 @@ fn quantize_group(
 /// Quantized forward pass over one batch shard (`rows` samples).
 /// `train` keeps the backward-pass caches (quantization errors, layer
 /// inputs, relu masks); without it only logits + extremes are produced.
-pub(super) fn forward_shard(plan: &Plan, x: &[f32], rows: usize, train: bool) -> ShardRun {
-    let n_layers = plan.layers.len();
+pub(super) fn forward_shard(
+    ir: &ModelIr,
+    plan: &Plan,
+    x: &[f32],
+    rows: usize,
+    train: bool,
+) -> ShardRun {
+    let n_layers = ir.nodes.len();
     let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
     let mut h_in: Vec<Vec<f64>> = Vec::new();
     let mut mask: Vec<Vec<f64>> = Vec::new();
@@ -470,13 +364,15 @@ pub(super) fn forward_shard(plan: &Plan, x: &[f32], rows: usize, train: bool) ->
         })
         .collect();
 
-    for (li, layer) in plan.layers.iter().enumerate() {
-        match layer {
-            PlanLayer::InputQuant { g } => {
-                h = quantize_group(&plan.groups[*g], &mut groups[*g], &h, rows, train);
+    for (li, node) in ir.nodes.iter().enumerate() {
+        match &node.op {
+            IrOp::InputQuant { group } => {
+                h = quantize_group(&plan.groups[*group], &mut groups[*group], &h, rows, train);
             }
-            PlanLayer::Dense { din, dout, relu, w, b, out_g, .. } => {
+            IrOp::Dense { din, dout, relu, out_group, .. } => {
                 let (din, dout) = (*din, *dout);
+                let mc = plan.mac(li);
+                let (w, b) = (&mc.w, &mc.b);
                 let mut z = vec![0.0f64; rows * dout];
                 for bi in 0..rows {
                     let hrow = &h[bi * din..(bi + 1) * din];
@@ -505,7 +401,8 @@ pub(super) fn forward_shard(plan: &Plan, x: &[f32], rows: usize, train: bool) ->
                         }
                     }
                 }
-                let hq = quantize_group(&plan.groups[*out_g], &mut groups[*out_g], &z, rows, train);
+                let og = *out_group;
+                let hq = quantize_group(&plan.groups[og], &mut groups[og], &z, rows, train);
                 if train {
                     h_in[li] = std::mem::replace(&mut h, hq);
                     mask[li] = m;
@@ -513,9 +410,11 @@ pub(super) fn forward_shard(plan: &Plan, x: &[f32], rows: usize, train: bool) ->
                     h = hq;
                 }
             }
-            PlanLayer::Conv2d { k, cin, cout, oh, ow, in_h, in_w, relu, w, b, out_g, .. } => {
+            IrOp::Conv2d { k, cin, cout, oh, ow, in_h, in_w, relu, out_group, .. } => {
                 let (k, cin, cout) = (*k, *cin, *cout);
                 let (oh, ow, in_h, in_w) = (*oh, *ow, *in_h, *in_w);
+                let mc = plan.mac(li);
+                let (w, b) = (&mc.w, &mc.b);
                 let in_feat = in_h * in_w * cin;
                 let feat = oh * ow * cout;
                 let mut z = vec![0.0f64; rows * feat];
@@ -548,7 +447,8 @@ pub(super) fn forward_shard(plan: &Plan, x: &[f32], rows: usize, train: bool) ->
                         }
                     }
                 }
-                let hq = quantize_group(&plan.groups[*out_g], &mut groups[*out_g], &z, rows, train);
+                let og = *out_group;
+                let hq = quantize_group(&plan.groups[og], &mut groups[og], &z, rows, train);
                 if train {
                     h_in[li] = std::mem::replace(&mut h, hq);
                     mask[li] = m;
@@ -556,7 +456,7 @@ pub(super) fn forward_shard(plan: &Plan, x: &[f32], rows: usize, train: bool) ->
                     h = hq;
                 }
             }
-            PlanLayer::MaxPool2 { in_shape, out_shape } => {
+            IrOp::MaxPool2 { in_shape, out_shape } => {
                 let [ih, iw, c] = *in_shape;
                 let [oh, ow, _] = *out_shape;
                 let mut nh = vec![0.0f64; rows * oh * ow * c];
@@ -587,7 +487,7 @@ pub(super) fn forward_shard(plan: &Plan, x: &[f32], rows: usize, train: bool) ->
                     h = nh;
                 }
             }
-            PlanLayer::Flatten => {}
+            IrOp::Flatten => {}
         }
     }
 
@@ -616,18 +516,23 @@ fn group_surrogate(gq: &GroupQ, gs: &GroupShard, g: &[f64], rows: usize, grad: &
 /// quantizers) plus the Eq. 15 bitwidth surrogates. Returns this shard's
 /// partial gradient over the trainable segment `[params | fbits]`; the
 /// batch-independent regularizer terms live in [`regularizer_pass`].
-pub(super) fn backward_shard(plan: &Plan, cache: &ShardRun, g_logits: &[f64]) -> Vec<f64> {
+pub(super) fn backward_shard(
+    ir: &ModelIr,
+    plan: &Plan,
+    cache: &ShardRun,
+    g_logits: &[f64],
+) -> Vec<f64> {
     let rows = cache.rows;
     let mut grad = vec![0.0f64; plan.n_train];
     let mut g: Vec<f64> = g_logits.to_vec();
 
-    for (li, layer) in plan.layers.iter().enumerate().rev() {
-        match layer {
-            PlanLayer::Flatten => {}
-            PlanLayer::InputQuant { g: gi } => {
-                group_surrogate(&plan.groups[*gi], &cache.groups[*gi], &g, rows, &mut grad);
+    for (li, node) in ir.nodes.iter().enumerate().rev() {
+        match &node.op {
+            IrOp::Flatten => {}
+            IrOp::InputQuant { group } => {
+                group_surrogate(&plan.groups[*group], &cache.groups[*group], &g, rows, &mut grad);
             }
-            PlanLayer::MaxPool2 { in_shape, out_shape } => {
+            IrOp::MaxPool2 { in_shape, out_shape } => {
                 let [ih, iw, c] = *in_shape;
                 let [oh, ow, _] = *out_shape;
                 let hin = &cache.h_in[li];
@@ -674,10 +579,12 @@ pub(super) fn backward_shard(plan: &Plan, cache: &ShardRun, g_logits: &[f64]) ->
                 }
                 g = gin;
             }
-            PlanLayer::Dense { din, dout, w, b, out_g, .. } => {
+            IrOp::Dense { din, dout, out_group, .. } => {
                 let (din, dout) = (*din, *dout);
-                let og = &plan.groups[*out_g];
-                let ogs = &cache.groups[*out_g];
+                let mc = plan.mac(li);
+                let (w, b) = (&mc.w, &mc.b);
+                let og = &plan.groups[*out_group];
+                let ogs = &cache.groups[*out_group];
                 let msk = &cache.mask[li];
                 let hin = &cache.h_in[li];
 
@@ -737,11 +644,13 @@ pub(super) fn backward_shard(plan: &Plan, cache: &ShardRun, g_logits: &[f64]) ->
                 }
                 g = gprev;
             }
-            PlanLayer::Conv2d { k, cin, cout, oh, ow, in_h, in_w, w, b, out_g, .. } => {
+            IrOp::Conv2d { k, cin, cout, oh, ow, in_h, in_w, out_group, .. } => {
                 let (k, cin, cout) = (*k, *cin, *cout);
                 let (oh, ow, in_h, in_w) = (*oh, *ow, *in_h, *in_w);
-                let og = &plan.groups[*out_g];
-                let ogs = &cache.groups[*out_g];
+                let mc = plan.mac(li);
+                let (w, b) = (&mc.w, &mc.b);
+                let og = &plan.groups[*out_group];
+                let ogs = &cache.groups[*out_group];
                 let msk = &cache.mask[li];
                 let hin = &cache.h_in[li];
                 let in_feat = in_h * in_w * cin;
@@ -847,6 +756,7 @@ pub(super) struct RegOut {
 /// the §III.D.3 group normalization, with the balanced tie derivative on
 /// the active-branch gate).
 pub(super) fn regularizer_pass(
+    ir: &ModelIr,
     plan: &Plan,
     stats: &[GroupStats],
     beta: f64,
@@ -876,18 +786,20 @@ pub(super) fn regularizer_pass(
     let mut wsum: Vec<Vec<f64>> = plan.groups.iter().map(|g| vec![0.0f64; g.f_size]).collect();
     let (mut ebops, mut sp_num, mut sp_den) = (0.0f64, 0.0f64, 0.0f64);
 
-    for layer in &plan.layers {
-        match layer {
-            PlanLayer::Dense { din, dout, w, b, in_g, .. } => {
+    for (li, node) in ir.nodes.iter().enumerate() {
+        match &node.op {
+            IrOp::Dense { din, dout, in_group, .. } => {
                 let (din, dout) = (*din, *dout);
+                let mc = plan.mac(li);
+                let (w, b) = (&mc.w, &mc.b);
                 l1 += w.bits.iter().sum::<f64>() + b.bits.iter().sum::<f64>();
                 sp_num += w.mant.iter().filter(|&&m| m == 0).count() as f64;
                 sp_den += w.n as f64;
-                let ib = &bits[*in_g];
-                let ifs = plan.groups[*in_g].f_size;
+                let ib = &bits[*in_group];
+                let ifs = plan.groups[*in_group].f_size;
                 if ifs == 1 {
                     let tot: f64 = w.bits.iter().sum();
-                    wsum[*in_g][0] += tot;
+                    wsum[*in_group][0] += tot;
                     ebops += ib[0] * tot;
                 } else {
                     for i in 0..din {
@@ -895,7 +807,7 @@ pub(super) fn regularizer_pass(
                         for j in 0..dout {
                             s += w.bits[i * dout + j];
                         }
-                        wsum[*in_g][i] += s;
+                        wsum[*in_group][i] += s;
                         ebops += ib[i] * s;
                     }
                 }
@@ -917,13 +829,15 @@ pub(super) fn regularizer_pass(
                     }
                 }
             }
-            PlanLayer::Conv2d { k, cin, cout, w, b, in_g, .. } => {
+            IrOp::Conv2d { k, cin, cout, in_group, .. } => {
                 let (k, cin, cout) = (*k, *cin, *cout);
+                let mc = plan.mac(li);
+                let (w, b) = (&mc.w, &mc.b);
                 l1 += w.bits.iter().sum::<f64>() + b.bits.iter().sum::<f64>();
                 sp_num += w.mant.iter().filter(|&&m| m == 0).count() as f64;
                 sp_den += w.n as f64;
-                let ib = &bits[*in_g];
-                let ifs = plan.groups[*in_g].f_size;
+                let ib = &bits[*in_group];
+                let ifs = plan.groups[*in_group].f_size;
                 // stream-IO EBOPs: one multiplier per kernel weight, fed
                 // at the per-channel max activation width
                 let mut bw_cin = vec![0.0f64; cin];
@@ -961,7 +875,7 @@ pub(super) fn regularizer_pass(
                 // route d(EBOPs)/d(bits) back into the producing group;
                 // the per-channel max splits evenly among spatial ties
                 if ifs == 1 {
-                    wsum[*in_g][0] += wsum_c.iter().sum::<f64>();
+                    wsum[*in_group][0] += wsum_c.iter().sum::<f64>();
                 } else {
                     for c in 0..cin {
                         let mut ties = 0usize;
@@ -976,7 +890,7 @@ pub(super) fn regularizer_pass(
                         let share = wsum_c[c] / ties as f64;
                         for e in (c..ib.len()).step_by(cin) {
                             if ib[e] == bw_cin[c] {
-                                wsum[*in_g][e] += share;
+                                wsum[*in_group][e] += share;
                             }
                         }
                     }
@@ -989,7 +903,7 @@ pub(super) fn regularizer_pass(
                     }
                 }
             }
-            PlanLayer::InputQuant { .. } | PlanLayer::MaxPool2 { .. } | PlanLayer::Flatten => {}
+            IrOp::InputQuant { .. } | IrOp::MaxPool2 { .. } | IrOp::Flatten => {}
         }
     }
 

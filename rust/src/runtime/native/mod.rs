@@ -25,6 +25,12 @@
 //! are reduced in fixed shard order — so results are bit-identical for
 //! any `--threads` value.
 //!
+//! Structure and numerics are split along the layer-IR seam
+//! (ARCHITECTURE.md §Layer IR): the topology ([`crate::ir::ModelIr`])
+//! is resolved **once** per loaded model and held across
+//! `train_step`/`forward`/`calib_batch`; each call only refills a
+//! reusable requantization workspace from the packed state.
+//!
 //! Models load from `artifacts/<model>/` when present; otherwise the
 //! built-in presets mirroring python/compile/model.py are synthesized
 //! in-process (same tensor layout, he-init weights), so `hgq train
@@ -35,23 +41,32 @@ mod parallel;
 mod presets;
 
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
 use self::engine::{backward_shard, forward_shard, regularizer_pass, GroupStats, Plan, ShardRun};
 use self::parallel::{default_threads, run_shards, shard_ranges};
 use super::{Hypers, ModelExec, StepOut, Target};
+use crate::ir::ModelIr;
 use crate::nn::ModelMeta;
 
 const ADAM_B1: f64 = 0.9;
 const ADAM_B2: f64 = 0.999;
 const ADAM_EPS: f64 = 1e-7;
 
-/// A model interpreted by the native engine.
+/// A model interpreted by the native engine. The layer topology is
+/// resolved once at load time into a [`ModelIr`]; every call then only
+/// refills the requantization workspace from the packed state.
 pub struct NativeModel {
     meta: ModelMeta,
+    ir: Arc<ModelIr>,
     init: Vec<f32>,
     threads: usize,
+    /// reusable requantization workspace (state-dependent half of the
+    /// old per-call plan); refilled in place, so the train-step hot
+    /// path allocates no per-layer constant buffers
+    scratch: Mutex<Plan>,
 }
 
 impl NativeModel {
@@ -85,7 +100,7 @@ impl NativeModel {
                     bail!("reading {}: {e}", dir.join("init.bin").display());
                 }
             };
-            Ok(NativeModel { meta, init, threads: default_threads() })
+            NativeModel::assemble(meta, init)
         } else {
             NativeModel::from_preset(model)
         }
@@ -99,7 +114,21 @@ impl NativeModel {
             .with_context(|| format!("building preset meta for '{model}'"))?;
         let seed = presets::model_seed(model);
         let init = presets::synth_init(&meta, spec.f_init_w, spec.f_init_a, seed);
-        Ok(NativeModel { meta, init, threads: default_threads() })
+        NativeModel::assemble(meta, init)
+    }
+
+    /// Resolve the IR once and allocate the requantization workspace.
+    fn assemble(meta: ModelMeta, init: Vec<f32>) -> Result<NativeModel> {
+        let ir = Arc::new(ModelIr::build(&meta)?);
+        let scratch = Mutex::new(Plan::new(&ir));
+        Ok(NativeModel { meta, ir, init, threads: default_threads(), scratch })
+    }
+
+    /// The model's resolved layer IR — shared (not re-resolved) with
+    /// the loading [`crate::runtime::ModelRuntime`], so one canonical
+    /// instance backs both the engine plan and deployment.
+    pub fn shared_ir(&self) -> Arc<ModelIr> {
+        self.ir.clone()
     }
 
     /// Set the worker-thread count for the batch-sharded executor.
@@ -132,9 +161,10 @@ impl NativeModel {
     fn forward_all(&self, plan: &Plan, x: &[f32], train: bool) -> Vec<ShardRun> {
         let ranges = shard_ranges(self.meta.batch);
         let feat = self.meta.input_dim();
+        let ir = &self.ir;
         run_shards(self.threads, ranges.len(), |si| {
             let (start, rows) = ranges[si];
-            forward_shard(plan, &x[start * feat..(start + rows) * feat], rows, train)
+            forward_shard(ir, plan, &x[start * feat..(start + rows) * feat], rows, train)
         })
     }
 
@@ -173,8 +203,12 @@ impl ModelExec for NativeModel {
 
     fn forward(&self, state: &[f32], x: &[f32]) -> Result<Vec<f64>> {
         self.check_x(x)?;
-        let plan = Plan::build(&self.meta, state, true)?;
-        let shards = self.forward_all(&plan, x, false);
+        // a poisoned lock is safe to recover: refill() overwrites the
+        // whole workspace before any use
+        let mut scratch = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        scratch.refill(state, true)?;
+        let plan: &Plan = &scratch;
+        let shards = self.forward_all(plan, x, false);
         let ranges = shard_ranges(self.meta.batch);
         let k = self.meta.output_dim;
         let mut logits = vec![0.0f64; self.meta.batch * k];
@@ -189,13 +223,17 @@ impl ModelExec for NativeModel {
         self.check_x(x)?;
         // fresh zero statistics: the output reflects THIS batch only
         // (merged with 0, exactly like the AOT calib graph)
-        let plan = Plan::build(&self.meta, state, false)?;
-        let shards = self.forward_all(&plan, x, false);
-        let stats = self.merge_stats(&plan, &shards);
+        // a poisoned lock is safe to recover: refill() overwrites the
+        // whole workspace before any use
+        let mut scratch = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        scratch.refill(state, false)?;
+        let plan: &Plan = &scratch;
+        let shards = self.forward_all(plan, x, false);
+        let stats = self.merge_stats(plan, &shards);
         let mut amin = vec![0.0f32; self.meta.calib_size];
         let mut amax = vec![0.0f32; self.meta.calib_size];
         for (gq, st) in plan.groups.iter().zip(stats.iter()) {
-            let co = self.meta.act_groups[gq.gi].calib_offset;
+            let co = gq.calib_off;
             for k in 0..gq.f_size {
                 amin[co + k] = st.nmin[k] as f32;
                 amax[co + k] = st.nmax[k] as f32;
@@ -208,12 +246,16 @@ impl ModelExec for NativeModel {
         let meta = &self.meta;
         let batch = meta.batch;
         self.check_x(x)?;
-        let plan = Plan::build(meta, state, true)?;
+        // a poisoned lock is safe to recover: refill() overwrites the
+        // whole workspace before any use
+        let mut scratch = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        scratch.refill(state, true)?;
+        let plan: &Plan = &scratch;
         let ranges = shard_ranges(batch);
 
         // ---- sharded forward + deterministic stat merge --------------
-        let shards = self.forward_all(&plan, x, true);
-        let stats = self.merge_stats(&plan, &shards);
+        let shards = self.forward_all(plan, x, true);
+        let stats = self.merge_stats(plan, &shards);
         let k = meta.output_dim;
         let mut logits = vec![0.0f64; batch * k];
         for (si, sh) in shards.iter().enumerate() {
@@ -281,9 +323,10 @@ impl ModelExec for NativeModel {
         };
 
         // ---- sharded backward, reduced in fixed shard order ----------
+        let ir = &self.ir;
         let shard_grads = run_shards(self.threads, ranges.len(), |si| {
             let (start, rows) = ranges[si];
-            backward_shard(&plan, &shards[si], &g[start * k..(start + rows) * k])
+            backward_shard(ir, plan, &shards[si], &g[start * k..(start + rows) * k])
         });
         let mut grad = vec![0.0f64; meta.n_train];
         for sg in &shard_grads {
@@ -295,7 +338,7 @@ impl ModelExec for NativeModel {
         // ---- batch-independent regularizer terms ---------------------
         let bt = h.beta as f64;
         let gm = h.gamma as f64;
-        let reg = regularizer_pass(&plan, &stats, bt, gm, &mut grad);
+        let reg = regularizer_pass(&self.ir, plan, &stats, bt, gm, &mut grad);
 
         // ---- Adam with per-segment effective lr (fbits: lr * f_lr) ---
         let m_e = meta.tensor("adam.m")?;
@@ -320,13 +363,11 @@ impl ModelExec for NativeModel {
         new_state[s_e.offset] = step1 as f32;
 
         // merged activation statistics back into the stat segment
+        // (offsets resolved once by the IR — no per-call tensor lookups)
         for (gq, st) in plan.groups.iter().zip(stats.iter()) {
-            let gname = &meta.act_groups[gq.gi].name;
-            let amin_e = meta.tensor(&format!("{gname}.amin"))?;
-            let amax_e = meta.tensor(&format!("{gname}.amax"))?;
             for k2 in 0..gq.f_size {
-                new_state[amin_e.offset + k2] = st.nmin[k2] as f32;
-                new_state[amax_e.offset + k2] = st.nmax[k2] as f32;
+                new_state[gq.amin_off + k2] = st.nmin[k2] as f32;
+                new_state[gq.amax_off + k2] = st.nmax[k2] as f32;
             }
         }
 

@@ -3,8 +3,9 @@
 //! native backend can synthesize every paper model in-process and the
 //! whole pipeline runs with zero files on disk.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::ir::shape;
 use crate::nn::{ActGroup, LayerMeta, ModelMeta, TensorEntry};
 use crate::util::rng::Rng;
 
@@ -131,13 +132,12 @@ pub(super) fn preset_spec(model: &str) -> Result<NetSpec> {
     Ok(spec)
 }
 
-fn prod1(shape: &[usize]) -> usize {
-    shape.iter().product()
-}
-
 /// Packed-state layout, identical to python StateSpec (see
 /// ARCHITECTURE.md §Packed-state protocol):
 /// `[params | fbits | adam.m | adam.v | amin/group | amax/group | step]`.
+/// All output-shape arithmetic goes through the shared
+/// [`crate::ir::shape`] helpers, so the preset builder and the IR
+/// builder cannot disagree on layer geometry.
 pub(super) fn build_meta(spec: &NetSpec) -> Result<ModelMeta> {
     let mut params: Vec<(String, Vec<usize>)> = Vec::new();
     let mut fbits: Vec<(String, Vec<usize>)> = Vec::new();
@@ -154,7 +154,7 @@ pub(super) fn build_meta(spec: &NetSpec) -> Result<ModelMeta> {
                 layers.push(LayerMeta::InputQuant { name: "inq".to_string(), signed: *signed });
             }
             LayerCfg::Dense { name, dout, relu } => {
-                let din = prod1(&shape);
+                let din = shape::flatten_dim(&shape);
                 params.push((format!("{name}.w"), vec![din, *dout]));
                 params.push((format!("{name}.b"), vec![*dout]));
                 fbits.push((
@@ -177,11 +177,10 @@ pub(super) fn build_meta(spec: &NetSpec) -> Result<ModelMeta> {
                 shape = vec![*dout];
             }
             LayerCfg::Conv2d { name, k, cout, relu } => {
-                if shape.len() != 3 {
-                    bail!("conv2d '{name}' needs a HWC input, got {shape:?}");
-                }
-                let (h, w, cin) = (shape[0], shape[1], shape[2]);
-                let (oh, ow) = (h - k + 1, w - k + 1);
+                let os = shape::conv2d_out_shape(&shape, *k, *cout)
+                    .with_context(|| format!("preset conv2d '{name}'"))?;
+                let cin = shape[2];
+                let [oh, ow, _] = os;
                 params.push((format!("{name}.w"), vec![*k, *k, cin, *cout]));
                 params.push((format!("{name}.b"), vec![*cout]));
                 fbits.push((
@@ -201,29 +200,27 @@ pub(super) fn build_meta(spec: &NetSpec) -> Result<ModelMeta> {
                     cin,
                     cout: *cout,
                     relu: *relu,
-                    out_shape: [oh, ow, *cout],
+                    out_shape: os,
                 });
-                shape = vec![oh, ow, *cout];
+                shape = os.to_vec();
             }
             LayerCfg::MaxPool2 => {
-                if shape.len() != 3 {
-                    bail!("maxpool2 needs a HWC input, got {shape:?}");
-                }
-                shape = vec![shape[0] / 2, shape[1] / 2, shape[2]];
-                layers.push(LayerMeta::MaxPool2 { out_shape: [shape[0], shape[1], shape[2]] });
+                let os = shape::maxpool2_out_shape(&shape)?;
+                shape = os.to_vec();
+                layers.push(LayerMeta::MaxPool2 { out_shape: os });
             }
             LayerCfg::Flatten => {
-                shape = vec![prod1(&shape)];
+                shape = vec![shape::flatten_dim(&shape)];
                 layers.push(LayerMeta::Flatten);
             }
         }
     }
-    let output_dim = prod1(&shape);
+    let output_dim = shape::flatten_dim(&shape);
 
     let mut tensors: Vec<TensorEntry> = Vec::new();
     let mut off = 0usize;
     for (name, shp) in &params {
-        let size = prod1(shp);
+        let size = shape::flatten_dim(shp);
         tensors.push(TensorEntry {
             name: name.clone(),
             shape: shp.clone(),
@@ -235,7 +232,7 @@ pub(super) fn build_meta(spec: &NetSpec) -> Result<ModelMeta> {
     }
     let n_params = off;
     for (name, shp) in &fbits {
-        let size = prod1(shp);
+        let size = shape::flatten_dim(shp);
         tensors.push(TensorEntry {
             name: name.clone(),
             shape: shp.clone(),
@@ -259,7 +256,7 @@ pub(super) fn build_meta(spec: &NetSpec) -> Result<ModelMeta> {
     let mut act_groups: Vec<ActGroup> = Vec::new();
     let mut coff = 0usize;
     for (name, fshape, signed) in &agroups {
-        let size = prod1(fshape);
+        let size = shape::flatten_dim(fshape);
         act_groups.push(ActGroup {
             name: name.clone(),
             fshape: fshape.clone(),
@@ -317,7 +314,7 @@ pub(super) fn synth_init(meta: &ModelMeta, f_init_w: f32, f_init_a: f32, seed: u
     for t in &meta.tensors {
         match t.seg.as_str() {
             "param" if t.name.ends_with(".w") => {
-                let fan_in = prod1(&t.shape[..t.shape.len() - 1]).max(1);
+                let fan_in = shape::flatten_dim(&t.shape[..t.shape.len() - 1]).max(1);
                 let std = (2.0 / fan_in as f64).sqrt();
                 for v in out[t.offset..t.offset + t.size].iter_mut() {
                     *v = rng.normal_scaled(0.0, std) as f32;

@@ -26,7 +26,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::coordinator::{calibrate, checkpoint};
-use crate::data::splits_for;
+use crate::data::try_splits_for;
 use crate::firmware::Graph;
 use crate::runtime::{ModelRuntime, Runtime};
 
@@ -128,9 +128,9 @@ impl Registry {
                 owned.as_slice()
             }
         };
-        let splits = splits_for(model, CALIB_SEED, self.calib_n, 1);
+        let splits = try_splits_for(model, CALIB_SEED, self.calib_n, 1)?;
         let calib = calibrate(&mr, state, &[&splits.train])?;
-        Graph::build(&mr.meta, state, &calib)
+        Graph::from_ir(&mr.ir, state, &calib)
     }
 }
 

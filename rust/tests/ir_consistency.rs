@@ -1,0 +1,202 @@
+//! Layer-IR consistency: `ir::ModelIr` is the single structural source
+//! of truth — these tests pin its inferred shapes, resolved offsets and
+//! activation-group wiring against the meta tensor table and the
+//! firmware graph for every built-in preset (including the odd
+//! conv/pool sizes of the svhn stack), and check that graphs built
+//! through the IR are bit-identical to the meta-driven path.
+
+use std::path::PathBuf;
+
+use hgq::coordinator::calibrate;
+use hgq::data::try_splits_for;
+use hgq::firmware::emulator::Emulator;
+use hgq::firmware::{FwLayer, Graph};
+use hgq::ir::{shape, IrOp, ModelIr};
+use hgq::nn::ModelMeta;
+use hgq::runtime::{ModelRuntime, Runtime};
+use hgq::util::json::Json;
+
+fn artifacts() -> PathBuf {
+    // may or may not exist: the native backend falls back to presets
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+const PRESETS: [&str; 5] = ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"];
+
+#[test]
+fn ir_offsets_match_the_meta_tensor_table() {
+    let rt = Runtime::new().unwrap();
+    for model in PRESETS {
+        let mr = ModelRuntime::load(&rt, &artifacts(), model).unwrap();
+        let ir = &mr.ir;
+        assert_eq!(ir.nodes.len(), mr.meta.layers.len(), "{model}: node count");
+        assert_eq!(ir.state_size, mr.meta.state_size);
+        assert_eq!(ir.n_params, mr.meta.n_params);
+        assert_eq!(ir.n_train, mr.meta.n_train);
+        assert_eq!(ir.calib_size, mr.meta.calib_size);
+        assert_eq!(ir.input_dim, mr.meta.input_dim());
+        assert_eq!(ir.output_dim, mr.meta.output_dim);
+
+        // every group resolves to the tensor table + act-group entries
+        assert_eq!(ir.groups.len(), mr.meta.act_groups.len(), "{model}: group count");
+        for g in &ir.groups {
+            let t = mr.meta.tensor(&g.name).unwrap();
+            assert_eq!(g.f_offset, t.offset, "{model} {}: f offset", g.name);
+            assert_eq!(g.f_size, t.size, "{model} {}: f size", g.name);
+            let ag = mr.meta.act_group(&g.name).unwrap();
+            assert_eq!(g.calib_offset, ag.calib_offset, "{model} {}: calib", g.name);
+            assert_eq!(g.signed, ag.signed);
+            let amin = mr.meta.tensor(&format!("{}.amin", g.name)).unwrap();
+            let amax = mr.meta.tensor(&format!("{}.amax", g.name)).unwrap();
+            assert_eq!(g.amin_offset, amin.offset);
+            assert_eq!(g.amax_offset, amax.offset);
+        }
+
+        // every MAC param resolves to the tensor table
+        for node in &ir.nodes {
+            if let IrOp::Dense { w, b, .. } | IrOp::Conv2d { w, b, .. } = &node.op {
+                let wt = mr.meta.tensor(&w.name).unwrap();
+                assert_eq!((w.offset, w.size), (wt.offset, wt.size), "{model} {}", w.name);
+                let bt = mr.meta.tensor(&b.name).unwrap();
+                assert_eq!((b.offset, b.size), (bt.offset, bt.size), "{model} {}", b.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn ir_shapes_and_group_wiring_chain_through_every_preset() {
+    let rt = Runtime::new().unwrap();
+    for model in PRESETS {
+        let mr = ModelRuntime::load(&rt, &artifacts(), model).unwrap();
+        let ir = &mr.ir;
+        let mut cur: Option<usize> = None;
+        let mut prev_out: Vec<usize> = ir.input_shape.clone();
+        for node in &ir.nodes {
+            // shapes chain: this node consumes exactly what the
+            // previous one produced
+            assert_eq!(node.in_shape, prev_out, "{model} {}: shape chain", node.name);
+            match &node.op {
+                IrOp::InputQuant { group } => {
+                    assert_eq!(ir.groups[*group].feat_dim, ir.input_dim);
+                    cur = Some(*group);
+                }
+                IrOp::Dense { din, dout, in_group, out_group, .. } => {
+                    assert_eq!(Some(*in_group), cur, "{model} {}: in group", node.name);
+                    assert_eq!(shape::flatten_dim(&node.in_shape), *din);
+                    assert_eq!(node.out_shape, vec![*dout]);
+                    assert_eq!(ir.groups[*out_group].feat_dim, *dout);
+                    cur = Some(*out_group);
+                }
+                IrOp::Conv2d { k, cin, cout, oh, ow, in_h, in_w, in_group, out_group, .. } => {
+                    assert_eq!(Some(*in_group), cur, "{model} {}: in group", node.name);
+                    assert_eq!(node.in_shape, vec![*in_h, *in_w, *cin]);
+                    assert_eq!(node.out_shape, vec![*oh, *ow, *cout]);
+                    assert_eq!((*in_h, *in_w), (oh + k - 1, ow + k - 1));
+                    assert_eq!(ir.groups[*out_group].feat_dim, oh * ow * cout);
+                    cur = Some(*out_group);
+                }
+                IrOp::MaxPool2 { in_shape, out_shape } => {
+                    assert_eq!(node.in_shape, in_shape.to_vec());
+                    assert_eq!(shape::maxpool2_out_shape(in_shape).unwrap(), *out_shape);
+                }
+                IrOp::Flatten => {
+                    assert_eq!(node.out_shape, vec![shape::flatten_dim(&node.in_shape)]);
+                }
+            }
+            prev_out = node.out_shape.clone();
+        }
+        assert_eq!(shape::flatten_dim(&prev_out), ir.output_dim, "{model}: final dim");
+    }
+}
+
+#[test]
+fn svhn_ir_carries_the_true_odd_pool_shapes() {
+    // the odd-pool regression of PR 2 in IR terms: the second pool
+    // consumes 13x13 (not out_shape * 2 = 12x12)
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, &artifacts(), "svhn_stream").unwrap();
+    let pool_shapes: Vec<([usize; 3], [usize; 3])> = mr
+        .ir
+        .nodes
+        .iter()
+        .filter_map(|n| match &n.op {
+            IrOp::MaxPool2 { in_shape, out_shape } => Some((*in_shape, *out_shape)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(pool_shapes.len(), 3);
+    assert_eq!(pool_shapes[0], ([30, 30, 16], [15, 15, 16]));
+    assert_eq!(pool_shapes[1], ([13, 13, 16], [6, 6, 16]));
+    assert_eq!(pool_shapes[2], ([4, 4, 24], [2, 2, 24]));
+}
+
+#[test]
+fn graph_from_ir_is_bit_identical_to_meta_build() {
+    let rt = Runtime::new().unwrap();
+    for model in ["jets_pp", "svhn_stream"] {
+        let mr = ModelRuntime::load(&rt, &artifacts(), model).unwrap();
+        let state = mr.init_state();
+        let splits = try_splits_for(model, 11, 256, 1).unwrap();
+        let calib = calibrate(&mr, &state, &[&splits.train]).unwrap();
+
+        let g_meta = Graph::build(&mr.meta, &state, &calib).unwrap();
+        let g_ir = Graph::from_ir(&mr.ir, &state, &calib).unwrap();
+        assert_eq!(g_meta.layers.len(), g_ir.layers.len(), "{model}");
+        assert_eq!(g_meta.exact_ebops(), g_ir.exact_ebops(), "{model}");
+        assert_eq!(g_meta.max_width(), g_ir.max_width(), "{model}");
+        assert_eq!(g_meta.sparsity(), g_ir.sparsity(), "{model}");
+        for (a, b) in g_meta.layers.iter().zip(g_ir.layers.iter()) {
+            if let (FwLayer::MaxPool2 { in_shape: ia }, FwLayer::MaxPool2 { in_shape: ib }) =
+                (a, b)
+            {
+                assert_eq!(ia, ib, "{model}: pool input shapes");
+            }
+        }
+
+        // emulated logits agree bit-for-bit
+        let mut ea = Emulator::new(&g_meta);
+        let mut eb = Emulator::new(&g_ir);
+        let mut oa = vec![0.0f64; g_meta.output_dim];
+        let mut ob = vec![0.0f64; g_ir.output_dim];
+        for i in 0..8 {
+            ea.infer(splits.train.sample(i), &mut oa).unwrap();
+            eb.infer(splits.train.sample(i), &mut ob).unwrap();
+            assert_eq!(oa, ob, "{model} sample {i}");
+        }
+    }
+}
+
+#[test]
+fn ir_rejects_shape_inconsistent_meta() {
+    // a meta whose dense layer disagrees with the inferred input dim
+    // (input_shape [4] feeding din = 3) must fail IR resolution
+    let j = Json::parse(
+        r#"{
+      "name":"bad","task":"cls","batch":4,"input_shape":[4],"y_dtype":"i32",
+      "w_gran":"element","a_gran":"element",
+      "state_size":40,"n_params":8,"n_train":22,"calib_size":6,"output_dim":2,
+      "tensors":[
+        {"name":"d0.w","shape":[3,2],"offset":0,"size":6,"seg":"param"},
+        {"name":"d0.b","shape":[2],"offset":6,"size":2,"seg":"param"},
+        {"name":"inq.fa","shape":[4],"offset":8,"size":4,"seg":"fbit"},
+        {"name":"d0.fw","shape":[3,2],"offset":12,"size":6,"seg":"fbit"},
+        {"name":"d0.fb","shape":[2],"offset":18,"size":2,"seg":"fbit"},
+        {"name":"d0.fa","shape":[2],"offset":20,"size":2,"seg":"fbit"},
+        {"name":"inq.fa.amin","shape":[4],"offset":22,"size":4,"seg":"stat"},
+        {"name":"d0.fa.amin","shape":[2],"offset":26,"size":2,"seg":"stat"},
+        {"name":"inq.fa.amax","shape":[4],"offset":28,"size":4,"seg":"stat"},
+        {"name":"d0.fa.amax","shape":[2],"offset":32,"size":2,"seg":"stat"}],
+      "act_groups":[
+        {"name":"inq.fa","fshape":[4],"signed":true,"size":4},
+        {"name":"d0.fa","fshape":[2],"signed":false,"size":2}],
+      "layers":[
+        {"kind":"input_quant","name":"inq","signed":true},
+        {"kind":"dense","name":"d0","din":3,"dout":2,"act":"relu"}]
+    }"#,
+    )
+    .unwrap();
+    let meta = ModelMeta::from_json(&j).unwrap();
+    let err = ModelIr::build(&meta).unwrap_err();
+    assert!(format!("{err}").contains("input dim"), "{err}");
+}
