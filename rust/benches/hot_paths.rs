@@ -106,6 +106,49 @@ fn main() {
         println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
     }
 
+    // ---- width-tiered serving kernels vs the i64 reference -----------
+    // per-layer proven accumulator bounds (ARCHITECTURE.md §Kernel
+    // tiering) resolve paper layers to i8/i16/i32 accumulate paths;
+    // HGQ_FORCE_WIDE pins the i64 reference. Outputs are bit-identical
+    // either way — the ratio is pure tiering speedup.
+    {
+        use hgq::serve::{BatchEmulator, Registry};
+        let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let reg = Registry::new(&artifacts).with_calib_samples(64);
+        for (model, outer, inner) in [("jets_pp", 10usize, 200usize), ("svhn_stream", 5, 20)] {
+            let g = reg.get(model).unwrap();
+            for (li, k) in g.kernel_plan().iter().enumerate() {
+                if let Some(bound) = k.bound {
+                    println!("  {model} layer {li}: tier {} (bound {bound})", k.tier.name());
+                }
+            }
+            let bsz = 32usize;
+            let x: Vec<f32> =
+                (0..bsz * g.input_dim).map(|i| ((i % 23) as f32 - 11.0) / 8.0).collect();
+            let mut out = vec![0.0f64; bsz * g.output_dim];
+            let mut wide_ns = 0.0f64;
+            for wide in [true, false] {
+                let mut em = BatchEmulator::new(&g, bsz).with_force_wide(wide);
+                let tag = if wide { "i64 wide" } else { "tiered" };
+                let s = bench(&format!("{model} infer_batch b={bsz} [{tag}]"), outer, inner, || {
+                    em.infer_batch(&x, &mut out).unwrap();
+                    black_box(&out);
+                });
+                if wide {
+                    wide_ns = s.median_ns;
+                    println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(bsz as f64));
+                } else {
+                    println!(
+                        "{}   [{:.0} samples/s, {:.2}x vs wide]",
+                        s.report(),
+                        s.per_sec(bsz as f64),
+                        wide_ns / s.median_ns,
+                    );
+                }
+            }
+        }
+    }
+
     // ---- native train step (MLP) across worker threads ---------------
     // fixed shard grid => bit-identical state at every thread count;
     // the ratio is pure parallel speedup of the fwd+bwd hot path

@@ -19,6 +19,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::ebops;
 use crate::fixed::{round_half_up, FixedSpec};
+use crate::ir::tier::{self, ElemBound, KernelTier};
 use crate::ir::{GroupRef, IrOp, ModelIr, ParamRef};
 use crate::nn::ModelMeta;
 
@@ -139,6 +140,19 @@ pub enum FwLayer {
     MaxPool2 { in_shape: [usize; 3] },
     /// Shape-only reshape (buffers are already flat).
     Flatten,
+}
+
+/// Resolved kernel selection for one firmware layer: the proven
+/// accumulator magnitude bound (MAC layers only) and the integer tier
+/// it admits. Produced by [`Graph::kernel_plan`]; consumed by the
+/// tiered dispatchers in `serve/batch.rs`.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerKernel {
+    /// proven bound on `|accumulator|` at the layer's `acc_frac` LSB
+    /// (`None` for non-MAC layers)
+    pub bound: Option<u128>,
+    /// the narrowest accumulator width the bound admits
+    pub tier: KernelTier,
 }
 
 /// Calibration extremes of the *quantized* activations, concatenated in
@@ -368,6 +382,135 @@ impl Graph {
             });
         }
         cap
+    }
+
+    /// Derive the per-layer kernel plan: per-element mantissa magnitude
+    /// bounds ([`ElemBound`]) flow forward from the input quantizer
+    /// specs, each MAC layer's accumulator bound is the bias term plus
+    /// the sum of worst-case products (saturating u128 — unprovable
+    /// layers saturate to [`tier::UNBOUNDED`] and stay on the wide
+    /// path), and re-quantization confines the outputs again. The
+    /// bound dominates every term *and* every partial sum in any
+    /// addition order, so the selected tier can never wrap — see
+    /// ARCHITECTURE.md §Kernel tiering for the proof sketch.
+    pub fn kernel_plan(&self) -> Vec<LayerKernel> {
+        let none = LayerKernel { bound: None, tier: KernelTier::Wide };
+        let mut plan = Vec::with_capacity(self.layers.len());
+        let mut elems: Vec<ElemBound> = Vec::new();
+        for l in &self.layers {
+            match l {
+                FwLayer::InputQuant { out } => {
+                    elems = (0..self.input_dim).map(|i| tier::spec_bound(&out.spec(i))).collect();
+                    plan.push(none);
+                }
+                FwLayer::Dense { din, dout, w, b, out, acc_frac, .. } => {
+                    debug_assert_eq!(elems.len(), *din);
+                    let mut layer_bound = 0u128;
+                    let mut next = Vec::with_capacity(*dout);
+                    for j in 0..*dout {
+                        let mut acc = tier::shl_bound(
+                            b.m[j].unsigned_abs() as u128,
+                            acc_frac - b.frac[j],
+                        );
+                        for i in 0..*din {
+                            let idx = i * dout + j;
+                            if w.m[idx] == 0 {
+                                continue; // the kernels keep the zero-skip
+                            }
+                            acc = acc.saturating_add(tier::mac_term(
+                                elems[i],
+                                w.m[idx].unsigned_abs(),
+                                w.frac[idx],
+                                *acc_frac,
+                            ));
+                        }
+                        layer_bound = layer_bound.max(acc);
+                        next.push(tier::requant_bound(acc, *acc_frac, &out.spec(j)));
+                    }
+                    elems = next;
+                    plan.push(LayerKernel {
+                        bound: Some(layer_bound),
+                        tier: KernelTier::for_bound(layer_bound),
+                    });
+                }
+                FwLayer::Conv2d { k, cin, cout, in_w, out_shape, w, b, out, acc_frac, .. } => {
+                    let [oh, ow, _] = *out_shape;
+                    let mut layer_bound = 0u128;
+                    let mut next = Vec::with_capacity(oh * ow * cout);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for co in 0..*cout {
+                                let mut acc = tier::shl_bound(
+                                    b.m[co].unsigned_abs() as u128,
+                                    acc_frac - b.frac[co],
+                                );
+                                for ky in 0..*k {
+                                    for kx in 0..*k {
+                                        let a_base = ((oy + ky) * in_w + (ox + kx)) * cin;
+                                        let w_base = ((ky * k + kx) * cin) * cout + co;
+                                        for ci in 0..*cin {
+                                            let widx = w_base + ci * cout;
+                                            if w.m[widx] == 0 {
+                                                continue;
+                                            }
+                                            acc = acc.saturating_add(tier::mac_term(
+                                                elems[a_base + ci],
+                                                w.m[widx].unsigned_abs(),
+                                                w.frac[widx],
+                                                *acc_frac,
+                                            ));
+                                        }
+                                    }
+                                }
+                                layer_bound = layer_bound.max(acc);
+                                let oidx = (oy * ow + ox) * cout + co;
+                                next.push(tier::requant_bound(acc, *acc_frac, &out.spec(oidx)));
+                            }
+                        }
+                    }
+                    elems = next;
+                    plan.push(LayerKernel {
+                        bound: Some(layer_bound),
+                        tier: KernelTier::for_bound(layer_bound),
+                    });
+                }
+                FwLayer::MaxPool2 { in_shape } => {
+                    // pooling picks one of the window mantissas, so the
+                    // magnitude bound is the window max — provided all
+                    // four share an LSB (mixed-LSB pools are unprovable)
+                    let [h, w, c] = *in_shape;
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut next = Vec::with_capacity(oh * ow * c);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ch in 0..c {
+                                let mut win = ElemBound { mag: 0, frac: 0 };
+                                let mut first = true;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let idx = ((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ch;
+                                        let e = elems[idx];
+                                        if first {
+                                            win = e;
+                                            first = false;
+                                        } else if e.frac != win.frac {
+                                            win.mag = tier::UNBOUNDED;
+                                        } else {
+                                            win.mag = win.mag.max(e.mag);
+                                        }
+                                    }
+                                }
+                                next.push(win);
+                            }
+                        }
+                    }
+                    elems = next;
+                    plan.push(none);
+                }
+                FwLayer::Flatten => plan.push(none),
+            }
+        }
+        plan
     }
 
     /// Overall weight sparsity (pruned fraction, §III.D.4).

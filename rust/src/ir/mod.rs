@@ -16,6 +16,7 @@
 //! firmware builder cannot re-diverge between consumers.
 
 pub mod shape;
+pub mod tier;
 
 use anyhow::{anyhow, bail, Result};
 

@@ -1,0 +1,276 @@
+//! Width-tiered kernel selection: proven accumulator bounds → machine
+//! integer widths.
+//!
+//! HGQ's trained networks are *narrow* — most mantissas span a handful
+//! of bits — yet the reference kernels accumulate everything in i64.
+//! This module is the arithmetic half of the tiered-kernel contract
+//! (ARCHITECTURE.md §Kernel tiering): given a layer's **proven**
+//! accumulator magnitude bound, [`KernelTier::for_bound`] selects the
+//! narrowest of i8/i16/i32 that can hold *every term and every partial
+//! sum in any addition order*, falling back to the i64 reference path
+//! (`Wide`) when nothing narrower is provable.
+//!
+//! The bound is derived, never guessed: per-element mantissa magnitude
+//! bounds ([`ElemBound`]) flow through the graph (input quantizer
+//! ranges → [`spec_bound`], MAC terms → [`mac_term`], re-quantization →
+//! [`requant_bound`]) in saturating `u128`, so an unprovable layer
+//! saturates to [`UNBOUNDED`] and stays on the wide path instead of
+//! silently wrapping. The walk itself lives in
+//! `firmware::Graph::kernel_plan` (it needs the built quantized
+//! weights); this module owns the state-free arithmetic so the serving
+//! kernels, the native engine and the property harness all resolve
+//! tiers from one rule.
+//!
+//! `HGQ_FORCE_WIDE=1` (any value other than empty / `0` / `false`)
+//! pins every dispatcher to the i64 reference path at runtime —
+//! [`force_wide`] reads it once per process; the emulator/engine
+//! constructors also expose per-instance overrides so differential
+//! tests can run both paths in one process.
+
+use std::sync::OnceLock;
+
+use crate::fixed::FixedSpec;
+
+/// Environment variable selecting the i64 reference path everywhere.
+pub const FORCE_WIDE_ENV: &str = "HGQ_FORCE_WIDE";
+
+/// Magnitude sentinel for "no static bound provable" (saturating
+/// arithmetic lands here and stays here).
+pub const UNBOUNDED: u128 = u128::MAX;
+
+/// The accumulator width a layer's proven bound admits. Tiers are
+/// selected by symmetric magnitude (`bound <= T::MAX`), so every term,
+/// every partial sum and every runtime input mantissa of the layer fits
+/// the type without wrapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelTier {
+    /// accumulate in i8 (bound ≤ 127)
+    I8,
+    /// accumulate in i16 (bound ≤ 32 767)
+    I16,
+    /// accumulate in i32 (bound ≤ 2 147 483 647)
+    I32,
+    /// i64 reference path (bound unprovable or ≥ 2^31)
+    Wide,
+}
+
+impl KernelTier {
+    /// Narrowest tier whose symmetric range provably holds `bound`.
+    pub fn for_bound(bound: u128) -> KernelTier {
+        if bound <= i8::MAX as u128 {
+            KernelTier::I8
+        } else if bound <= i16::MAX as u128 {
+            KernelTier::I16
+        } else if bound <= i32::MAX as u128 {
+            KernelTier::I32
+        } else {
+            KernelTier::Wide
+        }
+    }
+
+    /// Display name of the accumulator type (`"i8"` … `"i64"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::I8 => "i8",
+            KernelTier::I16 => "i16",
+            KernelTier::I32 => "i32",
+            KernelTier::Wide => "i64",
+        }
+    }
+}
+
+/// Magnitude bound of one activation element's mantissa, valid at the
+/// fractional-bit scale `frac` (value bound = `mag · 2^-frac`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElemBound {
+    /// largest possible `|mantissa|` ([`UNBOUNDED`] when unprovable)
+    pub mag: u128,
+    /// the LSB scale the mantissa is expressed at
+    pub frac: i32,
+}
+
+/// Left-shift a magnitude bound, saturating to [`UNBOUNDED`] on
+/// overflow (or on a negative shift, which no provable layer produces).
+pub fn shl_bound(mag: u128, shift: i32) -> u128 {
+    if mag == 0 {
+        return 0;
+    }
+    if shift < 0 || shift as u32 >= mag.leading_zeros() {
+        return UNBOUNDED;
+    }
+    mag << shift
+}
+
+/// Mantissa magnitude bound of a quantized value confined to `s`:
+/// wrap (Eq. 1/2) keeps signed mantissas in `[-2^(b-1), 2^(b-1)-1]`
+/// and unsigned in `[0, 2^b - 1]`; dead specs (`bits <= 0`) are always
+/// zero; wrap-free specs (`bits >= 63`) admit no static bound.
+pub fn spec_bound(s: &FixedSpec) -> ElemBound {
+    let frac = s.frac_bits();
+    if s.bits <= 0 {
+        return ElemBound { mag: 0, frac };
+    }
+    if s.bits >= 63 {
+        return ElemBound { mag: UNBOUNDED, frac };
+    }
+    let mag = if s.signed { 1u128 << (s.bits - 1) } else { (1u128 << s.bits) - 1 };
+    ElemBound { mag, frac }
+}
+
+/// Magnitude bound of one MAC term `(ma * mw) << (acc_frac - (fa + fw))`
+/// at the accumulator LSB, saturating.
+pub fn mac_term(a: ElemBound, w_mag: u64, w_frac: i32, acc_frac: i32) -> u128 {
+    let prod = a.mag.saturating_mul(w_mag as u128);
+    shl_bound(prod, acc_frac - (a.frac + w_frac))
+}
+
+/// Magnitude bound after `FixedSpec::requantize(acc, acc_frac)` into
+/// `s`: wrapping specs confine the result to their own range; wrap-free
+/// specs pass the (round-half-up shifted) accumulator bound through.
+pub fn requant_bound(acc_mag: u128, acc_frac: i32, s: &FixedSpec) -> ElemBound {
+    let sb = spec_bound(s);
+    if sb.mag != UNBOUNDED {
+        return sb; // wrap (or dead value) confines the output
+    }
+    let frac = s.frac_bits();
+    let d = acc_frac - frac;
+    let mag = if acc_mag == UNBOUNDED {
+        UNBOUNDED
+    } else if d <= 0 {
+        shl_bound(acc_mag, -d)
+    } else {
+        // round-half-up downshift: |(m + 2^(d-1)) >> d| <= (|m| >> d) + 1
+        (acc_mag >> d.min(127)).saturating_add(1)
+    };
+    ElemBound { mag, frac }
+}
+
+/// A machine integer the tiered kernels can accumulate in. The narrow
+/// paths are written once, generically, against this trait; the proof
+/// obligation (`bound <= Self::MAX`, checked by the dispatcher) makes
+/// every cast lossless and every add/mul/shift wrap-free.
+pub trait NarrowAcc:
+    Copy
+    + Default
+    + std::ops::Add<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Shl<u32, Output = Self>
+{
+    /// type width in bits (shift amounts are clamped below this)
+    const BITS: u32;
+    /// narrow an i64 mantissa (lossless whenever `|v|` is within the
+    /// layer's proven bound)
+    fn narrow(v: i64) -> Self;
+    /// widen back to the i64 reference domain (always lossless)
+    fn widen(self) -> i64;
+}
+
+macro_rules! impl_narrow_acc {
+    ($($t:ty),*) => {$(
+        impl NarrowAcc for $t {
+            const BITS: u32 = <$t>::BITS;
+            #[inline(always)]
+            fn narrow(v: i64) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn widen(self) -> i64 {
+                self as i64
+            }
+        }
+    )*};
+}
+impl_narrow_acc!(i8, i16, i32);
+
+/// Interpret a `HGQ_FORCE_WIDE` setting (empty / `0` / `false` — in
+/// any case — leave tiering on; anything else forces the wide path).
+pub fn parse_force_wide(v: Option<&str>) -> bool {
+    match v {
+        None => false,
+        Some(s) => !s.is_empty() && s != "0" && !s.eq_ignore_ascii_case("false"),
+    }
+}
+
+/// Whether this process runs every kernel on the i64 reference path
+/// (`HGQ_FORCE_WIDE`, read once). Per-instance overrides on the
+/// dispatchers take precedence for in-process differential tests.
+pub fn force_wide() -> bool {
+    static FORCE_WIDE: OnceLock<bool> = OnceLock::new();
+    *FORCE_WIDE
+        .get_or_init(|| parse_force_wide(std::env::var(FORCE_WIDE_ENV).ok().as_deref()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_boundaries_are_exact() {
+        // at each type's MAX the tier holds; one past it widens
+        assert_eq!(KernelTier::for_bound(0), KernelTier::I8);
+        assert_eq!(KernelTier::for_bound(i8::MAX as u128), KernelTier::I8);
+        assert_eq!(KernelTier::for_bound(i8::MAX as u128 + 1), KernelTier::I16);
+        assert_eq!(KernelTier::for_bound(i16::MAX as u128), KernelTier::I16);
+        assert_eq!(KernelTier::for_bound(i16::MAX as u128 + 1), KernelTier::I32);
+        assert_eq!(KernelTier::for_bound(i32::MAX as u128), KernelTier::I32);
+        assert_eq!(KernelTier::for_bound(i32::MAX as u128 + 1), KernelTier::Wide);
+        assert_eq!(KernelTier::for_bound(UNBOUNDED), KernelTier::Wide);
+    }
+
+    #[test]
+    fn spec_bounds_cover_the_wrap_range() {
+        // signed fixed<8,4>: mantissas in [-128, 127] -> mag 128
+        let s = FixedSpec::new(true, 8, 4);
+        assert_eq!(spec_bound(&s), ElemBound { mag: 128, frac: 4 });
+        // unsigned ufixed<7,7>: [0, 127]
+        let u = FixedSpec::new(false, 7, 7);
+        assert_eq!(spec_bound(&u), ElemBound { mag: 127, frac: 0 });
+        // dead value
+        assert_eq!(spec_bound(&FixedSpec::new(true, 0, 0)).mag, 0);
+        // wrap-free: no static bound
+        assert_eq!(spec_bound(&FixedSpec::new(true, 63, 10)).mag, UNBOUNDED);
+    }
+
+    #[test]
+    fn shl_bound_saturates_instead_of_wrapping() {
+        assert_eq!(shl_bound(3, 2), 12);
+        assert_eq!(shl_bound(0, 1000), 0);
+        assert_eq!(shl_bound(1, 127), UNBOUNDED);
+        assert_eq!(shl_bound(1, 126), 1u128 << 126);
+        assert_eq!(shl_bound(5, -1), UNBOUNDED); // unprovable, not UB
+        assert_eq!(shl_bound(u128::MAX / 2, 1), UNBOUNDED);
+    }
+
+    #[test]
+    fn mac_term_is_the_shifted_product() {
+        let a = ElemBound { mag: 16, frac: 3 };
+        // (16 * 5) << (8 - (3 + 2)) = 80 << 3 = 640
+        assert_eq!(mac_term(a, 5, 2, 8), 640);
+        // saturating on unprovable inputs
+        assert_eq!(mac_term(ElemBound { mag: UNBOUNDED, frac: 0 }, 1, 0, 0), UNBOUNDED);
+    }
+
+    #[test]
+    fn requant_bound_follows_wrap_semantics() {
+        // wrapping spec confines regardless of the accumulator
+        let s = FixedSpec::new(true, 8, 4);
+        assert_eq!(requant_bound(1 << 40, 10, &s).mag, 128);
+        // wrap-free spec: round-half-up shifted accumulator bound
+        let wide = FixedSpec::new(true, 63, 53); // frac 10
+        assert_eq!(requant_bound(1024, 12, &wide).mag, (1024 >> 2) + 1);
+        assert_eq!(requant_bound(1024, 8, &wide).mag, 1024 << 2);
+        assert_eq!(requant_bound(UNBOUNDED, 12, &wide).mag, UNBOUNDED);
+    }
+
+    #[test]
+    fn force_wide_parsing() {
+        assert!(!parse_force_wide(None));
+        assert!(!parse_force_wide(Some("")));
+        assert!(!parse_force_wide(Some("0")));
+        assert!(!parse_force_wide(Some("false")));
+        assert!(!parse_force_wide(Some("FALSE")));
+        assert!(parse_force_wide(Some("1")));
+        assert!(parse_force_wide(Some("true")));
+        assert!(parse_force_wide(Some("yes")));
+    }
+}

@@ -32,6 +32,7 @@ use anyhow::{bail, Result};
 
 use crate::firmware::{F_MAX, F_MIN};
 use crate::fixed::{bit_length, exp2i, round_half_up};
+use crate::ir::tier::{self, KernelTier, NarrowAcc};
 use crate::ir::{GroupRef, IrOp, ModelIr, ParamRef};
 
 pub(super) const LN2: f64 = std::f64::consts::LN_2;
@@ -341,12 +342,23 @@ fn quantize_group(
 /// Quantized forward pass over one batch shard (`rows` samples).
 /// `train` keeps the backward-pass caches (quantization errors, layer
 /// inputs, relu masks); without it only logits + extremes are produced.
+///
+/// MAC layers first try the width-tiered integer path
+/// ([`dense_forward_tiered`] / [`conv_forward_tiered`]): the
+/// accumulator bound is proven at runtime from the shard's actual
+/// mantissa maxima, and whenever it fits i32 the integer sums and the
+/// f64 reference sums are *both* exact — so the tier changes speed,
+/// never a single bit of `z`. `force_wide` (the `HGQ_FORCE_WIDE`
+/// contract) pins every layer to the f64 reference loops. The backward
+/// shard always stays f64: gradients are continuous, so no integer
+/// bound applies there.
 pub(super) fn forward_shard(
     ir: &ModelIr,
     plan: &Plan,
     x: &[f32],
     rows: usize,
     train: bool,
+    force_wide: bool,
 ) -> ShardRun {
     let n_layers = ir.nodes.len();
     let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
@@ -369,23 +381,28 @@ pub(super) fn forward_shard(
             IrOp::InputQuant { group } => {
                 h = quantize_group(&plan.groups[*group], &mut groups[*group], &h, rows, train);
             }
-            IrOp::Dense { din, dout, relu, out_group, .. } => {
+            IrOp::Dense { din, dout, relu, in_group, out_group, .. } => {
                 let (din, dout) = (*din, *dout);
                 let mc = plan.mac(li);
                 let (w, b) = (&mc.w, &mc.b);
                 let mut z = vec![0.0f64; rows * dout];
-                for bi in 0..rows {
-                    let hrow = &h[bi * din..(bi + 1) * din];
-                    let zrow = &mut z[bi * dout..(bi + 1) * dout];
-                    zrow.copy_from_slice(&b.q);
-                    for i in 0..din {
-                        let a = hrow[i];
-                        if a == 0.0 {
-                            continue;
-                        }
-                        let wrow = &w.q[i * dout..(i + 1) * dout];
-                        for j in 0..dout {
-                            zrow[j] += a * wrow[j];
+                let ig = &plan.groups[*in_group];
+                let tiered =
+                    !force_wide && dense_forward_tiered(&h, rows, din, dout, w, b, ig, &mut z);
+                if !tiered {
+                    for bi in 0..rows {
+                        let hrow = &h[bi * din..(bi + 1) * din];
+                        let zrow = &mut z[bi * dout..(bi + 1) * dout];
+                        zrow.copy_from_slice(&b.q);
+                        for i in 0..din {
+                            let a = hrow[i];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let wrow = &w.q[i * dout..(i + 1) * dout];
+                            for j in 0..dout {
+                                zrow[j] += a * wrow[j];
+                            }
                         }
                     }
                 }
@@ -410,7 +427,7 @@ pub(super) fn forward_shard(
                     h = hq;
                 }
             }
-            IrOp::Conv2d { k, cin, cout, oh, ow, in_h, in_w, relu, out_group, .. } => {
+            IrOp::Conv2d { k, cin, cout, oh, ow, in_h, in_w, relu, in_group, out_group, .. } => {
                 let (k, cin, cout) = (*k, *cin, *cout);
                 let (oh, ow, in_h, in_w) = (*oh, *ow, *in_h, *in_w);
                 let mc = plan.mac(li);
@@ -418,31 +435,43 @@ pub(super) fn forward_shard(
                 let in_feat = in_h * in_w * cin;
                 let feat = oh * ow * cout;
                 let mut z = vec![0.0f64; rows * feat];
-                let mut m = if train { vec![1.0f64; rows * feat] } else { Vec::new() };
-                for bi in 0..rows {
-                    let hb = &h[bi * in_feat..(bi + 1) * in_feat];
-                    let zb = &mut z[bi * feat..(bi + 1) * feat];
-                    for oy in 0..oh {
-                        for ox in 0..ow {
-                            for co in 0..cout {
-                                let mut acc = b.q[co];
-                                for ky in 0..k {
-                                    for kx in 0..k {
-                                        let a_base = ((oy + ky) * in_w + ox + kx) * cin;
-                                        let w_base = ((ky * k + kx) * cin) * cout + co;
-                                        for ci in 0..cin {
-                                            acc += hb[a_base + ci] * w.q[w_base + ci * cout];
+                let ig = &plan.groups[*in_group];
+                let geom = ConvGeom { k, cin, cout, oh, ow, in_h, in_w };
+                let tiered =
+                    !force_wide && conv_forward_tiered(&h, rows, &geom, w, b, ig, &mut z);
+                if !tiered {
+                    for bi in 0..rows {
+                        let hb = &h[bi * in_feat..(bi + 1) * in_feat];
+                        let zb = &mut z[bi * feat..(bi + 1) * feat];
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                for co in 0..cout {
+                                    let mut acc = b.q[co];
+                                    for ky in 0..k {
+                                        for kx in 0..k {
+                                            let a_base = ((oy + ky) * in_w + ox + kx) * cin;
+                                            let w_base = ((ky * k + kx) * cin) * cout + co;
+                                            for ci in 0..cin {
+                                                acc += hb[a_base + ci] * w.q[w_base + ci * cout];
+                                            }
                                         }
                                     }
+                                    zb[(oy * ow + ox) * cout + co] = acc;
                                 }
-                                let e = (oy * ow + ox) * cout + co;
-                                if *relu && acc <= 0.0 {
-                                    acc = 0.0;
-                                    if train {
-                                        m[bi * feat + e] = 0.0;
-                                    }
-                                }
-                                zb[e] = acc;
+                            }
+                        }
+                    }
+                }
+                // relu + its backward mask on the raw accumulators
+                // (identical math to the fused form: relu commutes with
+                // nothing inside the MAC, only with the store)
+                let mut m = if train { vec![1.0f64; rows * feat] } else { Vec::new() };
+                if *relu {
+                    for (e, zv) in z.iter_mut().enumerate() {
+                        if *zv <= 0.0 {
+                            *zv = 0.0;
+                            if train {
+                                m[e] = 0.0;
                             }
                         }
                     }
@@ -492,6 +521,289 @@ pub(super) fn forward_shard(
     }
 
     ShardRun { rows, logits: h, groups, h_in, mask }
+}
+
+// ---------------------------------------------------------------------
+// width-tiered integer MAC forward
+// ---------------------------------------------------------------------
+//
+// Training quantization (Eq. 4) has no wrap, so unlike the firmware
+// graph there is no *static* accumulator bound — instead each shard
+// proves its own: the quantized activations are exact dyadics
+// `m · 2^-f`, so we recover the integer mantissas, scan per-element
+// magnitude maxima, and bound every output accumulator by
+// `|bias| + Σ_i max|m_i|·|w_ij|` at a common LSB. When that bound fits
+// i32, BOTH the integer sums and the f64 reference sums are exact
+// (every term and every partial sum is an integer multiple of 2^-facc
+// with magnitude < 2^31 « 2^53), hence bit-identical in any addition
+// order — the tier changes throughput, never values.
+
+/// Integer-mantissa image of one shard's quantized input activations.
+struct MantShard {
+    /// rows × feat mantissas at each element's trained LSB
+    hm: Vec<i64>,
+    /// per-element magnitude maxima over the shard
+    hmax: Vec<u64>,
+    /// per-element fractional bits (broadcast groups expanded)
+    fa: Vec<i32>,
+}
+
+/// Recover exact integer mantissas of a quantized activation tensor.
+/// `None` when the element→f map is unknown (pooled per-element
+/// groups, where `feat` no longer matches the group's `f_size`) or any
+/// value fails the exact roundtrip (NaN/Inf/overflow) — the f64
+/// reference loop is then the only provable semantics.
+fn mantissas_of(h: &[f64], rows: usize, feat: usize, ig: &GroupQ) -> Option<MantShard> {
+    if ig.f_size != 1 && ig.f_size != feat {
+        return None;
+    }
+    let fa: Vec<i32> = (0..feat).map(|e| ig.f_int[fidx(e, ig.f_size)]).collect();
+    let mut hm = vec![0i64; rows * feat];
+    let mut hmax = vec![0u64; feat];
+    for bi in 0..rows {
+        for e in 0..feat {
+            let v = h[bi * feat + e];
+            let m = round_half_up(v * exp2i(fa[e]));
+            if m as f64 * exp2i(-fa[e]) != v {
+                return None;
+            }
+            hm[bi * feat + e] = m;
+            let a = m.unsigned_abs();
+            if a > hmax[e] {
+                hmax[e] = a;
+            }
+        }
+    }
+    Some(MantShard { hm, hmax, fa })
+}
+
+/// Common accumulator LSB fine enough for every product and the bias.
+fn acc_frac_of(fa: &[i32], w: &QwRun, b: &QwRun) -> i32 {
+    let max_fa = fa.iter().copied().max().unwrap_or(0);
+    let max_fw = w.f_int.iter().copied().max().unwrap_or(0);
+    let max_fb = b.f_int.iter().copied().max().unwrap_or(0);
+    (max_fa + max_fw).max(max_fb)
+}
+
+/// Try the width-tiered integer dense MAC for one shard; returns false
+/// when no narrow tier is provable (caller runs the f64 reference loop).
+#[allow(clippy::too_many_arguments)]
+fn dense_forward_tiered(
+    h: &[f64],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    w: &QwRun,
+    b: &QwRun,
+    ig: &GroupQ,
+    z: &mut [f64],
+) -> bool {
+    let ms = match mantissas_of(h, rows, din, ig) {
+        Some(ms) => ms,
+        None => return false,
+    };
+    let facc = acc_frac_of(&ms.fa, w, b);
+    let mut bound = 0u128;
+    for j in 0..dout {
+        let fb = b.f_int[fidx(j, b.f_size)];
+        let mut acc = tier::shl_bound(b.mant[j].unsigned_abs() as u128, facc - fb);
+        for i in 0..din {
+            let e = i * dout + j;
+            if w.mant[e] == 0 {
+                continue;
+            }
+            let a = tier::ElemBound { mag: ms.hmax[i] as u128, frac: ms.fa[i] };
+            acc = acc.saturating_add(tier::mac_term(
+                a,
+                w.mant[e].unsigned_abs(),
+                w.f_int[fidx(e, w.f_size)],
+                facc,
+            ));
+        }
+        bound = bound.max(acc);
+    }
+    match KernelTier::for_bound(bound) {
+        KernelTier::I8 => dense_mac_int::<i8>(&ms, rows, din, dout, w, b, facc, z),
+        KernelTier::I16 => dense_mac_int::<i16>(&ms, rows, din, dout, w, b, facc, z),
+        KernelTier::I32 => dense_mac_int::<i32>(&ms, rows, din, dout, w, b, facc, z),
+        KernelTier::Wide => return false,
+    }
+    true
+}
+
+/// Branch-free narrow dense MAC: weights, shifts and biases are
+/// pre-narrowed once per layer, then each sample row sweeps contiguous
+/// weight rows (the layout the autovectorizer wants).
+#[allow(clippy::too_many_arguments)]
+fn dense_mac_int<T: NarrowAcc>(
+    ms: &MantShard,
+    rows: usize,
+    din: usize,
+    dout: usize,
+    w: &QwRun,
+    b: &QwRun,
+    facc: i32,
+    z: &mut [f64],
+) {
+    let mut wv: Vec<T> = Vec::with_capacity(w.n);
+    let mut shv: Vec<u32> = Vec::with_capacity(w.n);
+    for i in 0..din {
+        for j in 0..dout {
+            let e = i * dout + j;
+            wv.push(T::narrow(w.mant[e]));
+            let sh = facc - (ms.fa[i] + w.f_int[fidx(e, w.f_size)]);
+            shv.push(sh.clamp(0, T::BITS as i32 - 1) as u32);
+        }
+    }
+    let bias: Vec<T> = (0..dout)
+        .map(|j| T::narrow(b.mant[j] << (facc - b.f_int[fidx(j, b.f_size)])))
+        .collect();
+    let inv = exp2i(-facc);
+    let mut acc: Vec<T> = vec![T::default(); dout];
+    for bi in 0..rows {
+        acc.copy_from_slice(&bias);
+        let hrow = &ms.hm[bi * din..(bi + 1) * din];
+        for (i, &m) in hrow.iter().enumerate() {
+            if m == 0 {
+                continue;
+            }
+            let mt = T::narrow(m);
+            let wrow = &wv[i * dout..(i + 1) * dout];
+            let srow = &shv[i * dout..(i + 1) * dout];
+            for ((a, &mw), &sh) in acc.iter_mut().zip(wrow).zip(srow) {
+                *a = *a + ((mt * mw) << sh);
+            }
+        }
+        for (j, a) in acc.iter().enumerate() {
+            z[bi * dout + j] = a.widen() as f64 * inv;
+        }
+    }
+}
+
+/// Resolved geometry of one conv node, bundled for the tiered kernels.
+struct ConvGeom {
+    k: usize,
+    cin: usize,
+    cout: usize,
+    oh: usize,
+    ow: usize,
+    in_h: usize,
+    in_w: usize,
+}
+
+/// Try the width-tiered integer conv MAC for one shard; returns false
+/// when no narrow tier is provable.
+fn conv_forward_tiered(
+    h: &[f64],
+    rows: usize,
+    g: &ConvGeom,
+    w: &QwRun,
+    b: &QwRun,
+    ig: &GroupQ,
+    z: &mut [f64],
+) -> bool {
+    let in_feat = g.in_h * g.in_w * g.cin;
+    let ms = match mantissas_of(h, rows, in_feat, ig) {
+        Some(ms) => ms,
+        None => return false,
+    };
+    let facc = acc_frac_of(&ms.fa, w, b);
+    let mut bound = 0u128;
+    for oy in 0..g.oh {
+        for ox in 0..g.ow {
+            for co in 0..g.cout {
+                let fb = b.f_int[fidx(co, b.f_size)];
+                let mut acc = tier::shl_bound(b.mant[co].unsigned_abs() as u128, facc - fb);
+                for ky in 0..g.k {
+                    for kx in 0..g.k {
+                        let a_base = ((oy + ky) * g.in_w + ox + kx) * g.cin;
+                        for ci in 0..g.cin {
+                            let e = (((ky * g.k + kx) * g.cin) + ci) * g.cout + co;
+                            if w.mant[e] == 0 {
+                                continue;
+                            }
+                            let el = a_base + ci;
+                            let a = tier::ElemBound {
+                                mag: ms.hmax[el] as u128,
+                                frac: ms.fa[el],
+                            };
+                            acc = acc.saturating_add(tier::mac_term(
+                                a,
+                                w.mant[e].unsigned_abs(),
+                                w.f_int[fidx(e, w.f_size)],
+                                facc,
+                            ));
+                        }
+                    }
+                }
+                bound = bound.max(acc);
+            }
+        }
+    }
+    match KernelTier::for_bound(bound) {
+        KernelTier::I8 => conv_mac_int::<i8>(&ms, rows, g, w, b, facc, z),
+        KernelTier::I16 => conv_mac_int::<i16>(&ms, rows, g, w, b, facc, z),
+        KernelTier::I32 => conv_mac_int::<i32>(&ms, rows, g, w, b, facc, z),
+        KernelTier::Wide => return false,
+    }
+    true
+}
+
+/// Branch-free narrow conv MAC (stream-IO order): per-weight narrow
+/// mantissas + partial shifts are precomputed once; the input element's
+/// fractional bits complete the shift in the inner sweep over `cout`.
+fn conv_mac_int<T: NarrowAcc>(
+    ms: &MantShard,
+    rows: usize,
+    g: &ConvGeom,
+    w: &QwRun,
+    b: &QwRun,
+    facc: i32,
+    z: &mut [f64],
+) {
+    let in_feat = g.in_h * g.in_w * g.cin;
+    let feat = g.oh * g.ow * g.cout;
+    let wv: Vec<T> = w.mant.iter().map(|&m| T::narrow(m)).collect();
+    // facc - fw per weight; the element's fa is subtracted per access
+    let shw: Vec<i32> =
+        (0..w.n).map(|e| facc - w.f_int[fidx(e, w.f_size)]).collect();
+    let bias: Vec<T> = (0..g.cout)
+        .map(|co| T::narrow(b.mant[co] << (facc - b.f_int[fidx(co, b.f_size)])))
+        .collect();
+    let inv = exp2i(-facc);
+    let mut acc: Vec<T> = vec![T::default(); g.cout];
+    for bi in 0..rows {
+        let hrow = &ms.hm[bi * in_feat..(bi + 1) * in_feat];
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                acc.copy_from_slice(&bias);
+                for ky in 0..g.k {
+                    for kx in 0..g.k {
+                        let a_base = ((oy + ky) * g.in_w + ox + kx) * g.cin;
+                        for ci in 0..g.cin {
+                            let m = hrow[a_base + ci];
+                            if m == 0 {
+                                continue;
+                            }
+                            let mt = T::narrow(m);
+                            let fa = ms.fa[a_base + ci];
+                            let w_base = ((ky * g.k + kx) * g.cin + ci) * g.cout;
+                            let wrow = &wv[w_base..w_base + g.cout];
+                            let srow = &shw[w_base..w_base + g.cout];
+                            for ((a, &mw), &sf) in acc.iter_mut().zip(wrow).zip(srow) {
+                                let sh = (sf - fa).clamp(0, T::BITS as i32 - 1) as u32;
+                                *a = *a + ((mt * mw) << sh);
+                            }
+                        }
+                    }
+                }
+                let zb = bi * feat + (oy * g.ow + ox) * g.cout;
+                for (co, a) in acc.iter().enumerate() {
+                    z[zb + co] = a.widen() as f64 * inv;
+                }
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------

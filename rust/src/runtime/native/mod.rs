@@ -48,7 +48,7 @@ use anyhow::{bail, Result};
 use self::engine::{backward_shard, forward_shard, regularizer_pass, GroupStats, Plan, ShardRun};
 use self::parallel::{default_threads, run_shards, shard_ranges};
 use super::{Hypers, ModelExec, StepOut, Target};
-use crate::ir::ModelIr;
+use crate::ir::{tier, ModelIr};
 use crate::nn::ModelMeta;
 
 const ADAM_B1: f64 = 0.9;
@@ -63,6 +63,11 @@ pub struct NativeModel {
     ir: Arc<ModelIr>,
     init: Vec<f32>,
     threads: usize,
+    /// pin the forward pass to the i64/f64 reference MAC path (from
+    /// `HGQ_FORCE_WIDE` at construction; see ARCHITECTURE.md §Kernel
+    /// tiering). Tiering never changes results — only speed — so this
+    /// is a diagnostics/differential-testing switch, not a numerics one
+    force_wide: bool,
     /// reusable requantization workspace (state-dependent half of the
     /// old per-call plan); refilled in place, so the train-step hot
     /// path allocates no per-layer constant buffers
@@ -121,7 +126,14 @@ impl NativeModel {
     fn assemble(meta: ModelMeta, init: Vec<f32>) -> Result<NativeModel> {
         let ir = Arc::new(ModelIr::build(&meta)?);
         let scratch = Mutex::new(Plan::new(&ir));
-        Ok(NativeModel { meta, ir, init, threads: default_threads(), scratch })
+        Ok(NativeModel {
+            meta,
+            ir,
+            init,
+            threads: default_threads(),
+            force_wide: tier::force_wide(),
+            scratch,
+        })
     }
 
     /// The model's resolved layer IR — shared (not re-resolved) with
@@ -144,6 +156,16 @@ impl NativeModel {
         self.threads
     }
 
+    /// Pin (or unpin) this instance to the i64/f64 reference MAC path,
+    /// overriding `HGQ_FORCE_WIDE`. Results are bit-identical either
+    /// way — the width-tiered kernels only run where a per-shard
+    /// integer bound proves them exact — so this exists for
+    /// differential tests and perf A/B runs.
+    pub fn with_force_wide(mut self, wide: bool) -> NativeModel {
+        self.force_wide = wide;
+        self
+    }
+
     fn check_x(&self, x: &[f32]) -> Result<()> {
         let want = self.meta.batch * self.meta.input_dim();
         if x.len() != want {
@@ -162,9 +184,10 @@ impl NativeModel {
         let ranges = shard_ranges(self.meta.batch);
         let feat = self.meta.input_dim();
         let ir = &self.ir;
+        let wide = self.force_wide;
         run_shards(self.threads, ranges.len(), |si| {
             let (start, rows) = ranges[si];
-            forward_shard(ir, plan, &x[start * feat..(start + rows) * feat], rows, train)
+            forward_shard(ir, plan, &x[start * feat..(start + rows) * feat], rows, train, wide)
         })
     }
 
@@ -546,6 +569,34 @@ mod tests {
             &state[f0.offset..f0.offset + f0.size],
             "conv weight bitwidths did not move"
         );
+    }
+
+    #[test]
+    fn tiered_forward_matches_forced_wide_on_presets() {
+        // the width-tiered integer MAC kernels must be bit-identical to
+        // the f64 reference path — logits AND full train-step output —
+        // on a dense preset and a conv preset
+        for preset in ["jets_pp", "svhn_stream"] {
+            let nt = NativeModel::from_preset(preset).unwrap().with_force_wide(false);
+            let nw = NativeModel::from_preset(preset).unwrap().with_force_wide(true);
+            let m = nt.meta().clone();
+            let state = nt.init_state();
+            let x: Vec<f32> = (0..m.batch * m.input_dim())
+                .map(|i| ((i % 23) as f32 - 11.0) / 8.0)
+                .collect();
+            assert_eq!(
+                nt.forward(&state, &x).unwrap(),
+                nw.forward(&state, &x).unwrap(),
+                "tiered vs wide logits diverge on {preset}"
+            );
+            let y: Vec<i32> = (0..m.batch).map(|i| (i % m.output_dim) as i32).collect();
+            let h = Hypers { beta: 1e-6, gamma: 1e-6, lr: 1e-3, f_lr: 1.0 };
+            let ot = nt.train_step(&state, &x, Target::Cls(&y), h).unwrap();
+            let ow = nw.train_step(&state, &x, Target::Cls(&y), h).unwrap();
+            assert_eq!(ot.state, ow.state, "tiered vs wide train state diverges on {preset}");
+            assert_eq!(ot.loss, ow.loss);
+            assert_eq!(ot.ebops, ow.ebops);
+        }
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //! **bit-identical** to sequential `Emulator::infer` calls for every
 //! batch size (proved in tests/serve_batch.rs).
 //!
+//! MAC layers additionally dispatch on their **proven accumulator
+//! bound** ([`Graph::kernel_plan`]): when the bound fits i8/i16/i32 the
+//! layer runs a width-tiered kernel that narrows the input plane once
+//! and accumulates branch-free in the narrow type — every term and
+//! every partial sum is under the bound, so the narrow math equals the
+//! i64 reference bit-for-bit (proved in tests/prop_kernel_tiers.rs).
+//! `HGQ_FORCE_WIDE=1` (or [`BatchEmulator::with_force_wide`]) pins
+//! every layer to the i64 reference path.
+//!
 //! [`infer_all`] layers the fixed shard grid of [`crate::util::shards`]
 //! on top: a sample set is split into the fixed 16-shard partition,
 //! each shard runs its own `BatchEmulator`, and logits are gathered in
@@ -20,7 +29,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::firmware::{FwLayer, Graph};
+use crate::firmware::{ActQ, FwLayer, Graph, LayerKernel, QuantWeights};
+use crate::ir::tier::{self, KernelTier, NarrowAcc};
 use crate::util::shards::{default_threads, run_shards, shard_ranges};
 
 /// Batched inference engine over one built graph: scratch planes are
@@ -38,13 +48,25 @@ pub struct BatchEmulator<'g> {
     f_a: Vec<i32>,
     m_b: Vec<i64>,
     f_b: Vec<i32>,
-    /// accumulator row: one output element across the batch
+    /// accumulator row: one output element across the batch (wide path)
     acc: Vec<i64>,
+    /// per-layer proven tier plan (recomputed on retarget)
+    plan: Vec<LayerKernel>,
+    /// pin every layer to the i64 reference path
+    wide: bool,
+    // typed scratch of the narrow kernels: input plane + accumulator row
+    x8: Vec<i8>,
+    a8: Vec<i8>,
+    x16: Vec<i16>,
+    a16: Vec<i16>,
+    x32: Vec<i32>,
+    a32: Vec<i32>,
 }
 
 impl<'g> BatchEmulator<'g> {
     /// Engine over a built graph, warmed for micro-batches of up to
-    /// `max_batch` samples.
+    /// `max_batch` samples. Tiered kernels are on by default (the
+    /// `HGQ_FORCE_WIDE` environment variable disables them process-wide).
     pub fn new(g: &'g Graph, max_batch: usize) -> Self {
         let cap = g.max_width();
         let rows = max_batch.max(1);
@@ -57,7 +79,28 @@ impl<'g> BatchEmulator<'g> {
             m_b: vec![0; cap * rows],
             f_b: vec![0; cap * rows],
             acc: vec![0; rows],
+            plan: g.kernel_plan(),
+            wide: tier::force_wide(),
+            x8: Vec::new(),
+            a8: Vec::new(),
+            x16: Vec::new(),
+            a16: Vec::new(),
+            x32: Vec::new(),
+            a32: Vec::new(),
         }
+    }
+
+    /// Per-instance `HGQ_FORCE_WIDE` override: `true` pins this engine
+    /// to the i64 reference path regardless of the environment (the
+    /// differential tests run both paths in one process).
+    pub fn with_force_wide(mut self, wide: bool) -> Self {
+        self.wide = wide;
+        self
+    }
+
+    /// The proven per-layer kernel plan this engine dispatches on.
+    pub fn kernel_plan(&self) -> &[LayerKernel] {
+        &self.plan
     }
 
     /// Largest micro-batch this engine was warmed for.
@@ -80,6 +123,7 @@ impl<'g> BatchEmulator<'g> {
             );
         }
         self.g = g;
+        self.plan = g.kernel_plan();
         Ok(())
     }
 
@@ -102,10 +146,11 @@ impl<'g> BatchEmulator<'g> {
         if n == 0 {
             return Ok(0);
         }
+        debug_assert_eq!(self.plan.len(), g.layers.len());
         let r = self.rows;
         let mut n_cur = 0usize;
 
-        for layer in &g.layers {
+        for (li, layer) in g.layers.iter().enumerate() {
             match layer {
                 FwLayer::InputQuant { out: q } => {
                     n_cur = din;
@@ -120,38 +165,33 @@ impl<'g> BatchEmulator<'g> {
                 }
                 FwLayer::Dense { din: d_in, dout, w, b, relu, out: q, acc_frac } => {
                     debug_assert_eq!(n_cur, *d_in);
-                    for j in 0..*dout {
-                        // bias aligned to the accumulator LSB; integer
-                        // addition commutes exactly, so folding it in
-                        // first is bit-identical to the sequential path
-                        self.acc[..n].fill(b.m[j] << (acc_frac - b.frac[j]));
-                        for i in 0..*d_in {
-                            let idx = i * dout + j;
-                            let mw = w.m[idx];
-                            if mw == 0 {
-                                continue;
-                            }
-                            let wf = w.frac[idx];
-                            for sa in 0..n {
-                                let ma = self.m_a[i * r + sa];
-                                if ma == 0 {
-                                    continue;
-                                }
-                                let shift = acc_frac - (self.f_a[i * r + sa] + wf);
-                                debug_assert!(shift >= 0);
-                                self.acc[sa] += (ma * mw) << shift;
-                            }
+                    let l = DenseL {
+                        din: *d_in,
+                        dout: *dout,
+                        w,
+                        b,
+                        relu: *relu,
+                        q,
+                        acc_frac: *acc_frac,
+                    };
+                    let t = if self.wide { KernelTier::Wide } else { self.plan[li].tier };
+                    let mut p = Planes {
+                        m_a: &self.m_a,
+                        f_a: &self.f_a,
+                        m_b: &mut self.m_b,
+                        f_b: &mut self.f_b,
+                        r,
+                        n,
+                    };
+                    match t {
+                        KernelTier::I8 => dense_narrow::<i8>(&mut p, &l, &mut self.x8, &mut self.a8),
+                        KernelTier::I16 => {
+                            dense_narrow::<i16>(&mut p, &l, &mut self.x16, &mut self.a16)
                         }
-                        let s = q.spec(j);
-                        let fb = s.frac_bits();
-                        for sa in 0..n {
-                            let mut a = self.acc[sa];
-                            if *relu {
-                                a = a.max(0);
-                            }
-                            self.m_b[j * r + sa] = s.requantize(a, *acc_frac);
+                        KernelTier::I32 => {
+                            dense_narrow::<i32>(&mut p, &l, &mut self.x32, &mut self.a32)
                         }
-                        self.f_b[j * r..j * r + n].fill(fb);
+                        KernelTier::Wide => dense_wide(&mut p, &l, &mut self.acc),
                     }
                     n_cur = *dout;
                     self.swap();
@@ -171,48 +211,38 @@ impl<'g> BatchEmulator<'g> {
                 } => {
                     let [oh, ow, _] = *out_shape;
                     debug_assert_eq!(n_cur, in_h * in_w * cin);
-                    for oy in 0..oh {
-                        for ox in 0..ow {
-                            for co in 0..*cout {
-                                self.acc[..n].fill(b.m[co] << (acc_frac - b.frac[co]));
-                                for ky in 0..*k {
-                                    let iy = oy + ky;
-                                    for kx in 0..*k {
-                                        let ix = ox + kx;
-                                        let a_base = (iy * in_w + ix) * cin;
-                                        let w_base = ((ky * k + kx) * cin) * cout + co;
-                                        for ci in 0..*cin {
-                                            let widx = w_base + ci * cout;
-                                            let mw = w.m[widx];
-                                            if mw == 0 {
-                                                continue;
-                                            }
-                                            let wf = w.frac[widx];
-                                            let e = (a_base + ci) * r;
-                                            for sa in 0..n {
-                                                let ma = self.m_a[e + sa];
-                                                if ma == 0 {
-                                                    continue;
-                                                }
-                                                let shift = acc_frac - (self.f_a[e + sa] + wf);
-                                                self.acc[sa] += (ma * mw) << shift;
-                                            }
-                                        }
-                                    }
-                                }
-                                let oidx = (oy * ow + ox) * cout + co;
-                                let s = q.spec(oidx);
-                                let fb = s.frac_bits();
-                                for sa in 0..n {
-                                    let mut a = self.acc[sa];
-                                    if *relu {
-                                        a = a.max(0);
-                                    }
-                                    self.m_b[oidx * r + sa] = s.requantize(a, *acc_frac);
-                                }
-                                self.f_b[oidx * r..oidx * r + n].fill(fb);
-                            }
+                    let l = ConvL {
+                        k: *k,
+                        cin: *cin,
+                        cout: *cout,
+                        in_feat: in_h * in_w * cin,
+                        in_w: *in_w,
+                        oh,
+                        ow,
+                        w,
+                        b,
+                        relu: *relu,
+                        q,
+                        acc_frac: *acc_frac,
+                    };
+                    let t = if self.wide { KernelTier::Wide } else { self.plan[li].tier };
+                    let mut p = Planes {
+                        m_a: &self.m_a,
+                        f_a: &self.f_a,
+                        m_b: &mut self.m_b,
+                        f_b: &mut self.f_b,
+                        r,
+                        n,
+                    };
+                    match t {
+                        KernelTier::I8 => conv_narrow::<i8>(&mut p, &l, &mut self.x8, &mut self.a8),
+                        KernelTier::I16 => {
+                            conv_narrow::<i16>(&mut p, &l, &mut self.x16, &mut self.a16)
                         }
+                        KernelTier::I32 => {
+                            conv_narrow::<i32>(&mut p, &l, &mut self.x32, &mut self.a32)
+                        }
+                        KernelTier::Wide => conv_wide(&mut p, &l, &mut self.acc),
                     }
                     n_cur = oh * ow * cout;
                     self.swap();
@@ -274,6 +304,236 @@ impl<'g> BatchEmulator<'g> {
         std::mem::swap(&mut self.m_a, &mut self.m_b);
         std::mem::swap(&mut self.f_a, &mut self.f_b);
     }
+}
+
+/// Borrowed views of the ping-pong planes one MAC kernel reads/writes.
+struct Planes<'a> {
+    m_a: &'a [i64],
+    f_a: &'a [i32],
+    m_b: &'a mut [i64],
+    f_b: &'a mut [i32],
+    /// allocated rows per element plane
+    r: usize,
+    /// live samples this micro-batch
+    n: usize,
+}
+
+/// One dense layer's fields, bundled for the kernels.
+struct DenseL<'a> {
+    din: usize,
+    dout: usize,
+    w: &'a QuantWeights,
+    b: &'a QuantWeights,
+    relu: bool,
+    q: &'a ActQ,
+    acc_frac: i32,
+}
+
+/// One conv layer's fields, bundled for the kernels.
+struct ConvL<'a> {
+    k: usize,
+    cin: usize,
+    cout: usize,
+    in_feat: usize,
+    in_w: usize,
+    oh: usize,
+    ow: usize,
+    w: &'a QuantWeights,
+    b: &'a QuantWeights,
+    relu: bool,
+    q: &'a ActQ,
+    acc_frac: i32,
+}
+
+/// i64 reference dense kernel (the pre-tiering hot loop, verbatim).
+fn dense_wide(p: &mut Planes, l: &DenseL, acc: &mut [i64]) {
+    let (r, n) = (p.r, p.n);
+    for j in 0..l.dout {
+        // bias aligned to the accumulator LSB; integer addition commutes
+        // exactly, so folding it in first is bit-identical to the
+        // sequential path
+        acc[..n].fill(l.b.m[j] << (l.acc_frac - l.b.frac[j]));
+        for i in 0..l.din {
+            let idx = i * l.dout + j;
+            let mw = l.w.m[idx];
+            if mw == 0 {
+                continue;
+            }
+            let wf = l.w.frac[idx];
+            for sa in 0..n {
+                let ma = p.m_a[i * r + sa];
+                if ma == 0 {
+                    continue;
+                }
+                let shift = l.acc_frac - (p.f_a[i * r + sa] + wf);
+                debug_assert!(shift >= 0);
+                acc[sa] += (ma * mw) << shift;
+            }
+        }
+        store_row(p, l.q, j, l.relu, l.acc_frac, |sa| acc[sa]);
+    }
+}
+
+/// i64 reference conv kernel (the pre-tiering hot loop, verbatim).
+fn conv_wide(p: &mut Planes, l: &ConvL, acc: &mut [i64]) {
+    let (r, n) = (p.r, p.n);
+    for oy in 0..l.oh {
+        for ox in 0..l.ow {
+            for co in 0..l.cout {
+                acc[..n].fill(l.b.m[co] << (l.acc_frac - l.b.frac[co]));
+                for ky in 0..l.k {
+                    let iy = oy + ky;
+                    for kx in 0..l.k {
+                        let ix = ox + kx;
+                        let a_base = (iy * l.in_w + ix) * l.cin;
+                        let w_base = ((ky * l.k + kx) * l.cin) * l.cout + co;
+                        for ci in 0..l.cin {
+                            let widx = w_base + ci * l.cout;
+                            let mw = l.w.m[widx];
+                            if mw == 0 {
+                                continue;
+                            }
+                            let wf = l.w.frac[widx];
+                            let e = (a_base + ci) * r;
+                            for sa in 0..n {
+                                let ma = p.m_a[e + sa];
+                                if ma == 0 {
+                                    continue;
+                                }
+                                let shift = l.acc_frac - (p.f_a[e + sa] + wf);
+                                acc[sa] += (ma * mw) << shift;
+                            }
+                        }
+                    }
+                }
+                let oidx = (oy * l.ow + ox) * l.cout + co;
+                store_row(p, l.q, oidx, l.relu, l.acc_frac, |sa| acc[sa]);
+            }
+        }
+    }
+}
+
+/// Width-tiered dense kernel: the input plane is narrowed once into a
+/// contiguous `[element][sample]` block (lossless — every runtime
+/// mantissa that feeds a nonzero weight is under the layer bound), then
+/// each weight sweeps the micro-batch with a branch-free narrow MAC.
+/// The per-sample zero-skip of the wide path is deliberately dropped:
+/// adding an exact zero term is bit-identical, and the straight-line
+/// loop is what autovectorizes.
+fn dense_narrow<T: NarrowAcc>(p: &mut Planes, l: &DenseL, xs: &mut Vec<T>, acc: &mut Vec<T>) {
+    let (r, n) = (p.r, p.n);
+    narrow_plane(p, l.din, xs);
+    acc.clear();
+    acc.resize(n, T::default());
+    for j in 0..l.dout {
+        let bias = T::narrow(l.b.m[j] << (l.acc_frac - l.b.frac[j]));
+        for a in acc.iter_mut() {
+            *a = bias;
+        }
+        for i in 0..l.din {
+            let idx = i * l.dout + j;
+            let mw = l.w.m[idx];
+            if mw == 0 {
+                continue; // the bound proof covers only nonzero weights
+            }
+            mac_row(
+                &mut acc[..n],
+                &xs[i * n..(i + 1) * n],
+                &p.f_a[i * r..i * r + n],
+                T::narrow(mw),
+                l.w.frac[idx],
+                l.acc_frac,
+            );
+        }
+        store_row(p, l.q, j, l.relu, l.acc_frac, |sa| acc[sa].widen());
+    }
+}
+
+/// Width-tiered conv kernel; same contract as [`dense_narrow`].
+fn conv_narrow<T: NarrowAcc>(p: &mut Planes, l: &ConvL, xs: &mut Vec<T>, acc: &mut Vec<T>) {
+    let (r, n) = (p.r, p.n);
+    narrow_plane(p, l.in_feat, xs);
+    acc.clear();
+    acc.resize(n, T::default());
+    for oy in 0..l.oh {
+        for ox in 0..l.ow {
+            for co in 0..l.cout {
+                let bias = T::narrow(l.b.m[co] << (l.acc_frac - l.b.frac[co]));
+                for a in acc.iter_mut() {
+                    *a = bias;
+                }
+                for ky in 0..l.k {
+                    for kx in 0..l.k {
+                        let a_base = ((oy + ky) * l.in_w + (ox + kx)) * l.cin;
+                        let w_base = ((ky * l.k + kx) * l.cin) * l.cout + co;
+                        for ci in 0..l.cin {
+                            let widx = w_base + ci * l.cout;
+                            let mw = l.w.m[widx];
+                            if mw == 0 {
+                                continue;
+                            }
+                            let e = a_base + ci;
+                            mac_row(
+                                &mut acc[..n],
+                                &xs[e * n..(e + 1) * n],
+                                &p.f_a[e * r..e * r + n],
+                                T::narrow(mw),
+                                l.w.frac[widx],
+                                l.acc_frac,
+                            );
+                        }
+                    }
+                }
+                let oidx = (oy * l.ow + ox) * l.cout + co;
+                store_row(p, l.q, oidx, l.relu, l.acc_frac, |sa| acc[sa].widen());
+            }
+        }
+    }
+}
+
+/// One weight swept across the micro-batch: branch-free narrow MAC.
+#[inline]
+fn mac_row<T: NarrowAcc>(acc: &mut [T], xs: &[T], fr: &[i32], mw: T, wf: i32, acc_frac: i32) {
+    for ((a, &x), &f) in acc.iter_mut().zip(xs).zip(fr) {
+        // the clamp keeps the shift legal for dead elements whose
+        // mantissa is provably 0 (the term is 0 either way); live
+        // elements' true shift is always under T::BITS by the bound
+        let sh = (acc_frac - (f + wf)).clamp(0, T::BITS as i32 - 1) as u32;
+        *a = *a + ((x * mw) << sh);
+    }
+}
+
+/// Narrow the live rows of the input plane into a contiguous
+/// `[element][sample]` block of stride `n`.
+fn narrow_plane<T: NarrowAcc>(p: &Planes, n_elems: usize, xs: &mut Vec<T>) {
+    xs.clear();
+    xs.reserve(n_elems * p.n);
+    for e in 0..n_elems {
+        xs.extend(p.m_a[e * p.r..e * p.r + p.n].iter().map(|&m| T::narrow(m)));
+    }
+}
+
+/// Re-quantize one output element's accumulator row into the output
+/// plane (shared tail of the wide and narrow kernels).
+#[inline]
+fn store_row(
+    p: &mut Planes,
+    q: &ActQ,
+    oidx: usize,
+    relu: bool,
+    acc_frac: i32,
+    acc: impl Fn(usize) -> i64,
+) {
+    let s = q.spec(oidx);
+    let fb = s.frac_bits();
+    for sa in 0..p.n {
+        let mut a = acc(sa);
+        if relu {
+            a = a.max(0);
+        }
+        p.m_b[oidx * p.r + sa] = s.requantize(a, acc_frac);
+    }
+    p.f_b[oidx * p.r..oidx * p.r + p.n].fill(fb);
 }
 
 /// Bulk batched inference over a whole sample set, sharded across
@@ -352,6 +612,39 @@ mod tests {
             }
             assert_eq!(got, seq, "batch size {bsz} diverged from sequential");
         }
+    }
+
+    #[test]
+    fn tiered_and_forced_wide_agree_bitwise() {
+        let g = graph();
+        let x = samples(9);
+        // the tiny graph's bounds are small: tiering must engage
+        let bem = BatchEmulator::new(&g, 9);
+        assert!(
+            bem.kernel_plan()
+                .iter()
+                .any(|k| k.bound.is_some() && k.tier != KernelTier::Wide),
+            "tiny graph unexpectedly stayed wide: {:?}",
+            bem.kernel_plan()
+        );
+        let mut tiered = bem.with_force_wide(false);
+        let mut wide = BatchEmulator::new(&g, 9).with_force_wide(true);
+        let mut got_t = vec![0.0f64; 9 * 2];
+        let mut got_w = vec![0.0f64; 9 * 2];
+        tiered.infer_batch(&x, &mut got_t).unwrap();
+        wide.infer_batch(&x, &mut got_w).unwrap();
+        assert_eq!(got_t, got_w);
+    }
+
+    #[test]
+    fn retarget_refreshes_the_kernel_plan() {
+        let g1 = graph();
+        let g2 = graph();
+        let mut bem = BatchEmulator::new(&g1, 4);
+        let before = bem.kernel_plan().len();
+        bem.retarget(&g2).unwrap();
+        assert_eq!(bem.kernel_plan().len(), before);
+        assert_eq!(bem.kernel_plan().len(), g2.layers.len());
     }
 
     #[test]

@@ -4,8 +4,16 @@
 //! random inputs; the closure returns `Err(msg)` (or panics) to fail.
 //! On failure the seed of the failing case is printed so it can be
 //! replayed deterministically with `check_seed`.
+//!
+//! The module also hosts [`gen_model_ir`], a seeded random-model
+//! generator producing a resolved [`ModelIr`] plus a filled packed
+//! state and calibration extremes — the shared input source of the
+//! differential kernel-tier property suite (tests/prop_kernel_tiers.rs)
+//! and the fixed-point property tests (tests/prop_fixed.rs).
 
 use super::rng::Rng;
+use crate::ir::{shape, ModelIr};
+use crate::nn::{ActGroup, LayerMeta, ModelMeta, TensorEntry};
 
 /// Run `f` over `cases` seeded random inputs; panics (with the failing
 /// seed) on the first `Err`.
@@ -61,6 +69,299 @@ macro_rules! prop_assert_eq {
     }};
 }
 
+/// A randomly generated small model: metadata, its resolved IR, a
+/// filled packed state and calibration extremes — exactly the inputs
+/// `firmware::Graph::from_ir` and the native engine consume.
+pub struct GenModel {
+    /// generated metadata (packed-state layout + layer stack)
+    pub meta: ModelMeta,
+    /// the resolved, validated layer IR
+    pub ir: ModelIr,
+    /// filled packed state
+    /// `[params | fbits | adam.m | adam.v | amin | amax | step]`
+    pub state: Vec<f32>,
+    /// calibration minima, concatenated in `meta.act_groups` order
+    pub amin: Vec<f32>,
+    /// calibration maxima, same layout as `amin`
+    pub amax: Vec<f32>,
+}
+
+/// Append one dense layer's params/fbits/group/layer entries and
+/// advance the running shape (mirrors the preset builder's layout).
+#[allow(clippy::too_many_arguments)]
+fn add_dense(
+    name: &str,
+    dout: usize,
+    relu: bool,
+    w_elem: bool,
+    a_elem: bool,
+    shape: &mut Vec<usize>,
+    params: &mut Vec<(String, Vec<usize>)>,
+    fbits: &mut Vec<(String, Vec<usize>)>,
+    agroups: &mut Vec<(String, Vec<usize>, bool)>,
+    layers: &mut Vec<LayerMeta>,
+) {
+    let din = shape::flatten_dim(shape);
+    params.push((format!("{name}.w"), vec![din, dout]));
+    params.push((format!("{name}.b"), vec![dout]));
+    fbits.push((format!("{name}.fw"), if w_elem { vec![din, dout] } else { Vec::new() }));
+    fbits.push((format!("{name}.fb"), if w_elem { vec![dout] } else { Vec::new() }));
+    let fshape = if a_elem { vec![dout] } else { Vec::new() };
+    fbits.push((format!("{name}.fa"), fshape.clone()));
+    agroups.push((format!("{name}.fa"), fshape, !relu));
+    layers.push(LayerMeta::Dense { name: name.to_string(), din, dout, relu });
+    *shape = vec![dout];
+}
+
+/// Assemble a [`ModelMeta`] from the collected layer pieces with the
+/// packed-state protocol layout
+/// `[params | fbits | adam.m | adam.v | amin/group | amax/group | step]`
+/// (ARCHITECTURE.md §Packed-state protocol).
+fn assemble_meta(
+    input_shape: Vec<usize>,
+    output_dim: usize,
+    w_elem: bool,
+    a_elem: bool,
+    params: Vec<(String, Vec<usize>)>,
+    fbits: Vec<(String, Vec<usize>)>,
+    agroups: Vec<(String, Vec<usize>, bool)>,
+    layers: Vec<LayerMeta>,
+) -> ModelMeta {
+    let mut tensors: Vec<TensorEntry> = Vec::new();
+    let mut off = 0usize;
+    for (name, shp) in &params {
+        let size = shape::flatten_dim(shp);
+        tensors.push(TensorEntry {
+            name: name.clone(),
+            shape: shp.clone(),
+            offset: off,
+            size,
+            seg: "param".to_string(),
+        });
+        off += size;
+    }
+    let n_params = off;
+    for (name, shp) in &fbits {
+        let size = shape::flatten_dim(shp);
+        tensors.push(TensorEntry {
+            name: name.clone(),
+            shape: shp.clone(),
+            offset: off,
+            size,
+            seg: "fbit".to_string(),
+        });
+        off += size;
+    }
+    let n_train = off;
+    for opt_name in ["adam.m", "adam.v"] {
+        tensors.push(TensorEntry {
+            name: opt_name.to_string(),
+            shape: vec![n_train],
+            offset: off,
+            size: n_train,
+            seg: "opt".to_string(),
+        });
+        off += n_train;
+    }
+    let mut act_groups: Vec<ActGroup> = Vec::new();
+    let mut coff = 0usize;
+    for (name, fshape, signed) in &agroups {
+        let size = shape::flatten_dim(fshape);
+        act_groups.push(ActGroup {
+            name: name.clone(),
+            fshape: fshape.clone(),
+            signed: *signed,
+            size,
+            calib_offset: coff,
+        });
+        coff += size;
+    }
+    for stat in ["amin", "amax"] {
+        for g in &act_groups {
+            tensors.push(TensorEntry {
+                name: format!("{}.{stat}", g.name),
+                shape: g.fshape.clone(),
+                offset: off,
+                size: g.size,
+                seg: "stat".to_string(),
+            });
+            off += g.size;
+        }
+    }
+    tensors.push(TensorEntry {
+        name: "step".to_string(),
+        shape: Vec::new(),
+        offset: off,
+        size: 1,
+        seg: "opt".to_string(),
+    });
+    off += 1;
+
+    ModelMeta {
+        name: "gen".to_string(),
+        task: "cls".to_string(),
+        batch: 4,
+        input_shape,
+        y_is_int: true,
+        w_gran: if w_elem { "element" } else { "layer" }.to_string(),
+        a_gran: if a_elem { "element" } else { "layer" }.to_string(),
+        state_size: off,
+        n_params,
+        n_train,
+        calib_size: coff,
+        output_dim,
+        tensors,
+        act_groups,
+        layers,
+    }
+}
+
+/// Generate a random small model graph: a dense chain (1–3 layers,
+/// dims ≤ 6) or a conv stack (k ∈ {2,3}, optional 2x2 pool, flatten,
+/// dense head), with random weight/activation granularity, random
+/// trained fractional bits, ~20% exact-zero weights and log-uniform
+/// calibration ranges (including ~5% dead groups). The meta is
+/// resolved through [`ModelIr::build`], so every generated layout is
+/// validated before use.
+pub fn gen_model_ir(rng: &mut Rng) -> GenModel {
+    let conv = rng.bernoulli(0.4);
+    let w_elem = rng.bernoulli(0.5);
+    // per-element activation groups across a maxpool would mix LSBs
+    // inside one pooling window (rejected by the emulators), so conv
+    // stacks stay layer-granular like svhn_stream
+    let a_elem = !conv && rng.bernoulli(0.5);
+    let input_signed = rng.bernoulli(0.7);
+
+    let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut fbits: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut agroups: Vec<(String, Vec<usize>, bool)> = Vec::new();
+    let mut layers: Vec<LayerMeta> = Vec::new();
+
+    let input_shape: Vec<usize> = if conv {
+        let h = 4 + rng.below(4);
+        vec![h, h, 1 + rng.below(2)]
+    } else {
+        vec![1 + rng.below(6)]
+    };
+    let mut shape = input_shape.clone();
+
+    let fshape = if a_elem { shape.clone() } else { Vec::new() };
+    fbits.push(("inq.fa".to_string(), fshape.clone()));
+    agroups.push(("inq.fa".to_string(), fshape, input_signed));
+    layers.push(LayerMeta::InputQuant { name: "inq".to_string(), signed: input_signed });
+
+    if conv {
+        let k = 2 + rng.below(2);
+        let cout = 1 + rng.below(3);
+        let relu = rng.bernoulli(0.5);
+        let os = shape::conv2d_out_shape(&shape, k, cout).expect("generated conv shape");
+        let cin = shape[2];
+        params.push(("c0.w".to_string(), vec![k, k, cin, cout]));
+        params.push(("c0.b".to_string(), vec![cout]));
+        fbits.push(("c0.fw".to_string(), if w_elem { vec![k, k, cin, cout] } else { Vec::new() }));
+        fbits.push(("c0.fb".to_string(), if w_elem { vec![cout] } else { Vec::new() }));
+        fbits.push(("c0.fa".to_string(), Vec::new()));
+        agroups.push(("c0.fa".to_string(), Vec::new(), !relu));
+        layers.push(LayerMeta::Conv2d { name: "c0".to_string(), k, cin, cout, relu, out_shape: os });
+        shape = os.to_vec();
+        if rng.bernoulli(0.5) {
+            let os = shape::maxpool2_out_shape(&shape).expect("generated pool shape");
+            layers.push(LayerMeta::MaxPool2 { out_shape: os });
+            shape = os.to_vec();
+        }
+        layers.push(LayerMeta::Flatten);
+        shape = vec![shape::flatten_dim(&shape)];
+        add_dense(
+            "d0",
+            1 + rng.below(4),
+            false,
+            w_elem,
+            a_elem,
+            &mut shape,
+            &mut params,
+            &mut fbits,
+            &mut agroups,
+            &mut layers,
+        );
+    } else {
+        let nl = 1 + rng.below(3);
+        for li in 0..nl {
+            let relu = li + 1 < nl && rng.bernoulli(0.7);
+            add_dense(
+                &format!("d{li}"),
+                1 + rng.below(6),
+                relu,
+                w_elem,
+                a_elem,
+                &mut shape,
+                &mut params,
+                &mut fbits,
+                &mut agroups,
+                &mut layers,
+            );
+        }
+    }
+
+    let output_dim = shape::flatten_dim(&shape);
+    let meta =
+        assemble_meta(input_shape, output_dim, w_elem, a_elem, params, fbits, agroups, layers);
+    let ir = ModelIr::build(&meta).expect("generated meta must resolve");
+
+    let mut state = vec![0.0f32; meta.state_size];
+    for t in &meta.tensors {
+        match t.seg.as_str() {
+            "param" => {
+                for v in state[t.offset..t.offset + t.size].iter_mut() {
+                    *v = if rng.bernoulli(0.2) {
+                        0.0 // exercise the kernels' zero-weight skip
+                    } else {
+                        rng.range(-2.0, 2.0) as f32
+                    };
+                }
+            }
+            "fbit" => {
+                // per-tensor base + jitter: a wide spread of trained
+                // LSBs drives tier diversity across cases
+                let base = rng.range(-3.0, 9.0);
+                for v in state[t.offset..t.offset + t.size].iter_mut() {
+                    *v = (base + rng.range(-1.5, 1.5)) as f32;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut amin = vec![0.0f32; meta.calib_size];
+    let mut amax = vec![0.0f32; meta.calib_size];
+    for g in &meta.act_groups {
+        if rng.bernoulli(0.05) {
+            continue; // dead group: zero range => 0-bit quantizer
+        }
+        // log-uniform scales: small ranges land on i8/i16 kernels,
+        // large ones on i32/wide
+        let scale = 2.0f64.powf(rng.range(-3.0, 6.0));
+        for i in 0..g.size {
+            let off = g.calib_offset + i;
+            amax[off] = rng.range(0.0, scale) as f32;
+            if g.signed {
+                amin[off] = -(rng.range(0.0, scale) as f32);
+            }
+        }
+    }
+    // mirror the extremes into the packed stat segment: the engine
+    // reads them from the state, the firmware builder from the Calib
+    for g in &meta.act_groups {
+        let tmin = meta.tensor(&format!("{}.amin", g.name)).expect("stat tensor");
+        let (o, s) = (tmin.offset, tmin.size);
+        state[o..o + s].copy_from_slice(&amin[g.calib_offset..g.calib_offset + g.size]);
+        let tmax = meta.tensor(&format!("{}.amax", g.name)).expect("stat tensor");
+        let (o, s) = (tmax.offset, tmax.size);
+        state[o..o + s].copy_from_slice(&amax[g.calib_offset..g.calib_offset + g.size]);
+    }
+
+    GenModel { meta, ir, state, amin, amax }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +382,26 @@ mod tests {
     #[should_panic(expected = "property 'always-fails'")]
     fn failing_property_panics_with_seed() {
         check("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generated_models_resolve_and_fill_consistently() {
+        let mut seen_conv = false;
+        let mut seen_dense = false;
+        check("gen-model-ir", 40, |rng| {
+            let gm = gen_model_ir(rng);
+            crate::prop_assert_eq!(gm.state.len(), gm.ir.state_size);
+            crate::prop_assert_eq!(gm.amin.len(), gm.ir.calib_size);
+            crate::prop_assert_eq!(gm.amax.len(), gm.ir.calib_size);
+            crate::prop_assert!(gm.ir.nodes.len() >= 2, "too few layers");
+            crate::prop_assert!(
+                gm.amin.iter().all(|&v| v <= 0.0) && gm.amax.iter().all(|&v| v >= 0.0),
+                "calibration extremes must straddle zero"
+            );
+            seen_conv |= gm.ir.input_shape.len() == 3;
+            seen_dense |= gm.ir.input_shape.len() == 1;
+            Ok(())
+        });
+        assert!(seen_conv && seen_dense, "generator must cover both architectures");
     }
 }

@@ -4,9 +4,11 @@
 //! small calibrated ranges). Driven by the in-tree property harness
 //! (util/prop.rs; proptest is unavailable offline).
 
+use hgq::firmware::{Calib, FwLayer, Graph};
 use hgq::fixed::arith::{accumulator_bits, dot, Fx};
 use hgq::fixed::{exp2i, FixedSpec};
-use hgq::util::prop::check;
+use hgq::ir::tier;
+use hgq::util::prop::{check, gen_model_ir};
 use hgq::{prop_assert, prop_assert_eq};
 
 #[test]
@@ -134,6 +136,47 @@ fn prop_wrapped_arithmetic_matches_modular_model() {
         let b = (rng.next_u64() >> 30) as i64 - (1i64 << 33);
         prop_assert_eq!(s.wrap(a + b), s.wrap(s.wrap(a) + s.wrap(b)));
         prop_assert_eq!(s.wrap(a - b), s.wrap(s.wrap(a) - s.wrap(b)));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generated_input_specs_confine_mantissas_to_spec_bound() {
+    // the tiered-kernel proofs (ir/tier.rs) rest on one fixed-point
+    // fact: wrap confines every mantissa of a bounded spec within
+    // `spec_bound`. Check it over the same random-`ModelIr` generator
+    // the differential harness uses, on the resolved input quantizers.
+    check("gen-specs-wrap-confinement", 100, |rng| {
+        let gm = gen_model_ir(rng);
+        let calib = Calib { amin: gm.amin.clone(), amax: gm.amax.clone() };
+        let g = Graph::from_ir(&gm.ir, &gm.state, &calib)
+            .map_err(|e| format!("graph build failed: {e}"))?;
+        let q = match &g.layers[0] {
+            FwLayer::InputQuant { out } => out,
+            other => return Err(format!("layer 0 is not an input quantizer: {other:?}")),
+        };
+        for i in 0..g.input_dim {
+            let s = q.spec(i);
+            let b = tier::spec_bound(&s);
+            prop_assert_eq!(b.frac, s.frac_bits());
+            // an arbitrary (huge) mantissa wraps inside the bound
+            let m = (rng.next_u64() >> 20) as i64 - (1i64 << 43);
+            let w = s.wrap(m);
+            if b.mag != tier::UNBOUNDED {
+                prop_assert!(
+                    (w.unsigned_abs() as u128) <= b.mag,
+                    "wrap escaped spec_bound: {s:?} m={m} w={w} mag={}",
+                    b.mag
+                );
+            }
+            // and the calibrated extremes quantize inside it too
+            for v in [s.min_value(), s.max_value()] {
+                let qm = s.quantize(v);
+                if b.mag != tier::UNBOUNDED {
+                    prop_assert!((qm.unsigned_abs() as u128) <= b.mag, "extreme escaped: {s:?}");
+                }
+            }
+        }
         Ok(())
     });
 }

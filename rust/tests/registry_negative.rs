@@ -1,0 +1,132 @@
+//! Negative-path coverage for serving-registry checkpoint loading:
+//! corrupt, missing and truncated checkpoint directories must surface
+//! clean `Err`s — never panic — and must leave the registry cache
+//! untouched so a later good deploy is not shadowed by a failed one.
+
+use std::path::PathBuf;
+
+use hgq::coordinator::checkpoint::{self, CheckpointInfo};
+use hgq::runtime::{ModelRuntime, Runtime};
+use hgq::serve::Registry;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hgq_reg_neg_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn reg() -> Registry {
+    Registry::new("artifacts").with_calib_samples(32)
+}
+
+fn info(model: &str) -> CheckpointInfo {
+    CheckpointInfo {
+        model: model.into(),
+        label: "neg".into(),
+        quality: 0.0,
+        cost: 0.0,
+        epoch: 0,
+        beta: 0.0,
+    }
+}
+
+#[test]
+fn missing_directory_is_a_clean_error() {
+    let r = reg();
+    let d = tmpdir("missing").join("nope");
+    let err = r.load_checkpoint("jets", &d).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("info.json"), "error should name the missing file: {msg}");
+    assert!(r.cached().is_empty(), "failed load must not populate the cache");
+}
+
+#[test]
+fn corrupt_info_json_is_a_clean_error() {
+    let d = tmpdir("badjson");
+    std::fs::create_dir_all(&d).unwrap();
+    std::fs::write(d.join("info.json"), "{not json").unwrap();
+    std::fs::write(d.join("state.bin"), 0f32.to_le_bytes()).unwrap();
+    let r = reg();
+    assert!(r.load_checkpoint("jets", &d).is_err());
+    assert!(r.cached().is_empty());
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+#[test]
+fn missing_state_bin_is_a_clean_error() {
+    let d = tmpdir("nostate");
+    checkpoint::save(&d, &info("jets_pp"), &[1.0, 2.0]).unwrap();
+    std::fs::remove_file(d.join("state.bin")).unwrap();
+    let r = reg();
+    assert!(r.load_checkpoint("jets", &d).is_err());
+    assert!(r.cached().is_empty());
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+#[test]
+fn truncated_state_bin_is_a_clean_error() {
+    let d = tmpdir("trunc");
+    checkpoint::save(&d, &info("jets_pp"), &[1.0, 2.0, 3.0]).unwrap();
+    // odd byte count: not even a whole number of f32s
+    std::fs::write(d.join("state.bin"), [0u8; 7]).unwrap();
+    let r = reg();
+    let err = r.load_checkpoint("jets", &d).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("corrupt state.bin"), "{msg}");
+    assert!(r.cached().is_empty());
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+#[test]
+fn state_length_disagreeing_with_info_is_a_clean_error() {
+    let d = tmpdir("lenlie");
+    checkpoint::save(&d, &info("jets_pp"), &[1.0, 2.0, 3.0]).unwrap();
+    // whole f32s, but fewer than info.json's state_len records
+    let bytes: Vec<u8> = 1f32.to_le_bytes().into_iter().chain(2f32.to_le_bytes()).collect();
+    std::fs::write(d.join("state.bin"), bytes).unwrap();
+    let r = reg();
+    let err = r.load_checkpoint("jets", &d).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("info.json says"), "{msg}");
+    assert!(r.cached().is_empty());
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+#[test]
+fn state_shorter_than_the_model_is_a_clean_error() {
+    // self-consistent checkpoint files whose state is simply the wrong
+    // size for the model it names: rejected by the runtime, not a panic
+    let d = tmpdir("shortstate");
+    checkpoint::save(&d, &info("jets_pp"), &[0.0f32; 8]).unwrap();
+    let r = reg();
+    let err = r.load_checkpoint("jets", &d).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("state size"), "{msg}");
+    assert!(r.cached().is_empty());
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+#[test]
+fn unknown_model_name_in_info_is_a_clean_error() {
+    let d = tmpdir("unkmodel");
+    checkpoint::save(&d, &info("resnet50"), &[0.0f32; 4]).unwrap();
+    let r = reg();
+    assert!(r.load_checkpoint("big", &d).is_err());
+    assert!(r.cached().is_empty());
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+#[test]
+fn failed_deploy_keeps_a_previous_good_graph_servable() {
+    let d = tmpdir("goodthenbad");
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, std::path::Path::new("artifacts"), "jets_pp").unwrap();
+    checkpoint::save(&d.join("good"), &info("jets_pp"), &mr.init_state()).unwrap();
+    let r = reg();
+    let g = r.load_checkpoint("jets", &d.join("good")).unwrap();
+    // a later corrupt deploy under the same key must not evict it
+    assert!(r.load_checkpoint("jets", &d.join("absent")).is_err());
+    let still = r.get("jets").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&g, &still));
+    std::fs::remove_dir_all(&d).unwrap();
+}
