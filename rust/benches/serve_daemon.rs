@@ -1,0 +1,192 @@
+//! Bench: daemon loopback saturation — sweep concurrent pipelined TCP
+//! connections against an in-process `hgq serve` daemon and find the
+//! throughput knee (the connection count with the highest completed
+//! request rate), reporting p50/p99 round-trip latency at every level.
+//!
+//!     cargo bench --bench serve_daemon
+//!
+//! Gates (applied at the knee, env-overridable for slow CI boxes):
+//!   `HGQ_DAEMON_MIN_RPS`    — completed requests/s floor (default 500)
+//!   `HGQ_DAEMON_MAX_P99_US` — round-trip p99 ceiling in us (default 50_000)
+//!
+//! CI's `perf-smoke` job runs this bench and uploads the JSON report
+//! (`HGQ_DAEMON_BENCH_OUT`, default `BENCH_serve_daemon.json`).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hgq::data::splits_for;
+use hgq::serve::stats::percentile_ns;
+use hgq::serve::{Daemon, DaemonClient, DaemonConfig, ErrCode, Frame, ModelSpec, SloConfig};
+use hgq::util::json::Json;
+
+/// Pipelined requests kept in flight per connection.
+const WINDOW: usize = 8;
+
+/// One load level: `conns` client threads, each holding `WINDOW`
+/// pipelined requests open for `dur`. Returns (ok, overloaded, latencies).
+fn drive(addr: &str, conns: usize, dur: Duration, pool: &[Vec<f32>]) -> (u64, u64, Vec<u64>) {
+    let results: Vec<(u64, u64, Vec<u64>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut c = DaemonClient::connect(addr).expect("connect to daemon");
+                    let mut inflight: HashMap<u32, Instant> = HashMap::new();
+                    let mut lat = Vec::new();
+                    let mut overloaded = 0u64;
+                    let mut next_id = 0u32;
+                    let mut send = |c: &mut DaemonClient, id: u32| {
+                        let x = pool[id as usize % pool.len()].clone();
+                        c.send(&Frame::Infer { id, model: "jets".into(), x })
+                            .expect("send infer");
+                    };
+                    let t_end = Instant::now() + dur;
+                    for _ in 0..WINDOW {
+                        inflight.insert(next_id, Instant::now());
+                        send(&mut c, next_id);
+                        next_id += 1;
+                    }
+                    let mut open = true;
+                    while !inflight.is_empty() {
+                        match c.recv().expect("recv reply") {
+                            Frame::Logits { id, .. } => {
+                                let t0 = inflight.remove(&id).expect("known id");
+                                lat.push(t0.elapsed().as_nanos() as u64);
+                            }
+                            Frame::Error { id, code: ErrCode::Overloaded, .. } => {
+                                inflight.remove(&id);
+                                overloaded += 1;
+                            }
+                            other => panic!("unexpected reply: {other:?}"),
+                        }
+                        if open && Instant::now() >= t_end {
+                            open = false; // stop refilling, drain the window
+                        }
+                        if open {
+                            inflight.insert(next_id, Instant::now());
+                            send(&mut c, next_id);
+                            next_id += 1;
+                        }
+                    }
+                    (lat.len() as u64, overloaded, lat)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let mut ok = 0;
+    let mut rejected = 0;
+    let mut lat = Vec::new();
+    for (o, r, l) in results {
+        ok += o;
+        rejected += r;
+        lat.extend(l);
+    }
+    (ok, rejected, lat)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|s| s.parse::<f64>().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let cfg = DaemonConfig {
+        listen: "127.0.0.1:0".into(),
+        artifacts: PathBuf::from("artifacts"),
+        calib_n: 512,
+        models: vec![ModelSpec {
+            key: "jets".into(),
+            checkpoint: None,
+            slo: SloConfig { budget_us: 1000, queue_depth: 256, max_batch: 32, workers: cores },
+        }],
+    };
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns on loopback");
+    let addr = daemon.addr().to_string();
+
+    let splits = splits_for("jets_pp", 0xDAE7, 1, 64);
+    let din = splits.test.x.len() / splits.test.n;
+    let pool: Vec<Vec<f32>> =
+        (0..splits.test.n).map(|i| splits.test.x[i * din..(i + 1) * din].to_vec()).collect();
+
+    // warm the lane (calibration, kernel plans, thread pools)
+    drive(&addr, 2, Duration::from_millis(200), &pool);
+
+    println!("daemon saturation sweep on {addr} ({cores} cores, window {WINDOW}/conn)");
+    let dur = Duration::from_millis(500);
+    let mut rows = Vec::new();
+    let mut knee = (0usize, -1.0f64, 0.0f64, 0.0f64); // (conns, rps, p50_us, p99_us)
+    for &conns in &[1usize, 2, 4, 8, 16, 32] {
+        let t0 = Instant::now();
+        let (ok, rejected, mut lat) = drive(&addr, conns, dur, &pool);
+        let wall = t0.elapsed().as_secs_f64();
+        lat.sort_unstable();
+        let rps = ok as f64 / wall;
+        let p50 = percentile_ns(&lat, 0.50) / 1e3;
+        let p99 = percentile_ns(&lat, 0.99) / 1e3;
+        println!(
+            "  {conns:>2} conns   {rps:>9.0} req/s   p50 {p50:>8.1} us   p99 {p99:>9.1} us   \
+             {rejected} overloaded"
+        );
+        rows.push(Json::obj(vec![
+            ("conns", Json::Num(conns as f64)),
+            ("rps", Json::Num(rps)),
+            ("p50_us", Json::Num(p50)),
+            ("p99_us", Json::Num(p99)),
+            ("ok", Json::Num(ok as f64)),
+            ("overloaded", Json::Num(rejected as f64)),
+        ]));
+        if rps > knee.1 {
+            knee = (conns, rps, p50, p99);
+        }
+    }
+    let (knee_conns, knee_rps, knee_p50, knee_p99) = knee;
+    println!("knee: {knee_conns} conns at {knee_rps:.0} req/s (p99 {knee_p99:.1} us)");
+
+    let mut client = DaemonClient::connect(&addr).expect("stats connection");
+    client.shutdown().expect("shutdown ack");
+    let final_stats = daemon.join();
+
+    // ---- report -----------------------------------------------------
+    let report = Json::obj(vec![
+        ("bench", Json::str("serve_daemon")),
+        ("git_sha", Json::str(hgq::serve::git_sha())),
+        ("cores", Json::Num(cores as f64)),
+        ("window_per_conn", Json::Num(WINDOW as f64)),
+        ("duration_ms_per_level", Json::Num(dur.as_millis() as f64)),
+        ("levels", Json::Arr(rows)),
+        (
+            "knee",
+            Json::obj(vec![
+                ("conns", Json::Num(knee_conns as f64)),
+                ("rps", Json::Num(knee_rps)),
+                ("p50_us", Json::Num(knee_p50)),
+                ("p99_us", Json::Num(knee_p99)),
+            ]),
+        ),
+        ("daemon_stats", final_stats),
+    ]);
+    let path = std::env::var("HGQ_DAEMON_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_serve_daemon.json".to_string());
+    std::fs::write(&path, report.to_string_pretty()).expect("write bench report");
+    println!("(wrote {path})");
+
+    // ---- acceptance gates -------------------------------------------
+    let min_rps = env_f64("HGQ_DAEMON_MIN_RPS", 500.0);
+    let max_p99_us = env_f64("HGQ_DAEMON_MAX_P99_US", 50_000.0);
+    assert!(
+        knee_rps >= min_rps,
+        "daemon knee throughput {knee_rps:.0} req/s below the {min_rps:.0} req/s gate \
+         ({knee_conns} conns, {cores} cores)"
+    );
+    assert!(
+        knee_p99 <= max_p99_us,
+        "daemon p99 at the knee {knee_p99:.1} us above the {max_p99_us:.0} us gate \
+         ({knee_conns} conns, {cores} cores)"
+    );
+    println!(
+        "PASS: knee {knee_rps:.0} req/s >= {min_rps:.0} gate, \
+         p99 {knee_p99:.1} us <= {max_p99_us:.0} us gate"
+    );
+}

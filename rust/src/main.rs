@@ -9,7 +9,11 @@
 //!   fig2     EBOPs vs LUT + c·DSP linearity (Fig. II)
 //!   ablate   constant-β (HGQ-c*) and granularity ablations
 //!   serve    batched firmware serving: closed-loop load through the
-//!            micro-batching pipeline, throughput/latency report
+//!            micro-batching pipeline (throughput/latency report), or —
+//!            with --listen ADDR — a persistent multi-model TCP daemon
+//!            with per-model SLOs, admission control and hot reload
+//!   client   talk to a running daemon: send inference requests, fetch
+//!            the stats frame, hot-reload a model, request shutdown
 //!   info     print model/backend info
 //!
 //! Every command takes `--backend native|pjrt` and `--threads N` (the
@@ -32,8 +36,12 @@ use hgq::coordinator::{deploy, BetaSchedule, TrainConfig};
 use hgq::data::try_splits_for;
 use hgq::resource::linear_fit;
 use hgq::runtime::{ModelRuntime, Runtime};
-use hgq::serve::{sequential_baseline, serve_closed_loop, Registry, ServeConfig};
+use hgq::serve::{
+    sequential_baseline, serve_closed_loop, Daemon, DaemonClient, DaemonConfig, ErrCode, Frame,
+    ModelSpec, Registry, ServeConfig, SloConfig,
+};
 use hgq::util::cli::Args;
+use hgq::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -58,16 +66,22 @@ fn run() -> Result<()> {
         "deploy" => cmd_deploy(&artifacts, args),
         "emulate" => cmd_emulate(&artifacts, args),
         "serve" => cmd_serve(&artifacts, args),
+        "client" => cmd_client(args),
         "help" | _ => {
             println!(
                 "usage: hgq <info|train|sweep|table1|table2|table3|fig2|ablate|deploy|emulate\
-                 |serve> \
+                 |serve|client> \
                  [--backend native|pjrt] [--threads N] [--artifacts DIR] [--model NAME] \
                  [--preset TASK] [--epochs N] [--beta B] [--seed S] [--checkpoint DIR] \
                  [--json FILE] [--verbose]\n\
-                 serve: [--preset TASK|MODEL] [--checkpoint DIR] [--batch B] [--threads N] \
-                 [--requests R] [--queue-depth Q] [--flush-us U] [--calib-n N] [--pool-n N] \
-                 [--baseline-n N] [--json FILE]"
+                 serve (closed loop): [--preset TASK|MODEL] [--checkpoint DIR] [--batch B] \
+                 [--threads N] [--requests R] [--queue-depth Q] [--flush-us U] [--calib-n N] \
+                 [--pool-n N] [--baseline-n N] [--json FILE]\n\
+                 serve (daemon): --listen ADDR [--models K1,K2] [--checkpoints K=DIR,...] \
+                 [--budget-us B] [--batch B] [--queue-depth Q] [--threads N] [--calib-n N] \
+                 [--json FILE]\n\
+                 client: [--connect ADDR] [--model KEY] [--requests N] [--pool-n N] [--stats] \
+                 [--reload KEY=DIR] [--shutdown]"
             );
             Ok(())
         }
@@ -304,6 +318,9 @@ fn cmd_serve(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     if backend != "native" {
         bail!("serve executes the firmware emulator and supports --backend native only");
     }
+    if let Some(listen) = args.str_opt("listen") {
+        return cmd_serve_daemon(artifacts, args, listen);
+    }
     let preset_key = args.str("preset", "jets");
     let ckpt = args.str_opt("checkpoint");
     let batch = args.usize("batch", 32);
@@ -342,8 +359,165 @@ fn cmd_serve(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     let report = outcome.report.with_baseline(seq_rps);
     println!("{}", report.summary());
     if let Some(path) = json_out {
-        std::fs::write(&path, report.to_json(&hgq::serve::git_sha()).to_string_pretty())?;
+        let mut j = report.to_json(&hgq::serve::git_sha());
+        if let Json::Obj(kv) = &mut j {
+            // disambiguate multi-run BENCH_serve.json rows: where the
+            // graph came from and which kernel path served it
+            let source = match &ckpt {
+                Some(dir) => format!("checkpoint:{dir}"),
+                None => format!("preset:{preset_key}"),
+            };
+            kv.push(("source".into(), Json::str(source)));
+            kv.push(("force_wide".into(), Json::Bool(hgq::ir::tier::force_wide())));
+        }
+        std::fs::write(&path, j.to_string_pretty())?;
         println!("(wrote {path})");
+    }
+    Ok(())
+}
+
+/// Persistent multi-model TCP daemon (`hgq serve --listen ADDR`): every
+/// key in `--models` (plus every `--checkpoints` entry) gets its own
+/// bounded-queue micro-batcher lane under a shared SLO; the process
+/// serves until a client sends a `Shutdown` frame, then drains and
+/// dumps the final stats snapshot (see SERVING.md).
+fn cmd_serve_daemon(artifacts: &PathBuf, mut args: Args, listen: String) -> Result<()> {
+    let models_csv = args.str("models", "jets");
+    let ckpts_csv = args.str_opt("checkpoints");
+    let budget_us = args.u64("budget-us", 1000);
+    let batch = args.usize("batch", 32);
+    let queue_depth = args.usize("queue-depth", 256);
+    let threads = args.usize("threads", 0);
+    let calib_n = args.usize("calib-n", 512);
+    let json_out = args.str_opt("json");
+    args.finish()?;
+
+    let mut ckpts: std::collections::BTreeMap<String, PathBuf> = Default::default();
+    if let Some(csv) = &ckpts_csv {
+        for part in csv.split(',').filter(|s| !s.is_empty()) {
+            let (k, dir) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("--checkpoints expects KEY=DIR[,KEY=DIR...], got '{part}'")
+            })?;
+            ckpts.insert(k.to_string(), PathBuf::from(dir));
+        }
+    }
+    let workers = if threads == 0 { hgq::util::shards::default_threads() } else { threads };
+    let slo = SloConfig { budget_us, queue_depth, max_batch: batch, workers };
+    let mut models: Vec<ModelSpec> = models_csv
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|k| ModelSpec { key: k.to_string(), checkpoint: ckpts.remove(k), slo: slo.clone() })
+        .collect();
+    // checkpoint keys not already in --models become lanes of their own
+    for (key, dir) in ckpts {
+        models.push(ModelSpec { key, checkpoint: Some(dir), slo: slo.clone() });
+    }
+    if models.is_empty() {
+        bail!("--models needs at least one key");
+    }
+    let keys: Vec<String> = models.iter().map(|m| m.key.clone()).collect();
+
+    let daemon = Daemon::spawn(DaemonConfig {
+        listen,
+        artifacts: artifacts.clone(),
+        calib_n,
+        models,
+    })?;
+    let addr = daemon.addr();
+    println!(
+        "serving on {addr} (budget {budget_us} µs, batch {batch}, queue {queue_depth}, \
+         {workers} workers/lane)"
+    );
+    for k in &keys {
+        if let Some(g) = daemon.graph(k) {
+            println!(
+                "  {k:<12} -> {} ({} layers, {} -> {}, exact EBOPs {})",
+                g.name,
+                g.layers.len(),
+                g.input_dim,
+                g.output_dim,
+                g.exact_ebops()
+            );
+        }
+    }
+    println!("drain and exit with: hgq client --connect {addr} --requests 0 --shutdown");
+    let stats = daemon.join();
+    println!("final stats:\n{}", stats.to_string_pretty());
+    if let Some(path) = json_out {
+        std::fs::write(&path, stats.to_string_pretty())?;
+        println!("(wrote {path})");
+    }
+    Ok(())
+}
+
+/// Talk to a running daemon over TCP: fire `--requests N` inference
+/// requests at `--model` (inputs drawn from the model's deterministic
+/// test stream), optionally hot-reload a lane, fetch the stats frame,
+/// and/or request graceful shutdown.
+fn cmd_client(mut args: Args) -> Result<()> {
+    let addr = args.str("connect", "127.0.0.1:7878");
+    let model = args.str("model", "jets");
+    let requests = args.usize("requests", 100);
+    let pool_n = args.usize("pool-n", 256).max(1);
+    let want_stats = args.flag("stats");
+    let reload = args.str_opt("reload");
+    let shutdown = args.flag("shutdown");
+    args.finish()?;
+
+    let mut client = DaemonClient::connect(&addr)?;
+    if let Some(spec) = &reload {
+        let (key, dir) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--reload expects KEY=DIR, got '{spec}'"))?;
+        println!("{}", client.reload(key, dir)?);
+    }
+    if requests > 0 {
+        // the client generates inputs from the same deterministic test
+        // stream the closed-loop bench uses; the lane key may be an
+        // alias, so resolve it to the preset the data loader knows
+        let resolved = Registry::resolve(&model).to_string();
+        let splits = try_splits_for(&resolved, 0xC11E57, 1, pool_n)?;
+        let mut lat_ns: Vec<u64> = Vec::with_capacity(requests);
+        let mut overloaded = 0usize;
+        let mut first: Option<Vec<f64>> = None;
+        for i in 0..requests {
+            let x = splits.test.sample(i % pool_n);
+            let t0 = std::time::Instant::now();
+            client.send(&Frame::Infer { id: i as u32, model: model.clone(), x: x.to_vec() })?;
+            match client.recv()? {
+                Frame::Logits { y, .. } => {
+                    lat_ns.push(t0.elapsed().as_nanos() as u64);
+                    if first.is_none() {
+                        first = Some(y);
+                    }
+                }
+                Frame::Error { code: ErrCode::Overloaded, .. } => overloaded += 1,
+                Frame::Error { code, msg, .. } => bail!("daemon error {code:?}: {msg}"),
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+        lat_ns.sort_unstable();
+        let us = |q: f64| hgq::serve::stats::percentile_ns(&lat_ns, q) / 1e3;
+        println!(
+            "{} ok, {overloaded} overloaded | round-trip p50 {:.1} µs  p99 {:.1} µs  max {:.1} µs",
+            lat_ns.len(),
+            us(0.50),
+            us(0.99),
+            us(1.0)
+        );
+        if let Some(y) = first {
+            println!("first logits: {y:?}");
+        }
+    }
+    if want_stats {
+        let json = client.stats()?;
+        match Json::parse(&json) {
+            Ok(j) => println!("{}", j.to_string_pretty()),
+            Err(_) => println!("{json}"),
+        }
+    }
+    if shutdown {
+        println!("{}", client.shutdown()?);
     }
     Ok(())
 }

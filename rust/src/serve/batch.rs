@@ -108,6 +108,12 @@ impl<'g> BatchEmulator<'g> {
         self.rows
     }
 
+    /// The graph this engine currently executes (daemon workers report
+    /// it in stats and compare it against their lane's generation).
+    pub fn graph(&self) -> &'g Graph {
+        self.g
+    }
+
     /// Point the warmed engine at another built graph (the registry
     /// swaps redeployed graphs under live workers). Errors when the new
     /// graph needs wider scratch planes than warmed for, instead of

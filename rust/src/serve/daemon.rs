@@ -1,0 +1,690 @@
+//! Network-facing serving daemon: a persistent multi-model TCP
+//! front-end over the micro-batching firmware pipeline.
+//!
+//! `hgq serve --listen ADDR` promotes the in-process closed loop of
+//! [`super::pipeline`] into a service anything can send requests to.
+//! The moving parts:
+//!
+//! * **Listener + connection threads** — one thread per TCP connection
+//!   reads length-prefixed frames ([`super::proto`]), performs
+//!   *admission* inline (model lookup, shape check, bounded-queue
+//!   `try_send`) and writes replies through a per-connection writer
+//!   lock, so pipelined requests from one client interleave safely
+//!   with worker replies.
+//! * **Model lanes** — one [`Lane`] per registered model: a bounded
+//!   MPSC queue (depth = the SLO's `queue_depth`) feeding a pool of
+//!   micro-batching workers that share the lane's current deployed
+//!   graph. Admission control is `try_send`: a full queue is answered
+//!   with an explicit `Overloaded` frame *immediately* — the daemon
+//!   never parks a client past its latency budget, and queue memory is
+//!   bounded by construction.
+//! * **SLO-adaptive flushing** — an idle lane flushes whatever is
+//!   queued immediately (request/reply clients never wait out a
+//!   batching window); once a backlog exists, the micro-batch gathers
+//!   until full or until [`crate::serve::stats::adaptive_flush_us`]
+//!   expires — a window derived from the lane's latency budget and the
+//!   EWMA of recent micro-batch service times, so batching yields
+//!   throughput when inference is cheap and yields latency when it is
+//!   not.
+//! * **Hot reload** — a `Reload` frame builds the checkpoint's graph
+//!   off to the side, validates its I/O dims against the lane, then
+//!   atomically swaps it into the registry and the lane and bumps the
+//!   lane's generation. Workers finish the micro-batch in flight **on
+//!   the old graph** (its `Arc` stays alive until they drop it), then
+//!   rebuild their emulators against the new one; queued requests are
+//!   never dropped.
+//! * **Determinism** — every logit is produced by a [`BatchEmulator`]
+//!   micro-batch, which is bit-identical to scalar `Emulator::infer`
+//!   for any batch fill, worker count and interleaving
+//!   (ARCHITECTURE.md §Serving layer); `f64` logits cross the wire as
+//!   exact IEEE-754 bit patterns. Concurrency changes *when* a reply
+//!   arrives, never *what* it contains.
+//!
+//! Graceful shutdown (a `Shutdown` frame, or [`Daemon::shutdown`] from
+//! the embedding process — e.g. a supervisor hook) stops admission,
+//! drains every lane queue, answers any race-stragglers with
+//! `ShuttingDown`, and surfaces the final stats snapshot from
+//! [`Daemon::join`]. The operator's handbook is SERVING.md.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::BatchEmulator;
+use super::proto::{read_frame, write_frame, ErrCode, Frame, FrameRead};
+use super::registry::Registry;
+use super::stats::{adaptive_flush_us, ModelStats};
+use crate::firmware::Graph;
+use crate::util::json::Json;
+use crate::util::shards::default_threads;
+
+/// How often blocked daemon threads (connection readers, idle lane
+/// workers) wake to poll the shutdown/reload flags.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Per-model service-level objective: the knobs admission control and
+/// the micro-batcher run on.
+///
+/// ```
+/// use hgq::serve::daemon::SloConfig;
+///
+/// // a latency-sensitive trigger path: tight budget, shallow queue
+/// let slo = SloConfig { budget_us: 250, queue_depth: 64, ..SloConfig::default() };
+/// assert_eq!(slo.budget_us, 250);
+/// // defaults are throughput-leaning
+/// assert_eq!(SloConfig::default().max_batch, 32);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    /// end-to-end latency budget (µs) this model is served under; it
+    /// drives the adaptive micro-batch flush deadline
+    /// ([`crate::serve::stats::adaptive_flush_us`])
+    pub budget_us: u64,
+    /// bounded queue depth — the admission-control threshold: a request
+    /// arriving at a full queue is rejected with `Overloaded`
+    pub queue_depth: usize,
+    /// micro-batch flush size (requests per emulator call)
+    pub max_batch: usize,
+    /// worker threads draining this model's queue
+    pub workers: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            budget_us: 1000,
+            queue_depth: 256,
+            max_batch: 32,
+            workers: default_threads(),
+        }
+    }
+}
+
+/// One model to register at daemon start.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// routing key clients put in `Infer` frames (also the registry
+    /// key; preset aliases like `jets` resolve on build)
+    pub key: String,
+    /// deploy from this checkpoint directory instead of the preset's
+    /// init state
+    pub checkpoint: Option<PathBuf>,
+    /// the SLO this model is served under
+    pub slo: SloConfig,
+}
+
+/// Daemon start-up configuration.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// listen address, e.g. `"127.0.0.1:7878"` (port 0 = ephemeral,
+    /// read the bound port back from [`Daemon::addr`])
+    pub listen: String,
+    /// artifacts directory handed to the model [`Registry`]
+    pub artifacts: PathBuf,
+    /// calibration samples per registry graph build
+    pub calib_n: usize,
+    /// the models to serve (at least one)
+    pub models: Vec<ModelSpec>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            listen: "127.0.0.1:7878".into(),
+            artifacts: PathBuf::from("artifacts"),
+            calib_n: 512,
+            models: Vec::new(),
+        }
+    }
+}
+
+/// One admitted request riding a lane queue.
+struct Req {
+    id: u32,
+    x: Vec<f32>,
+    t_enq: Instant,
+    conn: Arc<ConnWriter>,
+}
+
+/// The write half of one client connection, shared by the connection
+/// reader (error replies) and every worker that serves its requests.
+struct ConnWriter {
+    stream: Mutex<TcpStream>,
+}
+
+impl ConnWriter {
+    fn send(&self, f: &Frame) -> Result<()> {
+        let mut s = self.stream.lock().expect("conn writer lock");
+        write_frame(&mut *s, f)
+    }
+}
+
+/// One model's serving lane: queue, workers' shared state, stats.
+struct Lane {
+    key: String,
+    slo: SloConfig,
+    /// admission gate: `None` once [`Daemon::join`] has closed the lane,
+    /// so a late `try_send` can never race the final queue sweep
+    tx: Mutex<Option<SyncSender<Req>>>,
+    rx: Mutex<Receiver<Req>>,
+    /// current deployment; swapped atomically on hot reload
+    graph: Mutex<Arc<Graph>>,
+    /// bumped on every reload; workers rebuild their emulators when it
+    /// moves
+    generation: AtomicU64,
+    /// operator hook: a paused lane admits requests but does not drain
+    /// them (cleared automatically on shutdown so drains always finish)
+    paused: AtomicBool,
+    /// input/output dims — fixed for the lane's lifetime (reloads must
+    /// match them)
+    din: usize,
+    dout: usize,
+    stats: ModelStats,
+}
+
+struct Shared {
+    lanes: HashMap<String, Arc<Lane>>,
+    registry: Registry,
+    shutting: AtomicBool,
+    addr: SocketAddr,
+    started: Instant,
+}
+
+impl Shared {
+    /// Serve one parsed frame from a connection; `Ok(false)` closes the
+    /// connection (framing no longer trustworthy or shutdown acknowledged).
+    fn handle_frame(&self, f: Frame, writer: &Arc<ConnWriter>) -> Result<bool> {
+        match f {
+            Frame::Infer { id, model, x } => {
+                let reply_err = |code, msg: String| {
+                    writer.send(&Frame::Error { id, code, msg }).ok();
+                };
+                if self.shutting.load(Ordering::Relaxed) {
+                    reply_err(ErrCode::ShuttingDown, "daemon is draining".into());
+                    return Ok(true);
+                }
+                let Some(lane) = self.lanes.get(&model) else {
+                    let mut keys: Vec<&str> = self.lanes.keys().map(|s| s.as_str()).collect();
+                    keys.sort();
+                    reply_err(
+                        ErrCode::UnknownModel,
+                        format!("unknown model '{model}' (serving: {})", keys.join(", ")),
+                    );
+                    return Ok(true);
+                };
+                if x.len() != lane.din {
+                    reply_err(
+                        ErrCode::BadShape,
+                        format!("input has {} values, model '{model}' takes {}", x.len(), lane.din),
+                    );
+                    return Ok(true);
+                }
+                let req = Req { id, x, t_enq: Instant::now(), conn: writer.clone() };
+                // the reject reply is written after the gate lock drops —
+                // a slow client must not stall other admissions
+                let verdict = {
+                    let gate = lane.tx.lock().expect("lane tx lock");
+                    match gate.as_ref() {
+                        None => Some((ErrCode::ShuttingDown, "daemon is draining".to_string())),
+                        Some(tx) => match tx.try_send(req) {
+                            Ok(()) => {
+                                lane.stats.accept();
+                                None
+                            }
+                            Err(TrySendError::Full(_)) => {
+                                lane.stats.reject();
+                                Some((
+                                    ErrCode::Overloaded,
+                                    format!(
+                                        "model '{model}' queue is full ({} deep) — retry or \
+                                         shed load",
+                                        lane.slo.queue_depth
+                                    ),
+                                ))
+                            }
+                            Err(TrySendError::Disconnected(_)) => {
+                                Some((ErrCode::ShuttingDown, "daemon is draining".to_string()))
+                            }
+                        },
+                    }
+                };
+                if let Some((code, msg)) = verdict {
+                    reply_err(code, msg);
+                }
+                Ok(true)
+            }
+            Frame::Stats => {
+                writer.send(&Frame::StatsReply { json: self.stats_json().to_string() })?;
+                Ok(true)
+            }
+            Frame::Reload { model, dir } => {
+                match self.reload(&model, Path::new(&dir)) {
+                    Ok(msg) => writer.send(&Frame::Ok { msg })?,
+                    Err(e) => writer.send(&Frame::Error {
+                        id: 0,
+                        code: ErrCode::Internal,
+                        msg: format!("reload failed: {e:#}"),
+                    })?,
+                }
+                Ok(true)
+            }
+            Frame::Shutdown => {
+                writer.send(&Frame::Ok { msg: "draining and shutting down".into() })?;
+                self.initiate_shutdown();
+                Ok(false)
+            }
+            // clients should never send reply frames; treat as protocol abuse
+            Frame::Logits { .. } | Frame::Error { .. } | Frame::StatsReply { .. }
+            | Frame::Ok { .. } => {
+                writer.send(&Frame::Error {
+                    id: 0,
+                    code: ErrCode::BadFrame,
+                    msg: "reply frames are not valid requests".into(),
+                })?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Build + validate + atomically swap a lane's deployment.
+    fn reload(&self, model: &str, dir: &Path) -> Result<String> {
+        let lane = self
+            .lanes
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        // build off to the side: traffic keeps flowing on the old graph
+        let g = self.registry.build_checkpoint(dir)?;
+        if g.input_dim != lane.din || g.output_dim != lane.dout {
+            bail!(
+                "checkpoint graph is {}→{} but lane '{model}' serves {}→{} — dims are fixed \
+                 for a lane's lifetime",
+                g.input_dim,
+                g.output_dim,
+                lane.din,
+                lane.dout
+            );
+        }
+        // atomic swap: registry cache first (so new registry reads see
+        // it), then the lane pointer + generation bump for the workers
+        self.registry.insert_arc(model, g.clone());
+        *lane.graph.lock().expect("lane graph lock") = g.clone();
+        lane.generation.fetch_add(1, Ordering::Release);
+        lane.stats.reload();
+        Ok(format!(
+            "model '{model}' redeployed from {} (graph '{}', generation {})",
+            dir.display(),
+            g.name,
+            lane.generation.load(Ordering::Acquire)
+        ))
+    }
+
+    fn initiate_shutdown(&self) {
+        self.shutting.store(true, Ordering::SeqCst);
+        // a paused lane must still drain its accepted requests
+        for lane in self.lanes.values() {
+            lane.paused.store(false, Ordering::SeqCst);
+        }
+        // unblock the accept loop so the listener thread can observe the flag
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    fn stats_json(&self) -> Json {
+        let mut keys: Vec<&String> = self.lanes.keys().collect();
+        keys.sort();
+        let models = Json::Obj(
+            keys.into_iter()
+                .map(|k| {
+                    let lane = &self.lanes[k];
+                    let mut j = lane.stats.snapshot().to_json();
+                    if let Json::Obj(kv) = &mut j {
+                        let g = lane.graph.lock().expect("lane graph lock");
+                        kv.insert(0, ("graph".into(), Json::str(g.name.clone())));
+                        kv.insert(1, ("input_dim".into(), Json::Num(lane.din as f64)));
+                        kv.insert(2, ("output_dim".into(), Json::Num(lane.dout as f64)));
+                        kv.insert(
+                            3,
+                            (
+                                "generation".into(),
+                                Json::Num(lane.generation.load(Ordering::Relaxed) as f64),
+                            ),
+                        );
+                        kv.insert(
+                            4,
+                            ("budget_us".into(), Json::Num(lane.slo.budget_us as f64)),
+                        );
+                    }
+                    (k.clone(), j)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("shutting_down", Json::Bool(self.shutting.load(Ordering::Relaxed))),
+            ("models", models),
+        ])
+    }
+}
+
+/// Handle to a running daemon (listener + lane workers).
+pub struct Daemon {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    listener: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Build every configured model, bind the listener and start all
+    /// threads. Returns once the daemon is accepting connections.
+    pub fn spawn(cfg: DaemonConfig) -> Result<Daemon> {
+        if cfg.models.is_empty() {
+            bail!("daemon needs at least one model (--models)");
+        }
+        let registry = Registry::new(cfg.artifacts.clone()).with_calib_samples(cfg.calib_n);
+        let mut lanes = HashMap::new();
+        for spec in &cfg.models {
+            if lanes.contains_key(&spec.key) {
+                bail!("duplicate model key '{}'", spec.key);
+            }
+            let graph = match &spec.checkpoint {
+                Some(dir) => registry
+                    .load_checkpoint(&spec.key, dir)
+                    .with_context(|| format!("deploying '{}'", spec.key))?,
+                None => registry
+                    .get(&spec.key)
+                    .with_context(|| format!("building preset '{}'", spec.key))?,
+            };
+            let depth = spec.slo.queue_depth.max(1);
+            let (tx, rx) = mpsc::sync_channel::<Req>(depth);
+            let lane = Arc::new(Lane {
+                key: spec.key.clone(),
+                slo: SloConfig {
+                    queue_depth: depth,
+                    max_batch: spec.slo.max_batch.max(1),
+                    workers: spec.slo.workers.max(1),
+                    ..spec.slo.clone()
+                },
+                tx: Mutex::new(Some(tx)),
+                rx: Mutex::new(rx),
+                din: graph.input_dim,
+                dout: graph.output_dim,
+                graph: Mutex::new(graph),
+                generation: AtomicU64::new(0),
+                paused: AtomicBool::new(false),
+                stats: ModelStats::new(spec.slo.max_batch.max(1)),
+            });
+            lanes.insert(spec.key.clone(), lane);
+        }
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding daemon listener on {}", cfg.listen))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            lanes,
+            registry,
+            shutting: AtomicBool::new(false),
+            addr,
+            started: Instant::now(),
+        });
+
+        let mut workers = Vec::new();
+        for lane in shared.lanes.values() {
+            for wi in 0..lane.slo.workers {
+                let shared = shared.clone();
+                let lane = lane.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("hgq-lane-{}-{wi}", lane.key))
+                        .spawn(move || lane_worker(&shared, &lane))
+                        .context("spawning lane worker")?,
+                );
+            }
+        }
+        let accept_shared = shared.clone();
+        let listener_handle = std::thread::Builder::new()
+            .name("hgq-daemon-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawning accept loop")?;
+
+        Ok(Daemon { shared, addr, listener: Some(listener_handle), workers })
+    }
+
+    /// The bound listen address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current stats snapshot (same JSON the `Stats` frame returns).
+    pub fn stats_json(&self) -> Json {
+        self.shared.stats_json()
+    }
+
+    /// The current deployed graph of a model lane (tests compute their
+    /// scalar-emulator references from this).
+    pub fn graph(&self, model: &str) -> Option<Arc<Graph>> {
+        self.shared
+            .lanes
+            .get(model)
+            .map(|l| l.graph.lock().expect("lane graph lock").clone())
+    }
+
+    /// Operator hook: pause/resume a lane's workers. A paused lane
+    /// still *admits* up to `queue_depth` requests (then rejects with
+    /// `Overloaded`) but drains none — useful to quiesce a model before
+    /// maintenance, and to test admission control deterministically.
+    /// Shutdown clears every pause so drains always complete.
+    pub fn set_paused(&self, model: &str, paused: bool) -> Result<()> {
+        let lane = self
+            .shared
+            .lanes
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        lane.paused.store(paused, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Initiate graceful shutdown from the embedding process (the
+    /// in-process equivalent of a `Shutdown` frame).
+    pub fn shutdown(&self) {
+        self.shared.initiate_shutdown();
+    }
+
+    /// Block until the daemon has fully drained and every thread has
+    /// exited, then return the final stats snapshot. Call after
+    /// [`Daemon::shutdown`] (or after a client sent a `Shutdown` frame).
+    pub fn join(mut self) -> Json {
+        if let Some(h) = self.listener.take() {
+            h.join().expect("daemon accept loop panicked");
+        }
+        for h in self.workers.drain(..) {
+            h.join().expect("daemon lane worker panicked");
+        }
+        // sweep the admission race: a request admitted in the instant
+        // between a worker's last empty poll and its exit would
+        // otherwise vanish without a reply. Closing the tx gate FIRST
+        // makes the sweep exhaustive — any later admission attempt sees
+        // `None` and is answered ShuttingDown inline.
+        for lane in self.shared.lanes.values() {
+            lane.tx.lock().expect("lane tx lock").take();
+            let rx = lane.rx.lock().expect("lane queue lock");
+            while let Ok(req) = rx.try_recv() {
+                req.conn
+                    .send(&Frame::Error {
+                        id: req.id,
+                        code: ErrCode::ShuttingDown,
+                        msg: "daemon shut down before this request was served".into(),
+                    })
+                    .ok();
+            }
+        }
+        self.shared.stats_json()
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutting.load(Ordering::Relaxed) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let shared = shared.clone();
+        // connection threads are detached: they poll the shutdown flag
+        // on a read timeout and only touch Arc<Shared>
+        let _ = std::thread::Builder::new()
+            .name("hgq-daemon-conn".into())
+            .spawn(move || connection_loop(stream, &shared));
+    }
+}
+
+fn connection_loop(mut stream: TcpStream, shared: &Shared) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL)).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    let Ok(write_half) = stream.try_clone() else { return };
+    let writer = Arc::new(ConnWriter { stream: Mutex::new(write_half) });
+    loop {
+        match read_frame(&mut stream) {
+            Ok(FrameRead::Idle) => {
+                if shared.shutting.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Ok(FrameRead::Eof) => return,
+            Ok(FrameRead::Frame(f)) => match shared.handle_frame(f, &writer) {
+                Ok(true) => {}
+                Ok(false) | Err(_) => return,
+            },
+            Err(e) => {
+                // framing error: the byte stream can no longer be
+                // trusted — reply once, then close
+                writer
+                    .send(&Frame::Error {
+                        id: 0,
+                        code: ErrCode::BadFrame,
+                        msg: format!("{e:#}"),
+                    })
+                    .ok();
+                return;
+            }
+        }
+    }
+}
+
+/// Why one graph-generation serving loop ended.
+enum LaneExit {
+    /// generation moved: rebuild the emulator on the new graph
+    Reload,
+    /// daemon drained: worker exits
+    Shutdown,
+}
+
+fn lane_worker(shared: &Shared, lane: &Lane) {
+    loop {
+        let gen = lane.generation.load(Ordering::Acquire);
+        let graph = lane.graph.lock().expect("lane graph lock").clone();
+        match serve_generation(shared, lane, gen, &graph) {
+            LaneExit::Reload => continue,
+            LaneExit::Shutdown => return,
+        }
+    }
+}
+
+/// Drain micro-batches against one deployed graph until the lane is
+/// reloaded or the daemon drains. The in-flight micro-batch always
+/// completes on the graph it was gathered under.
+fn serve_generation(shared: &Shared, lane: &Lane, gen: u64, graph: &Graph) -> LaneExit {
+    let batch = lane.slo.max_batch;
+    let (din, k) = (graph.input_dim, graph.output_dim);
+    let mut em = BatchEmulator::new(graph, batch);
+    let mut xbuf = vec![0.0f32; batch * din];
+    let mut obuf = vec![0.0f64; batch * k];
+    let mut reqs: Vec<Req> = Vec::with_capacity(batch);
+    let mut lat: Vec<u64> = Vec::with_capacity(batch);
+    loop {
+        if lane.generation.load(Ordering::Acquire) != gen {
+            return LaneExit::Reload;
+        }
+        if lane.paused.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        reqs.clear();
+        {
+            let q = lane.rx.lock().expect("lane queue lock");
+            match q.recv_timeout(POLL) {
+                Ok(r) => reqs.push(r),
+                Err(RecvTimeoutError::Timeout) => {
+                    // queue observed empty; if we are draining, that's
+                    // the exit condition (main thread sweeps stragglers)
+                    if shared.shutting.load(Ordering::Relaxed) {
+                        return LaneExit::Shutdown;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => return LaneExit::Shutdown,
+            }
+            // take everything already queued without waiting
+            while reqs.len() < batch {
+                match q.try_recv() {
+                    Ok(r) => reqs.push(r),
+                    Err(_) => break,
+                }
+            }
+            // an idle lane flushes immediately (latency-optimal for
+            // request/reply clients); only an actual backlog justifies
+            // holding the batch open for the SLO-adaptive window
+            if reqs.len() > 1 && reqs.len() < batch {
+                let flush = adaptive_flush_us(lane.slo.budget_us, lane.stats.service_ewma_us());
+                let deadline = Instant::now() + Duration::from_micros(flush);
+                while reqs.len() < batch {
+                    let wait = deadline.saturating_duration_since(Instant::now());
+                    if wait.is_zero() {
+                        break;
+                    }
+                    match q.recv_timeout(wait) {
+                        Ok(r) => reqs.push(r),
+                        Err(_) => break,
+                    }
+                }
+            }
+        } // queue lock released before compute
+        let n = reqs.len();
+        for (bi, rq) in reqs.iter().enumerate() {
+            xbuf[bi * din..(bi + 1) * din].copy_from_slice(&rq.x);
+        }
+        let t0 = Instant::now();
+        if let Err(e) = em.infer_batch(&xbuf[..n * din], &mut obuf[..n * k]) {
+            // admission validated shapes, so this is unreachable in
+            // practice; answer rather than drop if it ever fires
+            for rq in reqs.drain(..) {
+                rq.conn
+                    .send(&Frame::Error {
+                        id: rq.id,
+                        code: ErrCode::Internal,
+                        msg: format!("inference failed: {e:#}"),
+                    })
+                    .ok();
+            }
+            continue;
+        }
+        let done = Instant::now();
+        let service_ns = done.saturating_duration_since(t0).as_nanos() as u64;
+        lat.clear();
+        for rq in reqs.iter() {
+            lat.push(done.saturating_duration_since(rq.t_enq).as_nanos() as u64);
+        }
+        lane.stats.record_batch(n, service_ns, &lat);
+        for (bi, rq) in reqs.drain(..).enumerate() {
+            let reply = Frame::Logits { id: rq.id, y: obuf[bi * k..(bi + 1) * k].to_vec() };
+            if rq.conn.send(&reply).is_err() {
+                lane.stats.reply_error();
+            }
+        }
+    }
+}

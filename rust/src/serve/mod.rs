@@ -13,23 +13,39 @@
 //!   **bit-identical** to sequential `Emulator::infer` calls for every
 //!   batch size and (via [`batch::infer_all`]'s fixed shard grid)
 //!   every thread count.
-//! * [`pipeline`] — the request path: bounded MPSC queue
+//! * [`pipeline`] — the in-process request path: bounded MPSC queue
 //!   (backpressure), micro-batching worker shards (flush on batch-full
 //!   or deadline), per-request latency accounting, and a synthetic
 //!   closed-loop load generator emitting the `BENCH_serve.json`
 //!   throughput/latency report.
+//! * [`proto`] — the length-prefixed binary wire protocol
+//!   (`Frame`/`ErrCode`, encode/decode, [`proto::DaemonClient`]).
+//! * [`stats`] — per-model rolling serving counters
+//!   ([`stats::ModelStats`]) and the SLO-adaptive flush-deadline rule
+//!   ([`stats::adaptive_flush_us`]).
+//! * [`daemon`] — the network front-end: `hgq serve --listen ADDR`
+//!   routes TCP inference requests for *named* registry models to
+//!   per-model bounded micro-batcher lanes with admission control,
+//!   hot checkpoint reload and a `stats` frame.
 //!
 //! The full serving contract is documented in ARCHITECTURE.md §Serving
-//! layer; CI's `perf-smoke` job runs `hgq serve --preset jets` every
-//! push and uploads the report, seeding the bench trajectory.
+//! layer/§Serving daemon and the operator's handbook SERVING.md; CI's
+//! `perf-smoke` job runs the closed loop and the loopback daemon
+//! saturation bench every push and uploads both reports.
 
 pub mod batch;
+pub mod daemon;
 pub mod pipeline;
+pub mod proto;
 pub mod registry;
+pub mod stats;
 
 pub use batch::{infer_all, BatchEmulator};
+pub use daemon::{Daemon, DaemonConfig, ModelSpec, SloConfig};
 pub use pipeline::{sequential_baseline, serve_closed_loop, ServeConfig, ServeOutcome, ServeReport};
+pub use proto::{DaemonClient, ErrCode, Frame};
 pub use registry::Registry;
+pub use stats::ModelStats;
 
 /// Git revision for bench provenance: `GITHUB_SHA` in CI, else
 /// `git rev-parse HEAD`, else `"unknown"`.

@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::batch::BatchEmulator;
+use super::stats::percentile_ns;
 use crate::firmware::emulator::Emulator;
 use crate::firmware::Graph;
 use crate::util::json::Json;
@@ -250,10 +251,7 @@ pub fn serve_closed_loop(g: &Graph, pool: &[f32], cfg: &ServeConfig) -> Result<S
     }
 
     let us = |ns: u64| ns as f64 / 1e3;
-    let pct = |q: f64| -> f64 {
-        let idx = ((lat.len() - 1) as f64 * q).round() as usize;
-        us(lat[idx])
-    };
+    let pct = |q: f64| percentile_ns(&lat, q) / 1e3;
     let mean_ns = lat.iter().sum::<u64>() as f64 / lat.len() as f64;
     let report = ServeReport {
         model: g.name.clone(),

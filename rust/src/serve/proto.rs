@@ -1,0 +1,555 @@
+//! Wire protocol of the serving daemon: length-prefixed binary frames.
+//!
+//! Every message on a daemon connection is one **frame**:
+//!
+//! ```text
+//!  ┌──────────────┬──────────┬──────────┬────────────────────┐
+//!  │ len: u32 LE  │ ver: u8  │ type: u8 │ payload (len-2 B)  │
+//!  └──────────────┴──────────┴──────────┴────────────────────┘
+//! ```
+//!
+//! `len` counts every byte after the length word (version + type +
+//! payload) and is capped at [`MAX_BODY`] so a length-lying peer cannot
+//! make the daemon allocate unboundedly. `ver` must equal
+//! [`PROTO_VERSION`]; the decoder rejects anything else, so protocol
+//! changes that alter frame layouts MUST bump the version (see
+//! SERVING.md §Versioning for the compatibility rules). All integers
+//! are little-endian; floats are IEEE-754 LE bit patterns — an `f64`
+//! logit survives the wire bit-exactly, which is what lets the
+//! integration tests compare daemon responses against
+//! `Emulator::infer` with `==`.
+//!
+//! Scalar encodings used by the payloads:
+//!
+//! * *string* — `u16` byte length + UTF-8 bytes
+//! * *f32 vec* — `u32` element count + packed `f32` LE
+//! * *f64 vec* — `u32` element count + packed `f64` LE
+//!
+//! The frame set is deliberately small (see [`Frame`]); anything
+//! structured rides as JSON inside [`Frame::StatsReply`]. SERVING.md
+//! carries the operator-facing spec with worked byte layouts.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+/// Protocol version carried in every frame. Decoders reject frames of
+/// any other version (no silent best-effort parsing of future layouts).
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard cap on the frame body (version + type + payload) in bytes.
+/// Covers a 1M-element f32 input with room to spare; a `len` above this
+/// is treated as a framing error before any allocation happens.
+pub const MAX_BODY: usize = 1 << 24;
+
+/// Error codes carried by [`Frame::Error`] replies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// unparseable/oversized/mis-versioned frame — the connection is
+    /// closed after this reply (framing is no longer trustworthy)
+    BadFrame = 1,
+    /// the requested model key is not registered with the daemon
+    UnknownModel = 2,
+    /// input length does not match the model's input dimension
+    BadShape = 3,
+    /// admission control: the model's bounded queue is full — the
+    /// request was never enqueued; retry later or shed load
+    Overloaded = 4,
+    /// the daemon is draining for shutdown and accepts no new work
+    ShuttingDown = 5,
+    /// unexpected server-side failure (details in the message)
+    Internal = 6,
+}
+
+impl ErrCode {
+    /// Decode a wire byte back into the code (`None` for unknown bytes).
+    pub fn from_u8(b: u8) -> Option<ErrCode> {
+        match b {
+            1 => Some(ErrCode::BadFrame),
+            2 => Some(ErrCode::UnknownModel),
+            3 => Some(ErrCode::BadShape),
+            4 => Some(ErrCode::Overloaded),
+            5 => Some(ErrCode::ShuttingDown),
+            6 => Some(ErrCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// One protocol message. Requests flow client→daemon (`Infer`, `Stats`,
+/// `Reload`, `Shutdown`); replies flow daemon→client (`Logits`,
+/// `Error`, `StatsReply`, `Ok`).
+///
+/// Encode/decode are exact inverses:
+///
+/// ```
+/// use hgq::serve::proto::Frame;
+///
+/// let f = Frame::Infer { id: 7, model: "jets".into(), x: vec![0.5, -1.25] };
+/// let bytes = f.encode();
+/// // the length word counts every byte after itself
+/// let (len, body) = bytes.split_at(4);
+/// assert_eq!(u32::from_le_bytes([len[0], len[1], len[2], len[3]]) as usize, body.len());
+/// assert_eq!(Frame::decode(body).unwrap(), f);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// inference request: route `x` to the model registered as `model`;
+    /// `id` is an opaque client-chosen correlation id echoed in the
+    /// reply (replies to pipelined requests may interleave with other
+    /// frames on the connection)
+    Infer {
+        /// client correlation id, echoed in the reply
+        id: u32,
+        /// registry key of the target model (as configured at daemon start)
+        model: String,
+        /// one input row (`input_dim` f32 values)
+        x: Vec<f32>,
+    },
+    /// successful inference reply: the exact fixed-point logits
+    Logits {
+        /// correlation id of the request
+        id: u32,
+        /// `output_dim` exact f64 logits, bit-identical to `Emulator::infer`
+        y: Vec<f64>,
+    },
+    /// error reply; `id` is 0 when the failure is not tied to a request
+    Error {
+        /// correlation id of the offending request (0 if none)
+        id: u32,
+        /// machine-readable failure class
+        code: ErrCode,
+        /// human-readable detail
+        msg: String,
+    },
+    /// request the daemon's per-model statistics snapshot
+    Stats,
+    /// statistics snapshot: a JSON document (schema in SERVING.md §Stats)
+    StatsReply {
+        /// serialized JSON object, one entry per model
+        json: String,
+    },
+    /// hot-reload request: atomically redeploy `model` from the
+    /// checkpoint directory `dir` (server-side path)
+    Reload {
+        /// registry key of the model lane to swap
+        model: String,
+        /// checkpoint directory (`state.bin` + `info.json`) on the daemon host
+        dir: String,
+    },
+    /// generic success reply (reload / shutdown acknowledgements)
+    Ok {
+        /// human-readable detail
+        msg: String,
+    },
+    /// graceful-shutdown request: stop admitting, drain queues, dump
+    /// stats, exit
+    Shutdown,
+}
+
+const T_INFER: u8 = 1;
+const T_LOGITS: u8 = 2;
+const T_ERROR: u8 = 3;
+const T_STATS: u8 = 4;
+const T_STATS_REPLY: u8 = 5;
+const T_RELOAD: u8 = 6;
+const T_OK: u8 = 7;
+const T_SHUTDOWN: u8 = 8;
+
+impl Frame {
+    /// Serialize to a complete wire frame (length word included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = vec![0u8; 4]; // length backpatched below
+        b.push(PROTO_VERSION);
+        match self {
+            Frame::Infer { id, model, x } => {
+                b.push(T_INFER);
+                b.extend_from_slice(&id.to_le_bytes());
+                put_str(&mut b, model);
+                b.extend_from_slice(&(x.len() as u32).to_le_bytes());
+                for v in x {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Logits { id, y } => {
+                b.push(T_LOGITS);
+                b.extend_from_slice(&id.to_le_bytes());
+                b.extend_from_slice(&(y.len() as u32).to_le_bytes());
+                for v in y {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Error { id, code, msg } => {
+                b.push(T_ERROR);
+                b.extend_from_slice(&id.to_le_bytes());
+                b.push(*code as u8);
+                put_str(&mut b, msg);
+            }
+            Frame::Stats => b.push(T_STATS),
+            Frame::StatsReply { json } => {
+                b.push(T_STATS_REPLY);
+                b.extend_from_slice(json.as_bytes());
+            }
+            Frame::Reload { model, dir } => {
+                b.push(T_RELOAD);
+                put_str(&mut b, model);
+                put_str(&mut b, dir);
+            }
+            Frame::Ok { msg } => {
+                b.push(T_OK);
+                b.extend_from_slice(msg.as_bytes());
+            }
+            Frame::Shutdown => b.push(T_SHUTDOWN),
+        }
+        let len = (b.len() - 4) as u32;
+        b[..4].copy_from_slice(&len.to_le_bytes());
+        b
+    }
+
+    /// Parse a frame body (everything after the length word). Rejects
+    /// wrong versions, unknown types, and any payload whose declared
+    /// sizes disagree with the body length.
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let mut c = Cursor { b: body, i: 0 };
+        let ver = c.u8().context("empty frame body")?;
+        if ver != PROTO_VERSION {
+            bail!("unsupported protocol version {ver} (this build speaks {PROTO_VERSION})");
+        }
+        let typ = c.u8().context("frame body missing type byte")?;
+        let f = match typ {
+            T_INFER => {
+                let id = c.u32()?;
+                let model = c.string()?;
+                let n = c.u32()? as usize;
+                let mut x = Vec::with_capacity(n.min(MAX_BODY / 4));
+                for _ in 0..n {
+                    x.push(f32::from_le_bytes(c.take(4)?.try_into().expect("4 bytes")));
+                }
+                Frame::Infer { id, model, x }
+            }
+            T_LOGITS => {
+                let id = c.u32()?;
+                let n = c.u32()? as usize;
+                let mut y = Vec::with_capacity(n.min(MAX_BODY / 8));
+                for _ in 0..n {
+                    y.push(f64::from_le_bytes(c.take(8)?.try_into().expect("8 bytes")));
+                }
+                Frame::Logits { id, y }
+            }
+            T_ERROR => {
+                let id = c.u32()?;
+                let code = c.u8()?;
+                let code = ErrCode::from_u8(code)
+                    .ok_or_else(|| anyhow::anyhow!("unknown error code {code}"))?;
+                let msg = c.string()?;
+                Frame::Error { id, code, msg }
+            }
+            T_STATS => Frame::Stats,
+            T_STATS_REPLY => Frame::StatsReply { json: c.rest_string()? },
+            T_RELOAD => Frame::Reload { model: c.string()?, dir: c.string()? },
+            T_OK => Frame::Ok { msg: c.rest_string()? },
+            T_SHUTDOWN => Frame::Shutdown,
+            other => bail!("unknown frame type {other}"),
+        };
+        if c.i != body.len() {
+            bail!("frame has {} trailing bytes after a complete payload", body.len() - c.i);
+        }
+        Ok(f)
+    }
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    let n = s.len().min(u16::MAX as usize) as u16;
+    b.extend_from_slice(&n.to_le_bytes());
+    b.extend_from_slice(&s.as_bytes()[..n as usize]);
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("frame body truncated: wanted {n} bytes at offset {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+    fn string(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?).context("string is not UTF-8")?.to_string())
+    }
+    fn rest_string(&mut self) -> Result<String> {
+        let s = std::str::from_utf8(&self.b[self.i..]).context("payload is not UTF-8")?;
+        self.i = self.b.len();
+        Ok(s.to_string())
+    }
+}
+
+/// Outcome of one [`read_frame`] call on a (possibly read-timeout)
+/// stream.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// a complete, well-formed frame
+    Frame(Frame),
+    /// the peer closed the connection cleanly (EOF at a frame boundary)
+    Eof,
+    /// the read timed out before any byte of a new frame arrived — the
+    /// connection is idle and still in sync; poll and retry
+    Idle,
+}
+
+/// Read one frame from `r`. A read timeout **between** frames returns
+/// [`FrameRead::Idle`] (the daemon uses this to poll its shutdown flag
+/// without desyncing); a timeout or EOF **inside** a frame is an error,
+/// since the stream can no longer be re-synchronized. A declared length
+/// above [`MAX_BODY`] errors before allocating.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<FrameRead> {
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(FrameRead::Eof);
+                }
+                bail!("connection closed mid-frame ({got}/4 length bytes)");
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if got == 0
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Ok(FrameRead::Idle);
+            }
+            Err(e) => return Err(e).context("reading frame length"),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n < 2 {
+        bail!("frame body of {n} bytes cannot hold version + type");
+    }
+    if n > MAX_BODY {
+        bail!("frame body of {n} bytes exceeds the {MAX_BODY}-byte cap");
+    }
+    let mut body = vec![0u8; n];
+    let mut done = 0usize;
+    while done < n {
+        match r.read(&mut body[done..]) {
+            Ok(0) => bail!("connection closed mid-frame ({done}/{n} body bytes)"),
+            Ok(m) => done += m,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // keep waiting: the length word promised n more bytes,
+                // and bailing here would desync the stream
+                continue;
+            }
+            Err(e) => return Err(e).context("reading frame body"),
+        }
+    }
+    Ok(FrameRead::Frame(Frame::decode(&body)?))
+}
+
+/// Write one frame to `w` (single `write_all`, no interleaving concerns
+/// for callers that hold the stream exclusively or behind a lock).
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> Result<()> {
+    w.write_all(&f.encode()).context("writing frame")?;
+    Ok(())
+}
+
+/// Blocking client over one daemon connection: frames in, frames out.
+///
+/// Used by `hgq client`, the saturation bench and the integration
+/// tests. All request helpers are synchronous round-trips except
+/// [`DaemonClient::send`]/[`DaemonClient::recv`], which expose raw
+/// pipelining (many requests in flight, replies matched by id).
+pub struct DaemonClient {
+    stream: TcpStream,
+}
+
+impl DaemonClient {
+    /// Connect to a daemon at `addr` (e.g. `"127.0.0.1:7878"`).
+    pub fn connect(addr: &str) -> Result<DaemonClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to daemon at {addr}"))?;
+        stream.set_nodelay(true).ok(); // latency over batching on the wire
+        Ok(DaemonClient { stream })
+    }
+
+    /// Send any frame without waiting for a reply (pipelining).
+    pub fn send(&mut self, f: &Frame) -> Result<()> {
+        write_frame(&mut self.stream, f)
+    }
+
+    /// Block for the next frame from the daemon (error on EOF).
+    pub fn recv(&mut self) -> Result<Frame> {
+        match read_frame(&mut self.stream)? {
+            FrameRead::Frame(f) => Ok(f),
+            FrameRead::Eof => bail!("daemon closed the connection"),
+            FrameRead::Idle => bail!("unexpected idle on a blocking stream"),
+        }
+    }
+
+    /// Synchronous inference round-trip; returns the logits and the
+    /// client-observed latency. [`Frame::Error`] replies (including
+    /// `Overloaded` rejects) surface as `Err` carrying the code's name.
+    pub fn infer(&mut self, model: &str, x: &[f32]) -> Result<(Vec<f64>, std::time::Duration)> {
+        let t0 = Instant::now();
+        self.send(&Frame::Infer { id: 0, model: model.to_string(), x: x.to_vec() })?;
+        match self.recv()? {
+            Frame::Logits { y, .. } => Ok((y, t0.elapsed())),
+            Frame::Error { code, msg, .. } => bail!("daemon error {code:?}: {msg}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// Fetch the daemon's per-model stats snapshot (JSON text).
+    pub fn stats(&mut self) -> Result<String> {
+        self.send(&Frame::Stats)?;
+        match self.recv()? {
+            Frame::StatsReply { json } => Ok(json),
+            Frame::Error { code, msg, .. } => bail!("daemon error {code:?}: {msg}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// Hot-reload `model` from the daemon-side checkpoint directory
+    /// `dir`; returns the daemon's acknowledgement message.
+    pub fn reload(&mut self, model: &str, dir: &str) -> Result<String> {
+        self.send(&Frame::Reload { model: model.to_string(), dir: dir.to_string() })?;
+        match self.recv()? {
+            Frame::Ok { msg } => Ok(msg),
+            Frame::Error { code, msg, .. } => bail!("daemon error {code:?}: {msg}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// Request graceful shutdown (drain + stats dump); returns the
+    /// acknowledgement message.
+    pub fn shutdown(&mut self) -> Result<String> {
+        self.send(&Frame::Shutdown)?;
+        match self.recv()? {
+            Frame::Ok { msg } => Ok(msg),
+            Frame::Error { code, msg, .. } => bail!("daemon error {code:?}: {msg}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let bytes = f.encode();
+        let n = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        assert_eq!(n, bytes.len() - 4);
+        assert_eq!(Frame::decode(&bytes[4..]).unwrap(), f);
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        roundtrip(Frame::Infer { id: 42, model: "jets".into(), x: vec![0.0, -1.5, 3.25] });
+        roundtrip(Frame::Infer { id: 0, model: String::new(), x: vec![] });
+        roundtrip(Frame::Logits { id: u32::MAX, y: vec![1.0, -0.0078125, f64::MAX] });
+        roundtrip(Frame::Error { id: 3, code: ErrCode::Overloaded, msg: "queue full".into() });
+        roundtrip(Frame::Stats);
+        roundtrip(Frame::StatsReply { json: r#"{"jets":{"requests":10}}"#.into() });
+        roundtrip(Frame::Reload { model: "jets".into(), dir: "/tmp/ckpt/c0".into() });
+        roundtrip(Frame::Ok { msg: "reloaded".into() });
+        roundtrip(Frame::Shutdown);
+    }
+
+    #[test]
+    fn floats_survive_bit_exactly() {
+        let y = vec![f64::MIN_POSITIVE, -0.1, 1.0 / 3.0, 2f64.powi(-40)];
+        let f = Frame::Logits { id: 1, y: y.clone() };
+        match Frame::decode(&f.encode()[4..]).unwrap() {
+            Frame::Logits { y: got, .. } => {
+                for (a, b) in got.iter().zip(&y) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_garbage() {
+        // wrong version
+        assert!(Frame::decode(&[9, T_STATS]).is_err());
+        // unknown type
+        assert!(Frame::decode(&[PROTO_VERSION, 99]).is_err());
+        // truncated payload: Infer claiming 5 floats with none present
+        let mut b = vec![PROTO_VERSION, T_INFER];
+        b.extend_from_slice(&7u32.to_le_bytes());
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'j');
+        b.extend_from_slice(&5u32.to_le_bytes());
+        assert!(Frame::decode(&b).is_err());
+        // trailing bytes after a complete frame
+        let mut ok = Frame::Stats.encode()[4..].to_vec();
+        ok.push(0);
+        assert!(Frame::decode(&ok).is_err());
+        // empty body
+        assert!(Frame::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn read_frame_handles_eof_and_caps_length() {
+        // clean EOF at a frame boundary
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut empty).unwrap(), FrameRead::Eof));
+        // EOF inside the length word
+        let mut cut: &[u8] = &[1, 0];
+        assert!(read_frame(&mut cut).is_err());
+        // length-lying header: claims 100 bytes, delivers 3
+        let mut lying: Vec<u8> = 100u32.to_le_bytes().to_vec();
+        lying.extend_from_slice(&[1, 2, 3]);
+        assert!(read_frame(&mut &lying[..]).is_err());
+        // oversized length is rejected before allocation
+        let huge = (MAX_BODY as u32 + 1).to_le_bytes().to_vec();
+        assert!(read_frame(&mut &huge[..]).unwrap_err().to_string().contains("cap"));
+        // too-small body
+        let tiny = 1u32.to_le_bytes().to_vec();
+        let mut tiny2 = tiny.clone();
+        tiny2.push(PROTO_VERSION);
+        assert!(read_frame(&mut &tiny2[..]).is_err());
+    }
+
+    #[test]
+    fn stream_of_frames_reads_in_order() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Stats).unwrap();
+        write_frame(&mut buf, &Frame::Infer { id: 1, model: "m".into(), x: vec![1.0] }).unwrap();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        let mut r = &buf[..];
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::Frame(Frame::Stats)));
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::Frame(Frame::Infer { .. })));
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::Frame(Frame::Shutdown)));
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::Eof));
+    }
+}

@@ -99,10 +99,29 @@ impl Registry {
         Ok(g)
     }
 
+    /// Build a checkpoint directory's graph **without touching the
+    /// cache** — the hot-reload staging path: the daemon builds and
+    /// validates the candidate off to the side while traffic keeps
+    /// flowing on the cached deployment, then commits it with
+    /// [`Registry::insert_arc`].
+    pub fn build_checkpoint(&self, dir: &Path) -> Result<Arc<Graph>> {
+        let (info, state) = checkpoint::load(dir)?;
+        Ok(Arc::new(
+            self.build(&info.model, Some(&state))
+                .with_context(|| format!("deploying checkpoint {}", dir.display()))?,
+        ))
+    }
+
     /// Register an externally built graph under `key` (tests, custom
     /// deployments).
     pub fn insert(&self, key: &str, g: Graph) -> Arc<Graph> {
-        let g = Arc::new(g);
+        self.insert_arc(key, Arc::new(g))
+    }
+
+    /// Register an already-shared graph under `key` — the commit half
+    /// of a hot reload (the swap is a single cache-slot write, so
+    /// readers see either the old or the new deployment, never a mix).
+    pub fn insert_arc(&self, key: &str, g: Arc<Graph>) -> Arc<Graph> {
         self.cache.lock().expect("registry lock").insert(key.to_string(), g.clone());
         g
     }

@@ -1,0 +1,326 @@
+//! Per-model observability for the serving daemon: rolling counters,
+//! micro-batch fill histogram, and a bounded latency window.
+//!
+//! One [`ModelStats`] per model lane. Counters (`accepted`, `rejected`,
+//! `completed`, …) are lock-free atomics bumped on the request path;
+//! the batch-size histogram and the enqueue→completion latency window
+//! live behind a small mutex touched once per *micro-batch* (not per
+//! request). Latency percentiles are computed over a fixed-size ring of
+//! the most recent [`LATENCY_WINDOW`] requests — a rolling view, so a
+//! long-running daemon reports current behaviour rather than a lifetime
+//! average.
+//!
+//! The same module owns the SLO arithmetic: [`adaptive_flush_us`] turns
+//! a per-model latency budget plus the observed micro-batch service
+//! time into the gather deadline the lane workers flush on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Number of recent requests the latency percentile window holds.
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// EWMA smoothing factor for the micro-batch service time (per batch:
+/// `ewma = (1-α)·ewma + α·sample`).
+const SVC_ALPHA: f64 = 0.2;
+
+/// Rolling serving statistics of one model lane.
+pub struct ModelStats {
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    reply_errors: AtomicU64,
+    reloads: AtomicU64,
+    /// EWMA of micro-batch service (inference) time, nanoseconds,
+    /// stored as u64 bits of the f64 value
+    svc_ewma_ns: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    /// batch-fill histogram: `hist[k-1]` counts micro-batches of k
+    /// requests (the last bucket also absorbs any larger fill)
+    hist: Vec<u64>,
+    /// ring of recent enqueue→completion latencies (ns)
+    ring: Vec<u64>,
+    next: usize,
+    filled: usize,
+}
+
+/// Point-in-time copy of one lane's statistics.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    /// requests admitted into the bounded queue
+    pub accepted: u64,
+    /// requests rejected with an `Overloaded` frame (never enqueued)
+    pub rejected: u64,
+    /// requests whose logits were computed (reply may still have failed)
+    pub completed: u64,
+    /// replies that could not be written (client hung up mid-flight)
+    pub reply_errors: u64,
+    /// hot reloads applied to this lane
+    pub reloads: u64,
+    /// micro-batches flushed (sum over the histogram)
+    pub batches: u64,
+    /// batch-fill histogram, index k = micro-batches with k+1 requests
+    pub batch_hist: Vec<u64>,
+    /// p50 enqueue→completion latency over the rolling window (µs)
+    pub p50_us: f64,
+    /// p99 enqueue→completion latency over the rolling window (µs)
+    pub p99_us: f64,
+    /// mean latency over the rolling window (µs)
+    pub mean_us: f64,
+    /// worst latency in the rolling window (µs)
+    pub max_us: f64,
+    /// requests currently represented in the latency window
+    pub window: usize,
+    /// EWMA of micro-batch service time (µs)
+    pub service_ewma_us: f64,
+}
+
+impl ModelStats {
+    /// Fresh counters for a lane flushing micro-batches of up to
+    /// `max_batch` requests.
+    pub fn new(max_batch: usize) -> ModelStats {
+        ModelStats {
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            reply_errors: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            svc_ewma_ns: AtomicU64::new(0f64.to_bits()),
+            inner: Mutex::new(Inner {
+                hist: vec![0; max_batch.max(1)],
+                ring: vec![0; LATENCY_WINDOW],
+                next: 0,
+                filled: 0,
+            }),
+        }
+    }
+
+    /// A request passed admission control.
+    pub fn accept(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was rejected with `Overloaded`.
+    pub fn reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A reply write failed (client gone).
+    pub fn reply_error(&self) {
+        self.reply_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A hot reload swapped this lane's graph.
+    pub fn reload(&self) {
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one flushed micro-batch: its fill, its service (inference)
+    /// time, and every member request's enqueue→completion latency.
+    pub fn record_batch(&self, fill: usize, service_ns: u64, lat_ns: &[u64]) {
+        self.completed.fetch_add(lat_ns.len() as u64, Ordering::Relaxed);
+        // EWMA update: racy read-modify-write is acceptable — the value
+        // only steers the flush deadline, and lanes flush thousands of
+        // batches a second
+        let prev = f64::from_bits(self.svc_ewma_ns.load(Ordering::Relaxed));
+        let next = if prev == 0.0 {
+            service_ns as f64
+        } else {
+            prev * (1.0 - SVC_ALPHA) + service_ns as f64 * SVC_ALPHA
+        };
+        self.svc_ewma_ns.store(next.to_bits(), Ordering::Relaxed);
+        let mut g = self.inner.lock().expect("stats lock");
+        let bucket = fill.clamp(1, g.hist.len()) - 1;
+        g.hist[bucket] += 1;
+        for &l in lat_ns {
+            let at = g.next;
+            g.ring[at] = l;
+            g.next = (g.next + 1) % LATENCY_WINDOW;
+            g.filled = (g.filled + 1).min(LATENCY_WINDOW);
+        }
+    }
+
+    /// Current micro-batch service-time EWMA in microseconds.
+    pub fn service_ewma_us(&self) -> f64 {
+        f64::from_bits(self.svc_ewma_ns.load(Ordering::Relaxed)) / 1e3
+    }
+
+    /// Copy out a consistent snapshot (percentiles computed here).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let (hist, mut lat) = {
+            let g = self.inner.lock().expect("stats lock");
+            (g.hist.clone(), g.ring[..g.filled].to_vec())
+        };
+        lat.sort_unstable();
+        let us = 1e3;
+        StatsSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            reply_errors: self.reply_errors.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            batches: hist.iter().sum(),
+            batch_hist: hist,
+            p50_us: percentile_ns(&lat, 0.50) / us,
+            p99_us: percentile_ns(&lat, 0.99) / us,
+            mean_us: if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<u64>() as f64 / lat.len() as f64 / us
+            },
+            max_us: lat.last().map(|&v| v as f64 / us).unwrap_or(0.0),
+            window: lat.len(),
+            service_ewma_us: self.service_ewma_us(),
+        }
+    }
+}
+
+impl StatsSnapshot {
+    /// JSON encoding of this snapshot (one model's entry in the daemon's
+    /// `StatsReply`; schema documented in SERVING.md §Stats).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("reply_errors", Json::Num(self.reply_errors as f64)),
+            ("reloads", Json::Num(self.reloads as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            (
+                "batch_hist",
+                Json::Arr(self.batch_hist.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("p50", Json::Num(self.p50_us)),
+                    ("p99", Json::Num(self.p99_us)),
+                    ("mean", Json::Num(self.mean_us)),
+                    ("max", Json::Num(self.max_us)),
+                    ("window", Json::Num(self.window as f64)),
+                ]),
+            ),
+            ("service_ewma_us", Json::Num(self.service_ewma_us)),
+        ])
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted latency slice
+/// (nanoseconds in, nanoseconds out; 0 for an empty slice). Shared by
+/// the daemon stats and the closed-loop pipeline report.
+pub fn percentile_ns(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx] as f64
+}
+
+/// The SLO controller: gather deadline (µs) for the next micro-batch of
+/// a lane whose latency budget is `budget_us` and whose recent
+/// micro-batch service time is `service_ewma_us`.
+///
+/// The window is the budget minus twice the modeled service time
+/// (margin for queueing + reply writes), clamped to
+/// `[budget/8, budget/2]`: a lane whose inference is fast relative to
+/// its budget waits up to half the budget to fill batches (throughput
+/// mode); a lane whose inference eats the budget flushes after an
+/// eighth of it (latency mode) — the deadline *adapts* but never
+/// reaches zero, so batching never fully collapses, and never exceeds
+/// half the budget, so one gather can't spend what inference needs.
+///
+/// ```
+/// use hgq::serve::stats::adaptive_flush_us;
+///
+/// // fast model, 1 ms budget: waits the full half-budget to batch
+/// assert_eq!(adaptive_flush_us(1000, 10.0), 500);
+/// // service time eats the budget: flush fast, but never to zero
+/// assert_eq!(adaptive_flush_us(1000, 600.0), 125);
+/// // a zero budget degrades to immediate flush
+/// assert_eq!(adaptive_flush_us(0, 1.0), 0);
+/// ```
+pub fn adaptive_flush_us(budget_us: u64, service_ewma_us: f64) -> u64 {
+    let spare = (budget_us as f64 - 2.0 * service_ewma_us.max(0.0)).max(0.0) as u64;
+    spare.clamp(budget_us / 8, (budget_us / 2).max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histogram_accumulate() {
+        let s = ModelStats::new(4);
+        s.accept();
+        s.accept();
+        s.accept();
+        s.reject();
+        s.record_batch(2, 10_000, &[5_000, 7_000]);
+        s.record_batch(1, 12_000, &[9_000]);
+        s.record_batch(9, 8_000, &[1_000]); // overflow fill clamps to last bucket
+        let snap = s.snapshot();
+        assert_eq!(snap.accepted, 3);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.batches, 3);
+        assert_eq!(snap.batch_hist, vec![1, 1, 0, 1]);
+        assert_eq!(snap.window, 4);
+        assert!(snap.max_us >= snap.p99_us && snap.p99_us >= snap.p50_us);
+        assert!(snap.service_ewma_us > 0.0);
+    }
+
+    #[test]
+    fn latency_window_is_rolling() {
+        let s = ModelStats::new(1);
+        // overfill the ring: only the most recent LATENCY_WINDOW survive
+        let old: Vec<u64> = vec![1_000_000_000; 100];
+        s.record_batch(1, 1, &old);
+        let new: Vec<u64> = vec![1_000; LATENCY_WINDOW];
+        s.record_batch(1, 1, &new);
+        let snap = s.snapshot();
+        assert_eq!(snap.window, LATENCY_WINDOW);
+        assert_eq!(snap.max_us, 1.0, "old 1s outliers must have rolled out");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile_ns(&[], 0.5), 0.0);
+        assert_eq!(percentile_ns(&[10], 0.99), 10.0);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_ns(&v, 0.0), 1.0);
+        assert_eq!(percentile_ns(&v, 1.0), 100.0);
+        assert_eq!(percentile_ns(&v, 0.5), 51.0); // nearest-rank of 99*0.5
+    }
+
+    #[test]
+    fn adaptive_flush_respects_bounds() {
+        // monotone non-increasing in service time
+        let mut prev = u64::MAX;
+        for svc in [0.0, 50.0, 100.0, 200.0, 400.0, 1e6] {
+            let f = adaptive_flush_us(800, svc);
+            assert!(f <= prev);
+            assert!(f >= 800 / 8 && f <= 800 / 2, "flush {f} outside [100, 400]");
+            prev = f;
+        }
+        // zero budget never panics and flushes immediately
+        assert_eq!(adaptive_flush_us(0, 10.0), 0);
+        assert!(adaptive_flush_us(0, 0.0) <= 1);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let s = ModelStats::new(2);
+        s.accept();
+        s.record_batch(1, 5_000, &[4_000]);
+        let j = s.snapshot().to_json();
+        assert_eq!(j.get("accepted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("batches").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("latency_us").unwrap().get("p99").is_some());
+        assert_eq!(j.get("batch_hist").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

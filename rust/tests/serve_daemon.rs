@@ -1,0 +1,381 @@
+//! Integration tests of the serving daemon (`serve::daemon` + wire
+//! protocol): multi-model bit-exactness over TCP, admission control,
+//! hot reload under live traffic, and wire-level robustness — the
+//! network-facing extension of the `registry_negative.rs` style.
+
+use hgq::coordinator::checkpoint;
+use hgq::data::try_splits_for;
+use hgq::firmware::emulator::Emulator;
+use hgq::firmware::Graph;
+use hgq::runtime::{ModelRuntime, Runtime};
+use hgq::serve::proto::{read_frame, FrameRead, MAX_BODY};
+use hgq::serve::{
+    Daemon, DaemonClient, DaemonConfig, ErrCode, Frame, ModelSpec, Registry, SloConfig,
+};
+
+fn daemon_cfg(models: Vec<ModelSpec>) -> DaemonConfig {
+    DaemonConfig {
+        listen: "127.0.0.1:0".into(), // ephemeral port; read back via addr()
+        artifacts: "artifacts".into(),
+        calib_n: 32, // tiny calibration split keeps dev-profile tests fast
+        models,
+    }
+}
+
+fn spec(key: &str, slo: SloConfig) -> ModelSpec {
+    ModelSpec { key: key.into(), checkpoint: None, slo }
+}
+
+/// Two registry models served concurrently over one daemon, pipelined
+/// requests from parallel clients: every reply must be bit-identical to
+/// the scalar `Emulator::infer` of the same row on the same graph.
+#[test]
+fn two_models_concurrent_bit_identical() {
+    let slo = SloConfig { budget_us: 1000, queue_depth: 64, max_batch: 8, workers: 2 };
+    let d = Daemon::spawn(daemon_cfg(vec![spec("jets", slo.clone()), spec("muon", slo)])).unwrap();
+    let addr = d.addr().to_string();
+    let n = 60usize;
+    let rows = 8usize;
+    let mut handles = Vec::new();
+    for key in ["jets", "muon"] {
+        let addr = addr.clone();
+        let graph = d.graph(key).unwrap();
+        handles.push(std::thread::spawn(move || {
+            let model = Registry::resolve(key).to_string();
+            let splits = try_splits_for(&model, 7, 1, rows).unwrap();
+            let mut em = Emulator::new(&graph);
+            let k = graph.output_dim;
+            let mut want = vec![vec![0.0f64; k]; rows];
+            for (i, w) in want.iter_mut().enumerate() {
+                em.infer(splits.test.sample(i), w).unwrap();
+            }
+            let mut c = DaemonClient::connect(&addr).unwrap();
+            for i in 0..n {
+                c.send(&Frame::Infer {
+                    id: i as u32,
+                    model: key.to_string(),
+                    x: splits.test.sample(i % rows).to_vec(),
+                })
+                .unwrap();
+            }
+            for _ in 0..n {
+                match c.recv().unwrap() {
+                    Frame::Logits { id, y } => {
+                        assert_eq!(y, want[id as usize % rows], "{key} id {id}");
+                    }
+                    other => panic!("unexpected reply {other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut c = DaemonClient::connect(&addr).unwrap();
+    c.shutdown().unwrap();
+    let stats = d.join();
+    let models = stats.get("models").unwrap();
+    for key in ["jets", "muon"] {
+        let m = models.get(key).unwrap();
+        assert_eq!(m.get("completed").unwrap().as_f64(), Some(n as f64), "{key}");
+        assert_eq!(m.get("rejected").unwrap().as_f64(), Some(0.0), "{key}");
+    }
+}
+
+/// Admission control: a full queue answers `Overloaded` immediately —
+/// it never parks the client — and the accepted requests survive to be
+/// served once the lane resumes.
+#[test]
+fn overload_rejects_immediately_and_drains_after_resume() {
+    let slo = SloConfig { budget_us: 1000, queue_depth: 2, max_batch: 1, workers: 1 };
+    let d = Daemon::spawn(daemon_cfg(vec![spec("jets", slo)])).unwrap();
+    d.set_paused("jets", true).unwrap();
+    // let the worker cycle back to its paused check before any traffic
+    std::thread::sleep(std::time::Duration::from_millis(120));
+    let splits = try_splits_for("jets_pp", 7, 1, 4).unwrap();
+    let mut c = DaemonClient::connect(&d.addr().to_string()).unwrap();
+    let t0 = std::time::Instant::now();
+    for i in 0..20u32 {
+        c.send(&Frame::Infer {
+            id: i,
+            model: "jets".into(),
+            x: splits.test.sample(i as usize % 4).to_vec(),
+        })
+        .unwrap();
+    }
+    // queue depth 2 + paused worker: requests 0 and 1 are admitted, the
+    // other 18 are rejected while the lane is stalled
+    let mut rejected = 0usize;
+    for _ in 0..18 {
+        match c.recv().unwrap() {
+            Frame::Error { code, .. } => {
+                assert_eq!(code, ErrCode::Overloaded);
+                rejected += 1;
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+    assert_eq!(rejected, 18);
+    // the rejects arrived while the worker was stalled — admission is
+    // `try_send`, it cannot have waited on the lane
+    assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+    d.set_paused("jets", false).unwrap();
+    let mut served: Vec<u32> = Vec::new();
+    for _ in 0..2 {
+        match c.recv().unwrap() {
+            Frame::Logits { id, .. } => served.push(id),
+            other => panic!("expected Logits, got {other:?}"),
+        }
+    }
+    served.sort_unstable();
+    assert_eq!(served, vec![0, 1]);
+    let stats = d.stats_json();
+    let m = stats.get("models").unwrap().get("jets").unwrap();
+    assert_eq!(m.get("accepted").unwrap().as_f64(), Some(2.0));
+    assert_eq!(m.get("rejected").unwrap().as_f64(), Some(18.0));
+    d.shutdown();
+    d.join();
+}
+
+/// Hot reload under live traffic: no accepted request is dropped, every
+/// reply is bit-identical to the old or the new deployment, and the
+/// lane converges to the new graph.
+#[test]
+fn hot_reload_mid_traffic_loses_no_requests() {
+    let tmp = std::env::temp_dir().join(format!("hgq_daemon_reload_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, std::path::Path::new("artifacts"), "jets_lw").unwrap();
+    let info = |label: &str| checkpoint::CheckpointInfo {
+        model: "jets_lw".into(),
+        label: label.into(),
+        quality: 0.0,
+        cost: 0.0,
+        epoch: 0,
+        beta: 0.0,
+    };
+    let s0 = mr.init_state();
+    checkpoint::save(&tmp.join("c0"), &info("c0"), &s0).unwrap();
+    // a perturbed state: still a valid jets_lw deployment (same dims),
+    // generally with different logits
+    let mut s1 = s0.clone();
+    for v in s1.iter_mut().take(8) {
+        *v += 0.25;
+    }
+    checkpoint::save(&tmp.join("c1"), &info("c1"), &s1).unwrap();
+
+    let slo = SloConfig { budget_us: 500, queue_depth: 64, max_batch: 4, workers: 2 };
+    let d = Daemon::spawn(daemon_cfg(vec![ModelSpec {
+        key: "lw".into(),
+        checkpoint: Some(tmp.join("c0")),
+        slo,
+    }]))
+    .unwrap();
+    let addr = d.addr().to_string();
+    let g_old = d.graph("lw").unwrap();
+
+    let rows = 6usize;
+    let splits = try_splits_for("jets_lw", 11, 1, rows).unwrap();
+    let refs = |g: &Graph| -> Vec<Vec<f64>> {
+        let mut em = Emulator::new(g);
+        (0..rows)
+            .map(|i| {
+                let mut o = vec![0.0f64; g.output_dim];
+                em.infer(splits.test.sample(i), &mut o).unwrap();
+                o
+            })
+            .collect()
+    };
+    let old_want = refs(&g_old);
+
+    // traffic thread: synchronous round-trips spanning the reload
+    let n = 120usize;
+    let traffic = {
+        let addr = addr.clone();
+        let xs: Vec<Vec<f32>> = (0..rows).map(|i| splits.test.sample(i).to_vec()).collect();
+        std::thread::spawn(move || {
+            let mut c = DaemonClient::connect(&addr).unwrap();
+            (0..n)
+                .map(|i| {
+                    let (y, _) = c.infer("lw", &xs[i % rows]).unwrap();
+                    (i % rows, y)
+                })
+                .collect::<Vec<_>>()
+        })
+    };
+    // idle lanes flush immediately, so sync round-trips are fast — fire
+    // the reload early so it lands while traffic is still in flight
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    let mut admin = DaemonClient::connect(&addr).unwrap();
+    let ack = admin.reload("lw", tmp.join("c1").to_str().unwrap()).unwrap();
+    assert!(ack.contains("generation 1"), "{ack}");
+    let answers = traffic.join().unwrap();
+
+    let g_new = d.graph("lw").unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&g_old, &g_new), "reload must swap the lane graph");
+    let new_want = refs(&g_new);
+    assert_eq!(answers.len(), n, "every accepted request got a reply");
+    for (row, y) in &answers {
+        assert!(
+            y == &old_want[*row] || y == &new_want[*row],
+            "row {row}: reply matches neither deployment"
+        );
+    }
+    // the lane converges to the new deployment once workers observe the
+    // generation bump (the in-flight batch finishes on the old graph)
+    let mut c = DaemonClient::connect(&addr).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let (y, _) = c.infer("lw", splits.test.sample(0)).unwrap();
+        if y == new_want[0] {
+            break;
+        }
+        assert_eq!(y, old_want[0], "reply matches neither deployment");
+        assert!(std::time::Instant::now() < deadline, "reload never took effect");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let stats = d.stats_json();
+    let m = stats.get("models").unwrap().get("lw").unwrap();
+    assert_eq!(m.get("reloads").unwrap().as_f64(), Some(1.0));
+    assert_eq!(m.get("generation").unwrap().as_f64(), Some(1.0));
+    d.shutdown();
+    d.join();
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// A reload that would change the lane's I/O contract is rejected and
+/// the old deployment keeps serving.
+#[test]
+fn reload_with_wrong_dims_is_rejected() {
+    let tmp = std::env::temp_dir().join(format!("hgq_daemon_baddims_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let rt = Runtime::new().unwrap();
+    // a muon checkpoint pointed at a jets lane: dims cannot match
+    let mr = ModelRuntime::load(&rt, std::path::Path::new("artifacts"), "muon_pp").unwrap();
+    let info = checkpoint::CheckpointInfo {
+        model: "muon_pp".into(),
+        label: "t".into(),
+        quality: 0.0,
+        cost: 0.0,
+        epoch: 0,
+        beta: 0.0,
+    };
+    checkpoint::save(&tmp.join("c0"), &info, &mr.init_state()).unwrap();
+
+    let slo = SloConfig { budget_us: 1000, queue_depth: 8, max_batch: 2, workers: 1 };
+    let d = Daemon::spawn(daemon_cfg(vec![spec("jets", slo)])).unwrap();
+    let addr = d.addr().to_string();
+    let g_before = d.graph("jets").unwrap();
+    let mut c = DaemonClient::connect(&addr).unwrap();
+    let err = c.reload("jets", tmp.join("c0").to_str().unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("dims"), "{err:#}");
+    // unknown lane key is also a clean error
+    let err = c.reload("nope", tmp.join("c0").to_str().unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+    // the lane is untouched and still serves
+    assert!(std::sync::Arc::ptr_eq(&g_before, &d.graph("jets").unwrap()));
+    let splits = try_splits_for("jets_pp", 3, 1, 1).unwrap();
+    let (y, _) = c.infer("jets", splits.test.sample(0)).unwrap();
+    assert_eq!(y.len(), 5);
+    d.shutdown();
+    d.join();
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// Wire-level robustness: malformed, truncated, mis-versioned and
+/// abusive frames get one clean `BadFrame` error reply and a closed
+/// connection; model-level errors keep the connection serving.
+#[test]
+fn malformed_and_invalid_frames_get_clean_errors() {
+    use std::io::Write;
+    let slo = SloConfig { budget_us: 1000, queue_depth: 8, max_batch: 2, workers: 1 };
+    let d = Daemon::spawn(daemon_cfg(vec![spec("jets", slo)])).unwrap();
+    let addr = d.addr().to_string();
+
+    // length word above the body cap: rejected before any allocation
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    s.write_all(&(MAX_BODY as u32 + 1).to_le_bytes()).unwrap();
+    match read_frame(&mut s).unwrap() {
+        FrameRead::Frame(Frame::Error { code, .. }) => assert_eq!(code, ErrCode::BadFrame),
+        other => panic!("{other:?}"),
+    }
+    assert!(matches!(read_frame(&mut s).unwrap(), FrameRead::Eof));
+
+    // truncated frame (peer hangs up mid-body): clean error, close
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    s.write_all(&10u32.to_le_bytes()).unwrap();
+    s.write_all(&[1, 2, 3]).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    match read_frame(&mut s).unwrap() {
+        FrameRead::Frame(Frame::Error { code, .. }) => assert_eq!(code, ErrCode::BadFrame),
+        other => panic!("{other:?}"),
+    }
+    assert!(matches!(read_frame(&mut s).unwrap(), FrameRead::Eof));
+
+    // wrong protocol version: rejected, close
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    s.write_all(&2u32.to_le_bytes()).unwrap();
+    s.write_all(&[9, 4]).unwrap(); // version 9, type Stats
+    match read_frame(&mut s).unwrap() {
+        FrameRead::Frame(Frame::Error { code, .. }) => assert_eq!(code, ErrCode::BadFrame),
+        other => panic!("{other:?}"),
+    }
+
+    // model-level errors answer with the request id and keep the
+    // connection usable
+    let mut c = DaemonClient::connect(&addr).unwrap();
+    c.send(&Frame::Infer { id: 1, model: "nope".into(), x: vec![0.0; 16] }).unwrap();
+    match c.recv().unwrap() {
+        Frame::Error { id, code, msg } => {
+            assert_eq!((id, code), (1, ErrCode::UnknownModel));
+            assert!(msg.contains("jets"), "error should list served models: {msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+    c.send(&Frame::Infer { id: 2, model: "jets".into(), x: vec![0.0; 3] }).unwrap();
+    match c.recv().unwrap() {
+        Frame::Error { id, code, .. } => assert_eq!((id, code), (2, ErrCode::BadShape)),
+        other => panic!("{other:?}"),
+    }
+    let splits = try_splits_for("jets_pp", 3, 1, 1).unwrap();
+    let (y, _) = c.infer("jets", splits.test.sample(0)).unwrap();
+    assert_eq!(y.len(), 5);
+
+    // a reply frame sent as a request is protocol abuse: reject + close
+    let mut c2 = DaemonClient::connect(&addr).unwrap();
+    c2.send(&Frame::Ok { msg: "hi".into() }).unwrap();
+    match c2.recv().unwrap() {
+        Frame::Error { code, .. } => assert_eq!(code, ErrCode::BadFrame),
+        other => panic!("{other:?}"),
+    }
+    d.shutdown();
+    d.join();
+}
+
+/// Graceful shutdown: the `Shutdown` frame is acknowledged, queues
+/// drain, and the final snapshot from `join()` carries the full counts.
+#[test]
+fn shutdown_drains_and_reports_final_stats() {
+    let slo = SloConfig { budget_us: 500, queue_depth: 16, max_batch: 4, workers: 1 };
+    let d = Daemon::spawn(daemon_cfg(vec![spec("jets", slo)])).unwrap();
+    let addr = d.addr().to_string();
+    let splits = try_splits_for("jets_pp", 5, 1, 3).unwrap();
+    let mut c = DaemonClient::connect(&addr).unwrap();
+    for i in 0..9 {
+        let (y, _) = c.infer("jets", splits.test.sample(i % 3)).unwrap();
+        assert_eq!(y.len(), 5);
+    }
+    // the wire stats frame agrees with the in-process snapshot
+    let wire = c.stats().unwrap();
+    let parsed = hgq::util::json::Json::parse(&wire).unwrap();
+    let m = parsed.get("models").unwrap().get("jets").unwrap();
+    assert_eq!(m.get("completed").unwrap().as_f64(), Some(9.0));
+    assert!(m.get("latency_us").unwrap().get("p99").unwrap().as_f64().unwrap() > 0.0);
+    let ack = c.shutdown().unwrap();
+    assert!(ack.contains("shutting down"), "{ack}");
+    let fin = d.join();
+    assert_eq!(fin.get("shutting_down").unwrap().as_bool(), Some(true));
+    let m = fin.get("models").unwrap().get("jets").unwrap();
+    assert_eq!(m.get("accepted").unwrap().as_f64(), Some(9.0));
+    assert_eq!(m.get("completed").unwrap().as_f64(), Some(9.0));
+}
