@@ -1,0 +1,235 @@
+//! Static operator audit: prove `resource::estimate`'s multiplier/adder
+//! cost model against the emitted C++.
+//!
+//! The emitter tags every layer with a `// === layer N: kind ... ===`
+//! banner and draws its arithmetic from a closed operator vocabulary
+//! (`csd_add`/`csd_sub`/`dsp_mul`/`tree_add`/`tree_sub`/`tree_add64`/
+//! `tree_sub64`), so the generated source can be *counted* without
+//! compiling it. [`crosscheck`] asserts, per MAC layer, that those
+//! counts equal what the resource model predicts from the graph alone
+//! (CSD adders = `MultKind::LutAdders`, DSP blocks, adder-tree op count
+//! and depth from `resource::adder_tree`) — making the cost model
+//! falsifiable against real firmware instead of only against itself.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::firmware::{ActQ, FwLayer, Graph, QuantWeights};
+use crate::resource::{adder_tree, estimate, mult_kind, MultKind};
+
+/// Predicted (and, after [`crosscheck`], verified) operator counts of
+/// one MAC layer's emitted arithmetic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerOps {
+    /// graph layer index
+    pub layer: usize,
+    /// `"dense"` or `"conv2d"`
+    pub kind: &'static str,
+    /// 2-input adders/subtractors inside CSD shift-add multipliers
+    pub csd_ops: u64,
+    /// DSP-style wide multipliers
+    pub dsp_mults: u64,
+    /// 2-input operators in the accumulation trees (all tiers)
+    pub tree_ops: u64,
+    /// deepest accumulation-tree level in the layer
+    pub tree_levels: u32,
+}
+
+/// Walk one MAC set's weights exactly like `dense_resources` /
+/// `conv2d_stream_resources`: classify, tally CSD/DSP ops, collect the
+/// term widths the tree will see (bias addend at the model's fixed 8).
+fn tally_set(
+    ops: &mut LayerOps,
+    widths: &mut Vec<u32>,
+    w: &QuantWeights,
+    idx_ba: impl Iterator<Item = (usize, u32)>,
+) {
+    widths.clear();
+    for (idx, ba) in idx_ba {
+        let m = w.m[idx];
+        match mult_kind(m, ba) {
+            MultKind::Dead => {}
+            MultKind::Wire => widths.push(ba + crate::ebops::span_bits(m)),
+            MultKind::LutAdders { adders } => {
+                ops.csd_ops += adders as u64;
+                widths.push(ba + crate::ebops::span_bits(m));
+            }
+            MultKind::Dsp => {
+                ops.dsp_mults += 1;
+                widths.push(ba + crate::ebops::span_bits(m));
+            }
+        }
+    }
+    widths.push(8); // bias addend
+    ops.tree_ops += widths.len() as u64 - 1;
+    let (_, _, levels) = adder_tree(widths);
+    ops.tree_levels = ops.tree_levels.max(levels);
+}
+
+/// Predict per-MAC-layer operator counts from the graph alone,
+/// mirroring the resource model's walk (`cur` activation tracking
+/// included: pools/flatten do not change the classifying quantizer).
+pub fn predict(g: &Graph) -> Vec<LayerOps> {
+    let mut out = Vec::new();
+    let mut cur: Option<&ActQ> = None;
+    let mut widths = Vec::new();
+    for (li, layer) in g.layers.iter().enumerate() {
+        match layer {
+            FwLayer::InputQuant { out } => cur = Some(out),
+            FwLayer::Dense { din, dout, w, out: oact, .. } => {
+                let in_act = cur.expect("dense before input_quant");
+                let mut ops = LayerOps {
+                    layer: li,
+                    kind: "dense",
+                    csd_ops: 0,
+                    dsp_mults: 0,
+                    tree_ops: 0,
+                    tree_levels: 0,
+                };
+                for j in 0..*dout {
+                    tally_set(
+                        &mut ops,
+                        &mut widths,
+                        w,
+                        (0..*din).map(|i| (i * dout + j, in_act.spec(i).bits.max(0) as u32)),
+                    );
+                }
+                out.push(ops);
+                cur = Some(oact);
+            }
+            FwLayer::Conv2d { k, cin, cout, w, out: oact, .. } => {
+                let in_act = cur.expect("conv before input_quant");
+                let mut ops = LayerOps {
+                    layer: li,
+                    kind: "conv2d",
+                    csd_ops: 0,
+                    dsp_mults: 0,
+                    tree_ops: 0,
+                    tree_levels: 0,
+                };
+                for co in 0..*cout {
+                    tally_set(
+                        &mut ops,
+                        &mut widths,
+                        w,
+                        itertools_kkc(*k, *cin).map(|(ky, kx, ci)| {
+                            let ba = if in_act.scalar {
+                                in_act.specs[0].bits.max(0) as u32
+                            } else {
+                                in_act.spec(ci).bits.max(0) as u32
+                            };
+                            (((ky * k + kx) * cin + ci) * cout + co, ba)
+                        }),
+                    );
+                }
+                out.push(ops);
+                cur = Some(oact);
+            }
+            FwLayer::MaxPool2 { .. } | FwLayer::Flatten => {}
+        }
+    }
+    out
+}
+
+/// `(ky, kx, ci)` in the weight-layout order, without a triple nest at
+/// the call site.
+fn itertools_kkc(k: usize, cin: usize) -> impl Iterator<Item = (usize, usize, usize)> {
+    (0..k).flat_map(move |ky| (0..k).flat_map(move |kx| (0..cin).map(move |ci| (ky, kx, ci))))
+}
+
+/// Non-overlapping occurrence count of `pat` in `s`.
+fn occurrences(s: &str, pat: &str) -> u64 {
+    s.matches(pat).count() as u64
+}
+
+/// Deepest `t_l{N}_` accumulation-tree temp level named in `s`.
+fn max_tree_level(s: &str) -> u32 {
+    let mut best = 0u32;
+    let mut rest = s;
+    while let Some(p) = rest.find("t_l") {
+        rest = &rest[p + 3..];
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        if let Ok(n) = digits.parse::<u32>() {
+            best = best.max(n);
+        }
+    }
+    best
+}
+
+/// Count the operator vocabulary per MAC-layer section of an emitted
+/// `firmware.cpp`. Sections are delimited by the emitter's banners; the
+/// prelude (helper definitions) sits before the first banner and is
+/// excluded.
+pub fn count(firmware_cpp: &str) -> Result<Vec<LayerOps>> {
+    let Some(start) = firmware_cpp.find("// === layer ") else {
+        bail!("no layer banners in emitted source");
+    };
+    ensure!(firmware_cpp.contains("// === end ==="), "missing end banner");
+    let mut out = Vec::new();
+    for section in firmware_cpp[start..].split("// === ") {
+        let Some(rest) = section.strip_prefix("layer ") else { continue };
+        let (idx, rest) = rest.split_once(':').ok_or_else(|| bail_banner(section))?;
+        let layer: usize = idx.trim().parse().map_err(|_| bail_banner(section))?;
+        let kind_tok = rest.trim_start().split_whitespace().next().unwrap_or("");
+        let kind = match kind_tok {
+            "dense" => "dense",
+            "conv2d" => "conv2d",
+            // non-MAC sections must use none of the counted vocabulary
+            _ => {
+                for pat in ["csd_add(", "csd_sub(", "dsp_mul(", "tree_"] {
+                    ensure!(
+                        occurrences(section, pat) == 0,
+                        "layer {layer} ({kind_tok}): unexpected `{pat}` in non-MAC section"
+                    );
+                }
+                continue;
+            }
+        };
+        let tree_ops = occurrences(section, "tree_add(")
+            + occurrences(section, "tree_sub(")
+            + occurrences(section, "tree_add64(")
+            + occurrences(section, "tree_sub64(");
+        out.push(LayerOps {
+            layer,
+            kind,
+            csd_ops: occurrences(section, "csd_add(") + occurrences(section, "csd_sub("),
+            dsp_mults: occurrences(section, "dsp_mul("),
+            tree_ops,
+            tree_levels: max_tree_level(section),
+        });
+    }
+    Ok(out)
+}
+
+fn bail_banner(section: &str) -> anyhow::Error {
+    let first = section.lines().next().unwrap_or("");
+    anyhow::anyhow!("malformed layer banner: {first:?}")
+}
+
+/// Assert that the emitted source's per-layer operator counts equal the
+/// resource-model prediction, and that the summed DSP count equals
+/// `resource::estimate`'s. Returns the verified per-layer counts.
+pub fn crosscheck(g: &Graph, firmware_cpp: &str) -> Result<Vec<LayerOps>> {
+    let pred = predict(g);
+    let got = count(firmware_cpp)?;
+    ensure!(
+        pred.len() == got.len(),
+        "MAC layer count mismatch: predicted {}, emitted {}",
+        pred.len(),
+        got.len()
+    );
+    for (p, c) in pred.iter().zip(&got) {
+        ensure!(
+            p == c,
+            "layer {} ({}): emitted ops {c:?} != resource-model prediction {p:?}",
+            p.layer,
+            p.kind
+        );
+    }
+    let est_dsp = estimate(g).dsp;
+    let sum_dsp: u64 = pred.iter().map(|p| p.dsp_mults).sum();
+    ensure!(
+        sum_dsp == est_dsp,
+        "summed emitted DSP mults {sum_dsp} != resource::estimate dsp {est_dsp}"
+    );
+    Ok(pred)
+}

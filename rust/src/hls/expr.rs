@@ -1,0 +1,300 @@
+//! C++ expression building for the HLS emitter: the wrap-exact integer
+//! prelude, per-weight constant-multiplier networks (CSD shift-adds,
+//! wire shifts, DSP products) and balanced adder trees mirroring
+//! [`crate::resource::adder_tree`].
+//!
+//! Everything emitted here computes in the ring of integers modulo
+//! 2^64, exactly like the Rust emulator's release-mode `i64` wrapping
+//! arithmetic: addition, subtraction, multiplication and left shift are
+//! all performed through `uint64_t` (well-defined wraparound in every
+//! C++ standard), and arithmetic right shift / sign-extension are
+//! spelled out portably instead of relying on pre-C++20
+//! implementation-defined behaviour. Because mod-2^64 arithmetic is a
+//! commutative ring, decomposing `(ma*mw) << s` into a CSD shift-add
+//! network and re-associating terms through a balanced tree preserves
+//! the emulator's value bit-for-bit — including deliberate overflow.
+//!
+//! The helper names double as the static operator vocabulary the
+//! resource-model audit counts ([`crate::hls::audit`]): `csd_add(` /
+//! `csd_sub(` are CSD-network adders, `dsp_mul(` is a DSP block,
+//! `tree_add(`/`tree_sub(`/`tree_add64(`/`tree_sub64(` are adder-tree
+//! nodes, and `wire_shl(` is free wiring.
+
+use anyhow::{bail, Result};
+
+use crate::ir::tier::KernelTier;
+use crate::resource::csd_digits;
+
+/// The C++ integer type a layer's proven accumulator tier maps to.
+pub fn tier_cpp_type(t: KernelTier) -> &'static str {
+    match t {
+        KernelTier::I8 => "int8_t",
+        KernelTier::I16 => "int16_t",
+        KernelTier::I32 => "int32_t",
+        KernelTier::Wide => "int64_t",
+    }
+}
+
+/// Format an `i64` as a C++ constant expression (`LL` suffixed;
+/// `i64::MIN` has no literal spelling and is built by subtraction).
+pub fn lit_i64(v: i64) -> String {
+    if v == i64::MIN {
+        "(-9223372036854775807LL - 1)".to_string()
+    } else {
+        format!("{v}LL")
+    }
+}
+
+/// The fixed helper prelude every generated `firmware.cpp` starts with.
+/// Plain standards C++ (no vendor headers): uint64-routed wrapping ops,
+/// portable arithmetic shift and sign-extension wrap, and the
+/// quantize / requantize / dequantize helpers mirroring
+/// [`crate::fixed::FixedSpec`] exactly.
+pub const CPP_PRELUDE: &str = r#"namespace {
+
+// ---- wrap-exact i64 arithmetic (mod 2^64, like Rust release mode) ----
+inline int64_t wadd(int64_t a, int64_t b) { return (int64_t)((uint64_t)a + (uint64_t)b); }
+inline int64_t wsub(int64_t a, int64_t b) { return (int64_t)((uint64_t)a - (uint64_t)b); }
+inline int64_t wshl(int64_t a, int s) { return (int64_t)((uint64_t)a << (unsigned)s); }
+// arithmetic shift right without implementation-defined behaviour
+inline int64_t asr(int64_t a, int s) {
+  uint64_t u = (uint64_t)a;
+  return a < 0 ? (int64_t)~(~u >> (unsigned)s) : (int64_t)(u >> (unsigned)s);
+}
+
+// ---- statically-counted operator vocabulary (resource-model audit) ----
+inline int64_t csd_shl(int64_t a, int s) { return wshl(a, s); }
+inline int64_t csd_add(int64_t a, int64_t b) { return wadd(a, b); }
+inline int64_t csd_sub(int64_t a, int64_t b) { return wsub(a, b); }
+inline int64_t wire_shl(int64_t a, int s) { return wshl(a, s); }
+inline int64_t dsp_mul(int64_t a, int64_t m) { return (int64_t)((uint64_t)a * (uint64_t)m); }
+// adder-tree nodes at the layer's proven accumulator width: the tier
+// proof guarantees every partial sum fits T, so plain i64 adds are
+// exact and the narrowing cast is lossless (a wrong bound shows up as
+// a testbench mismatch, which is the point of the differential check)
+template <typename T> inline T tree_add(T a, T b) { return (T)((int64_t)a + (int64_t)b); }
+template <typename T> inline T tree_sub(T a, T b) { return (T)((int64_t)a - (int64_t)b); }
+// unproven (wide) layers wrap mod 2^64 exactly like the emulator
+inline int64_t tree_add64(int64_t a, int64_t b) { return wadd(a, b); }
+inline int64_t tree_sub64(int64_t a, int64_t b) { return wsub(a, b); }
+
+// ---- FixedSpec::wrap: cyclic overflow into `bits` (Eq. 1/2) ----
+inline int64_t wrap_m(int64_t m, int bits, int sgn) {
+  if (bits <= 0) return 0;
+  if (bits >= 63) return m; // full i64 dynamic range: nothing to wrap
+  uint64_t mask = (~(uint64_t)0) >> (unsigned)(64 - bits);
+  uint64_t u = (uint64_t)m & mask;
+  if (!sgn) return (int64_t)u;
+  uint64_t sign = (uint64_t)1 << (unsigned)(bits - 1);
+  return (int64_t)(u ^ sign) - (int64_t)sign;
+}
+
+// ---- FixedSpec::requantize: shift_mantissa (round-half-up) + wrap ----
+inline int64_t requant(int64_t m, int f_src, int bits, int frac, int sgn) {
+  int64_t v;
+  if (frac >= f_src) {
+    v = wshl(m, frac - f_src);
+  } else {
+    int s = f_src - frac;
+    v = asr(wadd(m, wshl(1, s - 1)), s);
+  }
+  return wrap_m(v, bits, sgn);
+}
+
+// ---- f64 -> i64 with Rust `as` saturation semantics ----
+inline int64_t f2i_sat(double r) {
+  if (!(r == r)) return 0; // NaN
+  if (r >= 9223372036854775808.0) return INT64_MAX;
+  if (r < -9223372036854775808.0) return INT64_MIN;
+  return (int64_t)r;
+}
+
+// ---- FixedSpec::quantize: scale (exact, power of two), round-half-up
+// (identical IEEE-754 ops to the Rust emulator; compile with
+// -ffp-contract=off so no FMA contraction changes a rounding), wrap ----
+inline int64_t quant_in(float x, int bits, int frac, int sgn) {
+  if (bits <= 0) return 0;
+  double scaled = (double)x * std::ldexp(1.0, frac);
+  double r = std::floor(scaled + 0.5);
+  return wrap_m(f2i_sat(r), bits, sgn);
+}
+
+// ---- final dequantization: m * 2^-f, exact scaling ----
+inline double dq(int64_t m, int frac) { return (double)m * std::ldexp(1.0, -frac); }
+"#;
+
+/// One addend of a per-neuron accumulation: its resource-model width
+/// (the adder-tree sorting key), the static algebraic sign carried out
+/// of the CSD recoding, and the C++ expression of its magnitude value.
+#[derive(Debug, Clone)]
+pub struct Term {
+    /// addend width in bits, exactly as `resource::dense_resources` /
+    /// `conv2d_stream_resources` push it (`act_bits + span_bits(m)`,
+    /// or the fixed 8 for the bias)
+    pub width: u32,
+    /// true when the term enters the tree negated (negative weight):
+    /// the tree pairs it with `tree_sub` instead of a unary negation,
+    /// which is what the resource model's adder count assumes
+    pub neg: bool,
+    /// C++ expression (a temp name or a cast literal)
+    pub expr: String,
+}
+
+/// Build the constant-multiplier expression for `|m| * x << shift` as a
+/// CSD shift-add network over [`csd_digits`] — `d` digits cost exactly
+/// `d-1` `csd_add`/`csd_sub` ops, matching `MultKind::LutAdders`.
+/// Returns the expression; the caller folds the weight sign into
+/// [`Term::neg`]. Errors when any single shift reaches 64 (impossible
+/// for in-envelope graphs: trained fractional bits are clamped to
+/// [F_MIN, F_MAX], bounding every digit shift well below 64).
+pub fn csd_mult_expr(x: &str, m: i64, shift: i32) -> Result<String> {
+    let digits = csd_digits(m);
+    debug_assert!(digits.len() >= 2, "csd network needs >= 2 digits, got {digits:?} for {m}");
+    // most-significant first: the leading digit is always +1, so the
+    // network starts from a plain shifted copy and adds/subtracts the
+    // remaining digits — signs never accumulate on the head
+    let mut expr = String::new();
+    for (i, &(pos, sign)) in digits.iter().rev().enumerate() {
+        let s = pos as i32 + shift;
+        if s >= 64 || s < 0 {
+            bail!("csd digit shift {s} out of range for weight {m} (shift {shift})");
+        }
+        let shifted = if s == 0 { x.to_string() } else { format!("csd_shl({x}, {s})") };
+        if i == 0 {
+            expr = shifted;
+        } else if sign > 0 {
+            expr = format!("csd_add({expr}, {shifted})");
+        } else {
+            expr = format!("csd_sub({expr}, {shifted})");
+        }
+    }
+    Ok(expr)
+}
+
+/// Emit a balanced adder tree over `terms` into `out`, mirroring
+/// [`crate::resource::adder_tree`] exactly: one ascending sort by
+/// width, then pairwise reduction with the odd leftover carried to the
+/// end of each level — the emitted level count and add count are the
+/// resource model's predictions by construction. Temps are named
+/// `{prefix}_l{level}_{slot}` (the audit reads the max level back out
+/// of the generated text). Returns the root expression.
+///
+/// Signs fold into the pairing (`tree_sub` for mixed-sign pairs); a
+/// subtree is negative only when *all* its leaves are, and since every
+/// neuron carries a positive bias addend the root is always positive —
+/// enforced here so no unary negation (which the resource model does
+/// not cost) is ever needed.
+pub fn emit_tree(
+    terms: &[Term],
+    acc_ty: &str,
+    prefix: &str,
+    indent: &str,
+    out: &mut String,
+) -> Result<String> {
+    if terms.is_empty() {
+        bail!("adder tree over zero terms");
+    }
+    let wide = acc_ty == "int64_t";
+    let (add_fn, sub_fn) =
+        if wide { ("tree_add64", "tree_sub64") } else { ("tree_add", "tree_sub") };
+    let mut nodes: Vec<Term> = terms.to_vec();
+    // stable sort: equal widths keep emission order deterministic; the
+    // resulting *width sequence* is identical to adder_tree's unstable
+    // sort, so levels and add counts agree regardless of tie order
+    nodes.sort_by_key(|t| t.width);
+    if !wide {
+        // leaves are i64 temps/literals; the layer's proven bound makes
+        // the narrowing cast lossless (every term and partial sum fits
+        // T), so the whole tree runs at the tier width
+        for n in &mut nodes {
+            n.expr = format!("({acc_ty}){}", n.expr);
+        }
+    }
+    let mut level = 0u32;
+    while nodes.len() > 1 {
+        level += 1;
+        let mut next: Vec<Term> = Vec::with_capacity(nodes.len() / 2 + 1);
+        let mut i = 0usize;
+        while i + 1 < nodes.len() {
+            let (a, b) = (&nodes[i], &nodes[i + 1]);
+            let w = a.width.max(b.width) + 1;
+            let name = format!("{prefix}_l{level}_{}", next.len());
+            let (call, neg) = match (a.neg, b.neg) {
+                (false, false) => (format!("{add_fn}({}, {})", a.expr, b.expr), false),
+                (false, true) => (format!("{sub_fn}({}, {})", a.expr, b.expr), false),
+                (true, false) => (format!("{sub_fn}({}, {})", b.expr, a.expr), false),
+                (true, true) => (format!("{add_fn}({}, {})", a.expr, b.expr), true),
+            };
+            out.push_str(&format!("{indent}const {acc_ty} {name} = {call};\n"));
+            next.push(Term { width: w, neg, expr: name });
+            i += 2;
+        }
+        if i < nodes.len() {
+            next.push(nodes[i].clone());
+        }
+        nodes = next;
+    }
+    let root = nodes.into_iter().next().expect("non-empty tree");
+    if root.neg {
+        bail!("adder-tree root is negative (no positive bias addend?)");
+    }
+    Ok(root.expr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csd_expr_shapes() {
+        // 15 = 16 - 1: csd_sub(shl 4, shl 0)
+        let e = csd_mult_expr("v", 15, 0).unwrap();
+        assert_eq!(e, "csd_sub(csd_shl(v, 4), v)");
+        // with an extra MAC shift the digit shifts move together
+        let e = csd_mult_expr("v", 15, 2).unwrap();
+        assert_eq!(e, "csd_sub(csd_shl(v, 6), csd_shl(v, 2))");
+        // digit count - 1 operators
+        let e = csd_mult_expr("v", 0b101010, 0).unwrap();
+        assert_eq!(e.matches("csd_add(").count() + e.matches("csd_sub(").count(), 2);
+        // out-of-range shift is a clean error
+        assert!(csd_mult_expr("v", 3, 63).is_err());
+    }
+
+    #[test]
+    fn tree_mirrors_resource_adder_tree() {
+        // widths 8,8,8,8 + bias 8: resource says 3 levels for 5 terms
+        let terms: Vec<Term> = (0..4)
+            .map(|i| Term { width: 8, neg: i == 1, expr: format!("q{i}") })
+            .chain(std::iter::once(Term { width: 8, neg: false, expr: "bias".into() }))
+            .collect();
+        let mut widths: Vec<u32> = vec![8, 8, 8, 8, 8];
+        let (_, _, levels) = crate::resource::adder_tree(&mut widths);
+        let mut body = String::new();
+        let root = emit_tree(&terms, "int32_t", "t", "  ", &mut body).unwrap();
+        let ops = body.matches("tree_add(").count() + body.matches("tree_sub(").count();
+        assert_eq!(ops, 4); // n-1 adds
+        let max_level = (1..=8).filter(|l| body.contains(&format!("t_l{l}_"))).max().unwrap();
+        assert_eq!(max_level as u32, levels);
+        assert!(root.starts_with("t_l"));
+        assert!(body.contains("tree_sub("), "negative leaf must pair as a subtract");
+    }
+
+    #[test]
+    fn all_negative_tree_is_rejected() {
+        let terms = vec![
+            Term { width: 4, neg: true, expr: "a".into() },
+            Term { width: 4, neg: true, expr: "b".into() },
+        ];
+        let mut body = String::new();
+        assert!(emit_tree(&terms, "int64_t", "t", "", &mut body).is_err());
+    }
+
+    #[test]
+    fn tier_types_and_literals() {
+        assert_eq!(tier_cpp_type(KernelTier::I8), "int8_t");
+        assert_eq!(tier_cpp_type(KernelTier::Wide), "int64_t");
+        assert_eq!(lit_i64(5), "5LL");
+        assert_eq!(lit_i64(-5), "-5LL");
+        assert_eq!(lit_i64(i64::MIN), "(-9223372036854775807LL - 1)");
+    }
+}

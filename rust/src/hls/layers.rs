@@ -1,0 +1,397 @@
+//! Per-layer C++ emitters: one `static void layerN(...)` function per
+//! firmware layer, walking the deployed [`Graph`] exactly like the
+//! scalar emulator does.
+//!
+//! Emission is fully static: every shift amount, requantization spec
+//! and weight constant is resolved at emit time from the graph, so the
+//! generated code contains no tables the synthesizer would have to
+//! index dynamically (conv layers loop over output positions — the
+//! stream-IO "one physical MAC set" structure — but the MAC set itself
+//! is unrolled constants). The supported envelope mirrors
+//! `resource::estimate`: dense layers accept any granularity, conv and
+//! pool layers require layer-granular (scalar) activation quantizers —
+//! exactly what every preset and every `gen_model_ir` graph produces —
+//! and anything outside it is a clean emit-time error, never wrong
+//! code.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::expr::{csd_mult_expr, emit_tree, lit_i64, tier_cpp_type, Term};
+use crate::ebops::span_bits;
+use crate::firmware::{ActQ, FwLayer, Graph, LayerKernel, QuantWeights};
+use crate::resource::{mult_kind, MultKind};
+
+/// One emitted layer function plus the metadata the toplevel needs to
+/// chain them.
+pub(super) struct LayerCode {
+    /// the audit banner + function definition text
+    pub text: String,
+    /// function name (`layerN`)
+    pub name: String,
+    /// true for the input quantizer (takes `const float*`)
+    pub takes_float: bool,
+    /// true when the layer writes the other ping-pong buffer
+    /// (everything except flatten, which emits no function at all)
+    pub swaps: bool,
+}
+
+/// Walk the graph, emitting every layer function. Returns the codes and
+/// the final per-logit fractional bits (for the toplevel dequantizer).
+pub(super) fn emit_layers(g: &Graph, plan: &[LayerKernel]) -> Result<(Vec<LayerCode>, Vec<i32>)> {
+    let mut codes = Vec::new();
+    // per-element fractional bits of the current tensor (bit-exact MAC
+    // shifts) + the ActQ the resource model classifies against
+    let mut fracs: Vec<i32> = Vec::new();
+    let mut cur_act: Option<ActQ> = None;
+    for (li, layer) in g.layers.iter().enumerate() {
+        match layer {
+            FwLayer::InputQuant { out } => {
+                codes.push(emit_input_quant(li, g.input_dim, out)?);
+                fracs = (0..g.input_dim).map(|i| out.spec(i).frac_bits()).collect();
+                cur_act = Some(out.clone());
+            }
+            FwLayer::Dense { din, dout, w, b, relu, out, acc_frac } => {
+                let in_act = cur_act
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("layer {li}: dense before input_quant"))?;
+                if !in_act.scalar && in_act.specs.len() != *din {
+                    bail!(
+                        "layer {li}: input activation specs ({}) misaligned with dense fan-in \
+                         {din} — outside the emitter (and resource model) envelope",
+                        in_act.specs.len()
+                    );
+                }
+                codes.push(emit_dense(
+                    li, *din, *dout, w, b, *relu, out, *acc_frac, &fracs, in_act, plan[li].tier,
+                )?);
+                fracs = (0..*dout).map(|j| out.spec(j).frac_bits()).collect();
+                cur_act = Some(out.clone());
+            }
+            FwLayer::Conv2d { k, cin, cout, in_h, in_w, out_shape, w, b, relu, out, acc_frac } => {
+                let in_act = cur_act
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("layer {li}: conv before input_quant"))?;
+                if !in_act.scalar || !out.scalar {
+                    bail!(
+                        "layer {li}: conv2d with per-element activation quantizers is outside \
+                         the emitter envelope (stream-IO conv shares one physical MAC set, so \
+                         its activation types must be layer-granular — as in every preset)"
+                    );
+                }
+                let in_frac = uniform_frac(&fracs)
+                    .ok_or_else(|| anyhow!("layer {li}: conv2d over mixed input LSBs"))?;
+                codes.push(emit_conv(
+                    li, *k, *cin, *cout, *in_h, *in_w, *out_shape, w, b, *relu, out, *acc_frac,
+                    in_frac, in_act, plan[li].tier,
+                )?);
+                let n_out = out_shape[0] * out_shape[1] * out_shape[2];
+                fracs = vec![out.spec(0).frac_bits(); n_out];
+                cur_act = Some(out.clone());
+            }
+            FwLayer::MaxPool2 { in_shape } => {
+                let [h, w, c] = *in_shape;
+                // the emulator debug-asserts uniform LSBs per window;
+                // the emitter rejects the whole layer unless the tensor
+                // is LSB-uniform (true whenever the producing act
+                // quantizer is scalar — the conv envelope above)
+                let in_frac = uniform_frac(&fracs)
+                    .ok_or_else(|| anyhow!("layer {li}: maxpool2 over mixed input LSBs"))?;
+                codes.push(emit_maxpool(li, h, w, c));
+                fracs = vec![in_frac; (h / 2) * (w / 2) * c];
+            }
+            FwLayer::Flatten => { /* shape-only: buffers are already flat */ }
+        }
+    }
+    if fracs.len() < g.output_dim {
+        bail!("final tensor narrower than output_dim");
+    }
+    fracs.truncate(g.output_dim);
+    Ok((codes, fracs))
+}
+
+fn uniform_frac(fracs: &[i32]) -> Option<i32> {
+    let first = *fracs.first()?;
+    fracs.iter().all(|&f| f == first).then_some(first)
+}
+
+fn emit_input_quant(li: usize, dim: usize, out: &ActQ) -> Result<LayerCode> {
+    let mut t = format!("// === layer {li}: input_quant dim {dim} ===\n");
+    let name = format!("layer{li}");
+    t.push_str(&format!("static void {name}(const float* x, int64_t* out) {{\n"));
+    if out.scalar {
+        let s = out.spec(0);
+        t.push_str(&format!(
+            "  for (int i = 0; i < {dim}; ++i)\n    out[i] = quant_in(x[i], {}, {}, {});\n",
+            s.bits,
+            s.frac_bits(),
+            s.signed as i32
+        ));
+    } else {
+        // per-element specs: static constant tables + one loop
+        let col = |f: &dyn Fn(usize) -> String| -> String {
+            (0..dim).map(f).collect::<Vec<_>>().join(", ")
+        };
+        t.push_str(&format!(
+            "  static const int32_t BITS[{dim}] = {{{}}};\n",
+            col(&|i| out.spec(i).bits.to_string())
+        ));
+        t.push_str(&format!(
+            "  static const int32_t FRAC[{dim}] = {{{}}};\n",
+            col(&|i| out.spec(i).frac_bits().to_string())
+        ));
+        t.push_str(&format!(
+            "  static const int32_t SGN[{dim}] = {{{}}};\n",
+            col(&|i| (out.spec(i).signed as i32).to_string())
+        ));
+        t.push_str(&format!(
+            "  for (int i = 0; i < {dim}; ++i)\n    out[i] = quant_in(x[i], BITS[i], FRAC[i], SGN[i]);\n"
+        ));
+    }
+    t.push_str("}\n\n");
+    Ok(LayerCode { text: t, name, takes_float: true, swaps: true })
+}
+
+/// Build the addend [`Term`] of one weight × activation product at the
+/// accumulator LSB, classified exactly like the resource model
+/// ([`mult_kind`] on the same `act_bits`). `Dead` returns `None` — the
+/// emulator's runtime zero-skip makes that bit-exact (a dead spec's
+/// mantissa is always zero, and a zero weight contributes zero).
+fn mac_term(
+    x: &str,
+    m: i64,
+    shift: i32,
+    act_bits: u32,
+    tmp: &mut usize,
+    body: &mut String,
+    indent: &str,
+) -> Result<Option<Term>> {
+    if shift < 0 {
+        bail!("negative MAC shift {shift} (acc_frac below a term LSB)");
+    }
+    let width = act_bits + span_bits(m);
+    let term = match mult_kind(m, act_bits) {
+        MultKind::Dead => return Ok(None),
+        MultKind::Wire => {
+            // |m| = 2^p: pure wiring
+            let p = m.unsigned_abs().trailing_zeros() as i32 + shift;
+            if p >= 64 {
+                bail!("wire shift {p} out of range");
+            }
+            let q = format!("q{tmp}");
+            body.push_str(&format!("{indent}const int64_t {q} = wire_shl({x}, {p});\n"));
+            Term { width, neg: m < 0, expr: q }
+        }
+        MultKind::LutAdders { .. } => {
+            let q = format!("q{tmp}");
+            let e = csd_mult_expr(x, m, shift)?;
+            body.push_str(&format!("{indent}const int64_t {q} = {e};\n"));
+            Term { width, neg: m < 0, expr: q }
+        }
+        MultKind::Dsp => {
+            if shift >= 64 {
+                bail!("dsp shift {shift} out of range");
+            }
+            let q = format!("q{tmp}");
+            let prod = format!("dsp_mul({x}, {})", lit_i64(m));
+            let e = if shift == 0 { prod } else { format!("wshl({prod}, {shift})") };
+            body.push_str(&format!("{indent}const int64_t {q} = {e};\n"));
+            Term { width, neg: false, expr: q } // sign folded into the constant
+        }
+    };
+    *tmp += 1;
+    Ok(Some(term))
+}
+
+/// The bias addend: a constant already shifted to the accumulator LSB,
+/// entering the tree at the resource model's fixed 8-bit width and
+/// always with positive sign (so the tree root never needs negating).
+/// Emitted as a plain i64 literal; `emit_tree` casts tree leaves to the
+/// tier type.
+fn bias_term(b: &QuantWeights, j: usize, acc_frac: i32) -> Result<Term> {
+    let sh = acc_frac - b.frac[j];
+    if !(0..64).contains(&sh) {
+        bail!("bias shift {sh} out of range");
+    }
+    // Rust `<<` drops high bits silently (both profiles), i.e. wrapping
+    let v = b.m[j].wrapping_shl(sh as u32);
+    Ok(Term { width: 8, neg: false, expr: lit_i64(v) })
+}
+
+/// Accumulate `terms` through the mirrored adder tree, apply ReLU on
+/// the tier-typed accumulator, requantize into `spec`, and store.
+#[allow(clippy::too_many_arguments)]
+fn finish_neuron(
+    terms: &[Term],
+    acc_ty: &str,
+    relu: bool,
+    spec: &crate::fixed::FixedSpec,
+    acc_frac: i32,
+    dst: &str,
+    body: &mut String,
+    indent: &str,
+) -> Result<()> {
+    let root = emit_tree(terms, acc_ty, "t", indent, body)?;
+    body.push_str(&format!("{indent}{acc_ty} acc = {root};\n"));
+    if relu {
+        body.push_str(&format!("{indent}if (acc < 0) acc = 0;\n"));
+    }
+    body.push_str(&format!(
+        "{indent}{dst} = requant((int64_t)acc, {acc_frac}, {}, {}, {});\n",
+        spec.bits,
+        spec.frac_bits(),
+        spec.signed as i32
+    ));
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_dense(
+    li: usize,
+    din: usize,
+    dout: usize,
+    w: &QuantWeights,
+    b: &QuantWeights,
+    relu: bool,
+    out: &ActQ,
+    acc_frac: i32,
+    in_fracs: &[i32],
+    in_act: &ActQ,
+    tier: crate::ir::tier::KernelTier,
+) -> Result<LayerCode> {
+    let acc_ty = tier_cpp_type(tier);
+    let mut t = format!(
+        "// === layer {li}: dense {din} -> {dout}{} [acc {}] ===\n",
+        if relu { " relu" } else { "" },
+        tier.name()
+    );
+    let name = format!("layer{li}");
+    t.push_str(&format!("static void {name}(const int64_t* in, int64_t* out) {{\n"));
+    for j in 0..dout {
+        t.push_str(&format!("  {{ // neuron {j}\n"));
+        let mut terms = Vec::with_capacity(din + 1);
+        let mut tmp = 0usize;
+        for i in 0..din {
+            let idx = i * dout + j;
+            let ba = in_act.spec(i).bits.max(0) as u32;
+            let shift = acc_frac - (in_fracs[i] + w.frac[idx]);
+            if let Some(term) =
+                mac_term(&format!("in[{i}]"), w.m[idx], shift, ba, &mut tmp, &mut t, "    ")?
+            {
+                terms.push(term);
+            }
+        }
+        terms.push(bias_term(b, j, acc_frac)?);
+        finish_neuron(
+            &terms,
+            acc_ty,
+            relu,
+            &out.spec(j),
+            acc_frac,
+            &format!("out[{j}]"),
+            &mut t,
+            "    ",
+        )?;
+        t.push_str("  }\n");
+    }
+    t.push_str("}\n\n");
+    Ok(LayerCode { text: t, name, takes_float: false, swaps: true })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_conv(
+    li: usize,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    in_h: usize,
+    in_w: usize,
+    out_shape: [usize; 3],
+    w: &QuantWeights,
+    b: &QuantWeights,
+    relu: bool,
+    out: &ActQ,
+    acc_frac: i32,
+    in_frac: i32,
+    in_act: &ActQ,
+    tier: crate::ir::tier::KernelTier,
+) -> Result<LayerCode> {
+    let acc_ty = tier_cpp_type(tier);
+    let [oh, ow, _] = out_shape;
+    let mut t = format!(
+        "// === layer {li}: conv2d k{k} {in_h}x{in_w}x{cin} -> {oh}x{ow}x{cout}{} [acc {}] ===\n",
+        if relu { " relu" } else { "" },
+        tier.name()
+    );
+    let name = format!("layer{li}");
+    t.push_str(&format!("static void {name}(const int64_t* in, int64_t* out) {{\n"));
+    t.push_str(&format!("  for (int oy = 0; oy < {oh}; ++oy) {{\n"));
+    t.push_str(&format!("    for (int ox = 0; ox < {ow}; ++ox) {{\n"));
+    t.push_str(&format!("      const int ib = oy * {} + ox * {cin};\n", in_w * cin));
+    t.push_str(&format!("      const int ob = (oy * {ow} + ox) * {cout};\n"));
+    // one physical MAC set: the co blocks below are emitted once and
+    // reused across every (oy, ox) position, exactly the structure
+    // conv2d_stream_resources costs (and the audit counts statically)
+    let ba = in_act.spec(0).bits.max(0) as u32;
+    for co in 0..cout {
+        t.push_str(&format!("      {{ // out channel {co}\n"));
+        let mut terms = Vec::new();
+        let mut tmp = 0usize;
+        for ky in 0..k {
+            for kx in 0..k {
+                for ci in 0..cin {
+                    let widx = ((ky * k + kx) * cin + ci) * cout + co;
+                    let off = (ky * in_w + kx) * cin + ci;
+                    let shift = acc_frac - (in_frac + w.frac[widx]);
+                    if let Some(term) = mac_term(
+                        &format!("in[ib + {off}]"),
+                        w.m[widx],
+                        shift,
+                        ba,
+                        &mut tmp,
+                        &mut t,
+                        "        ",
+                    )? {
+                        terms.push(term);
+                    }
+                }
+            }
+        }
+        terms.push(bias_term(b, co, acc_frac)?);
+        finish_neuron(
+            &terms,
+            acc_ty,
+            relu,
+            &out.spec(0),
+            acc_frac,
+            &format!("out[ob + {co}]"),
+            &mut t,
+            "        ",
+        )?;
+        t.push_str("      }\n");
+    }
+    t.push_str("    }\n  }\n}\n\n");
+    Ok(LayerCode { text: t, name, takes_float: false, swaps: true })
+}
+
+fn emit_maxpool(li: usize, h: usize, w: usize, c: usize) -> LayerCode {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut t = format!("// === layer {li}: maxpool2 {h}x{w}x{c} -> {oh}x{ow}x{c} ===\n");
+    let name = format!("layer{li}");
+    t.push_str(&format!("static void {name}(const int64_t* in, int64_t* out) {{\n"));
+    t.push_str(&format!("  for (int oy = 0; oy < {oh}; ++oy) {{\n"));
+    t.push_str(&format!("    for (int ox = 0; ox < {ow}; ++ox) {{\n"));
+    t.push_str(&format!("      for (int ch = 0; ch < {c}; ++ch) {{\n"));
+    t.push_str(&format!("        const int i0 = (oy * 2 * {w} + ox * 2) * {c} + ch;\n"));
+    // window scan order (0,0) (0,1) (1,0) (1,1) with strict `>`:
+    // first-max-wins, identical to the emulator's i64::MIN fold
+    t.push_str("        int64_t best = in[i0];\n");
+    for (dy, dx) in [(0usize, 1usize), (1, 0), (1, 1)] {
+        let off = dy * w * c + dx * c;
+        t.push_str(&format!(
+            "        if (in[i0 + {off}] > best) best = in[i0 + {off}];\n"
+        ));
+    }
+    t.push_str(&format!("        out[(oy * {ow} + ox) * {c} + ch] = best;\n"));
+    t.push_str("      }\n    }\n  }\n}\n\n");
+    LayerCode { text: t, name, takes_float: false, swaps: true }
+}

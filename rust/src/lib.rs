@@ -13,6 +13,11 @@
 //!                   adder trees, DSP inference, pipeline FF + latency.
 //! * [`firmware`]  — integer fixed-point inference engine with exact
 //!                   software↔firmware correspondence (hls4ml contract).
+//! * [`hls`]       — the firmware emitter: walks a deployed graph into
+//!                   plain-C++ HLS sources (CSD shift-add multipliers,
+//!                   balanced adder trees, proven accumulator widths)
+//!                   with a self-checking emulator-golden testbench
+//!                   (`hgq emit-hls`).
 //! * [`nn`]        — model metadata (meta.json) shared with the python
 //!                   build path.
 //! * [`ir`]        — the unified layer IR: a typed, shape-inferred
@@ -50,6 +55,7 @@ pub mod data;
 pub mod ebops;
 pub mod firmware;
 pub mod fixed;
+pub mod hls;
 pub mod ir;
 pub mod metrics;
 pub mod nn;

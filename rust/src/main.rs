@@ -14,6 +14,10 @@
 //!            with per-model SLOs, admission control and hot reload
 //!   client   talk to a running daemon: send inference requests, fetch
 //!            the stats frame, hot-reload a model, request shutdown
+//!   emit-hls emit synthesizable C++ firmware (hls4ml-style) from a
+//!            preset or checkpoint; --check compiles it with the host
+//!            compiler, runs the emulator-golden testbench and audits
+//!            operator counts against the resource model
 //!   info     print model/backend info
 //!
 //! Every command takes `--backend native|pjrt` and `--threads N` (the
@@ -67,10 +71,11 @@ fn run() -> Result<()> {
         "emulate" => cmd_emulate(&artifacts, args),
         "serve" => cmd_serve(&artifacts, args),
         "client" => cmd_client(args),
+        "emit-hls" => cmd_emit_hls(&artifacts, args),
         "help" | _ => {
             println!(
                 "usage: hgq <info|train|sweep|table1|table2|table3|fig2|ablate|deploy|emulate\
-                 |serve|client> \
+                 |serve|client|emit-hls> \
                  [--backend native|pjrt] [--threads N] [--artifacts DIR] [--model NAME] \
                  [--preset TASK] [--epochs N] [--beta B] [--seed S] [--checkpoint DIR] \
                  [--json FILE] [--verbose]\n\
@@ -81,7 +86,9 @@ fn run() -> Result<()> {
                  [--budget-us B] [--batch B] [--queue-depth Q] [--threads N] [--calib-n N] \
                  [--json FILE]\n\
                  client: [--connect ADDR] [--model KEY] [--requests N] [--pool-n N] [--stats] \
-                 [--reload KEY=DIR] [--shutdown]"
+                 [--reload KEY=DIR] [--shutdown]\n\
+                 emit-hls: [--preset TASK|MODEL] [--checkpoint DIR] [--out DIR] [--vectors N] \
+                 [--calib-n N] [--check]"
             );
             Ok(())
         }
@@ -518,6 +525,59 @@ fn cmd_client(mut args: Args) -> Result<()> {
     }
     if shutdown {
         println!("{}", client.shutdown()?);
+    }
+    Ok(())
+}
+
+/// Emit synthesizable C++ firmware for a preset or checkpoint. With
+/// `--check`, compile the emitted sources with the host compiler, run
+/// the self-checking testbench (bit-exact vs `Emulator::infer`) and
+/// audit per-layer operator counts against `resource::estimate`.
+fn cmd_emit_hls(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    use hgq::hls::{self, EmitSource};
+    let preset = args.str_opt("preset");
+    let ckpt = args.str_opt("checkpoint");
+    let out_dir = PathBuf::from(args.str("out", "hls_out"));
+    let vectors = args.usize("vectors", 16);
+    let calib_n = args.usize("calib-n", 512);
+    let check = args.flag("check");
+    args.finish()?;
+
+    let ckpt_dir = ckpt.as_ref().map(PathBuf::from);
+    let src = match (&preset, &ckpt_dir) {
+        (Some(p), None) => EmitSource::Preset(p),
+        (None, Some(d)) => EmitSource::Checkpoint(d),
+        _ => bail!("emit-hls needs exactly one of --preset NAME or --checkpoint DIR"),
+    };
+    let outcome = hls::emit_to_dir(artifacts, src, calib_n, vectors, &out_dir)?;
+    let g = &outcome.graph;
+    println!(
+        "emitted {} ({} layers, {} -> {}) to {}: {}",
+        g.name,
+        g.layers.len(),
+        g.input_dim,
+        g.output_dim,
+        out_dir.display(),
+        outcome
+            .out
+            .files
+            .iter()
+            .map(|(n, c)| format!("{n} ({} B)", c.len()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    if check {
+        let fw = outcome.out.file("firmware.cpp").expect("firmware.cpp emitted");
+        let ops = hgq::hls::audit::crosscheck(g, fw)?;
+        for o in &ops {
+            println!(
+                "  audit layer {} ({}): {} csd ops, {} dsp mults, {} tree ops, depth {} \
+                 == resource model",
+                o.layer, o.kind, o.csd_ops, o.dsp_mults, o.tree_ops, o.tree_levels
+            );
+        }
+        println!("  {}", hls::compile_and_run(&out_dir)?);
+        println!("check PASSED: emitted firmware is bit-identical to Emulator::infer");
     }
     Ok(())
 }

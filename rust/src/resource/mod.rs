@@ -82,6 +82,42 @@ pub fn csd_nonzero_digits(m: i64) -> u32 {
     ((x.wrapping_mul(3)) ^ x).count_ones()
 }
 
+/// Canonical signed-digit (NAF) decomposition of `|m|`: the digit
+/// positions and signs of the minimal signed-binary form, ascending by
+/// position. `|m| == Σ sign · 2^pos`, no two digits are adjacent, and
+/// the most significant digit is always `+1`. The HLS emitter turns
+/// each digit into one shifted add/subtract of a constant multiplier;
+/// [`csd_nonzero_digits`] is exactly `csd_digits(m).len()`.
+///
+/// ```
+/// use hgq::resource::csd_digits;
+///
+/// assert_eq!(csd_digits(15), vec![(0, -1), (4, 1)]); // 15 = 16 - 1
+/// assert_eq!(csd_digits(-15), vec![(0, -1), (4, 1)]); // digits of |m|
+/// assert_eq!(csd_digits(0), vec![]);
+/// ```
+pub fn csd_digits(m: i64) -> Vec<(u32, i8)> {
+    // u128 working copy: the `+1` carry of a run of ones can exceed the
+    // magnitude's own bit length without wrapping
+    let mut x = m.unsigned_abs() as u128;
+    let mut digits = Vec::new();
+    let mut pos = 0u32;
+    while x != 0 {
+        if x & 1 == 1 {
+            if x & 0b11 == 0b11 {
+                digits.push((pos, -1i8)); // run of ones: -1 here, carry up
+                x += 1;
+            } else {
+                digits.push((pos, 1i8));
+                x -= 1;
+            }
+        }
+        x >>= 1;
+        pos += 1;
+    }
+    digits
+}
+
 /// Reference bit-serial CSD recoder (kept for the property test that
 /// pins the closed form to the textbook algorithm).
 #[cfg(test)]
@@ -425,6 +461,29 @@ mod tests {
         check("csd-naf-identity", 500, |rng| {
             let m = (rng.next_u64() & 0x3FFF_FFFF_FFFF) as i64;
             prop_assert_eq!(csd_nonzero_digits(m), csd_nonzero_digits_serial(m));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_csd_digits_reconstruct_and_count() {
+        check("csd-digits", 500, |rng| {
+            let sign = if rng.bernoulli(0.5) { -1 } else { 1 };
+            let m = (rng.next_u64() & 0x3FFF_FFFF_FFFF) as i64 * sign;
+            let digits = csd_digits(m);
+            // the digit list IS the CSD form: count matches the closed form
+            prop_assert_eq!(digits.len() as u32, csd_nonzero_digits(m));
+            // and it reconstructs |m| exactly
+            let sum: i128 = digits.iter().map(|&(p, s)| (s as i128) << p).sum();
+            prop_assert_eq!(sum, m.unsigned_abs() as i128);
+            // non-adjacency (the defining NAF property) + ascending order
+            for w in digits.windows(2) {
+                prop_assert!(w[1].0 > w[0].0 + 1, "adjacent digits in {digits:?} for m={m}");
+            }
+            // leading digit is always +1 (|m| > 0 forces it)
+            if let Some(&(_, s)) = digits.last() {
+                prop_assert_eq!(s, 1i8);
+            }
             Ok(())
         });
     }

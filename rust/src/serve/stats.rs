@@ -313,6 +313,52 @@ mod tests {
     }
 
     #[test]
+    fn percentiles_at_zero_one_two_completions() {
+        // 0 completions: an idle lane reports clean zeros, not NaN/panic
+        let s = ModelStats::new(4);
+        let snap = s.snapshot();
+        assert_eq!(snap.window, 0);
+        assert_eq!((snap.p50_us, snap.p99_us), (0.0, 0.0));
+        assert_eq!((snap.mean_us, snap.max_us), (0.0, 0.0));
+
+        // 1 completion: every percentile is that single sample
+        s.record_batch(1, 1_000, &[8_000]);
+        let snap = s.snapshot();
+        assert_eq!(snap.window, 1);
+        assert_eq!((snap.p50_us, snap.p99_us), (8.0, 8.0));
+
+        // 2 completions: nearest-rank rounds (len-1)*q = 0.5 away from
+        // zero, so BOTH p50 and p99 report the larger sample — the
+        // conservative direction for an SLO readout
+        s.record_batch(1, 1_000, &[2_000]);
+        let snap = s.snapshot();
+        assert_eq!(snap.window, 2);
+        assert_eq!((snap.p50_us, snap.p99_us), (8.0, 8.0));
+        assert_eq!(snap.mean_us, 5.0);
+    }
+
+    #[test]
+    fn batch_fill_histogram_boundaries() {
+        let s = ModelStats::new(3);
+        // exactly-full batch lands in the top bucket, not past it
+        s.record_batch(3, 1, &[1]);
+        assert_eq!(s.snapshot().batch_hist, vec![0, 0, 1]);
+        // over-full fill (pipeline raced past max_batch) clamps into the
+        // top bucket instead of indexing out of bounds
+        s.record_batch(4, 1, &[1]);
+        s.record_batch(1_000_000, 1, &[1]);
+        assert_eq!(s.snapshot().batch_hist, vec![0, 0, 3]);
+        // a degenerate empty flush is clamped up into the fill-1 bucket
+        // (counted as a batch; contributes no latency samples)
+        s.record_batch(0, 1, &[]);
+        let snap = s.snapshot();
+        assert_eq!(snap.batch_hist, vec![1, 0, 3]);
+        assert_eq!(snap.batches, 4);
+        assert_eq!(snap.completed, 3, "empty flush completes no requests");
+        assert_eq!(snap.window, 3);
+    }
+
+    #[test]
     fn snapshot_json_shape() {
         let s = ModelStats::new(2);
         s.accept();

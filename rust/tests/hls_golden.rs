@@ -1,0 +1,102 @@
+//! Per-preset golden emission fixtures (ARCHITECTURE.md §HLS backend):
+//! for every built-in preset, emit firmware at a pinned calibration
+//! size and testbench seed, then pin down
+//!
+//! * a per-file FNV-1a digest of the emitted sources, and
+//! * the golden I/O vectors (input f32 / output f64 bit patterns from
+//!   `Emulator::infer` — the exact values `tb.cpp` embeds),
+//!
+//! against `tests/fixtures/hls/<preset>.golden`. Any unintended change
+//! to emitted firmware — operator selection, widths, formatting, vector
+//! draws — shows up as a digest drift here before it ever reaches a
+//! synthesis flow. The fixtures are self-bootstrapping: a missing file
+//! is written on first run (commit it); set `HGQ_UPDATE_FIXTURES=1` to
+//! regenerate after an intentional emitter change.
+//!
+//! The same pass proves, per preset, the other emission invariants:
+//! byte-identical re-emission from a fresh registry, and the static
+//! operator audit (emitted CSD/DSP/tree op counts == resource model).
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use hgq::firmware::emulator::Emulator;
+use hgq::hls::{self, audit, EmitSource, EMIT_SEED};
+use hgq::serve::Registry;
+
+const PRESETS: [&str; 5] = ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"];
+const CALIB_N: usize = 64;
+const N_VEC: usize = 2;
+
+fn fixture_path(preset: &str) -> PathBuf {
+    Path::new("tests/fixtures/hls").join(format!("{preset}.golden"))
+}
+
+/// Render the golden record: one digest line per emitted file, then one
+/// line per testbench vector with the exact bit patterns.
+fn golden_record(emitted: &hls::Emitted, g: &hgq::firmware::Graph, x: &[f32]) -> String {
+    let mut rec = String::new();
+    for (name, contents) in &emitted.files {
+        let _ = writeln!(rec, "file {name} {:016x}", hls::fnv1a64(contents.as_bytes()));
+    }
+    let mut em = Emulator::new(g);
+    let mut y = vec![0.0f64; g.output_dim];
+    for s in 0..N_VEC {
+        let xs = &x[s * g.input_dim..(s + 1) * g.input_dim];
+        em.infer(xs, &mut y).expect("emulator golden run");
+        let _ = write!(rec, "vec {s} x ");
+        for v in xs {
+            let _ = write!(rec, "{:08x}", v.to_bits());
+        }
+        let _ = write!(rec, " y ");
+        for v in &y {
+            let _ = write!(rec, "{:016x}", v.to_bits());
+        }
+        rec.push('\n');
+    }
+    rec
+}
+
+#[test]
+fn preset_emissions_match_golden_fixtures() {
+    for preset in PRESETS {
+        // the exact path `hgq emit-hls --preset` takes
+        let outcome =
+            hls::emit_source(Path::new("artifacts"), EmitSource::Preset(preset), CALIB_N, N_VEC)
+                .unwrap_or_else(|e| panic!("{preset}: emit failed: {e:#}"));
+        let g = &outcome.graph;
+        assert_eq!(g.name, preset, "preset alias must resolve to itself");
+
+        // re-derive the vectors and emit directly: a fresh registry and
+        // a fresh data draw must reproduce the emission byte-for-byte
+        let reg = Registry::new("artifacts").with_calib_samples(CALIB_N);
+        let g2 = reg.get(preset).unwrap_or_else(|e| panic!("{preset}: deploy failed: {e:#}"));
+        let splits = hgq::data::try_splits_for(preset, EMIT_SEED, 1, N_VEC)
+            .unwrap_or_else(|e| panic!("{preset}: data draw failed: {e:#}"));
+        let x = &splits.test.x[..N_VEC * g.input_dim];
+        let again = hls::emit(&g2, x).unwrap_or_else(|e| panic!("{preset}: re-emit: {e:#}"));
+        assert!(outcome.out == again, "{preset}: re-emission is not byte-identical");
+
+        // static operator audit: emitted CSD/DSP/tree counts must equal
+        // the resource model's predictions for this preset
+        let fw = outcome.out.file("firmware.cpp").expect("firmware.cpp emitted");
+        let ops = audit::crosscheck(g, fw)
+            .unwrap_or_else(|e| panic!("{preset}: operator audit failed: {e:#}"));
+        assert!(!ops.is_empty(), "{preset}: no MAC layers audited");
+
+        let got = golden_record(&outcome.out, g, x);
+        let fx = fixture_path(preset);
+        let update = std::env::var("HGQ_UPDATE_FIXTURES").is_ok_and(|v| !v.is_empty());
+        if update || !fx.exists() {
+            std::fs::create_dir_all(fx.parent().unwrap()).expect("fixture dir");
+            std::fs::write(&fx, &got).expect("write golden fixture");
+        }
+        let want = std::fs::read_to_string(&fx).expect("read golden fixture");
+        assert!(
+            got == want,
+            "{preset}: emission drifted from {} — if the emitter change is intentional, \
+             regenerate with HGQ_UPDATE_FIXTURES=1 and commit the new fixture",
+            fx.display()
+        );
+    }
+}

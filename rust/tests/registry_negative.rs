@@ -117,6 +117,81 @@ fn unknown_model_name_in_info_is_a_clean_error() {
 }
 
 #[test]
+fn emit_hls_on_corrupt_checkpoints_fails_cleanly_and_writes_nothing() {
+    // the HLS emitter validates the checkpoint through the same
+    // registry build path before generating anything: every corruption
+    // in the matrix above must surface a clean `Err` AND must not leave
+    // a partial output directory behind (all-or-nothing emission)
+    use hgq::hls::{emit_to_dir, EmitSource};
+    let base = tmpdir("emitneg");
+    type Setup = fn(&PathBuf);
+    let cases: Vec<(&str, Setup)> = vec![
+        ("missing", |_d| {}),
+        ("badjson", |d| {
+            std::fs::create_dir_all(d).unwrap();
+            std::fs::write(d.join("info.json"), "{not json").unwrap();
+            std::fs::write(d.join("state.bin"), 0f32.to_le_bytes()).unwrap();
+        }),
+        ("nostate", |d| {
+            checkpoint::save(d, &info("jets_pp"), &[1.0, 2.0]).unwrap();
+            std::fs::remove_file(d.join("state.bin")).unwrap();
+        }),
+        ("trunc", |d| {
+            checkpoint::save(d, &info("jets_pp"), &[1.0, 2.0, 3.0]).unwrap();
+            std::fs::write(d.join("state.bin"), [0u8; 7]).unwrap();
+        }),
+        // dims disagreeing with info.json: the satellite case — a
+        // self-consistent file pair whose state cannot be the model
+        ("shortstate", |d| {
+            checkpoint::save(d, &info("jets_pp"), &[0.0f32; 8]).unwrap();
+        }),
+        ("unkmodel", |d| {
+            checkpoint::save(d, &info("resnet50"), &[0.0f32; 4]).unwrap();
+        }),
+    ];
+    for (tag, setup) in cases {
+        let ckpt = base.join(format!("ckpt_{tag}"));
+        setup(&ckpt);
+        let out = base.join(format!("out_{tag}"));
+        let err = emit_to_dir(
+            std::path::Path::new("artifacts"),
+            EmitSource::Checkpoint(&ckpt),
+            8,
+            2,
+            &out,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(!msg.is_empty());
+        if tag == "shortstate" {
+            assert!(msg.contains("state size"), "dims error should say why: {msg}");
+        }
+        assert!(!out.exists(), "failed emit ({tag}) must write nothing, got dir: {msg}");
+    }
+
+    // positive control: the same path on an intact checkpoint emits the
+    // full source set, so the matrix above is not vacuously passing
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, std::path::Path::new("artifacts"), "jets_pp").unwrap();
+    let good = base.join("ckpt_good");
+    checkpoint::save(&good, &info("jets_pp"), &mr.init_state()).unwrap();
+    let out = base.join("out_good");
+    let outcome = emit_to_dir(
+        std::path::Path::new("artifacts"),
+        EmitSource::Checkpoint(&good),
+        8,
+        2,
+        &out,
+    )
+    .unwrap();
+    assert_eq!(outcome.graph.name, "jets_pp");
+    for f in ["firmware.h", "firmware.cpp", "tb.cpp", "manifest.json"] {
+        assert!(out.join(f).is_file(), "missing emitted file {f}");
+    }
+    std::fs::remove_dir_all(&base).unwrap();
+}
+
+#[test]
 fn failed_deploy_keeps_a_previous_good_graph_servable() {
     let d = tmpdir("goodthenbad");
     let rt = Runtime::new().unwrap();
