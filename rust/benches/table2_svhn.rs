@@ -38,8 +38,8 @@ fn main() {
         .filter_map(|s| s.trim().parse().ok())
         .collect();
 
-    let mr = ModelRuntime::load(&rt, &artifacts, p.model).expect("load");
-    let splits = splits_for(p.model, 1, p.n_train, p.n_eval);
+    let mr = ModelRuntime::load(&rt, &artifacts, &p.model).expect("load");
+    let splits = splits_for(&p.model, 1, p.n_train, p.n_eval);
     let b = mr.meta.batch;
     let mut xbuf = vec![0.0f32; b * mr.meta.input_dim()];
     let mut ybuf = vec![0i32; b];
@@ -55,7 +55,7 @@ fn main() {
     let mut base_ns = 0.0f64;
     for &t in &thread_grid {
         let rt_t = Runtime::new().unwrap().with_threads(t);
-        let mr_t = ModelRuntime::load(&rt_t, &artifacts, p.model).expect("load");
+        let mr_t = ModelRuntime::load(&rt_t, &artifacts, &p.model).expect("load");
         let state = mr_t.init_state();
         let s = bench_budget(&format!("svhn train_step fwd+bwd threads={t}"), 6000, 3, || {
             black_box(

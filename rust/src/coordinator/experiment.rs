@@ -1,7 +1,13 @@
-//! Experiment presets mirroring the paper's evaluation protocol,
-//! rescaled to the CPU-PJRT budget (the paper trains 12k-600k epochs on
-//! GPU; the shape of the protocol — a single run with a log-ramped β,
-//! Pareto checkpointing, N table rows — is preserved exactly).
+//! Experiment protocols mirroring the paper's evaluation, rescaled to
+//! the CPU-PJRT budget (the paper trains 12k-600k epochs on GPU; the
+//! shape of the protocol — a single run with a log-ramped β, Pareto
+//! checkpointing, N table rows — is preserved exactly).
+//!
+//! Every protocol comes from a `.hgq` `experiment` block: the builtin
+//! tasks read the blocks shipped in `examples/models/*.hgq` (embedded
+//! via [`crate::nn::presets`]), and `try_preset` also accepts a `.hgq`
+//! file path directly, so user architectures run the same sweep with
+//! their own hyperparameters.
 
 use anyhow::{bail, Result};
 
@@ -9,14 +15,17 @@ use super::deploy::{deploy, DeployReport};
 use super::schedule::BetaSchedule;
 use super::trainer::{train, TrainConfig, TrainOutcome};
 use crate::baselines;
-use crate::data::{try_splits_for, Splits};
+use crate::data::{try_splits_for_meta, Splits};
+use crate::dsl::{BetaSpec, HgqFile};
+use crate::nn::presets;
 use crate::runtime::{ModelRuntime, Runtime};
 
 /// One task's experiment protocol: model, budget, β ramp, table shape.
 #[derive(Debug, Clone)]
 pub struct Preset {
-    /// model name (per-element granularity variant)
-    pub model: &'static str,
+    /// model key: a builtin preset name (per-element granularity
+    /// variant) or a `.hgq` file path
+    pub model: String,
     /// default epoch budget
     pub epochs: usize,
     /// Adam learning rate
@@ -36,56 +45,26 @@ pub struct Preset {
     /// table rows to deploy from the Pareto front (HGQ-1..N)
     pub rows: usize,
     /// uniform-baseline fractional bit settings (Q*/Qf* rows)
-    pub uniform_bits: &'static [f32],
+    pub uniform_bits: Vec<f32>,
 }
 
-/// β endpoints follow the paper (§V.B-D); epochs/lr are CPU-scaled.
-/// Errors on an unknown task name — the CLI surfaces this as a clean
-/// `error: …` message instead of a panic.
+/// The experiment protocol for a task alias (`jets` | `muon` | `svhn`,
+/// read from the shipped preset's `experiment` block) or a `.hgq` file
+/// path (read from that file's own block; unset fields fall back to
+/// [`Preset::from_hgq`] defaults). Errors on an unknown task name — the
+/// CLI surfaces this as a clean `error: …` message instead of a panic.
 pub fn try_preset(task: &str) -> Result<Preset> {
-    let p = match task {
-        "jets" => Preset {
-            model: "jets_pp",
-            epochs: 60,
-            lr: 3e-3,
-            f_lr: 8.0,
-            gamma: 2e-6,
-            beta_from: 1e-6,
-            beta_to: 1e-3,
-            n_train: 16384,
-            n_eval: 4096,
-            rows: 6,
-            uniform_bits: &[6.0, 4.0],
-        },
-        "muon" => Preset {
-            model: "muon_pp",
-            epochs: 40,
-            lr: 2e-3,
-            f_lr: 8.0,
-            gamma: 2e-6,
-            beta_from: 3e-6,
-            beta_to: 6e-4,
-            n_train: 16384,
-            n_eval: 4096,
-            rows: 6,
-            uniform_bits: &[8.0, 7.0, 6.0, 5.0, 4.0, 3.0],
-        },
-        "svhn" => Preset {
-            model: "svhn_stream",
-            epochs: 25,
-            lr: 2e-3,
-            f_lr: 6.0,
-            gamma: 2e-6,
-            beta_from: 1e-7,
-            beta_to: 1e-4,
-            n_train: 8192,
-            n_eval: 2048,
-            rows: 6,
-            uniform_bits: &[7.0],
-        },
-        other => bail!("unknown task '{other}' (expected jets|muon|svhn)"),
+    if task.ends_with(".hgq") {
+        let f = crate::dsl::parse_file(std::path::Path::new(task))?;
+        return Ok(Preset::from_hgq(task.to_string(), &f));
+    }
+    let model = match task {
+        "jets" => "jets_pp",
+        "muon" => "muon_pp",
+        "svhn" => "svhn_stream",
+        other => bail!("unknown task '{other}' (expected jets|muon|svhn or a .hgq file path)"),
     };
-    Ok(p)
+    Ok(Preset::from_hgq(model.to_string(), &presets::load(model)?))
 }
 
 /// Infallible convenience wrapper over [`try_preset`] for benches and
@@ -96,6 +75,33 @@ pub fn preset(task: &str) -> Preset {
 }
 
 impl Preset {
+    /// Build a protocol from a parsed `.hgq` file's `experiment` block.
+    /// `model` is the key the runtime loads (a preset name or the file
+    /// path itself). Unset fields take conservative defaults: 30
+    /// epochs, lr 0.002, f_lr 8, γ 2e-6, β ramp 1e-6 → 1e-3, 8192/2048
+    /// samples, 6 rows, uniform baseline at 6 bits.
+    pub fn from_hgq(model: String, f: &HgqFile) -> Preset {
+        let e = f.experiment.clone().unwrap_or_default();
+        let (beta_from, beta_to) = match e.beta {
+            Some(BetaSpec::Const(b)) => (b, b),
+            Some(BetaSpec::Ramp { from, to }) => (from, to),
+            None => (1e-6, 1e-3),
+        };
+        Preset {
+            model,
+            epochs: e.epochs.unwrap_or(30),
+            lr: e.lr.unwrap_or(2e-3) as f32,
+            f_lr: e.f_lr.unwrap_or(8.0) as f32,
+            gamma: e.gamma.unwrap_or(2e-6) as f32,
+            beta_from,
+            beta_to,
+            n_train: e.n_train.unwrap_or(8192),
+            n_eval: e.n_eval.unwrap_or(2048),
+            rows: e.rows.unwrap_or(6),
+            uniform_bits: e.uniform_bits.unwrap_or_else(|| vec![6.0]),
+        }
+    }
+
     /// The paper-protocol [`TrainConfig`] for this preset (log β ramp,
     /// per-epoch validation + stat resets).
     pub fn train_config(&self) -> TrainConfig {
@@ -122,8 +128,8 @@ pub fn run_hgq_sweep(
     epochs_override: Option<usize>,
     verbose: bool,
 ) -> Result<(ModelRuntime, Splits, TrainOutcome, Vec<DeployReport>)> {
-    let mr = ModelRuntime::load(rt, artifacts, p.model)?;
-    let splits = try_splits_for(p.model, 1, p.n_train, p.n_eval)?;
+    let mr = ModelRuntime::load(rt, artifacts, &p.model)?;
+    let splits = try_splits_for_meta(&mr.meta, 1, p.n_train, p.n_eval)?;
     let mut cfg = p.train_config();
     if let Some(e) = epochs_override {
         cfg.epochs = e;
@@ -151,6 +157,22 @@ pub fn run_hgq_sweep(
     Ok((mr, splits, outcome, reports))
 }
 
+/// The layer-granularity twin of a per-element preset model (`jets_pp`
+/// → `jets_lw`): the Q*/LW baselines train scalar bitwidth tensors. A
+/// `.hgq` file path has no such naming convention, so baselines bail
+/// cleanly for file-keyed protocols.
+fn layerwise_variant(p: &Preset) -> Result<String> {
+    if p.model.ends_with(".hgq") {
+        bail!(
+            "baselines need a layer-granularity twin model (the `_pp`/`_lw` naming \
+             convention) and '{}' is a .hgq file; write a layer-granular variant of the \
+             model and sweep it directly, or skip baselines with --no-baselines",
+            p.model
+        );
+    }
+    Ok(p.model.replace("_pp", "_lw"))
+}
+
 /// Uniform fixed-bitwidth QAT baseline (Q*/Qf* rows): bitwidths preset
 /// and frozen, same training budget.
 pub fn run_uniform_baseline(
@@ -162,9 +184,9 @@ pub fn run_uniform_baseline(
 ) -> Result<DeployReport> {
     // layer-wise artifact: scalar bitwidth tensors (the Q* baselines are
     // homogeneous per layer)
-    let lw_model: String = p.model.replace("_pp", "_lw");
+    let lw_model = layerwise_variant(p)?;
     let mr = ModelRuntime::load(rt, artifacts, &lw_model)?;
-    let splits = try_splits_for(&lw_model, 1, p.n_train, p.n_eval)?;
+    let splits = try_splits_for_meta(&mr.meta, 1, p.n_train, p.n_eval)?;
     let mut init = mr.init_state();
     baselines::set_uniform_bits(&mr.meta, &mut init, bits, bits);
     let mut cfg = p.train_config();
@@ -199,9 +221,9 @@ pub fn run_layerwise_baseline(
     p: &Preset,
     epochs_override: Option<usize>,
 ) -> Result<Vec<DeployReport>> {
-    let lw_model: String = p.model.replace("_pp", "_lw");
+    let lw_model = layerwise_variant(p)?;
     let mr = ModelRuntime::load(rt, artifacts, &lw_model)?;
-    let splits = try_splits_for(&lw_model, 1, p.n_train, p.n_eval)?;
+    let splits = try_splits_for_meta(&mr.meta, 1, p.n_train, p.n_eval)?;
     let mut cfg = p.train_config();
     if let Some(e) = epochs_override {
         cfg.epochs = e;
@@ -220,4 +242,52 @@ pub fn run_layerwise_baseline(
         reports.push(rep);
     }
     Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_protocols_match_the_paper_constants() {
+        // pinned against the pre-DSL compiled-in table (§V.B-D)
+        let p = try_preset("jets").unwrap();
+        assert_eq!(p.model, "jets_pp");
+        assert_eq!(p.epochs, 60);
+        assert_eq!(p.lr, 3e-3);
+        assert_eq!(p.f_lr, 8.0);
+        assert_eq!(p.gamma, 2e-6);
+        assert_eq!(p.beta_from, 1e-6);
+        assert_eq!(p.beta_to, 1e-3);
+        assert_eq!((p.n_train, p.n_eval, p.rows), (16384, 4096, 6));
+        assert_eq!(p.uniform_bits, vec![6.0, 4.0]);
+        let m = try_preset("muon").unwrap();
+        assert_eq!(m.model, "muon_pp");
+        assert_eq!((m.epochs, m.rows), (40, 6));
+        assert_eq!((m.beta_from, m.beta_to), (3e-6, 6e-4));
+        assert_eq!(m.uniform_bits, vec![8.0, 7.0, 6.0, 5.0, 4.0, 3.0]);
+        let s = try_preset("svhn").unwrap();
+        assert_eq!(s.model, "svhn_stream");
+        assert_eq!((s.epochs, s.f_lr), (25, 6.0));
+        assert_eq!((s.beta_from, s.beta_to), (1e-7, 1e-4));
+        assert_eq!((s.n_train, s.n_eval), (8192, 2048));
+        assert_eq!(s.uniform_bits, vec![7.0]);
+    }
+
+    #[test]
+    fn unknown_task_is_a_clean_error() {
+        let err = try_preset("cifar").unwrap_err();
+        assert!(format!("{err}").contains("unknown task"), "{err}");
+    }
+
+    #[test]
+    fn hgq_path_reads_its_own_experiment_block() {
+        let p = try_preset("../examples/models/mlp_synth.hgq").unwrap();
+        assert_eq!(p.model, "../examples/models/mlp_synth.hgq");
+        assert_eq!(p.epochs, 8);
+        assert_eq!((p.n_train, p.n_eval, p.rows), (4096, 1024, 4));
+        // no _lw twin for arbitrary files: baselines refuse cleanly
+        let err = layerwise_variant(&p).unwrap_err();
+        assert!(format!("{err}").contains(".hgq"), "{err}");
+    }
 }

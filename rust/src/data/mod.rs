@@ -7,8 +7,11 @@
 pub mod jets;
 pub mod muon;
 pub mod svhn;
+pub mod synth;
 
 use anyhow::{bail, Result};
+
+use crate::nn::ModelMeta;
 
 /// A deterministic, fully-materialized dataset split.
 #[derive(Debug, Clone)]
@@ -74,6 +77,86 @@ pub fn try_splits_for(model: &str, seed: u64, n_train: usize, n_eval: usize) -> 
     Ok(Splits { train: gen(1, n_train)?, val: gen(2, n_eval)?, test: gen(3, n_eval)? })
 }
 
+/// Generate splits from a model's *meta* rather than its name: the
+/// `dataset` field picks the generator, so arbitrary `.hgq` models work
+/// without encoding the task in their name. The three fixed datasets
+/// check that the model's geometry actually matches theirs (a 12-input
+/// model can't train on 16-feature jets); `synth` adapts to any dims.
+pub fn try_splits_for_meta(
+    meta: &ModelMeta,
+    seed: u64,
+    n_train: usize,
+    n_eval: usize,
+) -> Result<Splits> {
+    splits_from_keys(
+        &meta.name,
+        &meta.dataset,
+        &meta.task,
+        meta.input_dim(),
+        meta.output_dim,
+        seed,
+        n_train,
+        n_eval,
+    )
+}
+
+/// [`try_splits_for_meta`] for a deployed firmware graph — the serving
+/// path holds a [`crate::firmware::Graph`] (which carries `dataset` and
+/// `task` from the IR), not the training-time meta.
+pub fn try_splits_for_graph(
+    g: &crate::firmware::Graph,
+    seed: u64,
+    n_train: usize,
+    n_eval: usize,
+) -> Result<Splits> {
+    splits_from_keys(&g.name, &g.dataset, &g.task, g.input_dim, g.output_dim, seed, n_train, n_eval)
+}
+
+#[allow(clippy::too_many_arguments)] // private dispatch core behind the two keyed wrappers
+fn splits_from_keys(
+    name: &str,
+    dataset: &str,
+    task: &str,
+    din: usize,
+    dout: usize,
+    seed: u64,
+    n_train: usize,
+    n_eval: usize,
+) -> Result<Splits> {
+    let check = |feat: usize, want_task: &str, out: usize| -> Result<()> {
+        if din != feat || task != want_task || dout != out {
+            bail!(
+                "model '{name}' declares dataset '{dataset}' ({feat} features, {want_task}, \
+                 {out} outputs) but has {din} inputs, task '{task}', {dout} outputs"
+            );
+        }
+        Ok(())
+    };
+    let gen = |split_tag: u64, n: usize| -> Result<Dataset> {
+        let s = seed ^ (split_tag << 32);
+        Ok(match dataset {
+            "jets" => {
+                check(jets::FEAT, "cls", jets::CLASSES)?;
+                jets::generate(s, n)
+            }
+            "muon" => {
+                check(muon::FEAT, "reg", 1)?;
+                muon::generate(s, n)
+            }
+            "svhn" => {
+                check(svhn::FEAT, "cls", svhn::CLASSES)?;
+                svhn::generate(s, n)
+            }
+            "synth" => synth::generate(s, n, din, dout, task == "cls"),
+            other => bail!(
+                "model '{name}' declares unknown dataset '{other}' \
+                 (expected jets / muon / svhn / synth)"
+            ),
+        })
+    };
+    Ok(Splits { train: gen(1, n_train)?, val: gen(2, n_eval)?, test: gen(3, n_eval)? })
+}
+
 /// Infallible convenience wrapper over [`try_splits_for`] for tests,
 /// benches and examples with known-good model names; panics with the
 /// same message on an unknown task. Fallible callers (the CLI, the
@@ -102,6 +185,46 @@ mod tests {
     fn unknown_task_is_a_clean_error() {
         let err = try_splits_for("resnet_pp", 1, 4, 4).unwrap_err();
         assert!(format!("{err}").contains("unknown task"), "{err}");
+    }
+
+    fn meta_from(src: &str) -> ModelMeta {
+        crate::dsl::parse_str(src, "m.hgq").unwrap().model.build_meta().unwrap()
+    }
+
+    #[test]
+    fn meta_splits_adapt_synth_to_model_dims() {
+        let meta = meta_from(
+            "model \"m\" {\n  task cls\n  dataset synth\n  batch 4\n  input [12] signed\n  dense d0 { units 3 }\n}\n",
+        );
+        let s = try_splits_for_meta(&meta, 7, 32, 16).unwrap();
+        assert_eq!(s.train.feat_dim, 12);
+        assert_eq!(s.train.n, 32);
+        assert_eq!(s.val.n, 16);
+        assert!(s.train.is_classification());
+        assert!(s.train.y_cls.iter().all(|&c| (0..3).contains(&c)));
+    }
+
+    #[test]
+    fn meta_splits_reject_geometry_mismatch() {
+        let meta = meta_from(
+            "model \"m\" {\n  task cls\n  dataset jets\n  batch 4\n  input [12] signed\n  dense d0 { units 5 }\n}\n",
+        );
+        let err = try_splits_for_meta(&meta, 1, 4, 4).unwrap_err();
+        assert!(format!("{err}").contains("16 features"), "{err}");
+        let meta = meta_from(
+            "model \"m\" {\n  task cls\n  dataset mnist\n  batch 4\n  input [12] signed\n  dense d0 { units 5 }\n}\n",
+        );
+        let err = try_splits_for_meta(&meta, 1, 4, 4).unwrap_err();
+        assert!(format!("{err}").contains("unknown dataset"), "{err}");
+    }
+
+    #[test]
+    fn meta_splits_match_name_splits_for_presets() {
+        let meta = crate::nn::presets::spec("jets_pp").unwrap().build_meta().unwrap();
+        let by_meta = try_splits_for_meta(&meta, 7, 16, 8).unwrap();
+        let by_name = splits_for("jets_pp", 7, 16, 8);
+        assert_eq!(by_meta.train.x, by_name.train.x);
+        assert_eq!(by_meta.test.y_cls, by_name.test.y_cls);
     }
 
     #[test]

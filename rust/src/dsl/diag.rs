@@ -1,0 +1,178 @@
+//! Span-carrying diagnostics: the `.hgq` codemap.
+//!
+//! Every parse or lowering error points at the offending source range
+//! and renders rustc-style: message, `file:line:col` locus, the source
+//! line with a caret underline, and an optional `help:` note (used for
+//! "did you mean" keyword suggestions).
+
+/// A byte range inside the source text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// byte offset of the first byte
+    pub start: usize,
+    /// byte offset one past the last byte
+    pub end: usize,
+}
+
+impl Span {
+    /// Span covering `[start, end)`.
+    pub fn new(start: usize, end: usize) -> Span {
+        Span { start, end: end.max(start) }
+    }
+}
+
+/// A rendered-to-source parse/lowering error: everything needed to
+/// print a caret-underlined excerpt without keeping the source alive.
+///
+/// ```
+/// let src = "model \"m\" {\n  tsak cls\n}\n";
+/// let err = hgq::dsl::parse_str(src, "m.hgq").unwrap_err();
+/// let text = err.render();
+/// assert!(text.contains("m.hgq:2:3"), "{text}");
+/// assert!(text.contains("did you mean `task`?"), "{text}");
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// one-line problem statement
+    pub msg: String,
+    /// source file name (as given to the parser)
+    pub file: String,
+    /// 1-based line of the span start
+    pub line: usize,
+    /// 1-based column (in characters) of the span start
+    pub col: usize,
+    /// full text of that source line (no trailing newline)
+    pub line_text: String,
+    /// caret count: characters the span covers on that line (>= 1)
+    pub width: usize,
+    /// optional `help:` note (e.g. a keyword suggestion)
+    pub help: Option<String>,
+}
+
+impl Diagnostic {
+    /// Locate `span` inside `src` and build a diagnostic for it.
+    pub(crate) fn at(src: &str, file: &str, span: Span, msg: impl Into<String>) -> Diagnostic {
+        let start = span.start.min(src.len());
+        let line_start = src[..start].rfind('\n').map(|i| i + 1).unwrap_or(0);
+        let line = src[..start].matches('\n').count() + 1;
+        let col = src[line_start..start].chars().count() + 1;
+        let line_end = src[line_start..].find('\n').map(|i| line_start + i).unwrap_or(src.len());
+        let line_text = src[line_start..line_end].to_string();
+        let span_end = span.end.clamp(start, line_end).max(start);
+        let width = src[start..span_end].chars().count().max(1);
+        Diagnostic { msg: msg.into(), file: file.to_string(), line, col, line_text, width, help: None }
+    }
+
+    /// Attach a `help:` note (builder style).
+    pub(crate) fn with_help(mut self, help: impl Into<String>) -> Diagnostic {
+        self.help = Some(help.into());
+        self
+    }
+
+    /// Render the full rustc-style excerpt (no trailing newline, no
+    /// `error:` prefix — callers add their own severity tag):
+    ///
+    /// ```text
+    /// unknown field `tsak` in `model` block
+    ///  --> m.hgq:2:3
+    ///   |
+    /// 2 |   tsak cls
+    ///   |   ^^^^
+    ///   = help: did you mean `task`?
+    /// ```
+    ///
+    /// ```
+    /// let err = hgq::dsl::parse_str("model 42", "m.hgq").unwrap_err();
+    /// let first = err.render().lines().next().unwrap().to_string();
+    /// assert!(first.contains("expected"), "{first}");
+    /// assert!(err.render().contains(" --> m.hgq:1:7"));
+    /// ```
+    pub fn render(&self) -> String {
+        let num = self.line.to_string();
+        let pad = " ".repeat(num.len());
+        let underline_pad: String =
+            self.line_text.chars().take(self.col - 1).map(|c| if c == '\t' { '\t' } else { ' ' }).collect();
+        let carets = "^".repeat(self.width);
+        let mut out = format!(
+            "{msg}\n{pad} --> {file}:{line}:{col}\n{pad}  |\n{num}  | {text}\n{pad}  | {up}{carets}",
+            msg = self.msg,
+            file = self.file,
+            line = self.line,
+            col = self.col,
+            text = self.line_text,
+            up = underline_pad,
+        );
+        if let Some(h) = &self.help {
+            out.push_str(&format!("\n{pad}  = help: {h}"));
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+impl std::error::Error for Diagnostic {}
+
+/// Levenshtein edit distance (small inputs only: keywords).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest candidate within edit distance 2 (ties: first listed) —
+/// the "did you mean" engine.
+pub(crate) fn nearest<'a>(word: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    candidates
+        .iter()
+        .map(|c| (edit_distance(word, c), *c))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, c)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locates_line_and_col() {
+        let src = "abc\ndef ghi\n";
+        let d = Diagnostic::at(src, "f.hgq", Span::new(8, 11), "bad");
+        assert_eq!((d.line, d.col, d.width), (2, 5, 3));
+        assert_eq!(d.line_text, "def ghi");
+        let r = d.render();
+        assert!(r.contains(" --> f.hgq:2:5"), "{r}");
+        assert!(r.contains("2  | def ghi"), "{r}");
+        assert!(r.ends_with("  |     ^^^"), "{r}");
+    }
+
+    #[test]
+    fn span_at_eof_is_in_bounds() {
+        let src = "model";
+        let d = Diagnostic::at(src, "f.hgq", Span::new(5, 5), "unexpected end of file");
+        assert_eq!((d.line, d.col), (1, 6));
+        assert_eq!(d.width, 1);
+    }
+
+    #[test]
+    fn nearest_suggests_within_two_edits() {
+        assert_eq!(nearest("unitz", &["units", "relu"]), Some("units"));
+        assert_eq!(nearest("filtrs", &["kernel", "filters"]), Some("filters"));
+        assert_eq!(nearest("zzzzz", &["units", "relu"]), None);
+    }
+}

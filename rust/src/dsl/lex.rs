@@ -1,0 +1,208 @@
+//! Tokenizer for `.hgq` sources: whitespace-insensitive, `#` and `//`
+//! line comments, spanned tokens.
+
+use super::diag::{Diagnostic, Span};
+
+/// Token kind, borrowing raw text from the source.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum Tok<'a> {
+    /// bare word: keywords and layer names
+    Ident(&'a str),
+    /// double-quoted string (content without the quotes)
+    Str(&'a str),
+    /// numeric literal (raw text; parsed per field)
+    Num(&'a str),
+    /// `{`
+    LBrace,
+    /// `}`
+    RBrace,
+    /// `[`
+    LBracket,
+    /// `]`
+    RBracket,
+    /// `,`
+    Comma,
+    /// end of input
+    Eof,
+}
+
+impl Tok<'_> {
+    /// Human name for "expected X, found Y" messages.
+    pub(crate) fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("`{s}`"),
+            Tok::Str(s) => format!("string \"{s}\""),
+            Tok::Num(s) => format!("number `{s}`"),
+            Tok::LBrace => "`{`".into(),
+            Tok::RBrace => "`}`".into(),
+            Tok::LBracket => "`[`".into(),
+            Tok::RBracket => "`]`".into(),
+            Tok::Comma => "`,`".into(),
+            Tok::Eof => "end of file".into(),
+        }
+    }
+}
+
+/// A token plus its source span.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Token<'a> {
+    pub kind: Tok<'a>,
+    pub span: Span,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`, ending with an [`Tok::Eof`] token. Errors carry the
+/// span of the offending character.
+pub(crate) fn lex<'a>(src: &'a str, file: &str) -> Result<Vec<Token<'a>>, Box<Diagnostic>> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = src[i..].chars().next().expect("in-bounds char");
+        match c {
+            ' ' | '\t' | '\r' | '\n' => i += c.len_utf8(),
+            '#' => i += src[i..].find('\n').unwrap_or(src.len() - i),
+            '/' if src[i..].starts_with("//") => i += src[i..].find('\n').unwrap_or(src.len() - i),
+            '{' | '}' | '[' | ']' | ',' => {
+                let kind = match c {
+                    '{' => Tok::LBrace,
+                    '}' => Tok::RBrace,
+                    '[' => Tok::LBracket,
+                    ']' => Tok::RBracket,
+                    _ => Tok::Comma,
+                };
+                toks.push(Token { kind, span: Span::new(i, i + 1) });
+                i += 1;
+            }
+            '"' => {
+                let start = i;
+                let rest = &src[i + 1..];
+                match rest.find(['"', '\n']) {
+                    Some(j) if rest.as_bytes()[j] == b'"' => {
+                        toks.push(Token {
+                            kind: Tok::Str(&src[i + 1..i + 1 + j]),
+                            span: Span::new(start, i + j + 2),
+                        });
+                        i += j + 2;
+                    }
+                    _ => {
+                        return Err(Box::new(Diagnostic::at(
+                            src,
+                            file,
+                            Span::new(start, start + 1),
+                            "unterminated string: missing closing `\"` before end of line",
+                        )));
+                    }
+                }
+            }
+            c if c.is_ascii_digit() || c == '-' || c == '.' => {
+                let start = i;
+                let mut j = i + 1;
+                while j < bytes.len() {
+                    let b = bytes[j] as char;
+                    if b.is_ascii_digit() || b == '.' || b == 'e' || b == 'E' {
+                        j += 1;
+                    } else if (b == '-' || b == '+')
+                        && matches!(bytes[j - 1], b'e' | b'E')
+                    {
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let raw = &src[start..j];
+                if raw.parse::<f64>().is_err() {
+                    return Err(Box::new(Diagnostic::at(
+                        src,
+                        file,
+                        Span::new(start, j),
+                        format!("malformed number `{raw}`"),
+                    )));
+                }
+                toks.push(Token { kind: Tok::Num(raw), span: Span::new(start, j) });
+                i = j;
+            }
+            c if is_ident_start(c) => {
+                let start = i;
+                let mut j = i + 1;
+                while j < bytes.len() && is_ident_cont(bytes[j] as char) {
+                    j += 1;
+                }
+                toks.push(Token { kind: Tok::Ident(&src[start..j]), span: Span::new(start, j) });
+                i = j;
+            }
+            other => {
+                return Err(Box::new(Diagnostic::at(
+                    src,
+                    file,
+                    Span::new(i, i + other.len_utf8()),
+                    format!("unexpected character `{other}`"),
+                )));
+            }
+        }
+    }
+    toks.push(Token { kind: Tok::Eof, span: Span::new(src.len(), src.len()) });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds<'a>(src: &'a str) -> Vec<Tok<'a>> {
+        lex(src, "t.hgq").unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn tokenizes_mixed_input() {
+        assert_eq!(
+            kinds("model \"m\" { batch 512 input [32, 32, 3] }"),
+            vec![
+                Tok::Ident("model"),
+                Tok::Str("m"),
+                Tok::LBrace,
+                Tok::Ident("batch"),
+                Tok::Num("512"),
+                Tok::Ident("input"),
+                Tok::LBracket,
+                Tok::Num("32"),
+                Tok::Comma,
+                Tok::Num("32"),
+                Tok::Comma,
+                Tok::Num("3"),
+                Tok::RBracket,
+                Tok::RBrace,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_and_floats() {
+        assert_eq!(
+            kinds("lr 0.003 # learning rate\ngamma 2e-6 // surrogate\n"),
+            vec![Tok::Ident("lr"), Tok::Num("0.003"), Tok::Ident("gamma"), Tok::Num("2e-6"), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn unterminated_string_errors_with_span() {
+        let d = lex("model \"oops\n", "t.hgq").unwrap_err();
+        assert!(d.msg.contains("unterminated string"), "{}", d.msg);
+        assert_eq!((d.line, d.col), (1, 7));
+    }
+
+    #[test]
+    fn stray_character_errors() {
+        let d = lex("batch = 5", "t.hgq").unwrap_err();
+        assert!(d.msg.contains("unexpected character `=`"), "{}", d.msg);
+        assert_eq!(d.col, 7);
+    }
+}

@@ -1,0 +1,153 @@
+//! The `.hgq` model-description DSL: textual model + experiment specs
+//! that lower to the existing [`ModelSpec`] → `ModelMeta` →
+//! `ModelIr::build` path (MODELS.md is the full language reference).
+//!
+//! A `.hgq` file holds one `model` block and an optional `experiment`
+//! block. Whitespace is insignificant; `#` and `//` start line
+//! comments:
+//!
+//! ```text
+//! model "jets_pp" {
+//!   task cls              # cls | reg
+//!   dataset jets          # jets | muon | svhn | synth
+//!   batch 512
+//!   input [16] signed
+//!   granularity { weights element  activations element }
+//!   init_bits { weights 2  activations 2 }
+//!   dense d0 { units 64  relu }
+//!   dense d3 { units 5 }
+//! }
+//!
+//! experiment {
+//!   epochs 60  lr 0.003  f_lr 8  gamma 0.000002
+//!   beta ramp 0.000001 to 0.001
+//!   train 16384  eval 4096  rows 6
+//!   uniform_bits [6, 4]
+//! }
+//! ```
+//!
+//! The parser is hand-rolled recursive descent over a spanned token
+//! stream; every syntax or local-semantics error is a [`Diagnostic`]
+//! carrying `file:line:col` plus a caret-underlined source excerpt and,
+//! for near-miss keywords, a "did you mean" suggestion. Structural
+//! validation beyond the local checks (group wiring, state layout,
+//! output dims) stays downstream in `ir/` — the DSL lowers, the IR
+//! validates.
+
+mod diag;
+mod lex;
+mod parse;
+mod print;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::nn::spec::ModelSpec;
+
+pub use diag::{Diagnostic, Span};
+
+/// β-schedule request from an `experiment` block (lowered to
+/// `coordinator::schedule::BetaSchedule` by the experiment runner).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BetaSpec {
+    /// constant β every epoch
+    Const(f64),
+    /// log-space ramp `from` → `to` across the epochs
+    Ramp {
+        /// β at the first epoch
+        from: f64,
+        /// β at the last epoch
+        to: f64,
+    },
+}
+
+/// Training/experiment hyperparameters from an `experiment` block.
+/// Every field is optional in the source; unset fields fall back to
+/// the experiment runner's defaults.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ExperimentSpec {
+    /// training epochs
+    pub epochs: Option<usize>,
+    /// Adam learning rate for weights/biases
+    pub lr: Option<f64>,
+    /// learning-rate multiplier for fractional-bit parameters
+    pub f_lr: Option<f64>,
+    /// Eq. 15 surrogate-gradient γ
+    pub gamma: Option<f64>,
+    /// β schedule (EBOPs regularization strength)
+    pub beta: Option<BetaSpec>,
+    /// training samples
+    pub n_train: Option<usize>,
+    /// evaluation samples
+    pub n_eval: Option<usize>,
+    /// Pareto-front rows kept per sweep
+    pub rows: Option<usize>,
+    /// bitwidths for the uniform-quantization baseline sweep
+    pub uniform_bits: Option<Vec<f32>>,
+}
+
+/// A parsed `.hgq` file: the model spec plus optional experiment
+/// hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HgqFile {
+    /// the `model` block, lowered to a ready-to-build spec
+    pub model: ModelSpec,
+    /// the optional `experiment` block
+    pub experiment: Option<ExperimentSpec>,
+}
+
+/// Parse `.hgq` source text. `file` is the name used in diagnostics
+/// (pass the path you read the text from).
+///
+/// ```
+/// let src = r#"
+/// model "mlp" {
+///   task cls
+///   dataset synth
+///   batch 32
+///   input [8] signed
+///   dense d0 { units 16  relu }
+///   dense d1 { units 4 }
+/// }
+/// "#;
+/// let f = hgq::dsl::parse_str(src, "mlp.hgq").unwrap();
+/// assert_eq!(f.model.name, "mlp");
+/// assert_eq!(f.model.layers.len(), 2);
+/// let meta = f.model.build_meta().unwrap();
+/// assert_eq!(meta.output_dim, 4);
+/// ```
+///
+/// Errors carry spans and render with a caret excerpt:
+///
+/// ```
+/// let err = hgq::dsl::parse_str("model \"m\" {\n  dense d0 { unitz 4 }\n}", "m.hgq").unwrap_err();
+/// assert!(err.render().contains("m.hgq:2:14"));
+/// assert!(err.render().contains("did you mean `units`?"));
+/// ```
+pub fn parse_str(src: &str, file: &str) -> Result<HgqFile, Diagnostic> {
+    parse::parse(src, file).map_err(|b| *b)
+}
+
+/// Read and parse a `.hgq` file from disk. Parse errors are rendered
+/// diagnostics (multi-line, caret excerpt) wrapped in `anyhow::Error`.
+pub fn parse_file(path: &Path) -> Result<HgqFile> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading model file {}", path.display()))?;
+    parse_str(&src, &path.display().to_string()).map_err(anyhow::Error::new)
+}
+
+/// Render a parsed file back to canonical `.hgq` source. The output
+/// re-parses to an identical [`HgqFile`] and printing is a fixpoint —
+/// the round-trip guarantee the preset files and CI smoke step pin.
+///
+/// ```
+/// let src = "model \"m\" { task reg  dataset synth  batch 4  input [4]  dense d0 { units 1 } }";
+/// let f = hgq::dsl::parse_str(src, "m.hgq").unwrap();
+/// let canon = hgq::dsl::to_source(&f);
+/// assert!(canon.starts_with("model \"m\" {\n  task reg\n  dataset synth\n"));
+/// assert_eq!(hgq::dsl::parse_str(&canon, "canon.hgq").unwrap(), f);
+/// ```
+pub fn to_source(f: &HgqFile) -> String {
+    print::print(f)
+}

@@ -1,0 +1,799 @@
+//! Recursive-descent parser for `.hgq` sources, lowering directly to
+//! [`ModelSpec`] (+ optional [`ExperimentSpec`]). Syntax and *local*
+//! semantics (duplicate fields, reserved names, value ranges, layer
+//! shape chaining) are diagnosed here with spans; everything structural
+//! beyond that stays in `ModelSpec::build_meta` → `ModelIr::build`.
+
+use crate::ir::shape;
+use crate::nn::spec::{Granularity, LayerSpec, ModelSpec};
+
+use super::diag::{nearest, Diagnostic, Span};
+use super::lex::{lex, Tok, Token};
+use super::{BetaSpec, ExperimentSpec, HgqFile};
+
+const TOP_ITEMS: &[&str] = &["model", "experiment"];
+const MODEL_FIELDS: &[&str] = &[
+    "task",
+    "dataset",
+    "batch",
+    "input",
+    "granularity",
+    "init_bits",
+    "dense",
+    "conv2d",
+    "maxpool2",
+    "flatten",
+];
+const DENSE_FIELDS: &[&str] = &["units", "relu", "weights", "activations"];
+const CONV_FIELDS: &[&str] = &["kernel", "filters", "relu", "weights", "activations"];
+const GRAN_FIELDS: &[&str] = &["weights", "activations"];
+const EXP_FIELDS: &[&str] =
+    &["epochs", "lr", "f_lr", "gamma", "beta", "train", "eval", "rows", "uniform_bits"];
+
+struct Parser<'a> {
+    src: &'a str,
+    file: &'a str,
+    toks: Vec<Token<'a>>,
+    pos: usize,
+}
+
+type PResult<T> = Result<T, Box<Diagnostic>>;
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Token<'a> {
+        self.toks[self.pos]
+    }
+
+    fn bump(&mut self) -> Token<'a> {
+        let t = self.toks[self.pos];
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, span: Span, msg: impl Into<String>) -> Box<Diagnostic> {
+        Box::new(Diagnostic::at(self.src, self.file, span, msg))
+    }
+
+    fn expect_lbrace(&mut self, what: &str) -> PResult<()> {
+        let t = self.bump();
+        match t.kind {
+            Tok::LBrace => Ok(()),
+            k => Err(self.err(t.span, format!("expected `{{` to open the {what}, found {}", k.describe()))),
+        }
+    }
+
+    /// Next token as an identifier.
+    fn expect_ident(&mut self, what: &str) -> PResult<(&'a str, Span)> {
+        let t = self.bump();
+        match t.kind {
+            Tok::Ident(s) => Ok((s, t.span)),
+            k => Err(self.err(t.span, format!("expected {what}, found {}", k.describe()))),
+        }
+    }
+
+    /// Next token as a non-negative integer with a minimum bound.
+    fn expect_usize(&mut self, field: &str, min: usize) -> PResult<(usize, Span)> {
+        let t = self.bump();
+        let raw = match t.kind {
+            Tok::Num(raw) => raw,
+            k => {
+                return Err(self.err(
+                    t.span,
+                    format!("expected an integer value for `{field}`, found {}", k.describe()),
+                ))
+            }
+        };
+        let v: usize = raw.parse().map_err(|_| {
+            self.err(t.span, format!("`{field}` needs a non-negative integer, got `{raw}`"))
+        })?;
+        if v < min {
+            return Err(self.err(t.span, format!("`{field}` must be >= {min}, got {v}")));
+        }
+        Ok((v, t.span))
+    }
+
+    /// Next token as a float (f64).
+    fn expect_f64(&mut self, field: &str) -> PResult<(f64, Span)> {
+        let t = self.bump();
+        match t.kind {
+            Tok::Num(raw) => Ok((raw.parse::<f64>().expect("lexer validated number"), t.span)),
+            k => Err(self.err(
+                t.span,
+                format!("expected a number for `{field}`, found {}", k.describe()),
+            )),
+        }
+    }
+
+    /// Next token as a strictly positive float.
+    fn expect_pos_f64(&mut self, field: &str) -> PResult<(f64, Span)> {
+        let (v, span) = self.expect_f64(field)?;
+        if v <= 0.0 || !v.is_finite() {
+            return Err(self.err(span, format!("`{field}` must be a positive number, got {v}")));
+        }
+        Ok((v, span))
+    }
+
+    /// Unknown-keyword error with a "did you mean" suggestion when a
+    /// candidate is within edit distance 2.
+    fn unknown(&self, word: &str, span: Span, what: &str, candidates: &[&str]) -> Box<Diagnostic> {
+        let d = Diagnostic::at(self.src, self.file, span, format!("unknown {what} `{word}`"));
+        Box::new(match nearest(word, candidates) {
+            Some(c) => d.with_help(format!("did you mean `{c}`?")),
+            None => d.with_help(format!("expected one of: {}", candidates.join(", "))),
+        })
+    }
+
+    /// Reject a second occurrence of a block field.
+    fn no_dup(&self, set: bool, field: &str, block: &str, span: Span) -> PResult<()> {
+        if set {
+            return Err(self.err(span, format!("duplicate field `{field}` in {block} block")));
+        }
+        Ok(())
+    }
+
+    /// `[` INT ("," INT)* [","] `]`
+    fn shape_list(&mut self) -> PResult<(Vec<usize>, Span)> {
+        let open = self.bump();
+        if open.kind != Tok::LBracket {
+            return Err(self.err(
+                open.span,
+                format!("expected a shape like `[16]` or `[32, 32, 3]`, found {}", open.kind.describe()),
+            ));
+        }
+        let mut dims = Vec::new();
+        loop {
+            match self.peek().kind {
+                Tok::RBracket => {
+                    let close = self.bump();
+                    if dims.is_empty() {
+                        return Err(self.err(
+                            Span::new(open.span.start, close.span.end),
+                            "shape needs at least one dimension",
+                        ));
+                    }
+                    return Ok((dims, Span::new(open.span.start, close.span.end)));
+                }
+                _ => {
+                    let (d, _) = self.expect_usize("shape dimension", 1)?;
+                    dims.push(d);
+                    if self.peek().kind == Tok::Comma {
+                        self.bump();
+                    }
+                }
+            }
+        }
+    }
+
+    /// `element` | `layer`
+    fn granularity_value(&mut self, field: &str) -> PResult<Granularity> {
+        let t = self.bump();
+        match t.kind {
+            Tok::Ident("element") => Ok(Granularity::Element),
+            Tok::Ident("layer") => Ok(Granularity::Layer),
+            Tok::Ident(other) => Err(self.unknown(other, t.span, "granularity", &["element", "layer"])),
+            k => Err(self.err(
+                t.span,
+                format!("expected `element` or `layer` for `{field}`, found {}", k.describe()),
+            )),
+        }
+    }
+
+    fn model_block(&mut self) -> PResult<ModelSpec> {
+        let name_tok = self.bump();
+        let (name, name_span) = match name_tok.kind {
+            Tok::Str(s) => (s.to_string(), name_tok.span),
+            k => {
+                return Err(self.err(
+                    name_tok.span,
+                    format!("expected a model name string after `model`, found {}", k.describe()),
+                ))
+            }
+        };
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c)) {
+            return Err(self.err(
+                name_span,
+                format!("model name \"{name}\" must be non-empty and use only letters, digits, `.`, `_`, `-`"),
+            ));
+        }
+        self.expect_lbrace("model block")?;
+
+        let mut task: Option<String> = None;
+        let mut dataset: Option<String> = None;
+        let mut batch: Option<usize> = None;
+        let mut input: Option<(Vec<usize>, bool)> = None;
+        let mut gran: Option<(Granularity, Granularity)> = None;
+        let mut init_bits: Option<(f32, f32)> = None;
+        let mut layers: Vec<LayerSpec> = Vec::new();
+        let mut cur_shape: Option<Vec<usize>> = None;
+
+        loop {
+            let t = self.bump();
+            let (word, span) = match t.kind {
+                Tok::RBrace => break,
+                Tok::Ident(w) => (w, t.span),
+                Tok::Eof => {
+                    return Err(self.err(t.span, "unexpected end of file: model block is not closed (missing `}`)"))
+                }
+                k => {
+                    return Err(self.err(
+                        t.span,
+                        format!("expected a model field or layer, found {}", k.describe()),
+                    ))
+                }
+            };
+            match word {
+                "task" => {
+                    self.no_dup(task.is_some(), "task", "model", span)?;
+                    let (v, vs) = self.expect_ident("`cls` or `reg` after `task`")?;
+                    if v != "cls" && v != "reg" {
+                        return Err(self.unknown(v, vs, "task", &["cls", "reg"]));
+                    }
+                    task = Some(v.to_string());
+                }
+                "dataset" => {
+                    self.no_dup(dataset.is_some(), "dataset", "model", span)?;
+                    let (v, _) = self.expect_ident("a dataset name after `dataset`")?;
+                    dataset = Some(v.to_string());
+                }
+                "batch" => {
+                    self.no_dup(batch.is_some(), "batch", "model", span)?;
+                    batch = Some(self.expect_usize("batch", 1)?.0);
+                }
+                "input" => {
+                    self.no_dup(input.is_some(), "input", "model", span)?;
+                    let (dims, _) = self.shape_list()?;
+                    let signed = match self.peek().kind {
+                        Tok::Ident("signed") => {
+                            self.bump();
+                            true
+                        }
+                        Tok::Ident("unsigned") => {
+                            self.bump();
+                            false
+                        }
+                        _ => true,
+                    };
+                    cur_shape = Some(dims.clone());
+                    input = Some((dims, signed));
+                }
+                "granularity" => {
+                    self.no_dup(gran.is_some(), "granularity", "model", span)?;
+                    gran = Some(self.granularity_block()?);
+                }
+                "init_bits" => {
+                    self.no_dup(init_bits.is_some(), "init_bits", "model", span)?;
+                    init_bits = Some(self.init_bits_block()?);
+                }
+                "dense" | "conv2d" => {
+                    let (lname, lspan) = self.expect_ident(&format!("a layer name after `{word}`"))?;
+                    if lname == "inq" {
+                        return Err(self
+                            .err(lspan, "layer name `inq` is reserved for the implicit input quantizer")
+                            .with_help("pick another name; the input quantizer is always added for you")
+                            .into());
+                    }
+                    if layers.iter().any(|l| l.name() == lname) {
+                        return Err(self.err(lspan, format!("duplicate layer name `{lname}`")));
+                    }
+                    let shp = match &cur_shape {
+                        Some(s) => s.clone(),
+                        None => {
+                            return Err(self
+                                .err(span, format!("layer `{lname}` declared before the `input` field"))
+                                .with_help("declare `input [shape]` before the first layer")
+                                .into())
+                        }
+                    };
+                    let layer = if word == "dense" {
+                        let (units, relu, w, a) = self.dense_block(lname, lspan)?;
+                        cur_shape = Some(vec![units]);
+                        LayerSpec::Dense { name: lname.to_string(), units, relu, weights: w, activations: a }
+                    } else {
+                        let (kernel, filters, relu, w, a) = self.conv_block(lname, lspan)?;
+                        let os = shape::conv2d_out_shape(&shp, kernel, filters)
+                            .map_err(|e| self.err(span, format!("conv2d `{lname}`: {e}")))?;
+                        cur_shape = Some(os.to_vec());
+                        LayerSpec::Conv2d {
+                            name: lname.to_string(),
+                            kernel,
+                            filters,
+                            relu,
+                            weights: w,
+                            activations: a,
+                        }
+                    };
+                    layers.push(layer);
+                }
+                "maxpool2" => {
+                    let shp = cur_shape.clone().ok_or_else(|| {
+                        self.err(span, "`maxpool2` declared before the `input` field")
+                    })?;
+                    let os = shape::maxpool2_out_shape(&shp)
+                        .map_err(|e| self.err(span, e.to_string()))?;
+                    cur_shape = Some(os.to_vec());
+                    layers.push(LayerSpec::MaxPool2);
+                }
+                "flatten" => {
+                    let shp = cur_shape.clone().ok_or_else(|| {
+                        self.err(span, "`flatten` declared before the `input` field")
+                    })?;
+                    cur_shape = Some(vec![shape::flatten_dim(&shp)]);
+                    layers.push(LayerSpec::Flatten);
+                }
+                other => return Err(self.unknown(other, span, "field", MODEL_FIELDS)),
+            }
+        }
+
+        let missing = |f: &str| {
+            self.err(name_span, format!("model \"{name}\" is missing the required `{f}` field"))
+        };
+        let task = task.ok_or_else(|| missing("task"))?;
+        let dataset = dataset.ok_or_else(|| missing("dataset"))?;
+        let batch = batch.ok_or_else(|| missing("batch"))?;
+        let (input_shape, input_signed) = input.ok_or_else(|| missing("input"))?;
+        if layers.is_empty() {
+            return Err(self.err(name_span, format!("model \"{name}\" has no layers")));
+        }
+        let (weights, activations) = gran.unwrap_or((Granularity::Layer, Granularity::Layer));
+        let (init_bits_w, init_bits_a) = init_bits.unwrap_or((6.0, 6.0));
+
+        Ok(ModelSpec {
+            name,
+            task,
+            dataset,
+            batch,
+            input_shape,
+            input_signed,
+            weights,
+            activations,
+            init_bits_w,
+            init_bits_a,
+            layers,
+        })
+    }
+
+    /// `granularity { weights GRAN  activations GRAN }` (both optional,
+    /// default layer).
+    fn granularity_block(&mut self) -> PResult<(Granularity, Granularity)> {
+        self.expect_lbrace("granularity block")?;
+        let (mut w, mut a): (Option<Granularity>, Option<Granularity>) = (None, None);
+        loop {
+            let t = self.bump();
+            match t.kind {
+                Tok::RBrace => break,
+                Tok::Ident("weights") => {
+                    self.no_dup(w.is_some(), "weights", "granularity", t.span)?;
+                    w = Some(self.granularity_value("weights")?);
+                }
+                Tok::Ident("activations") => {
+                    self.no_dup(a.is_some(), "activations", "granularity", t.span)?;
+                    a = Some(self.granularity_value("activations")?);
+                }
+                Tok::Ident(other) => return Err(self.unknown(other, t.span, "field", GRAN_FIELDS)),
+                Tok::Eof => {
+                    return Err(self.err(t.span, "unexpected end of file inside granularity block"))
+                }
+                k => {
+                    return Err(self.err(
+                        t.span,
+                        format!("expected `weights` or `activations`, found {}", k.describe()),
+                    ))
+                }
+            }
+        }
+        Ok((w.unwrap_or(Granularity::Layer), a.unwrap_or(Granularity::Layer)))
+    }
+
+    /// `init_bits { weights F  activations F }` (both optional,
+    /// default 6).
+    fn init_bits_block(&mut self) -> PResult<(f32, f32)> {
+        self.expect_lbrace("init_bits block")?;
+        let (mut w, mut a): (Option<f32>, Option<f32>) = (None, None);
+        loop {
+            let t = self.bump();
+            match t.kind {
+                Tok::RBrace => break,
+                Tok::Ident(field @ ("weights" | "activations")) => {
+                    let set = if field == "weights" { w.is_some() } else { a.is_some() };
+                    self.no_dup(set, field, "init_bits", t.span)?;
+                    let (v, vs) = self.expect_f64(field)?;
+                    if !v.is_finite() || v < 0.0 || v > 32.0 {
+                        return Err(self.err(vs, format!("`{field}` init bits must be in [0, 32], got {v}")));
+                    }
+                    if field == "weights" {
+                        w = Some(v as f32);
+                    } else {
+                        a = Some(v as f32);
+                    }
+                }
+                Tok::Ident(other) => return Err(self.unknown(other, t.span, "field", GRAN_FIELDS)),
+                Tok::Eof => {
+                    return Err(self.err(t.span, "unexpected end of file inside init_bits block"))
+                }
+                k => {
+                    return Err(self.err(
+                        t.span,
+                        format!("expected `weights` or `activations`, found {}", k.describe()),
+                    ))
+                }
+            }
+        }
+        Ok((w.unwrap_or(6.0), a.unwrap_or(6.0)))
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn dense_block(
+        &mut self,
+        lname: &str,
+        lspan: Span,
+    ) -> PResult<(usize, bool, Option<Granularity>, Option<Granularity>)> {
+        self.expect_lbrace("dense block")?;
+        let mut units: Option<usize> = None;
+        let mut relu = false;
+        let (mut w, mut a): (Option<Granularity>, Option<Granularity>) = (None, None);
+        loop {
+            let t = self.bump();
+            match t.kind {
+                Tok::RBrace => break,
+                Tok::Ident("units") => {
+                    self.no_dup(units.is_some(), "units", "dense", t.span)?;
+                    units = Some(self.expect_usize("units", 1)?.0);
+                }
+                Tok::Ident("relu") => {
+                    self.no_dup(relu, "relu", "dense", t.span)?;
+                    relu = true;
+                }
+                Tok::Ident("weights") => {
+                    self.no_dup(w.is_some(), "weights", "dense", t.span)?;
+                    w = Some(self.granularity_value("weights")?);
+                }
+                Tok::Ident("activations") => {
+                    self.no_dup(a.is_some(), "activations", "dense", t.span)?;
+                    a = Some(self.granularity_value("activations")?);
+                }
+                Tok::Ident(other) => return Err(self.unknown(other, t.span, "field", DENSE_FIELDS)),
+                Tok::Eof => return Err(self.err(t.span, "unexpected end of file inside dense block")),
+                k => {
+                    return Err(self
+                        .err(t.span, format!("expected a dense field, found {}", k.describe())))
+                }
+            }
+        }
+        let units = units
+            .ok_or_else(|| self.err(lspan, format!("dense `{lname}` is missing the required `units` field")))?;
+        Ok((units, relu, w, a))
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn conv_block(
+        &mut self,
+        lname: &str,
+        lspan: Span,
+    ) -> PResult<(usize, usize, bool, Option<Granularity>, Option<Granularity>)> {
+        self.expect_lbrace("conv2d block")?;
+        let mut kernel: Option<usize> = None;
+        let mut filters: Option<usize> = None;
+        let mut relu = false;
+        let (mut w, mut a): (Option<Granularity>, Option<Granularity>) = (None, None);
+        loop {
+            let t = self.bump();
+            match t.kind {
+                Tok::RBrace => break,
+                Tok::Ident("kernel") => {
+                    self.no_dup(kernel.is_some(), "kernel", "conv2d", t.span)?;
+                    kernel = Some(self.expect_usize("kernel", 1)?.0);
+                }
+                Tok::Ident("filters") => {
+                    self.no_dup(filters.is_some(), "filters", "conv2d", t.span)?;
+                    filters = Some(self.expect_usize("filters", 1)?.0);
+                }
+                Tok::Ident("relu") => {
+                    self.no_dup(relu, "relu", "conv2d", t.span)?;
+                    relu = true;
+                }
+                Tok::Ident("weights") => {
+                    self.no_dup(w.is_some(), "weights", "conv2d", t.span)?;
+                    w = Some(self.granularity_value("weights")?);
+                }
+                Tok::Ident("activations") => {
+                    self.no_dup(a.is_some(), "activations", "conv2d", t.span)?;
+                    a = Some(self.granularity_value("activations")?);
+                }
+                Tok::Ident(other) => return Err(self.unknown(other, t.span, "field", CONV_FIELDS)),
+                Tok::Eof => return Err(self.err(t.span, "unexpected end of file inside conv2d block")),
+                k => {
+                    return Err(self
+                        .err(t.span, format!("expected a conv2d field, found {}", k.describe())))
+                }
+            }
+        }
+        let miss = |f: &str| {
+            self.err(lspan, format!("conv2d `{lname}` is missing the required `{f}` field"))
+        };
+        let kernel = kernel.ok_or_else(|| miss("kernel"))?;
+        let filters = filters.ok_or_else(|| miss("filters"))?;
+        Ok((kernel, filters, relu, w, a))
+    }
+
+    fn experiment_block(&mut self) -> PResult<ExperimentSpec> {
+        self.expect_lbrace("experiment block")?;
+        let mut exp = ExperimentSpec::default();
+        loop {
+            let t = self.bump();
+            let (word, span) = match t.kind {
+                Tok::RBrace => break,
+                Tok::Ident(w) => (w, t.span),
+                Tok::Eof => {
+                    return Err(self.err(t.span, "unexpected end of file: experiment block is not closed (missing `}`)"))
+                }
+                k => {
+                    return Err(self.err(
+                        t.span,
+                        format!("expected an experiment field, found {}", k.describe()),
+                    ))
+                }
+            };
+            match word {
+                "epochs" => {
+                    self.no_dup(exp.epochs.is_some(), "epochs", "experiment", span)?;
+                    exp.epochs = Some(self.expect_usize("epochs", 1)?.0);
+                }
+                "lr" => {
+                    self.no_dup(exp.lr.is_some(), "lr", "experiment", span)?;
+                    exp.lr = Some(self.expect_pos_f64("lr")?.0);
+                }
+                "f_lr" => {
+                    self.no_dup(exp.f_lr.is_some(), "f_lr", "experiment", span)?;
+                    exp.f_lr = Some(self.expect_pos_f64("f_lr")?.0);
+                }
+                "gamma" => {
+                    self.no_dup(exp.gamma.is_some(), "gamma", "experiment", span)?;
+                    let (v, vs) = self.expect_f64("gamma")?;
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(self.err(vs, format!("`gamma` must be >= 0, got {v}")));
+                    }
+                    exp.gamma = Some(v);
+                }
+                "beta" => {
+                    self.no_dup(exp.beta.is_some(), "beta", "experiment", span)?;
+                    let (kind, ks) = self.expect_ident("`const` or `ramp` after `beta`")?;
+                    exp.beta = Some(match kind {
+                        "const" => BetaSpec::Const(self.expect_pos_f64("beta const")?.0),
+                        "ramp" => {
+                            let (from, _) = self.expect_pos_f64("beta ramp start")?;
+                            let (to_kw, tks) = self.expect_ident("`to` between the ramp endpoints")?;
+                            if to_kw != "to" {
+                                return Err(self
+                                    .err(tks, format!("expected `to` between the ramp endpoints, found `{to_kw}`")));
+                            }
+                            let (to, _) = self.expect_pos_f64("beta ramp end")?;
+                            BetaSpec::Ramp { from, to }
+                        }
+                        other => {
+                            return Err(self.unknown(other, ks, "beta schedule", &["const", "ramp"]))
+                        }
+                    });
+                }
+                "train" => {
+                    self.no_dup(exp.n_train.is_some(), "train", "experiment", span)?;
+                    exp.n_train = Some(self.expect_usize("train", 1)?.0);
+                }
+                "eval" => {
+                    self.no_dup(exp.n_eval.is_some(), "eval", "experiment", span)?;
+                    exp.n_eval = Some(self.expect_usize("eval", 1)?.0);
+                }
+                "rows" => {
+                    self.no_dup(exp.rows.is_some(), "rows", "experiment", span)?;
+                    exp.rows = Some(self.expect_usize("rows", 1)?.0);
+                }
+                "uniform_bits" => {
+                    self.no_dup(exp.uniform_bits.is_some(), "uniform_bits", "experiment", span)?;
+                    let open = self.bump();
+                    if open.kind != Tok::LBracket {
+                        return Err(self.err(
+                            open.span,
+                            format!("expected a list like `[6, 4]` for `uniform_bits`, found {}", open.kind.describe()),
+                        ));
+                    }
+                    let mut bits = Vec::new();
+                    loop {
+                        match self.peek().kind {
+                            Tok::RBracket => {
+                                let close = self.bump();
+                                if bits.is_empty() {
+                                    return Err(self.err(
+                                        Span::new(open.span.start, close.span.end),
+                                        "`uniform_bits` needs at least one entry",
+                                    ));
+                                }
+                                break;
+                            }
+                            _ => {
+                                let (v, _) = self.expect_pos_f64("uniform_bits entry")?;
+                                bits.push(v as f32);
+                                if self.peek().kind == Tok::Comma {
+                                    self.bump();
+                                }
+                            }
+                        }
+                    }
+                    exp.uniform_bits = Some(bits);
+                }
+                other => return Err(self.unknown(other, span, "field", EXP_FIELDS)),
+            }
+        }
+        Ok(exp)
+    }
+
+    fn file(&mut self) -> PResult<HgqFile> {
+        let mut model: Option<ModelSpec> = None;
+        let mut experiment: Option<ExperimentSpec> = None;
+        loop {
+            let t = self.bump();
+            match t.kind {
+                Tok::Eof => break,
+                Tok::Ident("model") => {
+                    if model.is_some() {
+                        return Err(self.err(t.span, "duplicate `model` block (one per file)"));
+                    }
+                    model = Some(self.model_block()?);
+                }
+                Tok::Ident("experiment") => {
+                    if experiment.is_some() {
+                        return Err(self.err(t.span, "duplicate `experiment` block (one per file)"));
+                    }
+                    experiment = Some(self.experiment_block()?);
+                }
+                Tok::Ident(other) => return Err(self.unknown(other, t.span, "block", TOP_ITEMS)),
+                k => {
+                    return Err(self.err(
+                        t.span,
+                        format!("expected a `model` or `experiment` block, found {}", k.describe()),
+                    ))
+                }
+            }
+        }
+        let model = model.ok_or_else(|| {
+            self.err(self.toks[self.toks.len() - 1].span, "file contains no `model` block")
+        })?;
+        Ok(HgqFile { model, experiment })
+    }
+}
+
+/// Parse a whole `.hgq` source (see [`super::parse_str`]).
+pub(crate) fn parse(src: &str, file: &str) -> Result<HgqFile, Box<Diagnostic>> {
+    let toks = lex(src, file)?;
+    Parser { src, file, toks, pos: 0 }.file()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const OK: &str = r#"
+# a tiny classifier
+model "mini" {
+  task cls
+  dataset synth
+  batch 16
+  input [8] signed
+  granularity { weights element  activations layer }
+  init_bits { weights 3  activations 4 }
+  dense d0 { units 12  relu }
+  dense d1 { units 4 }
+}
+
+experiment {
+  epochs 5
+  lr 0.002
+  beta ramp 0.000001 to 0.001
+  uniform_bits [6, 4]
+}
+"#;
+
+    fn perr(src: &str) -> Diagnostic {
+        *parse(src, "t.hgq").unwrap_err()
+    }
+
+    #[test]
+    fn parses_full_file() {
+        let f = parse(OK, "mini.hgq").unwrap();
+        assert_eq!(f.model.name, "mini");
+        assert_eq!(f.model.batch, 16);
+        assert_eq!(f.model.weights, Granularity::Element);
+        assert_eq!(f.model.activations, Granularity::Layer);
+        assert_eq!((f.model.init_bits_w, f.model.init_bits_a), (3.0, 4.0));
+        assert_eq!(f.model.layers.len(), 2);
+        assert!(matches!(
+            &f.model.layers[0],
+            LayerSpec::Dense { units: 12, relu: true, .. }
+        ));
+        let e = f.experiment.unwrap();
+        assert_eq!(e.epochs, Some(5));
+        assert!(matches!(e.beta, Some(BetaSpec::Ramp { .. })));
+        assert_eq!(e.uniform_bits.as_deref(), Some(&[6.0f32, 4.0][..]));
+    }
+
+    #[test]
+    fn conv_stack_chains_shapes() {
+        let src = r#"
+model "convy" {
+  task cls
+  dataset synth
+  batch 8
+  input [10, 10, 2] unsigned
+  conv2d c0 { kernel 3  filters 4  relu }
+  maxpool2
+  flatten
+  dense head { units 3 }
+}
+"#;
+        let f = parse(src, "c.hgq").unwrap();
+        assert_eq!(f.model.layers.len(), 4);
+        assert!(!f.model.input_signed);
+    }
+
+    #[test]
+    fn near_miss_keyword_gets_suggestion() {
+        let d = perr("model \"m\" {\n  tsak cls\n}\n");
+        assert_eq!(d.help.as_deref(), Some("did you mean `task`?"));
+        assert_eq!((d.line, d.col), (2, 3));
+    }
+
+    #[test]
+    fn duplicate_layer_name_rejected() {
+        let d = perr(
+            "model \"m\" { task cls dataset synth batch 4 input [4]\n  dense d0 { units 2 }\n  dense d0 { units 2 } }",
+        );
+        assert!(d.msg.contains("duplicate layer name `d0`"), "{}", d.msg);
+    }
+
+    #[test]
+    fn reserved_inq_rejected() {
+        let d = perr("model \"m\" { task cls dataset synth batch 4 input [4] dense inq { units 2 } }");
+        assert!(d.msg.contains("reserved"), "{}", d.msg);
+    }
+
+    #[test]
+    fn layer_before_input_rejected() {
+        let d = perr("model \"m\" { task cls dataset synth batch 4 dense d0 { units 2 } input [4] }");
+        assert!(d.msg.contains("before the `input` field"), "{}", d.msg);
+    }
+
+    #[test]
+    fn conv_on_flat_input_spans_the_layer() {
+        let d = perr(
+            "model \"m\" { task cls dataset synth batch 4 input [16]\n  conv2d c0 { kernel 3  filters 4 } }",
+        );
+        assert!(d.msg.contains("HWC input"), "{}", d.msg);
+        assert_eq!(d.line, 2);
+    }
+
+    #[test]
+    fn missing_required_field_points_at_model_name() {
+        let d = perr("model \"m\" { task cls dataset synth input [4] dense d0 { units 2 } }");
+        assert!(d.msg.contains("missing the required `batch` field"), "{}", d.msg);
+        assert_eq!((d.line, d.col), (1, 7));
+    }
+
+    #[test]
+    fn non_integer_batch_rejected() {
+        let d = perr("model \"m\" { batch 2.5 }");
+        assert!(d.msg.contains("non-negative integer"), "{}", d.msg);
+    }
+
+    #[test]
+    fn defaults_are_layer_layer_and_six_bits() {
+        let f = parse(
+            "model \"m\" { task reg dataset synth batch 4 input [4] dense d0 { units 1 } }",
+            "t.hgq",
+        )
+        .unwrap();
+        assert_eq!(f.model.weights, Granularity::Layer);
+        assert_eq!((f.model.init_bits_w, f.model.init_bits_a), (6.0, 6.0));
+        assert!(f.model.input_signed);
+        assert!(f.experiment.is_none());
+    }
+}

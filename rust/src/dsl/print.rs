@@ -1,0 +1,162 @@
+//! Canonical `.hgq` printer: the inverse of the parser. Output always
+//! re-parses to an identical [`HgqFile`] (the round-trip the preset
+//! equivalence suite and the CI dsl-smoke step pin), and printing a
+//! just-printed file is a fixpoint.
+//!
+//! Float formatting note: `f32` fields print through `f32::Display`
+//! and `f64` fields through `f64::Display` (shortest round-trip form,
+//! plain decimal) — so `0.003` stays `0.003` and `2e-6` prints as
+//! `0.000002`, both of which re-parse to the identical bits.
+
+use std::fmt::Write as _;
+
+use crate::nn::spec::{Granularity, LayerSpec};
+
+use super::{BetaSpec, HgqFile};
+
+fn push_layer(out: &mut String, l: &LayerSpec) {
+    match l {
+        LayerSpec::Dense { name, units, relu, weights, activations } => {
+            let _ = write!(out, "  dense {name} {{ units {units}");
+            if *relu {
+                out.push_str("  relu");
+            }
+            push_overrides(out, *weights, *activations);
+            out.push_str(" }\n");
+        }
+        LayerSpec::Conv2d { name, kernel, filters, relu, weights, activations } => {
+            let _ = write!(out, "  conv2d {name} {{ kernel {kernel}  filters {filters}");
+            if *relu {
+                out.push_str("  relu");
+            }
+            push_overrides(out, *weights, *activations);
+            out.push_str(" }\n");
+        }
+        LayerSpec::MaxPool2 => out.push_str("  maxpool2\n"),
+        LayerSpec::Flatten => out.push_str("  flatten\n"),
+    }
+}
+
+fn push_overrides(out: &mut String, w: Option<Granularity>, a: Option<Granularity>) {
+    if let Some(g) = w {
+        let _ = write!(out, "  weights {}", g.as_str());
+    }
+    if let Some(g) = a {
+        let _ = write!(out, "  activations {}", g.as_str());
+    }
+}
+
+/// Render `f` as canonical `.hgq` source (see module docs).
+pub(crate) fn print(f: &HgqFile) -> String {
+    let m = &f.model;
+    let mut out = String::new();
+    let _ = writeln!(out, "model \"{}\" {{", m.name);
+    let _ = writeln!(out, "  task {}", m.task);
+    let _ = writeln!(out, "  dataset {}", m.dataset);
+    let _ = writeln!(out, "  batch {}", m.batch);
+    let dims: Vec<String> = m.input_shape.iter().map(|d| d.to_string()).collect();
+    let sign = if m.input_signed { "signed" } else { "unsigned" };
+    let _ = writeln!(out, "  input [{}] {sign}", dims.join(", "));
+    out.push_str("  granularity {\n");
+    let _ = writeln!(out, "    weights {}", m.weights.as_str());
+    let _ = writeln!(out, "    activations {}", m.activations.as_str());
+    out.push_str("  }\n");
+    out.push_str("  init_bits {\n");
+    let _ = writeln!(out, "    weights {}", m.init_bits_w);
+    let _ = writeln!(out, "    activations {}", m.init_bits_a);
+    out.push_str("  }\n");
+    for l in &m.layers {
+        push_layer(&mut out, l);
+    }
+    out.push_str("}\n");
+
+    if let Some(e) = &f.experiment {
+        out.push_str("\nexperiment {\n");
+        if let Some(v) = e.epochs {
+            let _ = writeln!(out, "  epochs {v}");
+        }
+        if let Some(v) = e.lr {
+            let _ = writeln!(out, "  lr {v}");
+        }
+        if let Some(v) = e.f_lr {
+            let _ = writeln!(out, "  f_lr {v}");
+        }
+        if let Some(v) = e.gamma {
+            let _ = writeln!(out, "  gamma {v}");
+        }
+        match &e.beta {
+            Some(BetaSpec::Const(v)) => {
+                let _ = writeln!(out, "  beta const {v}");
+            }
+            Some(BetaSpec::Ramp { from, to }) => {
+                let _ = writeln!(out, "  beta ramp {from} to {to}");
+            }
+            None => {}
+        }
+        if let Some(v) = e.n_train {
+            let _ = writeln!(out, "  train {v}");
+        }
+        if let Some(v) = e.n_eval {
+            let _ = writeln!(out, "  eval {v}");
+        }
+        if let Some(v) = e.rows {
+            let _ = writeln!(out, "  rows {v}");
+        }
+        if let Some(bits) = &e.uniform_bits {
+            let vals: Vec<String> = bits.iter().map(|b| b.to_string()).collect();
+            let _ = writeln!(out, "  uniform_bits [{}]", vals.join(", "));
+        }
+        out.push_str("}\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse_str;
+    use super::*;
+
+    const SRC: &str = r#"
+// comments vanish in canonical form
+model "round_trip" {
+  task cls
+  dataset synth
+  batch 32
+  input [6, 6, 2] unsigned
+  granularity { weights element  activations layer }
+  init_bits { weights 2.5  activations 6 }
+  conv2d c0 { kernel 3  filters 4  relu  weights layer }
+  maxpool2
+  flatten
+  dense head { units 3  activations element }
+}
+
+experiment {
+  epochs 12
+  lr 0.003
+  gamma 2e-6
+  beta ramp 1e-6 to 0.001
+  uniform_bits [6, 4.5]
+}
+"#;
+
+    #[test]
+    fn print_reparses_identically() {
+        let f = parse_str(SRC, "rt.hgq").unwrap();
+        let printed = print(&f);
+        let again = parse_str(&printed, "rt2.hgq").unwrap();
+        assert_eq!(f, again);
+        // canonical form is a fixpoint
+        assert_eq!(printed, print(&again));
+    }
+
+    #[test]
+    fn scientific_input_prints_decimal() {
+        let f = parse_str(SRC, "rt.hgq").unwrap();
+        let printed = print(&f);
+        assert!(printed.contains("gamma 0.000002"), "{printed}");
+        assert!(printed.contains("beta ramp 0.000001 to 0.001"), "{printed}");
+        assert!(printed.contains("init_bits"), "{printed}");
+        assert!(printed.contains("    weights 2.5"), "{printed}");
+    }
+}

@@ -260,6 +260,8 @@ mod tests {
         let out_q = ActQ { scalar: false, specs: vec![FixedSpec::new(true, 12, 6)] };
         Graph {
             name: "tiny".into(),
+            task: "reg".into(),
+            dataset: "synth".into(),
             input_dim: 2,
             output_dim: 1,
             layers: vec![
@@ -318,6 +320,8 @@ mod tests {
             let out_q = ActQ { scalar: true, specs: vec![FixedSpec::new(true, 20, 12)] };
             let g = Graph {
                 name: "p".into(),
+                task: "reg".into(),
+                dataset: "synth".into(),
                 input_dim: din,
                 output_dim: dout,
                 layers: vec![
@@ -368,6 +372,8 @@ mod tests {
         let bq = QuantWeights { m: vec![0; 8], frac: vec![0; 8] };
         let wide = Graph {
             name: "wide".into(),
+            task: "reg".into(),
+            dataset: "synth".into(),
             input_dim: 8,
             output_dim: 8,
             layers: vec![

@@ -204,6 +204,12 @@ impl Calib {
 pub struct Graph {
     /// model name (from meta.json)
     pub name: String,
+    /// "cls" | "reg" (from the IR; drives serving eval metrics)
+    pub task: String,
+    /// dataset the model calibrates/evaluates on ("jets" | "muon" |
+    /// "svhn" | "synth") — carried so serving can build splits without
+    /// decoding the model name
+    pub dataset: String,
     /// typed fixed-point layers in execution order
     pub layers: Vec<FwLayer>,
     /// flattened input feature count
@@ -314,6 +320,8 @@ impl Graph {
         }
         Ok(Graph {
             name: ir.name.clone(),
+            task: ir.task.clone(),
+            dataset: ir.dataset.clone(),
             layers,
             input_dim: ir.input_dim,
             output_dim: ir.output_dim,

@@ -150,6 +150,8 @@ pub struct ModelIr {
     pub name: String,
     /// "cls" | "reg"
     pub task: String,
+    /// dataset the model trains/calibrates on (see [`ModelMeta::dataset`])
+    pub dataset: String,
     /// fixed batch size every backend call uses
     pub batch: usize,
     /// input tensor shape
@@ -380,6 +382,7 @@ impl ModelIr {
         Ok(ModelIr {
             name: meta.name.clone(),
             task: meta.task.clone(),
+            dataset: meta.dataset.clone(),
             batch: meta.batch,
             input_shape: meta.input_shape.clone(),
             input_dim: meta.input_dim(),

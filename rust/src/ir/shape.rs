@@ -1,5 +1,5 @@
 //! Shape-inference helpers shared by the IR builder ([`super::ModelIr`])
-//! and the preset meta builder (`runtime/native/presets.rs`) — the one
+//! and the DSL lowering (`nn/spec.rs::ModelSpec::build_meta`) — the one
 //! place the conv/pool/flatten output-shape arithmetic lives.
 
 use anyhow::{bail, Result};

@@ -19,7 +19,13 @@
 //!                   with a self-checking emulator-golden testbench
 //!                   (`hgq emit-hls`).
 //! * [`nn`]        — model metadata (meta.json) shared with the python
-//!                   build path.
+//!                   build path, plus the backend-independent
+//!                   [`nn::spec::ModelSpec`] every model description
+//!                   lowers through.
+//! * [`dsl`]       — the `.hgq` model-description language: spanned
+//!                   recursive-descent parser with caret diagnostics,
+//!                   canonical printer, lowering to `ModelSpec`
+//!                   (MODELS.md is the language reference).
 //! * [`ir`]        — the unified layer IR: a typed, shape-inferred
 //!                   graph built once from [`nn::ModelMeta`] — the
 //!                   single structural source of truth the engine,
@@ -52,6 +58,7 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
+pub mod dsl;
 pub mod ebops;
 pub mod firmware;
 pub mod fixed;

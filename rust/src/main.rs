@@ -1,6 +1,9 @@
 //! `hgq` — the HGQ reproduction launcher.
 //!
 //! Subcommands:
+//!   validate parse a .hgq model file, lower it through the IR and print
+//!            the tensor/layer summary + resource estimate (syntax
+//!            errors render with file:line:col caret excerpts)
 //!   train    train one model (HGQ or baseline settings, or --preset)
 //!   sweep    single-run β-ramp Pareto sweep + deploy (paper protocol)
 //!   table1   jet tagging (Table I / Fig. III)
@@ -23,9 +26,12 @@
 //! Every command takes `--backend native|pjrt` and `--threads N` (the
 //! native backend's batch-sharded worker count; 0 = all cores, results
 //! are bit-identical for any value). The default native backend is pure
-//! rust and needs no artifacts: model presets are built in — including
-//! the SVHN CNN — so the full train → calibrate → deploy →
-//! firmware-emulate pipeline runs hermetically for every preset. The
+//! rust and needs no artifacts: the builtin presets ship as
+//! `examples/models/*.hgq` sources embedded at compile time, so the
+//! full train → calibrate → deploy → firmware-emulate pipeline runs
+//! hermetically for every preset — and anywhere a model name is
+//! accepted, a path ending in `.hgq` loads a user-defined architecture
+//! through the same pipeline (see MODELS.md for the language). The
 //! pjrt backend executes AOT HLO artifacts (build with
 //! `--features pjrt`).
 
@@ -37,7 +43,7 @@ use hgq::coordinator::experiment::{
     run_hgq_sweep, run_layerwise_baseline, run_uniform_baseline, try_preset, Preset,
 };
 use hgq::coordinator::{deploy, BetaSchedule, TrainConfig};
-use hgq::data::try_splits_for;
+use hgq::data::{try_splits_for, try_splits_for_graph, try_splits_for_meta};
 use hgq::resource::linear_fit;
 use hgq::runtime::{ModelRuntime, Runtime};
 use hgq::serve::{
@@ -60,6 +66,7 @@ fn run() -> Result<()> {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "info" => cmd_info(&artifacts, args),
+        "validate" => cmd_validate(&artifacts, args),
         "train" => cmd_train(&artifacts, args),
         "sweep" => cmd_sweep(&artifacts, args),
         "table1" => cmd_table(&artifacts, args, "jets"),
@@ -74,11 +81,13 @@ fn run() -> Result<()> {
         "emit-hls" => cmd_emit_hls(&artifacts, args),
         "help" | _ => {
             println!(
-                "usage: hgq <info|train|sweep|table1|table2|table3|fig2|ablate|deploy|emulate\
-                 |serve|client|emit-hls> \
-                 [--backend native|pjrt] [--threads N] [--artifacts DIR] [--model NAME] \
-                 [--preset TASK] [--epochs N] [--beta B] [--seed S] [--checkpoint DIR] \
-                 [--json FILE] [--verbose]\n\
+                "usage: hgq <info|validate|train|sweep|table1|table2|table3|fig2|ablate|deploy\
+                 |emulate|serve|client|emit-hls> \
+                 [--backend native|pjrt] [--threads N] [--artifacts DIR] \
+                 [--model NAME|FILE.hgq] [--preset TASK|FILE.hgq] [--epochs N] [--beta B] \
+                 [--seed S] [--checkpoint DIR] [--json FILE] [--verbose]\n\
+                 validate: hgq validate FILE.hgq [--calib-n N] — parse, lower, print the \
+                 tensor table and resource estimate\n\
                  serve (closed loop): [--preset TASK|MODEL] [--checkpoint DIR] [--batch B] \
                  [--threads N] [--requests R] [--queue-depth Q] [--flush-us U] [--calib-n N] \
                  [--pool-n N] [--baseline-n N] [--json FILE]\n\
@@ -87,8 +96,8 @@ fn run() -> Result<()> {
                  [--json FILE]\n\
                  client: [--connect ADDR] [--model KEY] [--requests N] [--pool-n N] [--stats] \
                  [--reload KEY=DIR] [--shutdown]\n\
-                 emit-hls: [--preset TASK|MODEL] [--checkpoint DIR] [--out DIR] [--vectors N] \
-                 [--calib-n N] [--check]"
+                 emit-hls: [--preset TASK|MODEL|FILE.hgq] [--model FILE.hgq] [--checkpoint DIR] \
+                 [--out DIR] [--vectors N] [--calib-n N] [--check]"
             );
             Ok(())
         }
@@ -105,7 +114,7 @@ fn cmd_info(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     let rt = backend_from(&mut args)?;
     args.finish()?;
     println!("platform: {}", rt.platform());
-    for model in ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"] {
+    for model in hgq::nn::presets::PRESET_NAMES {
         match ModelRuntime::load(&rt, artifacts, model) {
             Ok(mr) => println!(
                 "  {:<12} state={:>7} f32, batch={:>4}, calib={:>6}, layers={}",
@@ -118,6 +127,97 @@ fn cmd_info(artifacts: &PathBuf, mut args: Args) -> Result<()> {
             Err(e) => println!("  {model:<12} UNAVAILABLE ({e})"),
         }
     }
+    Ok(())
+}
+
+/// Validate a `.hgq` model file: parse → lower to `ModelMeta` → resolve
+/// the layer IR (the full downstream shape/wiring validation), then
+/// synthesize + calibrate the init state and print the tensor table,
+/// exact EBOPs and the resource estimate. Syntax and local-semantics
+/// errors render as caret diagnostics; nothing in this path panics.
+fn cmd_validate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
+    let file = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.str_opt("model"))
+        .ok_or_else(|| anyhow::anyhow!("usage: hgq validate FILE.hgq [--calib-n N]"))?;
+    let calib_n = args.usize("calib-n", 512);
+    args.finish()?;
+
+    let src = std::fs::read_to_string(&file)
+        .map_err(|e| anyhow::anyhow!("reading model file {file}: {e}"))?;
+    let parsed = match hgq::dsl::parse_str(&src, &file) {
+        Ok(f) => f,
+        Err(d) => {
+            // the rendered diagnostic carries file:line:col + a caret
+            // excerpt; print it verbatim instead of the anyhow chain
+            eprintln!("error: {}", d.render());
+            std::process::exit(1);
+        }
+    };
+    let meta = parsed.model.build_meta()?;
+    let ir = hgq::ir::ModelIr::build(&meta)?;
+    println!(
+        "{}: {} on {} ({} IR nodes, {} -> {}, batch {})",
+        file,
+        meta.name,
+        meta.dataset,
+        ir.nodes.len(),
+        meta.input_dim(),
+        meta.output_dim,
+        meta.batch
+    );
+    println!(
+        "packed state: {} f32 = {} params + {} fbits + adam + calib({})",
+        meta.state_size,
+        meta.n_params,
+        meta.n_train - meta.n_params,
+        meta.calib_size
+    );
+    println!("\n{:<12} {:>14} {:>8} {:>8}  seg", "tensor", "shape", "offset", "size");
+    for t in &meta.tensors {
+        println!("{:<12} {:>14} {:>8} {:>8}  {}", t.name, format!("{:?}", t.shape), t.offset, t.size, t.seg);
+    }
+    println!("\n{:<12} {:>14} {:>8}  signed", "act group", "fshape", "size");
+    for g in &meta.act_groups {
+        println!("{:<12} {:>14} {:>8}  {}", g.name, format!("{:?}", g.fshape), g.size, g.signed);
+    }
+    let registry = Registry::new(artifacts.clone()).with_calib_samples(calib_n);
+    let graph = registry.get(&file)?;
+    let est = hgq::resource::estimate(&graph);
+    println!(
+        "\nexact EBOPs {}  sparsity {:.1}%  |  est. LUT {} DSP {} FF {} BRAM {:.1}  \
+         latency {:.0} ns (II {} cc)",
+        graph.exact_ebops(),
+        graph.sparsity() * 100.0,
+        est.lut,
+        est.dsp,
+        est.ff,
+        est.bram_18k,
+        est.latency_ns(),
+        est.ii_cc
+    );
+    println!(
+        "\n{}",
+        hgq::resource::breakdown::format_breakdown(&hgq::resource::breakdown::breakdown(&graph))
+    );
+    if let Some(e) = &parsed.experiment {
+        let p = hgq::coordinator::experiment::Preset::from_hgq(file.clone(), &parsed);
+        println!(
+            "experiment: {} epochs, lr {}, f_lr {}, beta {} -> {}, {}+{} samples, {} rows{}",
+            p.epochs,
+            p.lr,
+            p.f_lr,
+            p.beta_from,
+            p.beta_to,
+            p.n_train,
+            p.n_eval,
+            p.rows,
+            if e.epochs.is_none() { " (defaults filled)" } else { "" }
+        );
+    }
+    println!("OK: {file} validates");
     Ok(())
 }
 
@@ -144,20 +244,24 @@ fn cmd_train(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     }
 
     let model = args.str("model", "jets_pp");
-    let epochs = args.usize("epochs", 30);
-    let beta = args.f64("beta", 1e-5);
-    let beta_to = args.f64("beta-to", 0.0);
-    let f_lr = args.f64("f-lr", 8.0) as f32;
-    let lr = args.f64("lr", 3e-3) as f32;
+    // a .hgq file's experiment block supplies the defaults; explicit
+    // CLI flags still override every one of them
+    let file_defaults = if model.ends_with(".hgq") { Some(try_preset(&model)?) } else { None };
+    let d = file_defaults.as_ref();
+    let epochs = args.usize("epochs", d.map_or(30, |p| p.epochs));
+    let beta = args.f64("beta", d.map_or(1e-5, |p| p.beta_from));
+    let beta_to = args.f64("beta-to", d.map_or(0.0, |p| p.beta_to));
+    let f_lr = args.f64("f-lr", d.map_or(8.0, |p| p.f_lr as f64)) as f32;
+    let lr = args.f64("lr", d.map_or(3e-3, |p| p.lr as f64)) as f32;
     let seed = args.u64("seed", 0);
-    let n_train = args.usize("n-train", 8192);
-    let n_eval = args.usize("n-eval", 2048);
+    let n_train = args.usize("n-train", d.map_or(8192, |p| p.n_train));
+    let n_eval = args.usize("n-eval", d.map_or(2048, |p| p.n_eval));
     let verbose = args.flag("verbose");
     args.finish()?;
 
     let mr = ModelRuntime::load(&rt, artifacts, &model)?;
-    let splits = try_splits_for(&model, seed ^ 1, n_train, n_eval)?;
-    let cfg = TrainConfig {
+    let splits = try_splits_for_meta(&mr.meta, seed ^ 1, n_train, n_eval)?;
+    let mut cfg = TrainConfig {
         epochs,
         lr,
         f_lr,
@@ -170,6 +274,9 @@ fn cmd_train(artifacts: &PathBuf, mut args: Args) -> Result<()> {
         log_every: if verbose { 1 } else { (epochs / 10).max(1) },
         ..TrainConfig::default()
     };
+    if let Some(p) = d {
+        cfg.gamma = p.gamma;
+    }
     let out = hgq::coordinator::train(&mr, &splits.train, &splits.val, &cfg, None)?;
     let (_, rep) = deploy(&mr, "final", &out.state, &[&splits.train, &splits.val], &splits.test)?;
     println!("{}", rep.row());
@@ -234,7 +341,7 @@ fn cmd_table(artifacts: &PathBuf, mut args: Args, task: &str) -> Result<()> {
         println!("(saved {} checkpoints under {root})", outcome.pareto.len());
     }
     if !skip_baselines {
-        for &bits in p.uniform_bits {
+        for &bits in &p.uniform_bits {
             let rep = run_uniform_baseline(&rt, artifacts, &p, bits, epochs)?;
             println!("{}", rep.row());
             reports.push(rep);
@@ -262,7 +369,7 @@ fn cmd_deploy(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     args.finish()?;
     let (info, state) = hgq::coordinator::checkpoint::load(&PathBuf::from(&ckpt))?;
     let mr = ModelRuntime::load(&rt, artifacts, &info.model)?;
-    let splits = try_splits_for(&info.model, 1, n_eval * 2, n_eval)?;
+    let splits = try_splits_for_meta(&mr.meta, 1, n_eval * 2, n_eval)?;
     let (graph, rep) = deploy(
         &mr,
         &info.label,
@@ -290,7 +397,7 @@ fn cmd_emulate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     args.finish()?;
     let (info, state) = hgq::coordinator::checkpoint::load(&PathBuf::from(&ckpt))?;
     let mr = ModelRuntime::load(&rt, artifacts, &info.model)?;
-    let splits = try_splits_for(&info.model, 99, 1024, n.max(16))?;
+    let splits = try_splits_for_meta(&mr.meta, 99, 1024, n.max(16))?;
     let calib = hgq::coordinator::calibrate(&mr, &state, &[&splits.train])?;
     let graph = hgq::firmware::Graph::from_ir(&mr.ir, &state, &calib)?;
     let mut em = hgq::firmware::emulator::Emulator::new(&graph);
@@ -355,8 +462,9 @@ fn cmd_serve(artifacts: &PathBuf, mut args: Args) -> Result<()> {
         graph.exact_ebops()
     );
 
-    // deterministic synthetic request pool from the model's test stream
-    let splits = try_splits_for(&model, 0x5E12BE, 1, pool_n.max(1))?;
+    // deterministic synthetic request pool from the graph's declared
+    // dataset (works for .hgq-keyed graphs whose names encode nothing)
+    let splits = try_splits_for_graph(&graph, 0x5E12BE, 1, pool_n.max(1))?;
     let pool = &splits.test.x;
 
     let workers = if threads == 0 { hgq::util::shards::default_threads() } else { threads };
@@ -481,9 +589,17 @@ fn cmd_client(mut args: Args) -> Result<()> {
     if requests > 0 {
         // the client generates inputs from the same deterministic test
         // stream the closed-loop bench uses; the lane key may be an
-        // alias, so resolve it to the preset the data loader knows
+        // alias, so resolve it to the preset the data loader knows. A
+        // .hgq key is parsed locally for its dataset/dims (the daemon
+        // and client must share the file for inputs to line up).
         let resolved = Registry::resolve(&model).to_string();
-        let splits = try_splits_for(&resolved, 0xC11E57, 1, pool_n)?;
+        let splits = if resolved.ends_with(".hgq") {
+            let f = hgq::dsl::parse_file(std::path::Path::new(&resolved))?;
+            let meta = f.model.build_meta()?;
+            try_splits_for_meta(&meta, 0xC11E57, 1, pool_n)?
+        } else {
+            try_splits_for(&resolved, 0xC11E57, 1, pool_n)?
+        };
         let mut lat_ns: Vec<u64> = Vec::with_capacity(requests);
         let mut overloaded = 0usize;
         let mut first: Option<Vec<f64>> = None;
@@ -535,7 +651,9 @@ fn cmd_client(mut args: Args) -> Result<()> {
 /// audit per-layer operator counts against `resource::estimate`.
 fn cmd_emit_hls(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     use hgq::hls::{self, EmitSource};
-    let preset = args.str_opt("preset");
+    // --model FILE.hgq is the natural spelling for user architectures;
+    // both flags feed the same registry key (which accepts .hgq paths)
+    let preset = args.str_opt("preset").or_else(|| args.str_opt("model"));
     let ckpt = args.str_opt("checkpoint");
     let out_dir = PathBuf::from(args.str("out", "hls_out"));
     let vectors = args.usize("vectors", 16);
@@ -547,7 +665,7 @@ fn cmd_emit_hls(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     let src = match (&preset, &ckpt_dir) {
         (Some(p), None) => EmitSource::Preset(p),
         (None, Some(d)) => EmitSource::Checkpoint(d),
-        _ => bail!("emit-hls needs exactly one of --preset NAME or --checkpoint DIR"),
+        _ => bail!("emit-hls needs exactly one of --preset NAME, --model FILE.hgq or --checkpoint DIR"),
     };
     let outcome = hls::emit_to_dir(artifacts, src, calib_n, vectors, &out_dir)?;
     let g = &outcome.graph;
@@ -622,8 +740,8 @@ fn cmd_ablate(artifacts: &PathBuf, mut args: Args) -> Result<()> {
     let epochs = args.usize("epochs", 40);
     args.finish()?;
     let p = try_preset("jets")?;
-    let mr = ModelRuntime::load(&rt, artifacts, p.model)?;
-    let splits = try_splits_for(p.model, 1, p.n_train, p.n_eval)?;
+    let mr = ModelRuntime::load(&rt, artifacts, &p.model)?;
+    let splits = try_splits_for_meta(&mr.meta, 1, p.n_train, p.n_eval)?;
 
     println!("== ablation: constant beta (HGQ-c*) vs ramp ==");
     for (label, beta) in [("HGQ-c1", 2.1e-6), ("HGQ-c2", 1.2e-5)] {

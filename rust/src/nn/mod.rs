@@ -3,6 +3,9 @@
 //! compile/aot.py) into typed descriptions of the packed state vector,
 //! the activation quantizer groups, and the layer graph.
 
+pub mod presets;
+pub mod spec;
+
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -10,7 +13,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::util::json::Json;
 
 /// One named tensor inside the packed state vector.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TensorEntry {
     /// tensor name, e.g. `"d0.w"` or `"adam.m"`
     pub name: String,
@@ -27,7 +30,7 @@ pub struct TensorEntry {
 /// One activation quantizer group (paper: a set of activation values
 /// sharing statistics; per-element granularity => size == tensor size,
 /// layer granularity => size == 1).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ActGroup {
     /// group name == its fbit tensor, e.g. `"d0.fa"`
     pub name: String,
@@ -42,7 +45,7 @@ pub struct ActGroup {
 }
 
 /// One layer of the model graph as described by meta.json.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 #[allow(missing_docs)] // field names mirror the meta.json schema
 pub enum LayerMeta {
     /// Input quantizer.
@@ -73,12 +76,18 @@ impl LayerMeta {
 /// Full model description: the packed-state symbol table, activation
 /// groups and layer graph (the contract of ARCHITECTURE.md
 /// §Packed-state protocol).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelMeta {
     /// model name, e.g. `"jets_pp"`
     pub name: String,
     /// "cls" | "reg"
     pub task: String,
+    /// dataset the model trains/calibrates on: `"jets"` | `"muon"` |
+    /// `"svhn"` | `"synth"` (generic teacher-labeled data matched to
+    /// the model's own input/output dims). Artifact metas without a
+    /// `dataset` key default to the model-name prefix, preserving the
+    /// historical `jets_*`/`muon_*`/`svhn_*` convention.
+    pub dataset: String,
     /// fixed batch size every backend call uses
     pub batch: usize,
     /// input tensor shape (flattened to `input_dim()` on the wire)
@@ -198,9 +207,16 @@ impl ModelMeta {
             bail!("act group sizes ({calib_off}) disagree with calib_size ({calib_size})");
         }
 
+        let name = s("name")?;
+        let dataset = match j.get("dataset").and_then(Json::as_str) {
+            Some(d) => d.to_string(),
+            // historical metas predate the key: `jets_pp` trains on `jets`
+            None => name.split('_').next().unwrap_or("synth").to_string(),
+        };
         Ok(ModelMeta {
-            name: s("name")?,
+            name,
             task: s("task")?,
+            dataset,
             batch: n("batch")?,
             input_shape: j
                 .get("input_shape")

@@ -1,0 +1,109 @@
+//! Built-in presets as thin wrappers over the shipped
+//! `examples/models/*.hgq` sources.
+//!
+//! The five paper models are embedded at compile time with
+//! `include_str!` and parsed through the same `.hgq` grammar any user
+//! model goes through — there is no second, compiled-in definition to
+//! drift from the shipped files. `hgq train --preset jets` and
+//! `hgq train --model examples/models/jets_pp.hgq` build bit-identical
+//! models (the preset-equivalence test suite pins this).
+
+use anyhow::{bail, Context, Result};
+
+use crate::dsl::{self, HgqFile};
+use crate::nn::spec::ModelSpec;
+
+/// The built-in preset model names, in canonical listing order.
+pub const PRESET_NAMES: [&str; 5] = ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"];
+
+/// The embedded `.hgq` source of a builtin preset (the verbatim
+/// contents of its `examples/models/<name>.hgq` file). Errors on an
+/// unknown name.
+pub fn source(model: &str) -> Result<&'static str> {
+    Ok(match model {
+        "jets_pp" => include_str!("../../../examples/models/jets_pp.hgq"),
+        "jets_lw" => include_str!("../../../examples/models/jets_lw.hgq"),
+        "muon_pp" => include_str!("../../../examples/models/muon_pp.hgq"),
+        "muon_lw" => include_str!("../../../examples/models/muon_lw.hgq"),
+        "svhn_stream" => include_str!("../../../examples/models/svhn_stream.hgq"),
+        other => bail!(
+            "no artifacts for model '{other}' and no built-in preset of that name \
+             (presets: jets_pp jets_lw muon_pp muon_lw svhn_stream)"
+        ),
+    })
+}
+
+/// Parse a builtin preset's embedded source. A parse failure here is a
+/// build defect (the shipped files are tested against the parser), so
+/// it surfaces with full context rather than a panic.
+pub fn load(model: &str) -> Result<HgqFile> {
+    let src = source(model)?;
+    dsl::parse_str(src, &format!("{model}.hgq"))
+        .map_err(anyhow::Error::new)
+        .with_context(|| format!("embedded preset '{model}' failed to parse"))
+}
+
+/// The [`ModelSpec`] of a builtin preset.
+pub fn spec(model: &str) -> Result<ModelSpec> {
+    Ok(load(model)?.model)
+}
+
+/// Canonical `.hgq` source of a builtin preset: parse the shipped file,
+/// print it back. The output re-parses to an identical model — the
+/// round-trip the CI dsl-smoke step checks.
+///
+/// ```
+/// let canon = hgq::nn::presets::to_source("jets_pp").unwrap();
+/// let reparsed = hgq::dsl::parse_str(&canon, "jets_pp.hgq").unwrap();
+/// assert_eq!(reparsed.model.name, "jets_pp");
+/// assert_eq!(reparsed, hgq::nn::presets::load("jets_pp").unwrap());
+/// ```
+pub fn to_source(model: &str) -> Result<String> {
+    Ok(dsl::to_source(&load(model)?))
+}
+
+/// Fractional-bit init constants for artifact models shipping no
+/// `init.bin`: the preset's `init_bits` when the name is a builtin,
+/// else the historical (6, 6) default.
+pub fn default_f_inits(model: &str) -> (f32, f32) {
+    match spec(model) {
+        Ok(s) => (s.init_bits_w, s.init_bits_a),
+        Err(_) => (6.0, 6.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_parses_and_matches_its_name() {
+        for name in PRESET_NAMES {
+            let f = load(name).unwrap();
+            assert_eq!(f.model.name, name, "preset file name drifted");
+            assert!(f.experiment.is_some(), "preset '{name}' ships no experiment block");
+        }
+    }
+
+    #[test]
+    fn to_source_round_trips_semantically() {
+        for name in PRESET_NAMES {
+            let canon = to_source(name).unwrap();
+            let reparsed = dsl::parse_str(&canon, "canon.hgq").unwrap();
+            assert_eq!(reparsed, load(name).unwrap(), "round-trip drift in '{name}'");
+        }
+    }
+
+    #[test]
+    fn unknown_preset_mentions_the_preset_list() {
+        let err = source("resnet50").unwrap_err();
+        assert!(format!("{err}").contains("preset"), "{err}");
+    }
+
+    #[test]
+    fn jets_pp_keeps_its_historical_inits() {
+        assert_eq!(default_f_inits("jets_pp"), (2.0, 2.0));
+        assert_eq!(default_f_inits("muon_pp"), (6.0, 6.0));
+        assert_eq!(default_f_inits("not_a_preset"), (6.0, 6.0));
+    }
+}

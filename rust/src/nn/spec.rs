@@ -1,0 +1,420 @@
+//! Backend-independent model specification: the typed form every
+//! model description lowers through before it becomes a [`ModelMeta`].
+//!
+//! Two producers build a [`ModelSpec`]: the `.hgq` DSL parser
+//! (`crate::dsl`) and the compiled-in presets (which are themselves
+//! parsed from the shipped `examples/models/*.hgq` sources, so the two
+//! can never drift). One consumer lowers it: [`ModelSpec::build_meta`]
+//! emits the packed-state layout identical to the python `StateSpec`
+//! (ARCHITECTURE.md §Packed-state protocol):
+//! `[params | fbits | adam.m | adam.v | amin/group | amax/group | step]`.
+//!
+//! [`synth_init`] and [`model_seed`] produce the deterministic He-init
+//! state for spec-synthesized models — the same recipe (and the same
+//! RNG stream per model name) the native backend has always used, so a
+//! preset lowered from its `.hgq` file is bit-identical to the
+//! historical compiled-in path.
+
+use anyhow::{Context, Result};
+
+use crate::ir::shape;
+use crate::nn::{ActGroup, LayerMeta, ModelMeta, TensorEntry};
+use crate::util::rng::Rng;
+
+/// Bitwidth-sharing granularity of a quantizer (paper §II.C): one
+/// learned fractional-bit value per tensor element, or one shared
+/// value per layer/tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// one fractional-bit parameter per element (per-parameter HGQ)
+    Element,
+    /// one shared fractional-bit parameter per tensor (layer-wise)
+    Layer,
+}
+
+impl Granularity {
+    /// Keyword form used by the DSL and `meta.json` (`"element"` /
+    /// `"layer"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Granularity::Element => "element",
+            Granularity::Layer => "layer",
+        }
+    }
+}
+
+/// One layer of a model specification. Weight/activation granularity
+/// overrides (when `Some`) replace the model-level defaults for this
+/// layer only — the HGQ2-style per-layer scheme split.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerSpec {
+    /// Fully-connected layer (flattens its input implicitly).
+    Dense {
+        /// layer name (tensor prefix, e.g. `"d0"` → `d0.w`, `d0.fa`)
+        name: String,
+        /// output feature count
+        units: usize,
+        /// relu on the accumulator
+        relu: bool,
+        /// per-layer weight-granularity override
+        weights: Option<Granularity>,
+        /// per-layer activation-granularity override
+        activations: Option<Granularity>,
+    },
+    /// Valid (no-padding) kxk convolution over an HWC tensor.
+    Conv2d {
+        /// layer name (tensor prefix)
+        name: String,
+        /// kernel size (k x k)
+        kernel: usize,
+        /// output channels
+        filters: usize,
+        /// relu on the accumulator
+        relu: bool,
+        /// per-layer weight-granularity override
+        weights: Option<Granularity>,
+        /// per-layer activation-granularity override
+        activations: Option<Granularity>,
+    },
+    /// 2x2 max pooling (floor-halved spatial dims).
+    MaxPool2,
+    /// Shape-only flatten.
+    Flatten,
+}
+
+impl LayerSpec {
+    /// Layer name for diagnostics (fixed strings for unnamed layers).
+    pub fn name(&self) -> &str {
+        match self {
+            LayerSpec::Dense { name, .. } => name,
+            LayerSpec::Conv2d { name, .. } => name,
+            LayerSpec::MaxPool2 => "maxpool2",
+            LayerSpec::Flatten => "flatten",
+        }
+    }
+}
+
+/// A complete model specification: identity, dataset, granularities,
+/// quantizer init and the layer stack. The input quantizer is implicit
+/// (always the first layer, named `inq`, signedness from
+/// [`ModelSpec::input_signed`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// model name (seeds the deterministic init via [`model_seed`])
+    pub name: String,
+    /// "cls" | "reg"
+    pub task: String,
+    /// dataset the model trains/calibrates on (see
+    /// [`ModelMeta::dataset`])
+    pub dataset: String,
+    /// fixed batch size every backend call uses
+    pub batch: usize,
+    /// input tensor shape, e.g. `[16]` or `[32, 32, 3]`
+    pub input_shape: Vec<usize>,
+    /// whether input features can be negative
+    pub input_signed: bool,
+    /// model-level weight-bitwidth granularity
+    pub weights: Granularity,
+    /// model-level activation-bitwidth granularity
+    pub activations: Granularity,
+    /// initial fractional bits for every weight/bias quantizer
+    pub init_bits_w: f32,
+    /// initial fractional bits for every activation quantizer
+    pub init_bits_a: f32,
+    /// the layer stack (input quantizer not included — it is implicit)
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Lower the spec to a [`ModelMeta`] with the packed-state layout
+    /// identical to the python `StateSpec` (see module docs). All
+    /// output-shape arithmetic goes through the shared
+    /// [`crate::ir::shape`] helpers, so this builder and the IR builder
+    /// cannot disagree on layer geometry.
+    pub fn build_meta(&self) -> Result<ModelMeta> {
+        let w_elem = self.weights == Granularity::Element;
+        let a_elem = self.activations == Granularity::Element;
+
+        let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+        let mut fbits: Vec<(String, Vec<usize>)> = Vec::new();
+        let mut agroups: Vec<(String, Vec<usize>, bool)> = Vec::new();
+        let mut layers: Vec<LayerMeta> = Vec::new();
+        let mut shape = self.input_shape.clone();
+
+        // implicit input quantizer: model-level activation granularity
+        {
+            let fshape = if a_elem { shape.clone() } else { Vec::new() };
+            fbits.push(("inq.fa".to_string(), fshape.clone()));
+            agroups.push(("inq.fa".to_string(), fshape, self.input_signed));
+            layers.push(LayerMeta::InputQuant {
+                name: "inq".to_string(),
+                signed: self.input_signed,
+            });
+        }
+
+        for lc in &self.layers {
+            match lc {
+                LayerSpec::Dense { name, units, relu, weights, activations } => {
+                    let lw = weights.map(|g| g == Granularity::Element).unwrap_or(w_elem);
+                    let la = activations.map(|g| g == Granularity::Element).unwrap_or(a_elem);
+                    let din = shape::flatten_dim(&shape);
+                    let dout = *units;
+                    params.push((format!("{name}.w"), vec![din, dout]));
+                    params.push((format!("{name}.b"), vec![dout]));
+                    fbits.push((
+                        format!("{name}.fw"),
+                        if lw { vec![din, dout] } else { Vec::new() },
+                    ));
+                    fbits.push((format!("{name}.fb"), if lw { vec![dout] } else { Vec::new() }));
+                    let fshape = if la { vec![dout] } else { Vec::new() };
+                    fbits.push((format!("{name}.fa"), fshape.clone()));
+                    agroups.push((format!("{name}.fa"), fshape, !*relu));
+                    layers.push(LayerMeta::Dense { name: name.clone(), din, dout, relu: *relu });
+                    shape = vec![dout];
+                }
+                LayerSpec::Conv2d { name, kernel, filters, relu, weights, activations } => {
+                    let lw = weights.map(|g| g == Granularity::Element).unwrap_or(w_elem);
+                    let la = activations.map(|g| g == Granularity::Element).unwrap_or(a_elem);
+                    let (k, cout) = (*kernel, *filters);
+                    let os = shape::conv2d_out_shape(&shape, k, cout)
+                        .with_context(|| format!("conv2d '{name}'"))?;
+                    let cin = shape[2];
+                    let [oh, ow, _] = os;
+                    params.push((format!("{name}.w"), vec![k, k, cin, cout]));
+                    params.push((format!("{name}.b"), vec![cout]));
+                    fbits.push((
+                        format!("{name}.fw"),
+                        if lw { vec![k, k, cin, cout] } else { Vec::new() },
+                    ));
+                    fbits.push((format!("{name}.fb"), if lw { vec![cout] } else { Vec::new() }));
+                    let fshape = if la { vec![oh, ow, cout] } else { Vec::new() };
+                    fbits.push((format!("{name}.fa"), fshape.clone()));
+                    agroups.push((format!("{name}.fa"), fshape, !*relu));
+                    layers.push(LayerMeta::Conv2d {
+                        name: name.clone(),
+                        k,
+                        cin,
+                        cout,
+                        relu: *relu,
+                        out_shape: os,
+                    });
+                    shape = os.to_vec();
+                }
+                LayerSpec::MaxPool2 => {
+                    let os = shape::maxpool2_out_shape(&shape)?;
+                    shape = os.to_vec();
+                    layers.push(LayerMeta::MaxPool2 { out_shape: os });
+                }
+                LayerSpec::Flatten => {
+                    shape = vec![shape::flatten_dim(&shape)];
+                    layers.push(LayerMeta::Flatten);
+                }
+            }
+        }
+        let output_dim = shape::flatten_dim(&shape);
+
+        let mut tensors: Vec<TensorEntry> = Vec::new();
+        let mut off = 0usize;
+        for (name, shp) in &params {
+            let size = shape::flatten_dim(shp);
+            tensors.push(TensorEntry {
+                name: name.clone(),
+                shape: shp.clone(),
+                offset: off,
+                size,
+                seg: "param".to_string(),
+            });
+            off += size;
+        }
+        let n_params = off;
+        for (name, shp) in &fbits {
+            let size = shape::flatten_dim(shp);
+            tensors.push(TensorEntry {
+                name: name.clone(),
+                shape: shp.clone(),
+                offset: off,
+                size,
+                seg: "fbit".to_string(),
+            });
+            off += size;
+        }
+        let n_train = off;
+        for opt_name in ["adam.m", "adam.v"] {
+            tensors.push(TensorEntry {
+                name: opt_name.to_string(),
+                shape: vec![n_train],
+                offset: off,
+                size: n_train,
+                seg: "opt".to_string(),
+            });
+            off += n_train;
+        }
+        let mut act_groups: Vec<ActGroup> = Vec::new();
+        let mut coff = 0usize;
+        for (name, fshape, signed) in &agroups {
+            let size = shape::flatten_dim(fshape);
+            act_groups.push(ActGroup {
+                name: name.clone(),
+                fshape: fshape.clone(),
+                signed: *signed,
+                size,
+                calib_offset: coff,
+            });
+            coff += size;
+        }
+        for stat in ["amin", "amax"] {
+            for g in &act_groups {
+                tensors.push(TensorEntry {
+                    name: format!("{}.{stat}", g.name),
+                    shape: g.fshape.clone(),
+                    offset: off,
+                    size: g.size,
+                    seg: "stat".to_string(),
+                });
+                off += g.size;
+            }
+        }
+        tensors.push(TensorEntry {
+            name: "step".to_string(),
+            shape: Vec::new(),
+            offset: off,
+            size: 1,
+            seg: "opt".to_string(),
+        });
+        off += 1;
+
+        Ok(ModelMeta {
+            name: self.name.clone(),
+            task: self.task.clone(),
+            dataset: self.dataset.clone(),
+            batch: self.batch,
+            input_shape: self.input_shape.clone(),
+            y_is_int: self.task == "cls",
+            w_gran: self.weights.as_str().to_string(),
+            a_gran: self.activations.as_str().to_string(),
+            state_size: off,
+            n_params,
+            n_train,
+            calib_size: coff,
+            output_dim,
+            tensors,
+            act_groups,
+            layers,
+        })
+    }
+
+    /// Deterministic init state for this spec: [`synth_init`] seeded by
+    /// [`model_seed`] of the spec's name.
+    pub fn init_state(&self, meta: &ModelMeta) -> Vec<f32> {
+        synth_init(meta, self.init_bits_w, self.init_bits_a, model_seed(&self.name))
+    }
+}
+
+/// He-init weights, zero biases/opt/stats, constant fbit init — the
+/// same recipe as python Net.init_tensors (different RNG stream).
+pub fn synth_init(meta: &ModelMeta, f_init_w: f32, f_init_a: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut out = vec![0.0f32; meta.state_size];
+    for t in &meta.tensors {
+        match t.seg.as_str() {
+            "param" if t.name.ends_with(".w") => {
+                let fan_in = shape::flatten_dim(&t.shape[..t.shape.len() - 1]).max(1);
+                let std = (2.0 / fan_in as f64).sqrt();
+                for v in out[t.offset..t.offset + t.size].iter_mut() {
+                    *v = rng.normal_scaled(0.0, std) as f32;
+                }
+            }
+            "fbit" => {
+                let f = if t.name.ends_with(".fa") { f_init_a } else { f_init_w };
+                out[t.offset..t.offset + t.size].fill(f);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Deterministic per-model RNG seed: a byte-fold of the model name, so
+/// every session synthesizing the same model gets the same init state.
+pub fn model_seed(model: &str) -> u64 {
+    model.bytes().fold(0xB17D_D0C5u64, |a, b| a.rotate_left(8) ^ b as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ModelIr;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "tiny".into(),
+            task: "cls".into(),
+            dataset: "synth".into(),
+            batch: 8,
+            input_shape: vec![4],
+            input_signed: true,
+            weights: Granularity::Element,
+            activations: Granularity::Layer,
+            init_bits_w: 3.0,
+            init_bits_a: 5.0,
+            layers: vec![
+                LayerSpec::Dense {
+                    name: "d0".into(),
+                    units: 6,
+                    relu: true,
+                    weights: None,
+                    activations: None,
+                },
+                LayerSpec::Dense {
+                    name: "d1".into(),
+                    units: 3,
+                    relu: false,
+                    weights: None,
+                    activations: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn build_meta_lowers_and_ir_accepts() {
+        let spec = tiny_spec();
+        let meta = spec.build_meta().unwrap();
+        assert_eq!(meta.output_dim, 3);
+        assert_eq!(meta.dataset, "synth");
+        // params: 4*6 + 6 + 6*3 + 3 = 51
+        assert_eq!(meta.n_params, 51);
+        // fbits: inq.fa(1) + d0.fw(24)+fb(6)+fa(1) + d1.fw(18)+fb(3)+fa(1)
+        assert_eq!(meta.n_train, 51 + 54);
+        let ir = ModelIr::build(&meta).unwrap();
+        assert_eq!(ir.nodes.len(), 3); // inq + 2 dense
+        assert_eq!(ir.dataset, "synth");
+    }
+
+    #[test]
+    fn per_layer_override_changes_fbit_shape() {
+        let mut spec = tiny_spec();
+        if let LayerSpec::Dense { weights, activations, .. } = &mut spec.layers[0] {
+            *weights = Some(Granularity::Layer);
+            *activations = Some(Granularity::Element);
+        }
+        let meta = spec.build_meta().unwrap();
+        assert_eq!(meta.tensor("d0.fw").unwrap().size, 1);
+        assert_eq!(meta.tensor("d0.fa").unwrap().size, 6);
+        // overridden layouts must still pass full IR validation
+        ModelIr::build(&meta).unwrap();
+    }
+
+    #[test]
+    fn init_state_is_deterministic_and_fills_fbits() {
+        let spec = tiny_spec();
+        let meta = spec.build_meta().unwrap();
+        let a = spec.init_state(&meta);
+        let b = spec.init_state(&meta);
+        assert_eq!(a, b);
+        let fw = meta.tensor("d0.fw").unwrap();
+        assert!(a[fw.offset..fw.offset + fw.size].iter().all(|&v| v == 3.0));
+        let fa = meta.tensor("d0.fa").unwrap();
+        assert!(a[fa.offset..fa.offset + fa.size].iter().all(|&v| v == 5.0));
+    }
+}

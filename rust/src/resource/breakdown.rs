@@ -115,6 +115,8 @@ mod tests {
         let q = ActQ { scalar: true, specs: vec![FixedSpec::new(true, 8, 3)] };
         Graph {
             name: "t".into(),
+            task: "cls".into(),
+            dataset: "synth".into(),
             input_dim: 4,
             output_dim: 2,
             layers: vec![

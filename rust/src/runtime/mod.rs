@@ -203,7 +203,9 @@ impl ModelRuntime {
     /// Load `model` from `artifacts/<model>/` (meta.json + init.bin,
     /// plus HLO files on the pjrt backend). The native backend falls
     /// back to its built-in presets when no artifact directory exists,
-    /// so the hermetic build needs no files at all.
+    /// so the hermetic build needs no files at all — and a `model`
+    /// ending in `.hgq` loads a user-defined architecture from that
+    /// file instead (native backend only).
     pub fn load(rt: &Runtime, artifacts: &Path, model: &str) -> Result<ModelRuntime> {
         let (exec, shared_ir): (Box<dyn ModelExec>, Option<Arc<ModelIr>>) = match rt.kind {
             BackendKind::Native => {

@@ -31,25 +31,29 @@
 //! `train_step`/`forward`/`calib_batch`; each call only refills a
 //! reusable requantization workspace from the packed state.
 //!
-//! Models load from `artifacts/<model>/` when present; otherwise the
-//! built-in presets mirroring python/compile/model.py are synthesized
-//! in-process (same tensor layout, he-init weights), so `hgq train
-//! --preset svhn --backend native` runs with zero files on disk.
+//! Model resolution: a `model` name ending in `.hgq` is parsed as a
+//! DSL file ([`crate::dsl`]) and synthesized in-process; otherwise
+//! `artifacts/<model>/` is loaded when present, else the built-in
+//! preset of that name (itself parsed from its shipped
+//! `examples/models/*.hgq` source — see [`crate::nn::presets`]) is
+//! synthesized with the same tensor layout and he-init weights, so
+//! `hgq train --preset svhn --backend native` runs with zero files on
+//! disk.
 
 mod engine;
 mod parallel;
-mod presets;
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use self::engine::{backward_shard, forward_shard, regularizer_pass, GroupStats, Plan, ShardRun};
 use self::parallel::{default_threads, run_shards, shard_ranges};
 use super::{Hypers, ModelExec, StepOut, Target};
 use crate::ir::{tier, ModelIr};
-use crate::nn::ModelMeta;
+use crate::nn::spec::{self, ModelSpec};
+use crate::nn::{presets, ModelMeta};
 
 const ADAM_B1: f64 = 0.9;
 const ADAM_B2: f64 = 0.999;
@@ -75,10 +79,14 @@ pub struct NativeModel {
 }
 
 impl NativeModel {
-    /// Load from `artifacts/<model>/` (meta.json [+ init.bin]) when the
-    /// directory exists, else synthesize the built-in preset of that
-    /// name — the zero-artifact path.
+    /// Resolve a model key: a `.hgq` path parses as a DSL file; else
+    /// `artifacts/<model>/` (meta.json [+ init.bin]) when the directory
+    /// exists; else the built-in preset of that name — the
+    /// zero-artifact path.
     pub fn load(artifacts: &Path, model: &str) -> Result<NativeModel> {
+        if model.ends_with(".hgq") {
+            return NativeModel::from_dsl_file(Path::new(model));
+        }
         let dir = artifacts.join(model);
         if dir.join("meta.json").exists() {
             let meta = ModelMeta::load(&dir)?;
@@ -99,7 +107,7 @@ impl NativeModel {
                 // preset init; unreadable/corrupt files must surface
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
                     let (fw, fa) = presets::default_f_inits(model);
-                    presets::synth_init(&meta, fw, fa, presets::model_seed(model))
+                    spec::synth_init(&meta, fw, fa, spec::model_seed(model))
                 }
                 Err(e) => {
                     bail!("reading {}: {e}", dir.join("init.bin").display());
@@ -111,14 +119,26 @@ impl NativeModel {
         }
     }
 
-    /// Synthesize a built-in preset directly (no filesystem access).
+    /// Synthesize a built-in preset directly (no filesystem access):
+    /// its embedded `.hgq` source parses to a [`ModelSpec`] and lowers
+    /// like any user model.
     pub fn from_preset(model: &str) -> Result<NativeModel> {
-        use anyhow::Context;
-        let spec = presets::preset_spec(model)?;
-        let meta = presets::build_meta(&spec)
-            .with_context(|| format!("building preset meta for '{model}'"))?;
-        let seed = presets::model_seed(model);
-        let init = presets::synth_init(&meta, spec.f_init_w, spec.f_init_a, seed);
+        NativeModel::from_spec(&presets::spec(model)?)
+    }
+
+    /// Parse a `.hgq` model file and synthesize it (deterministic
+    /// he-init seeded by the model name, like presets).
+    pub fn from_dsl_file(path: &Path) -> Result<NativeModel> {
+        let f = crate::dsl::parse_file(path)?;
+        NativeModel::from_spec(&f.model)
+    }
+
+    /// Synthesize any [`ModelSpec`]: lower to meta, build the
+    /// deterministic init state, resolve the IR.
+    pub fn from_spec(ms: &ModelSpec) -> Result<NativeModel> {
+        let meta =
+            ms.build_meta().with_context(|| format!("building model '{}'", ms.name))?;
+        let init = ms.init_state(&meta);
         NativeModel::assemble(meta, init)
     }
 

@@ -104,6 +104,8 @@ pub(crate) mod testutil {
         };
         Graph {
             name: "tiny_serve".into(),
+            task: "cls".into(),
+            dataset: "synth".into(),
             input_dim: 3,
             output_dim: 2,
             layers: vec![

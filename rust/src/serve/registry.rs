@@ -17,7 +17,10 @@
 //!   builds its graph.
 //!
 //! Task aliases (`jets`, `muon`, `svhn`) resolve to the per-parameter
-//! paper models, so the CLI accepts either spelling.
+//! paper models, so the CLI accepts either spelling. A key ending in
+//! `.hgq` is treated as a model-description file path: the model is
+//! parsed, synthesized and calibrated on its declared `dataset`, so
+//! arbitrary user architectures serve without any compiled-in preset.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -26,7 +29,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::coordinator::{calibrate, checkpoint};
-use crate::data::try_splits_for;
+use crate::data::try_splits_for_meta;
 use crate::firmware::Graph;
 use crate::runtime::{ModelRuntime, Runtime};
 
@@ -147,7 +150,9 @@ impl Registry {
                 owned.as_slice()
             }
         };
-        let splits = try_splits_for(model, CALIB_SEED, self.calib_n, 1)?;
+        // keyed off the meta's dataset field (not the model name), so
+        // `.hgq` file keys with arbitrary names calibrate correctly
+        let splits = try_splits_for_meta(&mr.meta, CALIB_SEED, self.calib_n, 1)?;
         let calib = calibrate(&mr, state, &[&splits.train])?;
         Graph::from_ir(&mr.ir, state, &calib)
     }
@@ -172,6 +177,19 @@ mod tests {
         assert_eq!(a.input_dim, 16);
         assert_eq!(a.output_dim, 5);
         assert_eq!(r.cached(), vec!["jets_pp".to_string()]);
+    }
+
+    #[test]
+    fn hgq_file_key_builds_a_graph() {
+        // a .hgq path as a registry key: parsed, synthesized, calibrated
+        // on its declared dataset (synth adapts to the model's dims)
+        let r = reg();
+        let g = r.get("../examples/models/mlp_synth.hgq").unwrap();
+        assert_eq!(g.name, "mlp_synth");
+        assert_eq!(g.input_dim, 24);
+        assert_eq!(g.output_dim, 4);
+        assert_eq!(g.dataset, "synth");
+        assert_eq!(g.task, "cls");
     }
 
     #[test]

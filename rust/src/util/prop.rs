@@ -200,6 +200,7 @@ fn assemble_meta(
     ModelMeta {
         name: "gen".to_string(),
         task: "cls".to_string(),
+        dataset: "synth".to_string(),
         batch: 4,
         input_shape,
         y_is_int: true,

@@ -1,0 +1,204 @@
+//! Golden parse-error suite for the `.hgq` DSL: every malformed file
+//! under `tests/fixtures/dsl/` must produce a spanned [`Diagnostic`] —
+//! never a panic — whose locus (`file:line:col`), message and help note
+//! match the expectations pinned here, and whose full caret-underlined
+//! rendering matches the committed `<fixture>.expected` golden file.
+//!
+//! The `.expected` fixtures are self-bootstrapping (same idiom as
+//! `hls_golden.rs`): a missing file is written on first run (commit
+//! it); set `HGQ_UPDATE_FIXTURES=1` to regenerate after an intentional
+//! diagnostics change. The structural assertions below hold either way,
+//! so a bootstrap run still fails on a wrong line/col or message.
+
+use std::collections::BTreeSet;
+use std::panic::AssertUnwindSafe;
+use std::path::{Path, PathBuf};
+
+struct Case {
+    /// fixture stem under tests/fixtures/dsl/ (without `.hgq`)
+    name: &'static str,
+    /// expected 1-based diagnostic line
+    line: usize,
+    /// expected 1-based diagnostic column
+    col: usize,
+    /// required fragment of the diagnostic message
+    msg_has: &'static str,
+    /// required fragment of the `help:` note, if one must be present
+    help_has: Option<&'static str>,
+}
+
+const CASES: &[Case] = &[
+    Case {
+        name: "near_miss_keyword",
+        line: 2,
+        col: 3,
+        msg_has: "unknown field `tsak`",
+        help_has: Some("did you mean `task`?"),
+    },
+    Case {
+        name: "missing_required_field",
+        line: 1,
+        col: 7,
+        msg_has: "missing the required `batch` field",
+        help_has: None,
+    },
+    Case {
+        name: "duplicate_layer",
+        line: 7,
+        col: 9,
+        msg_has: "duplicate layer name `d0`",
+        help_has: None,
+    },
+    Case {
+        name: "reserved_inq",
+        line: 6,
+        col: 9,
+        msg_has: "layer name `inq` is reserved",
+        help_has: Some("pick another name"),
+    },
+    Case {
+        name: "layer_before_input",
+        line: 5,
+        col: 3,
+        msg_has: "layer `d0` declared before the `input` field",
+        help_has: Some("declare `input [shape]` before the first layer"),
+    },
+    Case {
+        name: "conv_on_flat_input",
+        line: 6,
+        col: 3,
+        msg_has: "conv2d `c0`",
+        help_has: None,
+    },
+    Case {
+        name: "non_integer_batch",
+        line: 4,
+        col: 9,
+        msg_has: "`batch` needs a non-negative integer, got `2.5`",
+        help_has: None,
+    },
+    Case {
+        name: "bad_number",
+        line: 2,
+        col: 9,
+        msg_has: "malformed number `1.2.3`",
+        help_has: None,
+    },
+    Case {
+        name: "unterminated_string",
+        line: 1,
+        col: 7,
+        msg_has: "unterminated string",
+        help_has: None,
+    },
+    Case {
+        name: "duplicate_model_block",
+        line: 9,
+        col: 1,
+        msg_has: "duplicate `model` block (one per file)",
+        help_has: None,
+    },
+    Case {
+        name: "unknown_top_block",
+        line: 1,
+        col: 1,
+        msg_has: "unknown block `modle`",
+        help_has: Some("did you mean `model`?"),
+    },
+    Case {
+        name: "beta_ramp_missing_to",
+        line: 10,
+        col: 22,
+        msg_has: "expected `to` between the ramp endpoints",
+        help_has: None,
+    },
+    Case {
+        name: "empty",
+        line: 2,
+        col: 1,
+        msg_has: "file contains no `model` block",
+        help_has: None,
+    },
+];
+
+fn fixture_dir() -> PathBuf {
+    Path::new("tests/fixtures/dsl").to_path_buf()
+}
+
+#[test]
+fn malformed_fixtures_yield_spanned_diagnostics() {
+    for c in CASES {
+        let path = fixture_dir().join(format!("{}.hgq", c.name));
+        let file = path.to_string_lossy().to_string();
+        let src = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: reading fixture: {e}", c.name));
+
+        // the hard promise: malformed input is a Diagnostic, not a panic
+        let parsed = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            hgq::dsl::parse_str(&src, &file)
+        }))
+        .unwrap_or_else(|_| panic!("{}: parser panicked on malformed input", c.name));
+        let d = parsed.expect_err(&format!("{}: fixture unexpectedly parsed", c.name));
+
+        assert_eq!((d.line, d.col), (c.line, c.col), "{}: wrong locus\n{}", c.name, d.render());
+        assert!(d.msg.contains(c.msg_has), "{}: message drifted:\n{}", c.name, d.render());
+        if let Some(h) = c.help_has {
+            let help = d.help.as_deref().unwrap_or_else(|| panic!("{}: help note missing", c.name));
+            assert!(help.contains(h), "{}: help drifted: {help}", c.name);
+        }
+
+        let rendered = d.render();
+        assert!(
+            rendered.contains(&format!(" --> {file}:{}:{}", c.line, c.col)),
+            "{}: rendering lacks the file:line:col locus:\n{rendered}",
+            c.name
+        );
+        assert!(
+            rendered.lines().any(|l| l.trim_start().starts_with('|') && l.contains('^')),
+            "{}: rendering lacks a caret underline:\n{rendered}",
+            c.name
+        );
+
+        // golden compare against the committed rendering
+        let fx = fixture_dir().join(format!("{}.expected", c.name));
+        let update = std::env::var("HGQ_UPDATE_FIXTURES").is_ok_and(|v| !v.is_empty());
+        if update || !fx.exists() {
+            std::fs::write(&fx, &rendered).expect("write expected fixture");
+        }
+        let want = std::fs::read_to_string(&fx).expect("read expected fixture");
+        assert!(
+            rendered == want,
+            "{}: diagnostic drifted from {} — if the change is intentional, regenerate \
+             with HGQ_UPDATE_FIXTURES=1 and commit the new fixture.\ngot:\n{rendered}\nwant:\n{want}",
+            c.name,
+            fx.display()
+        );
+    }
+}
+
+#[test]
+fn every_fixture_file_is_covered() {
+    let on_disk: BTreeSet<String> = std::fs::read_dir(fixture_dir())
+        .expect("fixture dir")
+        .filter_map(|e| {
+            let p = e.expect("dir entry").path();
+            (p.extension().is_some_and(|x| x == "hgq"))
+                .then(|| p.file_stem().unwrap().to_string_lossy().to_string())
+        })
+        .collect();
+    let pinned: BTreeSet<String> = CASES.iter().map(|c| c.name.to_string()).collect();
+    assert_eq!(
+        on_disk, pinned,
+        "tests/fixtures/dsl/*.hgq and the pinned CASES table must stay in sync"
+    );
+}
+
+#[test]
+fn diagnostics_render_without_error_prefix() {
+    // the CLI prepends `error:` itself; a prefix baked into render()
+    // would double it
+    let d = hgq::dsl::parse_str("model 42", "m.hgq").unwrap_err();
+    assert!(!d.render().starts_with("error"), "{}", d.render());
+    // Display goes through the same rendering (anyhow context chains)
+    assert_eq!(format!("{d}"), d.render());
+}

@@ -1,0 +1,95 @@
+//! Preset-equivalence suite: the builtin presets are thin wrappers over
+//! the shipped `examples/models/*.hgq` sources, and this file pins the
+//! equivalence end to end — parsing, lowered `ModelMeta`, bit-identical
+//! init state, and byte-identical emitted firmware (the deployed-graph
+//! digest the hls_golden fixtures pin) — between loading a model by
+//! preset name and loading the same model from its `.hgq` file path.
+//!
+//! Tests run with the package root (`rust/`) as cwd, so the shipped
+//! files sit at `../examples/models/`.
+
+use std::path::Path;
+
+use hgq::hls::{self, EmitSource};
+use hgq::nn::presets;
+use hgq::runtime::{self, Hypers, ModelRuntime, Runtime, Target};
+
+const PRESETS: [&str; 5] = ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"];
+
+fn shipped_path(name: &str) -> String {
+    format!("../examples/models/{name}.hgq")
+}
+
+#[test]
+fn shipped_files_parse_equal_to_embedded_presets() {
+    for name in PRESETS {
+        let path = shipped_path(name);
+        let from_disk = hgq::dsl::parse_file(Path::new(&path))
+            .unwrap_or_else(|e| panic!("{name}: shipped file failed to parse: {e:#}"));
+        let embedded = presets::load(name).unwrap();
+        assert_eq!(from_disk, embedded, "{name}: shipped file drifted from embedded source");
+    }
+}
+
+#[test]
+fn file_loaded_models_are_bit_identical_to_presets() {
+    let rt = Runtime::new().unwrap();
+    for name in PRESETS {
+        let by_name = ModelRuntime::load(&rt, Path::new("artifacts"), name)
+            .unwrap_or_else(|e| panic!("{name}: preset load failed: {e:#}"));
+        let by_file = ModelRuntime::load(&rt, Path::new("artifacts"), &shipped_path(name))
+            .unwrap_or_else(|e| panic!("{name}: .hgq load failed: {e:#}"));
+        assert_eq!(by_name.meta, by_file.meta, "{name}: lowered ModelMeta differs");
+        // same tensor table implies same layout; the init recipe is
+        // seeded by the model name inside the file, so states match to
+        // the bit
+        assert_eq!(by_name.init_state(), by_file.init_state(), "{name}: init state differs");
+    }
+}
+
+#[test]
+fn deployed_graphs_emit_byte_identically() {
+    // small calibration keeps this affordable; equality is what matters
+    // (absolute digests are pinned by hls_golden at its own sizes)
+    const CALIB_N: usize = 32;
+    const N_VEC: usize = 1;
+    for name in PRESETS {
+        let a = hls::emit_source(Path::new("artifacts"), EmitSource::Preset(name), CALIB_N, N_VEC)
+            .unwrap_or_else(|e| panic!("{name}: emit by preset name failed: {e:#}"));
+        let path = shipped_path(name);
+        let b =
+            hls::emit_source(Path::new("artifacts"), EmitSource::Preset(path.as_str()), CALIB_N, N_VEC)
+            .unwrap_or_else(|e| panic!("{name}: emit by .hgq path failed: {e:#}"));
+        assert_eq!(a.graph.name, b.graph.name);
+        assert!(
+            a.out == b.out,
+            "{name}: firmware emitted from the .hgq path is not byte-identical to the preset path"
+        );
+    }
+}
+
+#[test]
+fn custom_hgq_model_trains_and_deploys() {
+    // the non-preset shipped example: a user-defined architecture must
+    // run the same load → train-step → deploy → emit path
+    let path = shipped_path("mlp_synth");
+    let rt = Runtime::new().unwrap();
+    let mr = ModelRuntime::load(&rt, Path::new("artifacts"), &path).unwrap();
+    assert_eq!(mr.meta.name, "mlp_synth");
+    assert_eq!((mr.meta.input_dim(), mr.meta.output_dim), (24, 4));
+
+    let batch = mr.meta.batch;
+    let splits = hgq::data::try_splits_for_meta(&mr.meta, 7, batch, 16).unwrap();
+    let x = &splits.train.x[..batch * mr.meta.input_dim()];
+    let y = Target::Cls(&splits.train.y_cls[..batch]);
+    let h = Hypers { beta: 1e-6, gamma: 2e-6, lr: 2e-3, f_lr: 8.0 };
+    let out = runtime::train_step(&mr, &mr.init_state(), x, y, h).unwrap();
+    assert_eq!(out.state.len(), mr.meta.state_size);
+    assert!(out.loss.is_finite(), "loss diverged: {}", out.loss);
+
+    let emitted =
+        hls::emit_source(Path::new("artifacts"), EmitSource::Preset(path.as_str()), 32, 1).unwrap();
+    assert_eq!(emitted.graph.name, "mlp_synth");
+    assert_eq!(emitted.graph.dataset, "synth");
+    assert!(emitted.out.file("firmware.cpp").is_some());
+}

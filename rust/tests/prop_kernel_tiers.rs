@@ -149,6 +149,8 @@ fn prop_tiering_is_thread_count_invariant() {
 fn one_weight_graph(wm: i64) -> Graph {
     Graph {
         name: "tier-boundary".to_string(),
+        task: "reg".to_string(),
+        dataset: "synth".to_string(),
         input_dim: 1,
         output_dim: 1,
         layers: vec![
