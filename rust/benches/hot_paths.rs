@@ -106,30 +106,44 @@ fn main() {
         println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(b as f64));
     }
 
-    // ---- width-tiered serving kernels vs the i64 reference -----------
+    // ---- compiled schedules vs branchy tiers vs the i64 reference ----
     // per-layer proven accumulator bounds (ARCHITECTURE.md §Kernel
-    // tiering) resolve paper layers to i8/i16/i32 accumulate paths;
-    // HGQ_FORCE_WIDE pins the i64 reference. Outputs are bit-identical
-    // either way — the ratio is pure tiering speedup.
+    // tiering) resolve paper layers to i8/i16/i32 accumulate paths, and
+    // the compiled zero-free schedules (§Compiled layer schedules)
+    // replace the branchy per-element loops with a linear sweep of
+    // shift-folded nonzero entries. HGQ_FORCE_BRANCHY pins the branchy
+    // tiers, HGQ_FORCE_WIDE the i64 reference. Outputs are
+    // bit-identical in all three modes — the ratios are pure dispatch
+    // speedup.
     {
         use hgq::serve::{BatchEmulator, Registry};
         let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         let reg = Registry::new(&artifacts).with_calib_samples(64);
         for (model, outer, inner) in [("jets_pp", 10usize, 200usize), ("svhn_stream", 5, 20)] {
             let g = reg.get(model).unwrap();
-            for (li, k) in g.kernel_plan().iter().enumerate() {
+            let plan = g.plan();
+            for (li, k) in plan.kernels.iter().enumerate() {
                 if let Some(bound) = k.bound {
-                    println!("  {model} layer {li}: tier {} (bound {bound})", k.tier.name());
+                    let sched = match plan.schedules[li].as_ref() {
+                        Some(sc) => format!("{} scheduled entries", sc.n_entries()),
+                        None => "branchy".to_string(),
+                    };
+                    println!(
+                        "  {model} layer {li}: tier {} (bound {bound}, {sched})",
+                        k.tier.name()
+                    );
                 }
             }
             let bsz = 32usize;
             let x: Vec<f32> =
                 (0..bsz * g.input_dim).map(|i| ((i % 23) as f32 - 11.0) / 8.0).collect();
             let mut out = vec![0.0f64; bsz * g.output_dim];
-            let mut wide_ns = 0.0f64;
-            for wide in [true, false] {
-                let mut em = BatchEmulator::new(&g, bsz).with_force_wide(wide);
-                let tag = if wide { "i64 wide" } else { "tiered" };
+            let (mut wide_ns, mut branchy_ns) = (0.0f64, 0.0f64);
+            for (tag, branchy, wide) in
+                [("i64 wide", false, true), ("branchy", true, false), ("scheduled", false, false)]
+            {
+                let mut em =
+                    BatchEmulator::new(&g, bsz).with_force_wide(wide).with_force_branchy(branchy);
                 let s = bench(&format!("{model} infer_batch b={bsz} [{tag}]"), outer, inner, || {
                     em.infer_batch(&x, &mut out).unwrap();
                     black_box(&out);
@@ -137,12 +151,95 @@ fn main() {
                 if wide {
                     wide_ns = s.median_ns;
                     println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(bsz as f64));
-                } else {
+                } else if branchy {
+                    branchy_ns = s.median_ns;
                     println!(
                         "{}   [{:.0} samples/s, {:.2}x vs wide]",
                         s.report(),
                         s.per_sec(bsz as f64),
                         wide_ns / s.median_ns,
+                    );
+                } else {
+                    println!(
+                        "{}   [{:.0} samples/s, {:.2}x vs branchy, {:.2}x vs wide]",
+                        s.report(),
+                        s.per_sec(bsz as f64),
+                        branchy_ns / s.median_ns,
+                        wide_ns / s.median_ns,
+                    );
+                }
+            }
+        }
+
+        // ---- scheduled vs branchy across pruned checkpoints ----------
+        // magnitude-prune the jets graph to 50/80/95% zeros: the
+        // schedules drop zero weights at compile time, so the scheduled
+        // advantage must widen with sparsity (EXPERIMENTS.md sparsity
+        // sweep) while both paths stay bit-identical
+        let g = reg.get("jets_pp").unwrap();
+        for frac in [0.5f64, 0.8, 0.95] {
+            let gs = sparsify(&g, frac);
+            let bsz = 32usize;
+            let x: Vec<f32> =
+                (0..bsz * gs.input_dim).map(|i| ((i % 23) as f32 - 11.0) / 8.0).collect();
+            let mut out = vec![0.0f64; bsz * gs.output_dim];
+            let mut branchy_ns = 0.0f64;
+            for (tag, branchy) in [("branchy", true), ("scheduled", false)] {
+                let mut em = BatchEmulator::new(&gs, bsz).with_force_branchy(branchy);
+                let s = bench(
+                    &format!("jets_pp {:.0}% sparse infer_batch b={bsz} [{tag}]", frac * 100.0),
+                    10,
+                    200,
+                    || {
+                        em.infer_batch(&x, &mut out).unwrap();
+                        black_box(&out);
+                    },
+                );
+                if branchy {
+                    branchy_ns = s.median_ns;
+                    println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(bsz as f64));
+                } else {
+                    println!(
+                        "{}   [{:.0} samples/s, {:.2}x vs branchy at {:.1}% zeros]",
+                        s.report(),
+                        s.per_sec(bsz as f64),
+                        branchy_ns / s.median_ns,
+                        gs.sparsity() * 100.0,
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- native engine forward: scheduled vs branchy ------------------
+    // the training engine compiles the same zero-free schedules at
+    // every Plan::refill (training mantissas change step to step); the
+    // ratio is the engine-side scheduled speedup on the forward pass
+    {
+        use hgq::runtime::native::NativeModel;
+        use hgq::runtime::ModelExec;
+        for preset in ["jets_pp", "svhn_stream"] {
+            let ns = NativeModel::from_preset(preset).unwrap().with_force_branchy(false);
+            let nb = NativeModel::from_preset(preset).unwrap().with_force_branchy(true);
+            let m = ns.meta().clone();
+            let state = ns.init_state();
+            let x: Vec<f32> =
+                (0..m.batch * m.input_dim()).map(|i| ((i % 23) as f32 - 11.0) / 8.0).collect();
+            let (outer, inner) = if preset == "jets_pp" { (10usize, 50usize) } else { (3, 5) };
+            let mut branchy_ns = 0.0f64;
+            for (tag, model) in [("branchy", &nb), ("scheduled", &ns)] {
+                let s = bench(&format!("{preset} engine forward [{tag}]"), outer, inner, || {
+                    black_box(model.forward(&state, &x).unwrap());
+                });
+                if tag == "branchy" {
+                    branchy_ns = s.median_ns;
+                    println!("{}   [{:.0} samples/s]", s.report(), s.per_sec(m.batch as f64));
+                } else {
+                    println!(
+                        "{}   [{:.0} samples/s, {:.2}x vs branchy]",
+                        s.report(),
+                        s.per_sec(m.batch as f64),
+                        branchy_ns / s.median_ns,
                     );
                 }
             }
@@ -185,4 +282,24 @@ fn main() {
         });
         println!("{}   [{:.1} MiB/s]", s.report(), s.per_sec(text.len() as f64) / (1 << 20) as f64);
     }
+}
+
+/// Zero the smallest-|mantissa| `frac` of every MAC layer's weights: a
+/// magnitude-pruned stand-in for a sparsity-trained checkpoint. The
+/// clone starts with a fresh plan cache, so `Graph::plan` recompiles
+/// schedules (and re-proves tiers) for the pruned weights.
+fn sparsify(g: &hgq::firmware::Graph, frac: f64) -> hgq::firmware::Graph {
+    use hgq::firmware::FwLayer;
+    let mut g = g.clone();
+    for l in &mut g.layers {
+        if let FwLayer::Dense { w, .. } | FwLayer::Conv2d { w, .. } = l {
+            let mut idx: Vec<usize> = (0..w.m.len()).collect();
+            idx.sort_by_key(|&i| w.m[i].unsigned_abs());
+            let kill = ((w.m.len() as f64 * frac).round() as usize).min(w.m.len());
+            for &i in &idx[..kill] {
+                w.m[i] = 0;
+            }
+        }
+    }
+    g
 }

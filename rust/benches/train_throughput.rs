@@ -9,7 +9,8 @@
 //! tracks training speed alongside serving throughput. Override the
 //! output path with `HGQ_TRAIN_BENCH_OUT`.
 
-use hgq::runtime::{self, Hypers, ModelRuntime, Runtime, Target};
+use hgq::runtime::native::NativeModel;
+use hgq::runtime::{self, Hypers, ModelExec, ModelRuntime, Runtime, Target};
 use hgq::util::bench::{bench_budget, black_box};
 use hgq::util::json::Json;
 
@@ -36,6 +37,27 @@ fn main() {
         });
         let sps = s.per_sec(b as f64);
         println!("{}   [{:.0} samples/s]", s.report(), sps);
+
+        // forward-pass medians in both dispatch modes: the engine
+        // compiles zero-free schedules at every Plan::refill, so the
+        // scheduled-vs-branchy ratio here is the per-preset forward
+        // speedup the schedules buy inside the train step
+        let ns = NativeModel::load(&artifacts, model).unwrap().with_force_branchy(false);
+        let nb = NativeModel::load(&artifacts, model).unwrap().with_force_branchy(true);
+        let fb = bench_budget(&format!("{model} forward [branchy]"), 400, 2, || {
+            black_box(nb.forward(&state, &x).unwrap());
+        });
+        println!("{}   [{:.0} samples/s]", fb.report(), fb.per_sec(b as f64));
+        let fs = bench_budget(&format!("{model} forward [scheduled]"), 400, 2, || {
+            black_box(ns.forward(&state, &x).unwrap());
+        });
+        println!(
+            "{}   [{:.0} samples/s, {:.2}x vs branchy]",
+            fs.report(),
+            fs.per_sec(b as f64),
+            fb.median_ns / fs.median_ns
+        );
+
         rows.push(Json::obj(vec![
             ("model", Json::str(model)),
             ("batch", Json::Num(b as f64)),
@@ -43,6 +65,9 @@ fn main() {
             ("median_ns", Json::Num(s.median_ns)),
             ("p95_ns", Json::Num(s.p95_ns)),
             ("samples_per_sec", Json::Num(sps)),
+            ("forward_scheduled_ns", Json::Num(fs.median_ns)),
+            ("forward_branchy_ns", Json::Num(fb.median_ns)),
+            ("forward_sched_speedup", Json::Num(fb.median_ns / fs.median_ns)),
         ]));
     }
 

@@ -264,6 +264,7 @@ mod tests {
             dataset: "synth".into(),
             input_dim: 2,
             output_dim: 1,
+            plan_cache: Default::default(),
             layers: vec![
                 FwLayer::InputQuant { out: in_q },
                 FwLayer::Dense {
@@ -324,6 +325,7 @@ mod tests {
                 dataset: "synth".into(),
                 input_dim: din,
                 output_dim: dout,
+                plan_cache: Default::default(),
                 layers: vec![
                     FwLayer::InputQuant { out: in_q },
                     FwLayer::Dense {
@@ -376,6 +378,7 @@ mod tests {
             dataset: "synth".into(),
             input_dim: 8,
             output_dim: 8,
+            plan_cache: Default::default(),
             layers: vec![
                 FwLayer::InputQuant {
                     out: ActQ { scalar: true, specs: vec![FixedSpec::new(true, 8, 4)] },

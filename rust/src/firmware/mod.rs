@@ -15,11 +15,14 @@
 
 pub mod emulator;
 
+use std::sync::{Arc, OnceLock};
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::ebops;
 use crate::fixed::{round_half_up, FixedSpec};
-use crate::ir::tier::{self, ElemBound, KernelTier};
+use crate::ir::schedule::GraphPlan;
+use crate::ir::tier::KernelTier;
 use crate::ir::{GroupRef, IrOp, ModelIr, ParamRef};
 use crate::nn::ModelMeta;
 
@@ -200,7 +203,7 @@ impl Calib {
 
 /// The deployed, fully-quantized network: what the firmware emulator
 /// executes and the resource model costs.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Graph {
     /// model name (from meta.json)
     pub name: String,
@@ -216,6 +219,28 @@ pub struct Graph {
     pub input_dim: usize,
     /// logit count
     pub output_dim: usize,
+    /// lazily-compiled execution plan (tiers + zero-free MAC
+    /// schedules), shared via `Arc` by every emulator over this graph
+    /// — see [`Graph::plan`]
+    pub plan_cache: OnceLock<Arc<GraphPlan>>,
+}
+
+// NOT derived: a derived Clone would copy the compiled plan into the
+// clone, and clones exist to be mutated (the bench sparsifier, tests
+// poking pub weights) — a stale plan on a mutated graph would silently
+// execute the old weights. Cloning resets the cache instead.
+impl Clone for Graph {
+    fn clone(&self) -> Graph {
+        Graph {
+            name: self.name.clone(),
+            task: self.task.clone(),
+            dataset: self.dataset.clone(),
+            layers: self.layers.clone(),
+            input_dim: self.input_dim,
+            output_dim: self.output_dim,
+            plan_cache: OnceLock::new(),
+        }
+    }
 }
 
 impl Graph {
@@ -325,7 +350,20 @@ impl Graph {
             layers,
             input_dim: ir.input_dim,
             output_dim: ir.output_dim,
+            plan_cache: OnceLock::new(),
         })
+    }
+
+    /// The compiled execution plan — per-layer kernel tiers plus the
+    /// zero-free MAC schedules (ARCHITECTURE.md §Compiled layer
+    /// schedules). Compiled on first use and cached on the graph, so
+    /// `infer_all`'s per-shard emulators and the daemon's hot-reload
+    /// workers share one plan; the `Arc` keeps it alive independently
+    /// of the emulator borrowing it. Mutating `layers` after this is
+    /// called will NOT recompile — clone the graph instead (cloning
+    /// resets the cache).
+    pub fn plan(&self) -> Arc<GraphPlan> {
+        self.plan_cache.get_or_init(|| Arc::new(GraphPlan::compile(self))).clone()
     }
 
     /// Exact EBOPs of the deployed model (paper Eq. 5 with effective,
@@ -393,132 +431,22 @@ impl Graph {
     }
 
     /// Derive the per-layer kernel plan: per-element mantissa magnitude
-    /// bounds ([`ElemBound`]) flow forward from the input quantizer
-    /// specs, each MAC layer's accumulator bound is the bias term plus
-    /// the sum of worst-case products (saturating u128 — unprovable
-    /// layers saturate to [`tier::UNBOUNDED`] and stay on the wide
+    /// bounds ([`crate::ir::tier::ElemBound`]) flow forward from the
+    /// input quantizer specs, each MAC layer's accumulator bound is the
+    /// bias term plus the sum of worst-case products (saturating u128 —
+    /// unprovable layers saturate to [`crate::ir::tier::UNBOUNDED`],
+    /// not a narrower tier, and stay on the wide
     /// path), and re-quantization confines the outputs again. The
     /// bound dominates every term *and* every partial sum in any
     /// addition order, so the selected tier can never wrap — see
     /// ARCHITECTURE.md §Kernel tiering for the proof sketch.
+    ///
+    /// The walk itself lives in [`GraphPlan::compile`] (which also
+    /// builds the compiled MAC schedules); this delegates to the cached
+    /// plan and clones out the tier vector for callers that only need
+    /// the tiers (HLS emission, benches).
     pub fn kernel_plan(&self) -> Vec<LayerKernel> {
-        let none = LayerKernel { bound: None, tier: KernelTier::Wide };
-        let mut plan = Vec::with_capacity(self.layers.len());
-        let mut elems: Vec<ElemBound> = Vec::new();
-        for l in &self.layers {
-            match l {
-                FwLayer::InputQuant { out } => {
-                    elems = (0..self.input_dim).map(|i| tier::spec_bound(&out.spec(i))).collect();
-                    plan.push(none);
-                }
-                FwLayer::Dense { din, dout, w, b, out, acc_frac, .. } => {
-                    debug_assert_eq!(elems.len(), *din);
-                    let mut layer_bound = 0u128;
-                    let mut next = Vec::with_capacity(*dout);
-                    for j in 0..*dout {
-                        let mut acc = tier::shl_bound(
-                            b.m[j].unsigned_abs() as u128,
-                            acc_frac - b.frac[j],
-                        );
-                        for i in 0..*din {
-                            let idx = i * dout + j;
-                            if w.m[idx] == 0 {
-                                continue; // the kernels keep the zero-skip
-                            }
-                            acc = acc.saturating_add(tier::mac_term(
-                                elems[i],
-                                w.m[idx].unsigned_abs(),
-                                w.frac[idx],
-                                *acc_frac,
-                            ));
-                        }
-                        layer_bound = layer_bound.max(acc);
-                        next.push(tier::requant_bound(acc, *acc_frac, &out.spec(j)));
-                    }
-                    elems = next;
-                    plan.push(LayerKernel {
-                        bound: Some(layer_bound),
-                        tier: KernelTier::for_bound(layer_bound),
-                    });
-                }
-                FwLayer::Conv2d { k, cin, cout, in_w, out_shape, w, b, out, acc_frac, .. } => {
-                    let [oh, ow, _] = *out_shape;
-                    let mut layer_bound = 0u128;
-                    let mut next = Vec::with_capacity(oh * ow * cout);
-                    for oy in 0..oh {
-                        for ox in 0..ow {
-                            for co in 0..*cout {
-                                let mut acc = tier::shl_bound(
-                                    b.m[co].unsigned_abs() as u128,
-                                    acc_frac - b.frac[co],
-                                );
-                                for ky in 0..*k {
-                                    for kx in 0..*k {
-                                        let a_base = ((oy + ky) * in_w + (ox + kx)) * cin;
-                                        let w_base = ((ky * k + kx) * cin) * cout + co;
-                                        for ci in 0..*cin {
-                                            let widx = w_base + ci * cout;
-                                            if w.m[widx] == 0 {
-                                                continue;
-                                            }
-                                            acc = acc.saturating_add(tier::mac_term(
-                                                elems[a_base + ci],
-                                                w.m[widx].unsigned_abs(),
-                                                w.frac[widx],
-                                                *acc_frac,
-                                            ));
-                                        }
-                                    }
-                                }
-                                layer_bound = layer_bound.max(acc);
-                                let oidx = (oy * ow + ox) * cout + co;
-                                next.push(tier::requant_bound(acc, *acc_frac, &out.spec(oidx)));
-                            }
-                        }
-                    }
-                    elems = next;
-                    plan.push(LayerKernel {
-                        bound: Some(layer_bound),
-                        tier: KernelTier::for_bound(layer_bound),
-                    });
-                }
-                FwLayer::MaxPool2 { in_shape } => {
-                    // pooling picks one of the window mantissas, so the
-                    // magnitude bound is the window max — provided all
-                    // four share an LSB (mixed-LSB pools are unprovable)
-                    let [h, w, c] = *in_shape;
-                    let (oh, ow) = (h / 2, w / 2);
-                    let mut next = Vec::with_capacity(oh * ow * c);
-                    for oy in 0..oh {
-                        for ox in 0..ow {
-                            for ch in 0..c {
-                                let mut win = ElemBound { mag: 0, frac: 0 };
-                                let mut first = true;
-                                for dy in 0..2 {
-                                    for dx in 0..2 {
-                                        let idx = ((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ch;
-                                        let e = elems[idx];
-                                        if first {
-                                            win = e;
-                                            first = false;
-                                        } else if e.frac != win.frac {
-                                            win.mag = tier::UNBOUNDED;
-                                        } else {
-                                            win.mag = win.mag.max(e.mag);
-                                        }
-                                    }
-                                }
-                                next.push(win);
-                            }
-                        }
-                    }
-                    elems = next;
-                    plan.push(none);
-                }
-                FwLayer::Flatten => plan.push(none),
-            }
-        }
-        plan
+        self.plan().kernels.clone()
     }
 
     /// Overall weight sparsity (pruned fraction, §III.D.4).

@@ -15,6 +15,7 @@
 //! walkers — and shape bugs like the odd-pool mis-stride fixed in the
 //! firmware builder cannot re-diverge between consumers.
 
+pub mod schedule;
 pub mod shape;
 pub mod tier;
 

@@ -1,0 +1,519 @@
+//! Compiled per-layer MAC schedules: zero-free, shift-folded kernels.
+//!
+//! HGQ's trained bitwidths prune a large fraction of weight mantissas
+//! to exactly zero (PAPER.md §pruning-as-b→0), and the survivors'
+//! shift amounts are compile-time constants of the deployed graph:
+//! activation fractional bits are per-element constants within a plane
+//! (`store_row` writes one `fb` per element row), so
+//! `shift = acc_frac − (fb_e + fw)` is a constant per (element, output)
+//! pair. The branchy kernels of `serve/batch.rs` and
+//! `runtime/native/engine.rs` nevertheless re-discover both facts per
+//! call: a zero-test branch in the innermost loop and a per-access
+//! shift recomputation.
+//!
+//! This module moves that work to compile time — the same "move work
+//! from inference time to synthesis time" idea the CSD constant
+//! multiplier firmware uses. [`GraphPlan::compile`] flattens each
+//! dense/conv layer into a cache-linear [`MacSchedule`]: an array of
+//! `(input element, folded weight, shift)` entries containing **only
+//! nonzero weights**, grouped into blocks of [`LANES`] output rows so a
+//! loaded input row feeds up to four accumulator rows. On narrow tiers
+//! the shift is pre-folded into the weight (`w << shift`) whenever the
+//! proven tier bound says the folded product still fits — the inner
+//! loop is then a pure branch-free multiply-accumulate.
+//!
+//! **Folding legality** (why results stay bit-identical): integer adds
+//! are associative and commutative (exactly, mod 2^64), so dropping
+//! exact-zero terms and regrouping outputs cannot change a single bit.
+//! For a *live* element (static magnitude bound ≥ 1) the layer bound
+//! dominates `|w| << shift`, so on a narrow tier the folded weight fits
+//! the accumulator type and `T::narrow` is lossless; for a statically
+//! *dead* element every runtime mantissa is provably 0, so its term is
+//! 0 whatever the (possibly truncated) folded weight is — dense
+//! schedules exclude dead elements outright, conv schedules keep them
+//! (one schedule is shared by all positions) and rely on the x = 0
+//! argument. Any layer where a fold or shift guard fails compiles to
+//! `None` and stays on the branchy kernels.
+//!
+//! The compiled [`GraphPlan`] is cached on the graph
+//! (`firmware::Graph::plan`) behind an `Arc`, so `infer_all`'s
+//! per-shard emulators and the daemon's hot-reload workers share one
+//! compiled plan instead of recompiling per emulator. The
+//! `HGQ_FORCE_BRANCHY` escape hatch ([`super::tier::force_branchy`])
+//! pins every dispatcher back to the branchy tiered kernels, mirroring
+//! `HGQ_FORCE_WIDE`. See ARCHITECTURE.md §Compiled layer schedules.
+
+use crate::firmware::{FwLayer, Graph, LayerKernel};
+use crate::ir::tier::{self, ElemBound, KernelTier};
+
+/// Output rows per schedule block: each loaded input row is swept
+/// across up to this many accumulator rows (register blocking).
+pub const LANES: usize = 4;
+
+/// One nonzero weight in a compiled schedule: multiply input `elem` by
+/// `w`, shift by `shift`, accumulate into output lane `lane` of the
+/// current block. Narrow (folded) schedules carry `shift == 0` — the
+/// shift is pre-folded into `w`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedEntry {
+    /// input element index (activation-plane coordinates; for conv,
+    /// relative to the window's base offset)
+    pub elem: u32,
+    /// output lane within the block (`0..LANES`)
+    pub lane: u32,
+    /// weight mantissa, pre-shifted to the accumulator LSB when the
+    /// schedule is folded
+    pub w: i64,
+    /// remaining left shift to the accumulator LSB (0 when folded)
+    pub shift: u32,
+}
+
+/// Compiled MAC schedule of one dense/conv layer: nonzero entries only,
+/// grouped into blocks of [`LANES`] output rows, entries within a block
+/// sorted by input element so consecutive entries reuse the loaded
+/// input row.
+#[derive(Debug, Clone)]
+pub struct MacSchedule {
+    /// output rows (dense `dout`, conv `cout` — shared by every window)
+    pub n_out: usize,
+    /// per-output bias, pre-shifted to the accumulator LSB
+    pub bias: Vec<i64>,
+    /// exclusive end index into `entries` per block (block `i` spans
+    /// `block_ends[i-1]..block_ends[i]`)
+    pub block_ends: Vec<u32>,
+    /// the zero-free entry array, block-major
+    pub entries: Vec<SchedEntry>,
+    /// whether shifts are folded into the weights (narrow tiers)
+    pub folded: bool,
+}
+
+impl MacSchedule {
+    /// Number of output blocks (`ceil(n_out / LANES)`).
+    pub fn n_blocks(&self) -> usize {
+        self.block_ends.len()
+    }
+
+    /// Block `bi`: its first output row, its lane count and its entries.
+    #[inline]
+    pub fn block(&self, bi: usize) -> (usize, usize, &[SchedEntry]) {
+        let j0 = bi * LANES;
+        let lanes = LANES.min(self.n_out - j0);
+        let start = if bi == 0 { 0 } else { self.block_ends[bi - 1] as usize };
+        (j0, lanes, &self.entries[start..self.block_ends[bi] as usize])
+    }
+
+    /// Total scheduled (nonzero) entries.
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Worst-case accumulator magnitude over all outputs when element
+    /// `base + e.elem` has runtime mantissa magnitude `hmax[base +
+    /// e.elem]`: `|bias| + Σ hmax·(|w| << shift)` per lane, saturating
+    /// u128 (the engine proves per-shard tiers with this). The bound
+    /// dominates every term and every partial sum in any addition
+    /// order, exactly like the static kernel-plan bound.
+    pub fn runtime_bound(&self, hmax: &[u64], base: usize) -> u128 {
+        let mut worst = 0u128;
+        let mut lane_acc = [0u128; LANES];
+        for bi in 0..self.n_blocks() {
+            let (j0, lanes, entries) = self.block(bi);
+            for (lane, la) in lane_acc.iter_mut().enumerate().take(lanes) {
+                *la = self.bias[j0 + lane].unsigned_abs() as u128;
+            }
+            for e in entries {
+                let t = (hmax[base + e.elem as usize] as u128)
+                    .saturating_mul(e.w.unsigned_abs() as u128);
+                let t = tier::shl_bound(t, e.shift as i32);
+                let la = &mut lane_acc[e.lane as usize];
+                *la = la.saturating_add(t);
+            }
+            for la in lane_acc.iter().take(lanes) {
+                worst = worst.max(*la);
+            }
+        }
+        worst
+    }
+}
+
+/// Build one layer's schedule from closures over its quantized
+/// constants. Returns `None` (branchy fallback) whenever a shift or
+/// fold guard fails, so a compiled schedule is *always* exact:
+///
+/// * `weight(e, j)` → `(mantissa, shift)` of weight (element `e`,
+///   output `j`) at the accumulator LSB; zero mantissas are dropped.
+/// * `elem_of(e)` maps the weight's element index to the activation
+///   index stored in the entry (conv translates kernel-relative weight
+///   coordinates to window-relative activation coordinates).
+/// * `skip(e)` excludes statically dead elements entirely.
+/// * `bias(j)` → `(mantissa, shift)` of output `j`'s bias.
+/// * `fold`: pre-shift weights/narrow tiers (`shift` must round-trip
+///   through i64) vs keep per-entry shifts (wide tier, `shift ≤ 63`).
+pub fn build_schedule(
+    n_in: usize,
+    n_out: usize,
+    fold: bool,
+    weight: impl Fn(usize, usize) -> (i64, i32),
+    elem_of: impl Fn(usize) -> usize,
+    skip: impl Fn(usize) -> bool,
+    bias: impl Fn(usize) -> (i64, i32),
+) -> Option<MacSchedule> {
+    let mut bias_v = Vec::with_capacity(n_out);
+    for j in 0..n_out {
+        let (bm, bs) = bias(j);
+        // the pre-shifted bias must round-trip exactly through i64
+        if !(0..=62).contains(&bs) || (bm << bs) >> bs != bm {
+            return None;
+        }
+        bias_v.push(bm << bs);
+    }
+    let n_blocks = n_out.div_ceil(LANES);
+    let mut entries: Vec<SchedEntry> = Vec::new();
+    let mut block_ends = Vec::with_capacity(n_blocks);
+    for bi in 0..n_blocks {
+        let j0 = bi * LANES;
+        let lanes = LANES.min(n_out - j0);
+        for e in 0..n_in {
+            if skip(e) {
+                continue;
+            }
+            let elem = elem_of(e) as u32;
+            for lane in 0..lanes {
+                let (m, sh) = weight(e, j0 + lane);
+                if m == 0 {
+                    continue; // the whole point: zeros never reach the kernel
+                }
+                if !(0..=63).contains(&sh) {
+                    return None;
+                }
+                if fold {
+                    if sh > 62 || (m << sh) >> sh != m {
+                        return None; // folded weight would overflow i64
+                    }
+                    entries.push(SchedEntry { elem, lane: lane as u32, w: m << sh, shift: 0 });
+                } else {
+                    entries.push(SchedEntry { elem, lane: lane as u32, w: m, shift: sh as u32 });
+                }
+            }
+        }
+        if entries.len() > u32::MAX as usize {
+            return None;
+        }
+        block_ends.push(entries.len() as u32);
+    }
+    Some(MacSchedule { n_out, bias: bias_v, block_ends, entries, folded: fold })
+}
+
+/// The compiled execution plan of one deployed graph: the proven
+/// per-layer kernel tiers (the former `Graph::kernel_plan` output) plus
+/// the zero-free MAC schedule of every layer that admits one. Compiled
+/// once per graph ([`Graph::plan`]) and shared via `Arc` by every
+/// emulator — per-shard engines keep only sample-dependent scratch.
+#[derive(Debug, Clone)]
+pub struct GraphPlan {
+    /// per-layer proven accumulator bound + kernel tier
+    pub kernels: Vec<LayerKernel>,
+    /// per-layer compiled MAC schedule (`None`: non-MAC layer, or a
+    /// shift/fold guard failed — the branchy kernels run instead)
+    pub schedules: Vec<Option<MacSchedule>>,
+    /// per-layer statically-known output-plane fractional bits
+    /// (`None` after a mixed-LSB pool window, where the runtime frac
+    /// depends on which element wins the max)
+    pub out_fracs: Vec<Option<Vec<i32>>>,
+}
+
+impl GraphPlan {
+    /// Compile the plan: one walk derives the per-element mantissa
+    /// magnitude bounds (exactly the former `Graph::kernel_plan` walk —
+    /// see its doc for the bound proof sketch), tracks whether the
+    /// plane's per-element fractional bits are static, and builds each
+    /// MAC layer's zero-free schedule at the tier the bound admits.
+    pub fn compile(g: &Graph) -> GraphPlan {
+        let none = LayerKernel { bound: None, tier: KernelTier::Wide };
+        let n_layers = g.layers.len();
+        let mut kernels = Vec::with_capacity(n_layers);
+        let mut schedules: Vec<Option<MacSchedule>> = Vec::with_capacity(n_layers);
+        let mut out_fracs: Vec<Option<Vec<i32>>> = Vec::with_capacity(n_layers);
+        let mut elems: Vec<ElemBound> = Vec::new();
+        // whether elems[i].frac is the true static frac of every runtime
+        // sample (false after a mixed-LSB pool window)
+        let mut fracs_valid = true;
+        let snap = |elems: &[ElemBound], valid: bool| -> Option<Vec<i32>> {
+            valid.then(|| elems.iter().map(|e| e.frac).collect())
+        };
+        for l in &g.layers {
+            match l {
+                FwLayer::InputQuant { out } => {
+                    elems = (0..g.input_dim).map(|i| tier::spec_bound(&out.spec(i))).collect();
+                    fracs_valid = true;
+                    kernels.push(none);
+                    schedules.push(None);
+                }
+                FwLayer::Dense { din, dout, w, b, out, acc_frac, .. } => {
+                    debug_assert_eq!(elems.len(), *din);
+                    let mut layer_bound = 0u128;
+                    let mut next = Vec::with_capacity(*dout);
+                    for j in 0..*dout {
+                        let mut acc = tier::shl_bound(
+                            b.m[j].unsigned_abs() as u128,
+                            acc_frac - b.frac[j],
+                        );
+                        for i in 0..*din {
+                            let idx = i * dout + j;
+                            if w.m[idx] == 0 {
+                                continue; // the kernels keep the zero-skip
+                            }
+                            acc = acc.saturating_add(tier::mac_term(
+                                elems[i],
+                                w.m[idx].unsigned_abs(),
+                                w.frac[idx],
+                                *acc_frac,
+                            ));
+                        }
+                        layer_bound = layer_bound.max(acc);
+                        next.push(tier::requant_bound(acc, *acc_frac, &out.spec(j)));
+                    }
+                    let tier = KernelTier::for_bound(layer_bound);
+                    let sched = if fracs_valid {
+                        build_schedule(
+                            *din,
+                            *dout,
+                            tier != KernelTier::Wide,
+                            |i, j| {
+                                let idx = i * dout + j;
+                                (w.m[idx], acc_frac - (elems[i].frac + w.frac[idx]))
+                            },
+                            |i| i,
+                            // statically dead rows are excluded: their
+                            // runtime mantissa is provably 0
+                            |i| elems[i].mag == 0,
+                            |j| (b.m[j], acc_frac - b.frac[j]),
+                        )
+                    } else {
+                        None
+                    };
+                    elems = next;
+                    fracs_valid = true; // requantized: fracs are the specs'
+                    kernels.push(LayerKernel { bound: Some(layer_bound), tier });
+                    schedules.push(sched);
+                }
+                FwLayer::Conv2d { k, cin, cout, in_w, out_shape, w, b, out, acc_frac, .. } => {
+                    let [oh, ow, _] = *out_shape;
+                    let mut layer_bound = 0u128;
+                    let mut next = Vec::with_capacity(oh * ow * cout);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for co in 0..*cout {
+                                let mut acc = tier::shl_bound(
+                                    b.m[co].unsigned_abs() as u128,
+                                    acc_frac - b.frac[co],
+                                );
+                                for ky in 0..*k {
+                                    for kx in 0..*k {
+                                        let a_base = ((oy + ky) * in_w + (ox + kx)) * cin;
+                                        let w_base = ((ky * k + kx) * cin) * cout + co;
+                                        for ci in 0..*cin {
+                                            let widx = w_base + ci * cout;
+                                            if w.m[widx] == 0 {
+                                                continue;
+                                            }
+                                            acc = acc.saturating_add(tier::mac_term(
+                                                elems[a_base + ci],
+                                                w.m[widx].unsigned_abs(),
+                                                w.frac[widx],
+                                                *acc_frac,
+                                            ));
+                                        }
+                                    }
+                                }
+                                layer_bound = layer_bound.max(acc);
+                                let oidx = (oy * ow + ox) * cout + co;
+                                next.push(tier::requant_bound(acc, *acc_frac, &out.spec(oidx)));
+                            }
+                        }
+                    }
+                    let tier = KernelTier::for_bound(layer_bound);
+                    // one schedule serves every window position, so the
+                    // shift must not depend on the position: require one
+                    // uniform static frac across the whole input plane
+                    let f0 = elems.first().map(|e| e.frac).unwrap_or(0);
+                    let uniform =
+                        fracs_valid && !elems.is_empty() && elems.iter().all(|e| e.frac == f0);
+                    let sched = if uniform {
+                        build_schedule(
+                            k * k * cin,
+                            *cout,
+                            tier != KernelTier::Wide,
+                            |e, co| {
+                                let widx = e * cout + co;
+                                (w.m[widx], acc_frac - (f0 + w.frac[widx]))
+                            },
+                            // kernel-relative (ky, kx, ci) → activation
+                            // offset relative to the window base
+                            |e| {
+                                let ci = e % cin;
+                                let kk = e / cin;
+                                ((kk / k) * in_w + (kk % k)) * cin + ci
+                            },
+                            // dead elements stay scheduled: deadness is
+                            // per-position, and x = 0 there anyway
+                            |_| false,
+                            |co| (b.m[co], acc_frac - b.frac[co]),
+                        )
+                    } else {
+                        None
+                    };
+                    elems = next;
+                    fracs_valid = true;
+                    kernels.push(LayerKernel { bound: Some(layer_bound), tier });
+                    schedules.push(sched);
+                }
+                FwLayer::MaxPool2 { in_shape } => {
+                    // pooling picks one of the window mantissas, so the
+                    // magnitude bound is the window max — provided all
+                    // four share an LSB (mixed-LSB pools are unprovable,
+                    // and their output frac is runtime-dependent)
+                    let [h, w, c] = *in_shape;
+                    let (oh, ow) = (h / 2, w / 2);
+                    let mut next = Vec::with_capacity(oh * ow * c);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ch in 0..c {
+                                let mut win = ElemBound { mag: 0, frac: 0 };
+                                let mut first = true;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let idx = ((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ch;
+                                        let e = elems[idx];
+                                        if first {
+                                            win = e;
+                                            first = false;
+                                        } else if e.frac != win.frac {
+                                            win.mag = tier::UNBOUNDED;
+                                            fracs_valid = false;
+                                        } else {
+                                            win.mag = win.mag.max(e.mag);
+                                        }
+                                    }
+                                }
+                                next.push(win);
+                            }
+                        }
+                    }
+                    elems = next;
+                    kernels.push(none);
+                    schedules.push(None);
+                }
+                FwLayer::Flatten => {
+                    kernels.push(none);
+                    schedules.push(None);
+                }
+            }
+            out_fracs.push(snap(&elems, fracs_valid));
+        }
+        GraphPlan { kernels, schedules, out_fracs }
+    }
+
+    /// Number of MAC layers that compiled to a schedule.
+    pub fn scheduled_layers(&self) -> usize {
+        self.schedules.iter().flatten().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_weights_are_excluded_and_shifts_fold() {
+        // 3 inputs x 2 outputs, weight(i, j) = 0 for i == 1
+        let w = [[5i64, -3], [0, 0], [2, 7]];
+        let sc = build_schedule(
+            3,
+            2,
+            true,
+            |i, j| (w[i][j], (i as i32) + 1),
+            |i| i,
+            |_| false,
+            |j| (j as i64 + 1, 2),
+        )
+        .unwrap();
+        assert!(sc.folded);
+        assert_eq!(sc.n_blocks(), 1);
+        assert_eq!(sc.bias, vec![4, 8]); // (j+1) << 2
+        let (j0, lanes, entries) = sc.block(0);
+        assert_eq!((j0, lanes), (0, 2));
+        // only nonzero weights, elem-major, shifts folded in
+        assert_eq!(
+            entries,
+            &[
+                SchedEntry { elem: 0, lane: 0, w: 5 << 1, shift: 0 },
+                SchedEntry { elem: 0, lane: 1, w: -3 << 1, shift: 0 },
+                SchedEntry { elem: 2, lane: 0, w: 2 << 3, shift: 0 },
+                SchedEntry { elem: 2, lane: 1, w: 7 << 3, shift: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn unfolded_schedules_keep_per_entry_shifts() {
+        let sc = build_schedule(1, 1, false, |_, _| (9, 5), |i| i, |_| false, |_| (0, 0)).unwrap();
+        assert!(!sc.folded);
+        assert_eq!(sc.entries, vec![SchedEntry { elem: 0, lane: 0, w: 9, shift: 5 }]);
+    }
+
+    #[test]
+    fn skip_excludes_dead_elements() {
+        let sc =
+            build_schedule(2, 1, true, |_, _| (1, 0), |i| i, |e| e == 0, |_| (0, 0)).unwrap();
+        assert_eq!(sc.n_entries(), 1);
+        assert_eq!(sc.entries[0].elem, 1);
+    }
+
+    #[test]
+    fn guard_failures_fall_back_to_branchy() {
+        // negative shift
+        assert!(build_schedule(1, 1, true, |_, _| (1, -1), |i| i, |_| false, |_| (0, 0)).is_none());
+        // fold overflow: i64::MAX << 1 does not round-trip
+        assert!(
+            build_schedule(1, 1, true, |_, _| (i64::MAX, 1), |i| i, |_| false, |_| (0, 0))
+                .is_none()
+        );
+        // unfolded shift past 63
+        assert!(build_schedule(1, 1, false, |_, _| (1, 64), |i| i, |_| false, |_| (0, 0)).is_none());
+        // bias overflow
+        assert!(
+            build_schedule(1, 1, true, |_, _| (1, 0), |i| i, |_| false, |_| (i64::MAX, 1))
+                .is_none()
+        );
+    }
+
+    #[test]
+    fn blocks_partition_outputs_in_lanes_of_four() {
+        let sc = build_schedule(1, 10, true, |_, _| (1, 0), |i| i, |_| false, |_| (0, 0)).unwrap();
+        assert_eq!(sc.n_blocks(), 3);
+        assert_eq!(sc.block(0).0, 0);
+        assert_eq!(sc.block(0).1, 4);
+        assert_eq!(sc.block(2).0, 8);
+        assert_eq!(sc.block(2).1, 2); // tail block: 2 lanes
+        assert_eq!(sc.n_entries(), 10);
+    }
+
+    #[test]
+    fn runtime_bound_matches_hand_sum() {
+        // two entries on lane 0: |bias| + hmax[0]*|w0| + hmax[1]*|w1|
+        let sc = build_schedule(
+            2,
+            1,
+            true,
+            |i, _| (if i == 0 { -3 } else { 2 }, 0),
+            |i| i,
+            |_| false,
+            |_| (-5, 0),
+        )
+        .unwrap();
+        assert_eq!(sc.runtime_bound(&[10, 100], 0), 5 + 10 * 3 + 100 * 2);
+        // base offsets the element lookup (conv windows)
+        assert_eq!(sc.runtime_bound(&[0, 10, 100], 1), 5 + 10 * 3 + 100 * 2);
+    }
+}

@@ -25,7 +25,10 @@
 //! pins every dispatcher to the i64 reference path at runtime —
 //! [`force_wide`] reads it once per process; the emulator/engine
 //! constructors also expose per-instance overrides so differential
-//! tests can run both paths in one process.
+//! tests can run both paths in one process. `HGQ_FORCE_BRANCHY=1`
+//! (same truthiness rule, [`force_branchy`]) disables the compiled
+//! zero-free MAC schedules ([`super::schedule`]) and pins the
+//! dispatchers to the branchy tiered kernels instead.
 
 use std::sync::OnceLock;
 
@@ -33,6 +36,12 @@ use crate::fixed::FixedSpec;
 
 /// Environment variable selecting the i64 reference path everywhere.
 pub const FORCE_WIDE_ENV: &str = "HGQ_FORCE_WIDE";
+
+/// Environment variable disabling the compiled zero-free MAC schedules
+/// everywhere: the dispatchers fall back to the branchy tiered kernels
+/// (per-call zero tests + shift recomputation). The escape hatch for
+/// the scheduled fast path, mirroring [`FORCE_WIDE_ENV`].
+pub const FORCE_BRANCHY_ENV: &str = "HGQ_FORCE_BRANCHY";
 
 /// Magnitude sentinel for "no static bound provable" (saturating
 /// arithmetic lands here and stays here).
@@ -182,13 +191,25 @@ macro_rules! impl_narrow_acc {
 }
 impl_narrow_acc!(i8, i16, i32);
 
-/// Interpret a `HGQ_FORCE_WIDE` setting (empty / `0` / `false` — in
-/// any case — leave tiering on; anything else forces the wide path).
-pub fn parse_force_wide(v: Option<&str>) -> bool {
+/// Shared truthiness rule for the force-path env switches.
+fn parse_force_flag(v: Option<&str>) -> bool {
     match v {
         None => false,
         Some(s) => !s.is_empty() && s != "0" && !s.eq_ignore_ascii_case("false"),
     }
+}
+
+/// Interpret a `HGQ_FORCE_WIDE` setting (empty / `0` / `false` — in
+/// any case — leave tiering on; anything else forces the wide path).
+pub fn parse_force_wide(v: Option<&str>) -> bool {
+    parse_force_flag(v)
+}
+
+/// Interpret a `HGQ_FORCE_BRANCHY` setting (same truthiness rule as
+/// [`parse_force_wide`]: empty / `0` / `false` leave the compiled
+/// schedules on; anything else disables them).
+pub fn parse_force_branchy(v: Option<&str>) -> bool {
+    parse_force_flag(v)
 }
 
 /// Whether this process runs every kernel on the i64 reference path
@@ -198,6 +219,16 @@ pub fn force_wide() -> bool {
     static FORCE_WIDE: OnceLock<bool> = OnceLock::new();
     *FORCE_WIDE
         .get_or_init(|| parse_force_wide(std::env::var(FORCE_WIDE_ENV).ok().as_deref()))
+}
+
+/// Whether this process skips the compiled MAC schedules and runs the
+/// branchy tiered kernels instead (`HGQ_FORCE_BRANCHY`, read once).
+/// Per-instance overrides on the dispatchers take precedence for
+/// in-process differential tests.
+pub fn force_branchy() -> bool {
+    static FORCE_BRANCHY: OnceLock<bool> = OnceLock::new();
+    *FORCE_BRANCHY
+        .get_or_init(|| parse_force_branchy(std::env::var(FORCE_BRANCHY_ENV).ok().as_deref()))
 }
 
 #[cfg(test)]
@@ -272,5 +303,17 @@ mod tests {
         assert!(parse_force_wide(Some("1")));
         assert!(parse_force_wide(Some("true")));
         assert!(parse_force_wide(Some("yes")));
+    }
+
+    #[test]
+    fn force_branchy_parsing() {
+        assert!(!parse_force_branchy(None));
+        assert!(!parse_force_branchy(Some("")));
+        assert!(!parse_force_branchy(Some("0")));
+        assert!(!parse_force_branchy(Some("false")));
+        assert!(!parse_force_branchy(Some("FALSE")));
+        assert!(parse_force_branchy(Some("1")));
+        assert!(parse_force_branchy(Some("true")));
+        assert!(parse_force_branchy(Some("yes")));
     }
 }

@@ -484,6 +484,7 @@ fn cmd_serve(artifacts: &PathBuf, mut args: Args) -> Result<()> {
             };
             kv.push(("source".into(), Json::str(source)));
             kv.push(("force_wide".into(), Json::Bool(hgq::ir::tier::force_wide())));
+            kv.push(("force_branchy".into(), Json::Bool(hgq::ir::tier::force_branchy())));
         }
         std::fs::write(&path, j.to_string_pretty())?;
         println!("(wrote {path})");

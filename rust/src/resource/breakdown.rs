@@ -119,6 +119,7 @@ mod tests {
             dataset: "synth".into(),
             input_dim: 4,
             output_dim: 2,
+            plan_cache: Default::default(),
             layers: vec![
                 FwLayer::InputQuant { out: q.clone() },
                 FwLayer::Dense {

@@ -32,6 +32,7 @@ use anyhow::{bail, Result};
 
 use crate::firmware::{F_MAX, F_MIN};
 use crate::fixed::{bit_length, exp2i, round_half_up};
+use crate::ir::schedule::{build_schedule, MacSchedule, LANES};
 use crate::ir::tier::{self, KernelTier, NarrowAcc};
 use crate::ir::{GroupRef, IrOp, ModelIr, ParamRef};
 
@@ -217,10 +218,32 @@ impl GroupQ {
     }
 }
 
-/// Quantized weight + bias runs of one MAC (dense/conv) node.
+/// Resolved geometry of one MAC node, kept so [`Plan::refill`] can
+/// recompile the layer's zero-free schedule from the fresh mantissas.
+pub(super) enum MacGeom {
+    Dense { din: usize, dout: usize, in_group: usize },
+    Conv { geom: ConvGeom, in_group: usize },
+}
+
+/// A compiled MAC schedule at the engine's per-refill accumulator LSB.
+/// Engine schedules are always folded (`fold = true` in
+/// [`build_schedule`]), so every entry carries `shift == 0` and the
+/// scheduled kernels are bare multiply-accumulates.
+pub(super) struct EngineSched {
+    facc: i32,
+    sched: MacSchedule,
+}
+
+/// Quantized weight + bias runs of one MAC (dense/conv) node, plus the
+/// zero-free schedule recompiled from them on every [`Plan::refill`]
+/// (training mantissas change each step, so unlike the static firmware
+/// plan this one is per-step — still once per step instead of once per
+/// shard per layer sweep).
 pub(super) struct MacConsts {
     pub w: QwRun,
     pub b: QwRun,
+    pub geom: MacGeom,
+    pub sched: Option<EngineSched>,
 }
 
 /// The state-dependent half of one evaluation: quantized constants +
@@ -243,11 +266,30 @@ impl Plan {
             .nodes
             .iter()
             .map(|node| match &node.op {
-                IrOp::Dense { w, b, .. } => {
-                    Some(MacConsts { w: QwRun::new(w, true), b: QwRun::new(b, false) })
-                }
-                IrOp::Conv2d { w, b, .. } => {
-                    Some(MacConsts { w: QwRun::new(w, true), b: QwRun::new(b, false) })
+                IrOp::Dense { w, b, din, dout, in_group, .. } => Some(MacConsts {
+                    w: QwRun::new(w, true),
+                    b: QwRun::new(b, false),
+                    geom: MacGeom::Dense { din: *din, dout: *dout, in_group: *in_group },
+                    sched: None,
+                }),
+                IrOp::Conv2d { w, b, k, cin, cout, oh, ow, in_h, in_w, in_group, .. } => {
+                    Some(MacConsts {
+                        w: QwRun::new(w, true),
+                        b: QwRun::new(b, false),
+                        geom: MacGeom::Conv {
+                            geom: ConvGeom {
+                                k: *k,
+                                cin: *cin,
+                                cout: *cout,
+                                oh: *oh,
+                                ow: *ow,
+                                in_h: *in_h,
+                                in_w: *in_w,
+                            },
+                            in_group: *in_group,
+                        },
+                        sched: None,
+                    })
                 }
                 _ => None,
             })
@@ -270,6 +312,12 @@ impl Plan {
             mc.w.refill(state);
             mc.b.refill(state);
         }
+        // recompile each MAC node's zero-free schedule from the fresh
+        // mantissas (shared read-only by every shard of this call)
+        let groups = &self.groups;
+        for mc in self.consts.iter_mut().flatten() {
+            mc.sched = build_engine_sched(&mc.geom, &mc.w, &mc.b, groups);
+        }
         Ok(())
     }
 
@@ -277,6 +325,77 @@ impl Plan {
     /// nodes — the IR guarantees the indices the walkers use).
     fn mac(&self, li: usize) -> &MacConsts {
         self.consts[li].as_ref().expect("MAC consts for dense/conv node")
+    }
+}
+
+/// Compile the zero-free, shift-folded schedule of one MAC node from
+/// its freshly requantized constants. `None` (branchy fallback) when
+/// the element → f map is not static (same guard as `mantissas_of`),
+/// when a conv input group is per-element (one schedule must serve
+/// every window position, so the plane needs a single scalar f), or
+/// when a [`build_schedule`] fold guard fails.
+fn build_engine_sched(
+    geom: &MacGeom,
+    w: &QwRun,
+    b: &QwRun,
+    groups: &[GroupQ],
+) -> Option<EngineSched> {
+    let max_fw = w.f_int.iter().copied().max().unwrap_or(0);
+    let max_fb = b.f_int.iter().copied().max().unwrap_or(0);
+    match geom {
+        MacGeom::Dense { din, dout, in_group } => {
+            let (din, dout) = (*din, *dout);
+            let ig = &groups[*in_group];
+            if ig.f_size != 1 && ig.f_size != din {
+                return None;
+            }
+            let fa = |i: usize| ig.f_int[fidx(i, ig.f_size)];
+            let max_fa = ig.f_int.iter().copied().max().unwrap_or(0);
+            let facc = (max_fa + max_fw).max(max_fb);
+            build_schedule(
+                din,
+                dout,
+                true,
+                |i, j| {
+                    let e = i * dout + j;
+                    (w.mant[e], facc - (fa(i) + w.f_int[fidx(e, w.f_size)]))
+                },
+                |i| i,
+                // runtime deadness is per-shard, not static: keep every
+                // element and let the zero mantissas contribute nothing
+                |_| false,
+                |j| (b.mant[j], facc - b.f_int[fidx(j, b.f_size)]),
+            )
+            .map(|sched| EngineSched { facc, sched })
+        }
+        MacGeom::Conv { geom: g, in_group } => {
+            let ig = &groups[*in_group];
+            if ig.f_size != 1 {
+                return None;
+            }
+            let fa0 = ig.f_int[0];
+            let facc = (fa0 + max_fw).max(max_fb);
+            let (k, cin, cout) = (g.k, g.cin, g.cout);
+            build_schedule(
+                k * k * cin,
+                cout,
+                true,
+                |e, co| {
+                    let widx = e * cout + co;
+                    (w.mant[widx], facc - (fa0 + w.f_int[fidx(widx, w.f_size)]))
+                },
+                // kernel-relative (ky, kx, ci) → activation offset
+                // relative to the window base
+                |e| {
+                    let ci = e % cin;
+                    let kk = e / cin;
+                    ((kk / k) * g.in_w + (kk % k)) * cin + ci
+                },
+                |_| false,
+                |co| (b.mant[co], facc - b.f_int[fidx(co, b.f_size)]),
+            )
+            .map(|sched| EngineSched { facc, sched })
+        }
     }
 }
 
@@ -348,10 +467,13 @@ fn quantize_group(
 /// accumulator bound is proven at runtime from the shard's actual
 /// mantissa maxima, and whenever it fits i32 the integer sums and the
 /// f64 reference sums are *both* exact — so the tier changes speed,
-/// never a single bit of `z`. `force_wide` (the `HGQ_FORCE_WIDE`
-/// contract) pins every layer to the f64 reference loops. The backward
-/// shard always stays f64: gradients are continuous, so no integer
-/// bound applies there.
+/// never a single bit of `z`. Narrow tiers prefer the plan's compiled
+/// zero-free schedule (rebuilt per [`Plan::refill`]); `force_branchy`
+/// (the `HGQ_FORCE_BRANCHY` contract) pins them back to the branchy
+/// tiered loops, and `force_wide` (the `HGQ_FORCE_WIDE` contract) pins
+/// every layer to the f64 reference loops. The backward shard always
+/// stays f64: gradients are continuous, so no integer bound applies
+/// there.
 pub(super) fn forward_shard(
     ir: &ModelIr,
     plan: &Plan,
@@ -359,6 +481,7 @@ pub(super) fn forward_shard(
     rows: usize,
     train: bool,
     force_wide: bool,
+    force_branchy: bool,
 ) -> ShardRun {
     let n_layers = ir.nodes.len();
     let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
@@ -387,8 +510,9 @@ pub(super) fn forward_shard(
                 let (w, b) = (&mc.w, &mc.b);
                 let mut z = vec![0.0f64; rows * dout];
                 let ig = &plan.groups[*in_group];
-                let tiered =
-                    !force_wide && dense_forward_tiered(&h, rows, din, dout, w, b, ig, &mut z);
+                let sched = if force_branchy { None } else { mc.sched.as_ref() };
+                let tiered = !force_wide
+                    && dense_forward_tiered(&h, rows, din, dout, w, b, ig, sched, &mut z);
                 if !tiered {
                     for bi in 0..rows {
                         let hrow = &h[bi * din..(bi + 1) * din];
@@ -437,8 +561,9 @@ pub(super) fn forward_shard(
                 let mut z = vec![0.0f64; rows * feat];
                 let ig = &plan.groups[*in_group];
                 let geom = ConvGeom { k, cin, cout, oh, ow, in_h, in_w };
+                let sched = if force_branchy { None } else { mc.sched.as_ref() };
                 let tiered =
-                    !force_wide && conv_forward_tiered(&h, rows, &geom, w, b, ig, &mut z);
+                    !force_wide && conv_forward_tiered(&h, rows, &geom, w, b, ig, sched, &mut z);
                 if !tiered {
                     for bi in 0..rows {
                         let hb = &h[bi * in_feat..(bi + 1) * in_feat];
@@ -587,6 +712,10 @@ fn acc_frac_of(fa: &[i32], w: &QwRun, b: &QwRun) -> i32 {
 
 /// Try the width-tiered integer dense MAC for one shard; returns false
 /// when no narrow tier is provable (caller runs the f64 reference loop).
+/// With a compiled schedule the per-output bound comes from one sweep
+/// of the zero-free entries ([`MacSchedule::runtime_bound`]) and the
+/// scheduled kernel runs; without one the branchy bound loop + branchy
+/// kernel run as before.
 #[allow(clippy::too_many_arguments)]
 fn dense_forward_tiered(
     h: &[f64],
@@ -596,12 +725,23 @@ fn dense_forward_tiered(
     w: &QwRun,
     b: &QwRun,
     ig: &GroupQ,
+    sched: Option<&EngineSched>,
     z: &mut [f64],
 ) -> bool {
     let ms = match mantissas_of(h, rows, din, ig) {
         Some(ms) => ms,
         None => return false,
     };
+    if let Some(es) = sched {
+        let bound = es.sched.runtime_bound(&ms.hmax, 0);
+        match KernelTier::for_bound(bound) {
+            KernelTier::I8 => dense_mac_sched::<i8>(&ms, rows, din, es, z),
+            KernelTier::I16 => dense_mac_sched::<i16>(&ms, rows, din, es, z),
+            KernelTier::I32 => dense_mac_sched::<i32>(&ms, rows, din, es, z),
+            KernelTier::Wide => return false,
+        }
+        return true;
+    }
     let facc = acc_frac_of(&ms.fa, w, b);
     let mut bound = 0u128;
     for j in 0..dout {
@@ -680,8 +820,41 @@ fn dense_mac_int<T: NarrowAcc>(
     }
 }
 
+/// Compiled-schedule narrow dense MAC: per sample row, sweep the
+/// zero-free entry array block by block with [`LANES`] accumulator
+/// registers. Engine schedules are always folded, so the inner loop is
+/// a bare multiply-accumulate — no zero test, no shift.
+fn dense_mac_sched<T: NarrowAcc>(
+    ms: &MantShard,
+    rows: usize,
+    din: usize,
+    es: &EngineSched,
+    z: &mut [f64],
+) {
+    let sc = &es.sched;
+    let dout = sc.n_out;
+    let inv = exp2i(-es.facc);
+    for bi in 0..rows {
+        let hrow = &ms.hm[bi * din..(bi + 1) * din];
+        for bl in 0..sc.n_blocks() {
+            let (j0, lanes, entries) = sc.block(bl);
+            let mut acc = [T::default(); LANES];
+            for (lane, a) in acc.iter_mut().enumerate().take(lanes) {
+                *a = T::narrow(sc.bias[j0 + lane]);
+            }
+            for e in entries {
+                let x = T::narrow(hrow[e.elem as usize]);
+                acc[e.lane as usize] = acc[e.lane as usize] + x * T::narrow(e.w);
+            }
+            for (lane, a) in acc.iter().enumerate().take(lanes) {
+                z[bi * dout + j0 + lane] = a.widen() as f64 * inv;
+            }
+        }
+    }
+}
+
 /// Resolved geometry of one conv node, bundled for the tiered kernels.
-struct ConvGeom {
+pub(super) struct ConvGeom {
     k: usize,
     cin: usize,
     cout: usize,
@@ -692,7 +865,10 @@ struct ConvGeom {
 }
 
 /// Try the width-tiered integer conv MAC for one shard; returns false
-/// when no narrow tier is provable.
+/// when no narrow tier is provable. With a compiled schedule the bound
+/// is the max of [`MacSchedule::runtime_bound`] over window positions
+/// (the schedule is position-independent, the shard maxima are not).
+#[allow(clippy::too_many_arguments)]
 fn conv_forward_tiered(
     h: &[f64],
     rows: usize,
@@ -700,6 +876,7 @@ fn conv_forward_tiered(
     w: &QwRun,
     b: &QwRun,
     ig: &GroupQ,
+    sched: Option<&EngineSched>,
     z: &mut [f64],
 ) -> bool {
     let in_feat = g.in_h * g.in_w * g.cin;
@@ -707,6 +884,22 @@ fn conv_forward_tiered(
         Some(ms) => ms,
         None => return false,
     };
+    if let Some(es) = sched {
+        let mut bound = 0u128;
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let base = (oy * g.in_w + ox) * g.cin;
+                bound = bound.max(es.sched.runtime_bound(&ms.hmax, base));
+            }
+        }
+        match KernelTier::for_bound(bound) {
+            KernelTier::I8 => conv_mac_sched::<i8>(&ms, rows, g, es, z),
+            KernelTier::I16 => conv_mac_sched::<i16>(&ms, rows, g, es, z),
+            KernelTier::I32 => conv_mac_sched::<i32>(&ms, rows, g, es, z),
+            KernelTier::Wide => return false,
+        }
+        return true;
+    }
     let facc = acc_frac_of(&ms.fa, w, b);
     let mut bound = 0u128;
     for oy in 0..g.oh {
@@ -800,6 +993,45 @@ fn conv_mac_int<T: NarrowAcc>(
                 let zb = bi * feat + (oy * g.ow + ox) * g.cout;
                 for (co, a) in acc.iter().enumerate() {
                     z[zb + co] = a.widen() as f64 * inv;
+                }
+            }
+        }
+    }
+}
+
+/// Compiled-schedule narrow conv MAC: one zero-free schedule serves
+/// every window position (the entries' element indices are relative to
+/// the window base), swept with [`LANES`] accumulator registers.
+fn conv_mac_sched<T: NarrowAcc>(
+    ms: &MantShard,
+    rows: usize,
+    g: &ConvGeom,
+    es: &EngineSched,
+    z: &mut [f64],
+) {
+    let sc = &es.sched;
+    let in_feat = g.in_h * g.in_w * g.cin;
+    let feat = g.oh * g.ow * g.cout;
+    let inv = exp2i(-es.facc);
+    for bi in 0..rows {
+        let hrow = &ms.hm[bi * in_feat..(bi + 1) * in_feat];
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let base = (oy * g.in_w + ox) * g.cin;
+                let zb = bi * feat + (oy * g.ow + ox) * g.cout;
+                for bl in 0..sc.n_blocks() {
+                    let (c0, lanes, entries) = sc.block(bl);
+                    let mut acc = [T::default(); LANES];
+                    for (lane, a) in acc.iter_mut().enumerate().take(lanes) {
+                        *a = T::narrow(sc.bias[c0 + lane]);
+                    }
+                    for e in entries {
+                        let x = T::narrow(hrow[base + e.elem as usize]);
+                        acc[e.lane as usize] = acc[e.lane as usize] + x * T::narrow(e.w);
+                    }
+                    for (lane, a) in acc.iter().enumerate().take(lanes) {
+                        z[zb + c0 + lane] = a.widen() as f64 * inv;
+                    }
                 }
             }
         }

@@ -72,6 +72,11 @@ pub struct NativeModel {
     /// tiering). Tiering never changes results — only speed — so this
     /// is a diagnostics/differential-testing switch, not a numerics one
     force_wide: bool,
+    /// pin narrow tiers to the branchy tiered loops instead of the
+    /// compiled zero-free schedules (from `HGQ_FORCE_BRANCHY` at
+    /// construction; see ARCHITECTURE.md §Compiled layer schedules).
+    /// Like `force_wide`, a speed switch — never a numerics one
+    force_branchy: bool,
     /// reusable requantization workspace (state-dependent half of the
     /// old per-call plan); refilled in place, so the train-step hot
     /// path allocates no per-layer constant buffers
@@ -152,6 +157,7 @@ impl NativeModel {
             init,
             threads: default_threads(),
             force_wide: tier::force_wide(),
+            force_branchy: tier::force_branchy(),
             scratch,
         })
     }
@@ -186,6 +192,16 @@ impl NativeModel {
         self
     }
 
+    /// Pin (or unpin) narrow tiers to the branchy tiered loops,
+    /// overriding `HGQ_FORCE_BRANCHY`. Results are bit-identical either
+    /// way — the compiled schedules drop only provably-zero terms and
+    /// pre-fold provably-fitting shifts — so this exists for
+    /// differential tests and scheduled-vs-branchy perf A/B runs.
+    pub fn with_force_branchy(mut self, branchy: bool) -> NativeModel {
+        self.force_branchy = branchy;
+        self
+    }
+
     fn check_x(&self, x: &[f32]) -> Result<()> {
         let want = self.meta.batch * self.meta.input_dim();
         if x.len() != want {
@@ -205,9 +221,18 @@ impl NativeModel {
         let feat = self.meta.input_dim();
         let ir = &self.ir;
         let wide = self.force_wide;
+        let branchy = self.force_branchy;
         run_shards(self.threads, ranges.len(), |si| {
             let (start, rows) = ranges[si];
-            forward_shard(ir, plan, &x[start * feat..(start + rows) * feat], rows, train, wide)
+            forward_shard(
+                ir,
+                plan,
+                &x[start * feat..(start + rows) * feat],
+                rows,
+                train,
+                wide,
+                branchy,
+            )
         })
     }
 
@@ -616,6 +641,50 @@ mod tests {
             assert_eq!(ot.state, ow.state, "tiered vs wide train state diverges on {preset}");
             assert_eq!(ot.loss, ow.loss);
             assert_eq!(ot.ebops, ow.ebops);
+        }
+    }
+
+    #[test]
+    fn scheduled_forward_matches_branchy_on_presets() {
+        // the compiled zero-free schedules must be bit-identical to the
+        // branchy tiered loops AND the f64 reference — logits and full
+        // train-step output — on a dense preset and a conv preset
+        for preset in ["jets_pp", "svhn_stream"] {
+            let ns = NativeModel::from_preset(preset)
+                .unwrap()
+                .with_force_wide(false)
+                .with_force_branchy(false);
+            let nb = NativeModel::from_preset(preset)
+                .unwrap()
+                .with_force_wide(false)
+                .with_force_branchy(true);
+            let nw = NativeModel::from_preset(preset).unwrap().with_force_wide(true);
+            let m = ns.meta().clone();
+            let state = ns.init_state();
+            let x: Vec<f32> = (0..m.batch * m.input_dim())
+                .map(|i| ((i % 23) as f32 - 11.0) / 8.0)
+                .collect();
+            let ls = ns.forward(&state, &x).unwrap();
+            assert_eq!(
+                ls,
+                nb.forward(&state, &x).unwrap(),
+                "scheduled vs branchy logits diverge on {preset}"
+            );
+            assert_eq!(
+                ls,
+                nw.forward(&state, &x).unwrap(),
+                "scheduled vs wide logits diverge on {preset}"
+            );
+            let y: Vec<i32> = (0..m.batch).map(|i| (i % m.output_dim) as i32).collect();
+            let h = Hypers { beta: 1e-6, gamma: 1e-6, lr: 1e-3, f_lr: 1.0 };
+            let os = ns.train_step(&state, &x, Target::Cls(&y), h).unwrap();
+            let ob = nb.train_step(&state, &x, Target::Cls(&y), h).unwrap();
+            assert_eq!(
+                os.state, ob.state,
+                "scheduled vs branchy train state diverges on {preset}"
+            );
+            assert_eq!(os.loss, ob.loss);
+            assert_eq!(os.ebops, ob.ebops);
         }
     }
 

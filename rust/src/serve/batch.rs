@@ -22,14 +22,33 @@
 //! `HGQ_FORCE_WIDE=1` (or [`BatchEmulator::with_force_wide`]) pins
 //! every layer to the i64 reference path.
 //!
+//! On top of the tier, each MAC layer that admits one runs its
+//! **compiled schedule** ([`crate::ir::schedule`]): a zero-free,
+//! shift-folded entry array compiled once per graph ([`Graph::plan`])
+//! and shared via `Arc` by every emulator. The scheduled kernels sweep
+//! it with branch-free inner loops register-blocked over
+//! [`LANES`] output rows per input-row load — no per-weight zero test,
+//! no per-sample shift lookup. Dropping exact-zero terms and regrouping
+//! independent accumulators cannot change a bit (integer adds commute
+//! exactly, and per accumulator the addition order is unchanged), so
+//! the scheduled logits stay bit-identical to the branchy and wide
+//! paths — proved in tests/prop_kernel_tiers.rs. `HGQ_FORCE_BRANCHY=1`
+//! (or [`BatchEmulator::with_force_branchy`]) is the escape hatch back
+//! to the branchy tiered kernels.
+//!
 //! [`infer_all`] layers the fixed shard grid of [`crate::util::shards`]
 //! on top: a sample set is split into the fixed 16-shard partition,
-//! each shard runs its own `BatchEmulator`, and logits are gathered in
-//! ascending shard order — bit-identical for any `--threads N`.
+//! each shard runs its own `BatchEmulator` — sample-dependent scratch
+//! only, the compiled plan is shared through the graph — and logits are
+//! gathered in ascending shard order — bit-identical for any
+//! `--threads N`.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::firmware::{ActQ, FwLayer, Graph, LayerKernel, QuantWeights};
+use crate::ir::schedule::{GraphPlan, MacSchedule, LANES};
 use crate::ir::tier::{self, KernelTier, NarrowAcc};
 use crate::util::shards::{default_threads, run_shards, shard_ranges};
 
@@ -48,12 +67,16 @@ pub struct BatchEmulator<'g> {
     f_a: Vec<i32>,
     m_b: Vec<i64>,
     f_b: Vec<i32>,
-    /// accumulator row: one output element across the batch (wide path)
+    /// accumulator rows: [`LANES`] output elements across the batch
+    /// (the branchy wide path uses only the first `n`)
     acc: Vec<i64>,
-    /// per-layer proven tier plan (recomputed on retarget)
-    plan: Vec<LayerKernel>,
+    /// compiled execution plan (tiers + zero-free schedules), shared
+    /// with every other emulator over the same graph
+    plan: Arc<GraphPlan>,
     /// pin every layer to the i64 reference path
     wide: bool,
+    /// skip the compiled schedules (branchy tiered kernels)
+    branchy: bool,
     // typed scratch of the narrow kernels: input plane + accumulator row
     x8: Vec<i8>,
     a8: Vec<i8>,
@@ -78,9 +101,10 @@ impl<'g> BatchEmulator<'g> {
             f_a: vec![0; cap * rows],
             m_b: vec![0; cap * rows],
             f_b: vec![0; cap * rows],
-            acc: vec![0; rows],
-            plan: g.kernel_plan(),
+            acc: vec![0; LANES * rows],
+            plan: g.plan(),
             wide: tier::force_wide(),
+            branchy: tier::force_branchy(),
             x8: Vec::new(),
             a8: Vec::new(),
             x16: Vec::new(),
@@ -98,8 +122,23 @@ impl<'g> BatchEmulator<'g> {
         self
     }
 
+    /// Per-instance `HGQ_FORCE_BRANCHY` override: `true` skips the
+    /// compiled schedules and runs the branchy tiered kernels
+    /// regardless of the environment (the differential tests run both
+    /// paths in one process).
+    pub fn with_force_branchy(mut self, branchy: bool) -> Self {
+        self.branchy = branchy;
+        self
+    }
+
     /// The proven per-layer kernel plan this engine dispatches on.
     pub fn kernel_plan(&self) -> &[LayerKernel] {
+        &self.plan.kernels
+    }
+
+    /// The compiled execution plan (tiers + schedules) this engine
+    /// shares with every other emulator over the same graph.
+    pub fn graph_plan(&self) -> &GraphPlan {
         &self.plan
     }
 
@@ -129,7 +168,7 @@ impl<'g> BatchEmulator<'g> {
             );
         }
         self.g = g;
-        self.plan = g.kernel_plan();
+        self.plan = g.plan();
         Ok(())
     }
 
@@ -137,6 +176,31 @@ impl<'g> BatchEmulator<'g> {
     /// `n * input_dim` values), logits rows of `out`. Returns the
     /// number of samples inferred.
     pub fn infer_batch(&mut self, x: &[f32], out: &mut [f64]) -> Result<usize> {
+        self.infer_batch_inner(x, out, None)
+    }
+
+    /// [`Self::infer_batch`] with a per-layer observer: after each
+    /// layer executes, `probe(li, n_elems, f_plane, stride, n)` sees
+    /// the layer index, its live output element count, the
+    /// fractional-bit plane (element `i`, sample `sa` at
+    /// `i * stride + sa`) and the live sample count. The invariant
+    /// harness uses it to assert frac uniformity within element rows —
+    /// the property the compiled schedules fold shifts on.
+    pub fn infer_batch_probed(
+        &mut self,
+        x: &[f32],
+        out: &mut [f64],
+        probe: &mut dyn FnMut(usize, usize, &[i32], usize, usize),
+    ) -> Result<usize> {
+        self.infer_batch_inner(x, out, Some(probe))
+    }
+
+    fn infer_batch_inner(
+        &mut self,
+        x: &[f32],
+        out: &mut [f64],
+        mut probe: Option<&mut dyn FnMut(usize, usize, &[i32], usize, usize)>,
+    ) -> Result<usize> {
         let g = self.g;
         let din = g.input_dim;
         if din == 0 || x.len() % din != 0 {
@@ -152,7 +216,7 @@ impl<'g> BatchEmulator<'g> {
         if n == 0 {
             return Ok(0);
         }
-        debug_assert_eq!(self.plan.len(), g.layers.len());
+        debug_assert_eq!(self.plan.kernels.len(), g.layers.len());
         let r = self.rows;
         let mut n_cur = 0usize;
 
@@ -180,7 +244,12 @@ impl<'g> BatchEmulator<'g> {
                         q,
                         acc_frac: *acc_frac,
                     };
-                    let t = if self.wide { KernelTier::Wide } else { self.plan[li].tier };
+                    let t = if self.wide { KernelTier::Wide } else { self.plan.kernels[li].tier };
+                    let sc = if self.wide || self.branchy {
+                        None
+                    } else {
+                        self.plan.schedules[li].as_ref()
+                    };
                     let mut p = Planes {
                         m_a: &self.m_a,
                         f_a: &self.f_a,
@@ -189,15 +258,29 @@ impl<'g> BatchEmulator<'g> {
                         r,
                         n,
                     };
-                    match t {
-                        KernelTier::I8 => dense_narrow::<i8>(&mut p, &l, &mut self.x8, &mut self.a8),
-                        KernelTier::I16 => {
+                    match (t, sc) {
+                        (KernelTier::I8, Some(sc)) => {
+                            dense_sched::<i8>(&mut p, &l, sc, &mut self.x8, &mut self.a8)
+                        }
+                        (KernelTier::I16, Some(sc)) => {
+                            dense_sched::<i16>(&mut p, &l, sc, &mut self.x16, &mut self.a16)
+                        }
+                        (KernelTier::I32, Some(sc)) => {
+                            dense_sched::<i32>(&mut p, &l, sc, &mut self.x32, &mut self.a32)
+                        }
+                        (KernelTier::Wide, Some(sc)) => {
+                            dense_wide_sched(&mut p, &l, sc, &mut self.acc)
+                        }
+                        (KernelTier::I8, None) => {
+                            dense_narrow::<i8>(&mut p, &l, &mut self.x8, &mut self.a8)
+                        }
+                        (KernelTier::I16, None) => {
                             dense_narrow::<i16>(&mut p, &l, &mut self.x16, &mut self.a16)
                         }
-                        KernelTier::I32 => {
+                        (KernelTier::I32, None) => {
                             dense_narrow::<i32>(&mut p, &l, &mut self.x32, &mut self.a32)
                         }
-                        KernelTier::Wide => dense_wide(&mut p, &l, &mut self.acc),
+                        (KernelTier::Wide, None) => dense_wide(&mut p, &l, &mut self.acc),
                     }
                     n_cur = *dout;
                     self.swap();
@@ -231,7 +314,12 @@ impl<'g> BatchEmulator<'g> {
                         q,
                         acc_frac: *acc_frac,
                     };
-                    let t = if self.wide { KernelTier::Wide } else { self.plan[li].tier };
+                    let t = if self.wide { KernelTier::Wide } else { self.plan.kernels[li].tier };
+                    let sc = if self.wide || self.branchy {
+                        None
+                    } else {
+                        self.plan.schedules[li].as_ref()
+                    };
                     let mut p = Planes {
                         m_a: &self.m_a,
                         f_a: &self.f_a,
@@ -240,15 +328,29 @@ impl<'g> BatchEmulator<'g> {
                         r,
                         n,
                     };
-                    match t {
-                        KernelTier::I8 => conv_narrow::<i8>(&mut p, &l, &mut self.x8, &mut self.a8),
-                        KernelTier::I16 => {
+                    match (t, sc) {
+                        (KernelTier::I8, Some(sc)) => {
+                            conv_sched::<i8>(&mut p, &l, sc, &mut self.x8, &mut self.a8)
+                        }
+                        (KernelTier::I16, Some(sc)) => {
+                            conv_sched::<i16>(&mut p, &l, sc, &mut self.x16, &mut self.a16)
+                        }
+                        (KernelTier::I32, Some(sc)) => {
+                            conv_sched::<i32>(&mut p, &l, sc, &mut self.x32, &mut self.a32)
+                        }
+                        (KernelTier::Wide, Some(sc)) => {
+                            conv_wide_sched(&mut p, &l, sc, &mut self.acc)
+                        }
+                        (KernelTier::I8, None) => {
+                            conv_narrow::<i8>(&mut p, &l, &mut self.x8, &mut self.a8)
+                        }
+                        (KernelTier::I16, None) => {
                             conv_narrow::<i16>(&mut p, &l, &mut self.x16, &mut self.a16)
                         }
-                        KernelTier::I32 => {
+                        (KernelTier::I32, None) => {
                             conv_narrow::<i32>(&mut p, &l, &mut self.x32, &mut self.a32)
                         }
-                        KernelTier::Wide => conv_wide(&mut p, &l, &mut self.acc),
+                        (KernelTier::Wide, None) => conv_wide(&mut p, &l, &mut self.acc),
                     }
                     n_cur = oh * ow * cout;
                     self.swap();
@@ -289,6 +391,9 @@ impl<'g> BatchEmulator<'g> {
                     self.swap();
                 }
                 FwLayer::Flatten => { /* planes are already flat */ }
+            }
+            if let Some(pb) = probe.as_deref_mut() {
+                pb(li, n_cur, &self.f_a, r, n);
             }
             debug_assert!(
                 n_cur <= self.cap,
@@ -497,13 +602,152 @@ fn conv_narrow<T: NarrowAcc>(p: &mut Planes, l: &ConvL, xs: &mut Vec<T>, acc: &m
     }
 }
 
+/// Scheduled dense kernel: sweep the compiled zero-free schedule.
+/// Shifts were folded into the weights at compile time and dead rows
+/// were excluded, so the inner loop is a pure multiply-accumulate — no
+/// zero test, no per-sample frac lookup, no shift clamp. Each block
+/// holds up to [`LANES`] output rows, so one loaded input row feeds
+/// four accumulator rows before the next row load. Per accumulator the
+/// addition order matches the branchy kernel (elements ascending), so
+/// the results are bit-identical.
+fn dense_sched<T: NarrowAcc>(
+    p: &mut Planes,
+    l: &DenseL,
+    sc: &MacSchedule,
+    xs: &mut Vec<T>,
+    acc: &mut Vec<T>,
+) {
+    let n = p.n;
+    narrow_plane(p, l.din, xs);
+    acc.clear();
+    acc.resize(LANES * n, T::default());
+    for bi in 0..sc.n_blocks() {
+        let (j0, lanes, entries) = sc.block(bi);
+        for lane in 0..lanes {
+            acc[lane * n..(lane + 1) * n].fill(T::narrow(sc.bias[j0 + lane]));
+        }
+        for e in entries {
+            let w = T::narrow(e.w);
+            let es = e.elem as usize * n;
+            let a0 = e.lane as usize * n;
+            for (a, &x) in acc[a0..a0 + n].iter_mut().zip(&xs[es..es + n]) {
+                *a = *a + x * w;
+            }
+        }
+        for lane in 0..lanes {
+            let a0 = lane * n;
+            store_row(p, l.q, j0 + lane, l.relu, l.acc_frac, |sa| acc[a0 + sa].widen());
+        }
+    }
+}
+
+/// Scheduled i64 kernel for wide-tier layers: the schedule still drops
+/// every zero weight and register-blocks the outputs, but shifts stay
+/// per-entry (a wide bound proves nothing about `w << shift` fitting).
+fn dense_wide_sched(p: &mut Planes, l: &DenseL, sc: &MacSchedule, acc: &mut [i64]) {
+    let (r, n) = (p.r, p.n);
+    for bi in 0..sc.n_blocks() {
+        let (j0, lanes, entries) = sc.block(bi);
+        for lane in 0..lanes {
+            acc[lane * n..(lane + 1) * n].fill(sc.bias[j0 + lane]);
+        }
+        for e in entries {
+            let (w, sh) = (e.w, e.shift);
+            let es = e.elem as usize * r;
+            let a0 = e.lane as usize * n;
+            for (a, &x) in acc[a0..a0 + n].iter_mut().zip(&p.m_a[es..es + n]) {
+                *a += (x * w) << sh;
+            }
+        }
+        for lane in 0..lanes {
+            let a0 = lane * n;
+            store_row(p, l.q, j0 + lane, l.relu, l.acc_frac, |sa| acc[a0 + sa]);
+        }
+    }
+}
+
+/// Scheduled conv kernel: one compiled schedule (entries hold
+/// window-relative element offsets) serves every output position —
+/// legal because the input plane's fracs are uniform, checked at
+/// compile time. Same contract as [`dense_sched`].
+fn conv_sched<T: NarrowAcc>(
+    p: &mut Planes,
+    l: &ConvL,
+    sc: &MacSchedule,
+    xs: &mut Vec<T>,
+    acc: &mut Vec<T>,
+) {
+    let n = p.n;
+    narrow_plane(p, l.in_feat, xs);
+    acc.clear();
+    acc.resize(LANES * n, T::default());
+    for oy in 0..l.oh {
+        for ox in 0..l.ow {
+            let base = (oy * l.in_w + ox) * l.cin;
+            let oidx0 = (oy * l.ow + ox) * l.cout;
+            for bi in 0..sc.n_blocks() {
+                let (c0, lanes, entries) = sc.block(bi);
+                for lane in 0..lanes {
+                    acc[lane * n..(lane + 1) * n].fill(T::narrow(sc.bias[c0 + lane]));
+                }
+                for e in entries {
+                    let w = T::narrow(e.w);
+                    let es = (base + e.elem as usize) * n;
+                    let a0 = e.lane as usize * n;
+                    for (a, &x) in acc[a0..a0 + n].iter_mut().zip(&xs[es..es + n]) {
+                        *a = *a + x * w;
+                    }
+                }
+                for lane in 0..lanes {
+                    let a0 = lane * n;
+                    store_row(p, l.q, oidx0 + c0 + lane, l.relu, l.acc_frac, |sa| {
+                        acc[a0 + sa].widen()
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Scheduled i64 conv kernel; see [`dense_wide_sched`] / [`conv_sched`].
+fn conv_wide_sched(p: &mut Planes, l: &ConvL, sc: &MacSchedule, acc: &mut [i64]) {
+    let (r, n) = (p.r, p.n);
+    for oy in 0..l.oh {
+        for ox in 0..l.ow {
+            let base = (oy * l.in_w + ox) * l.cin;
+            let oidx0 = (oy * l.ow + ox) * l.cout;
+            for bi in 0..sc.n_blocks() {
+                let (c0, lanes, entries) = sc.block(bi);
+                for lane in 0..lanes {
+                    acc[lane * n..(lane + 1) * n].fill(sc.bias[c0 + lane]);
+                }
+                for e in entries {
+                    let (w, sh) = (e.w, e.shift);
+                    let es = (base + e.elem as usize) * r;
+                    let a0 = e.lane as usize * n;
+                    for (a, &x) in acc[a0..a0 + n].iter_mut().zip(&p.m_a[es..es + n]) {
+                        *a += (x * w) << sh;
+                    }
+                }
+                for lane in 0..lanes {
+                    let a0 = lane * n;
+                    store_row(p, l.q, oidx0 + c0 + lane, l.relu, l.acc_frac, |sa| acc[a0 + sa]);
+                }
+            }
+        }
+    }
+}
+
 /// One weight swept across the micro-batch: branch-free narrow MAC.
 #[inline]
 fn mac_row<T: NarrowAcc>(acc: &mut [T], xs: &[T], fr: &[i32], mw: T, wf: i32, acc_frac: i32) {
     for ((a, &x), &f) in acc.iter_mut().zip(xs).zip(fr) {
         // the clamp keeps the shift legal for dead elements whose
         // mantissa is provably 0 (the term is 0 either way); live
-        // elements' true shift is always under T::BITS by the bound
+        // elements' true shift is always under T::BITS by the bound.
+        // Only this branchy path needs it: compiled schedules exclude
+        // statically-dead rows, so their shifts are legal by
+        // construction (dead_element tests in prop_kernel_tiers.rs)
         let sh = (acc_frac - (f + wf)).clamp(0, T::BITS as i32 - 1) as u32;
         *a = *a + ((x * mw) << sh);
     }
@@ -640,6 +884,38 @@ mod tests {
         tiered.infer_batch(&x, &mut got_t).unwrap();
         wide.infer_batch(&x, &mut got_w).unwrap();
         assert_eq!(got_t, got_w);
+    }
+
+    #[test]
+    fn scheduled_branchy_and_wide_agree_bitwise() {
+        let g = graph();
+        let x = samples(9);
+        let plan = g.plan();
+        // both dense layers compile schedules (static fracs, small shifts)
+        assert!(plan.schedules[1].is_some(), "layer 1 should schedule");
+        assert!(plan.schedules[2].is_some(), "layer 2 should schedule");
+        // w1 holds one exact-zero weight (4x2 = 8 weights): dropped
+        assert_eq!(plan.schedules[2].as_ref().unwrap().n_entries(), 7);
+        let mut sched = BatchEmulator::new(&g, 9).with_force_branchy(false);
+        let mut branchy = BatchEmulator::new(&g, 9).with_force_branchy(true);
+        let mut wide = BatchEmulator::new(&g, 9).with_force_wide(true);
+        let mut got_s = vec![0.0f64; 9 * 2];
+        let mut got_b = vec![0.0f64; 9 * 2];
+        let mut got_w = vec![0.0f64; 9 * 2];
+        sched.infer_batch(&x, &mut got_s).unwrap();
+        branchy.infer_batch(&x, &mut got_b).unwrap();
+        wide.infer_batch(&x, &mut got_w).unwrap();
+        assert_eq!(got_s, got_b, "scheduled vs branchy");
+        assert_eq!(got_s, got_w, "scheduled vs wide");
+    }
+
+    #[test]
+    fn emulators_share_one_compiled_plan() {
+        let g = graph();
+        let a = BatchEmulator::new(&g, 4);
+        let b = BatchEmulator::new(&g, 2);
+        // same Arc allocation: the plan compiled once, on the graph
+        assert!(std::ptr::eq(a.graph_plan(), b.graph_plan()));
     }
 
     #[test]

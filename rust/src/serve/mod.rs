@@ -108,6 +108,7 @@ pub(crate) mod testutil {
             dataset: "synth".into(),
             input_dim: 3,
             output_dim: 2,
+            plan_cache: Default::default(),
             layers: vec![
                 FwLayer::InputQuant { out: in_q },
                 FwLayer::Dense {

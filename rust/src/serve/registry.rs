@@ -154,7 +154,12 @@ impl Registry {
         // `.hgq` file keys with arbitrary names calibrate correctly
         let splits = try_splits_for_meta(&mr.meta, CALIB_SEED, self.calib_n, 1)?;
         let calib = calibrate(&mr, state, &[&splits.train])?;
-        Graph::from_ir(&mr.ir, state, &calib)
+        let g = Graph::from_ir(&mr.ir, state, &calib)?;
+        // compile the shared execution plan (kernel tiers + zero-free
+        // schedules) up front, off the serving path: every emulator and
+        // daemon worker then clones one Arc instead of racing to build
+        g.plan();
+        Ok(g)
     }
 }
 

@@ -220,10 +220,12 @@ fn assemble_meta(
 /// Generate a random small model graph: a dense chain (1–3 layers,
 /// dims ≤ 6) or a conv stack (k ∈ {2,3}, optional 2x2 pool, flatten,
 /// dense head), with random weight/activation granularity, random
-/// trained fractional bits, ~20% exact-zero weights and log-uniform
-/// calibration ranges (including ~5% dead groups). The meta is
-/// resolved through [`ModelIr::build`], so every generated layout is
-/// validated before use.
+/// trained fractional bits, a per-model weight sparsity drawn uniformly
+/// from [0, 95%] exact-zero weights (the axis the zero-free compiled
+/// schedules are gated on — HGQ pruning drives real models to the high
+/// end) and log-uniform calibration ranges (including ~5% dead groups).
+/// The meta is resolved through [`ModelIr::build`], so every generated
+/// layout is validated before use.
 pub fn gen_model_ir(rng: &mut Rng) -> GenModel {
     let conv = rng.bernoulli(0.4);
     let w_elem = rng.bernoulli(0.5);
@@ -309,11 +311,15 @@ pub fn gen_model_ir(rng: &mut Rng) -> GenModel {
     let ir = ModelIr::build(&meta).expect("generated meta must resolve");
 
     let mut state = vec![0.0f32; meta.state_size];
+    // one sparsity level per model, 0–95% exact zeros: low levels keep
+    // the dense kernels honest, high levels are the pruned regime the
+    // zero-free schedules are built for
+    let zp = 0.95 * rng.uniform();
     for t in &meta.tensors {
         match t.seg.as_str() {
             "param" => {
                 for v in state[t.offset..t.offset + t.size].iter_mut() {
-                    *v = if rng.bernoulli(0.2) {
+                    *v = if rng.bernoulli(zp) {
                         0.0 // exercise the kernels' zero-weight skip
                     } else {
                         rng.range(-2.0, 2.0) as f32

@@ -1,18 +1,27 @@
 //! Differential property harness for the width-tiered integer kernels
-//! (ARCHITECTURE.md §Kernel tiering): over randomly generated small
-//! `ModelIr` graphs and adversarial mantissa fills, the tiered
-//! `BatchEmulator` must be **bit-identical** to both the forced-wide
-//! i64 path and the sequential scalar `Emulator` — for every batch
-//! size and thread count. Plus tier-boundary unit tests where the
-//! proven accumulator bound sits exactly at each machine type's limit
-//! and one element over.
+//! and the compiled zero-free MAC schedules (ARCHITECTURE.md §Kernel
+//! tiering, §Compiled layer schedules): over randomly generated small
+//! `ModelIr` graphs — including a 0–95% weight-sparsity axis — and
+//! adversarial mantissa fills, the scheduled `BatchEmulator` must be
+//! **bit-identical** to the forced-branchy tiered path, the forced-wide
+//! i64 path and the sequential scalar `Emulator` — for every batch size
+//! and thread count. Plus tier-boundary unit tests where the proven
+//! accumulator bound sits exactly at each machine type's limit and one
+//! element over, a dead-element exclusion regression, and the
+//! frac-uniformity invariant the schedules fold shifts on.
 
 use hgq::firmware::emulator::Emulator;
 use hgq::firmware::{ActQ, Calib, FwLayer, Graph, QuantWeights};
 use hgq::fixed::FixedSpec;
 use hgq::ir::tier::KernelTier;
 use hgq::serve::batch::{infer_all, BatchEmulator};
+use hgq::serve::Registry;
 use hgq::util::prop::{check, gen_model_ir};
+
+/// The three dispatch modes under test, as `(force_branchy,
+/// force_wide)` emulator flags: compiled schedules (the default),
+/// branchy tiered kernels, and the i64 reference path.
+const MODES: [(bool, bool); 3] = [(false, false), (true, false), (false, true)];
 
 /// Adversarial input fill derived from the graph's own input specs:
 /// 0 = all-amax, 1 = all-amin, 2 = sign-alternating extremes,
@@ -64,30 +73,50 @@ fn sequential(g: &Graph, x: &[f32], n: usize) -> Vec<f64> {
 }
 
 /// The tentpole property: 4 adversarial fills x 250 generated graphs
-/// (1000 cases), each checked at batch sizes {1, 3, 32} on both the
-/// tiered and the forced-wide engine against the scalar reference —
-/// all three must agree bit-for-bit.
+/// (1000 cases, each drawing a 0–95% weight-sparsity level), checked at
+/// batch sizes {1, 3, 32} in all three dispatch modes — compiled
+/// schedules, forced-branchy tiered kernels, forced-wide i64 — against
+/// the scalar reference. All four must agree bit-for-bit.
 #[test]
 fn prop_tiered_matches_wide_and_scalar_bitwise() {
     const N: usize = 32;
     let mut narrow_layers = 0usize;
+    let mut scheduled_layers = 0usize;
+    let mut dropped_zeros = 0usize;
+    let mut sparse_graphs = 0usize;
     for kind in 0..4usize {
         check(&format!("tiered-vs-wide-fill{kind}"), 250, |rng| {
             let gm = gen_model_ir(rng);
             let calib = Calib { amin: gm.amin.clone(), amax: gm.amax.clone() };
             let g = Graph::from_ir(&gm.ir, &gm.state, &calib)
                 .map_err(|e| format!("graph build failed: {e}"))?;
-            narrow_layers += g
-                .kernel_plan()
+            let plan = g.plan();
+            narrow_layers += plan
+                .kernels
                 .iter()
                 .filter(|k| k.bound.is_some() && k.tier != KernelTier::Wide)
                 .count();
+            scheduled_layers += plan.scheduled_layers();
+            // zeros the schedules actually dropped: every zero weight of
+            // a layer that compiled a schedule never reaches the kernel
+            for (l, sc) in g.layers.iter().zip(plan.schedules.iter()) {
+                if sc.is_some() {
+                    if let FwLayer::Dense { w, .. } | FwLayer::Conv2d { w, .. } = l {
+                        dropped_zeros += w.m.iter().filter(|&&m| m == 0).count();
+                    }
+                }
+            }
+            if g.sparsity() >= 0.8 {
+                sparse_graphs += 1;
+            }
             let x = adversarial_fill(&g, kind, N);
             let golden = sequential(&g, &x, N);
             let (din, k) = (g.input_dim, g.output_dim);
             for bsz in [1usize, 3, 32] {
-                for wide in [false, true] {
-                    let mut bem = BatchEmulator::new(&g, bsz).with_force_wide(wide);
+                for (branchy, wide) in MODES {
+                    let mut bem = BatchEmulator::new(&g, bsz)
+                        .with_force_wide(wide)
+                        .with_force_branchy(branchy);
                     let mut got = vec![0.0f64; N * k];
                     let mut done = 0usize;
                     while done < N {
@@ -101,9 +130,9 @@ fn prop_tiered_matches_wide_and_scalar_bitwise() {
                     }
                     if got != golden {
                         return Err(format!(
-                            "batch {bsz} force_wide {wide} diverged from the scalar \
-                             reference (plan {:?})",
-                            g.kernel_plan()
+                            "batch {bsz} force_branchy {branchy} force_wide {wide} diverged \
+                             from the scalar reference (plan {:?})",
+                            plan.kernels
                         ));
                     }
                 }
@@ -111,11 +140,24 @@ fn prop_tiered_matches_wide_and_scalar_bitwise() {
             Ok(())
         });
     }
-    // non-vacuity: across 1000 generated graphs, narrow tiers must have
-    // actually engaged — otherwise the property proved nothing
+    // non-vacuity: across 1000 generated graphs, narrow tiers, compiled
+    // schedules, dropped zero weights and the high-sparsity regime must
+    // all have actually engaged — otherwise the property proved nothing
     assert!(
         narrow_layers > 0,
         "no narrow-tier MAC layer was ever exercised; the differential property is vacuous"
+    );
+    assert!(
+        scheduled_layers > 0,
+        "no MAC layer ever compiled a schedule; the scheduled mode tested nothing"
+    );
+    assert!(
+        dropped_zeros > 0,
+        "no scheduled layer carried a zero weight; the zero-free claim went untested"
+    );
+    assert!(
+        sparse_graphs > 0,
+        "no generated graph reached 80% weight sparsity; the pruned regime went untested"
     );
 }
 
@@ -143,6 +185,84 @@ fn prop_tiering_is_thread_count_invariant() {
     });
 }
 
+/// Every place the plan proves a static output frac plane, the runtime
+/// frac of every sample must match it exactly (and is therefore uniform
+/// across the batch) — the invariant that makes per-entry shifts
+/// compile-time constants. Returns the number of (layer, element) slots
+/// checked so callers can assert non-vacuity.
+fn assert_static_fracs(g: &Graph, x: &[f32], n: usize) -> Result<usize, String> {
+    let plan = g.plan();
+    let mut bem = BatchEmulator::new(g, n);
+    let mut out = vec![0.0f64; n * g.output_dim];
+    let mut checked = 0usize;
+    let mut bad: Option<String> = None;
+    bem.infer_batch_probed(x, &mut out, &mut |li, n_elems, f_plane, stride, live| {
+        let Some(fr) = plan.out_fracs[li].as_ref() else {
+            return; // mixed-LSB pool downstream: frac is sample-dependent
+        };
+        if fr.len() != n_elems {
+            bad.get_or_insert(format!(
+                "layer {li}: plan snapshot has {} fracs, runtime plane {n_elems}",
+                fr.len()
+            ));
+            return;
+        }
+        for i in 0..n_elems {
+            for sa in 0..live {
+                let got = f_plane[i * stride + sa];
+                if got != fr[i] && bad.is_none() {
+                    bad = Some(format!(
+                        "layer {li} elem {i} sample {sa}: runtime frac {got} != static {}",
+                        fr[i]
+                    ));
+                }
+            }
+            checked += 1;
+        }
+    })
+    .map_err(|e| e.to_string())?;
+    match bad {
+        Some(b) => Err(b),
+        None => Ok(checked),
+    }
+}
+
+/// Frac uniformity on every shipped preset: the five paper models all
+/// run through the probed batch emulator and every statically-proven
+/// frac plane must match the runtime plane sample-for-sample.
+#[test]
+fn preset_fracs_are_static_and_uniform() {
+    let reg = Registry::new("artifacts").with_calib_samples(32);
+    for model in ["jets_pp", "jets_lw", "muon_pp", "muon_lw", "svhn_stream"] {
+        let g = reg.get(model).unwrap();
+        let n = 8usize;
+        let x: Vec<f32> =
+            (0..n * g.input_dim).map(|i| ((i % 23) as f32 - 11.0) / 8.0).collect();
+        let checked = assert_static_fracs(&g, &x, n).unwrap_or_else(|e| panic!("{model}: {e}"));
+        assert!(checked > 0, "{model}: no static frac plane was ever checked");
+    }
+}
+
+/// Frac uniformity over 200 generated graphs with adversarial fills —
+/// the same model space the bit-exactness property runs on, including
+/// the sparsity axis and mixed-LSB pools (which must be the *only*
+/// layers the plan declines to prove).
+#[test]
+fn prop_generated_fracs_are_static_and_uniform() {
+    const N: usize = 9;
+    let mut checked_total = 0usize;
+    check("frac-uniformity", 200, |rng| {
+        let gm = gen_model_ir(rng);
+        let calib = Calib { amin: gm.amin.clone(), amax: gm.amax.clone() };
+        let g = Graph::from_ir(&gm.ir, &gm.state, &calib)
+            .map_err(|e| format!("graph build failed: {e}"))?;
+        let x = adversarial_fill(&g, rng.below(4), N);
+        checked_total += assert_static_fracs(&g, &x, N)?;
+        Ok(())
+    });
+    assert!(checked_total > 0, "no static frac plane was ever checked");
+}
+
 /// A 1x1 dense graph whose proven accumulator bound is exactly `|wm|`:
 /// the unsigned 1-bit input contributes mantissa 1, the bias is zero,
 /// and the wrap-free 63-bit output passes the accumulator through.
@@ -153,6 +273,7 @@ fn one_weight_graph(wm: i64) -> Graph {
         dataset: "synth".to_string(),
         input_dim: 1,
         output_dim: 1,
+        plan_cache: Default::default(),
         layers: vec![
             FwLayer::InputQuant {
                 out: ActQ { specs: vec![FixedSpec::new(false, 1, 1)], scalar: true },
@@ -171,8 +292,9 @@ fn one_weight_graph(wm: i64) -> Graph {
 }
 
 /// At each type's MAX the bound proves that tier; one element over
-/// widens — and the boundary value itself survives the narrow kernel,
-/// the wide kernel and the scalar emulator unchanged (no wrap).
+/// widens — and the boundary value itself survives the scheduled
+/// kernel, the branchy narrow kernel, the wide kernel and the scalar
+/// emulator unchanged (no wrap).
 #[test]
 fn tier_boundaries_hold_exactly() {
     let cases: [(i64, u128, KernelTier); 6] = [
@@ -192,11 +314,75 @@ fn tier_boundaries_hold_exactly() {
         let mut seq = [0.0f64];
         Emulator::new(&g).infer(&x, &mut seq).unwrap();
         assert_eq!(seq[0], wm as f64, "scalar reference for wm={wm}");
-        for wide in [false, true] {
-            let mut bem = BatchEmulator::new(&g, 1).with_force_wide(wide);
+        for (branchy, wide) in MODES {
+            let mut bem =
+                BatchEmulator::new(&g, 1).with_force_wide(wide).with_force_branchy(branchy);
             let mut got = [0.0f64];
             bem.infer_batch(&x, &mut got).unwrap();
-            assert_eq!(got[0], wm as f64, "wm={wm} force_wide={wide}");
+            assert_eq!(got[0], wm as f64, "wm={wm} branchy={branchy} wide={wide}");
         }
+    }
+}
+
+/// A dense graph with a statically dead input element (`bits == 0`, so
+/// its mantissa is provably 0 — a pruned/dead quantizer group) that
+/// still carries nonzero weights, with a large `int_bits` making the
+/// dead row's accumulator shift 32 — wider than the i8 kernel the layer
+/// tiers to. The compiled schedule must exclude the dead row entirely
+/// (never folding its out-of-range shift), while the branchy and wide
+/// paths multiply it by the guaranteed-zero mantissa under the
+/// per-sample shift clamp. All paths must agree bit-for-bit.
+fn dead_element_graph() -> Graph {
+    Graph {
+        name: "dead-element".to_string(),
+        task: "reg".to_string(),
+        dataset: "synth".to_string(),
+        input_dim: 2,
+        output_dim: 2,
+        plan_cache: Default::default(),
+        layers: vec![
+            FwLayer::InputQuant {
+                out: ActQ {
+                    specs: vec![FixedSpec::new(true, 4, 2), FixedSpec::new(true, 0, 30)],
+                    scalar: false,
+                },
+            },
+            FwLayer::Dense {
+                din: 2,
+                dout: 2,
+                w: QuantWeights { m: vec![1, 2, 3, 4], frac: vec![2; 4] },
+                b: QuantWeights { m: vec![1, -1], frac: vec![2, 2] },
+                relu: false,
+                out: ActQ { specs: vec![FixedSpec::new(true, 20, 10)], scalar: true },
+                acc_frac: 4,
+            },
+        ],
+    }
+}
+
+#[test]
+fn dead_elements_are_excluded_and_bit_exact() {
+    let g = dead_element_graph();
+    let plan = g.plan();
+    assert_eq!(plan.kernels[1].tier, KernelTier::I8, "dead rows must not widen the tier");
+    let sc = plan.schedules[1]
+        .as_ref()
+        .expect("a dead row must not abort the layer's schedule");
+    assert!(sc.folded, "narrow tier schedules fold shifts into weights");
+    assert_eq!(sc.n_entries(), 2, "only the live element's two weights are scheduled");
+    assert!(
+        sc.entries.iter().all(|e| e.elem == 0),
+        "the dead element's entries must be excluded: {:?}",
+        sc.entries
+    );
+    // live extremes alongside junk on the dead element (quantizes to 0)
+    let x = [1.75f32, 99.0, -2.0, -7.5, 0.25, 0.0];
+    let n = 3;
+    let want = sequential(&g, &x, n);
+    for (branchy, wide) in MODES {
+        let mut bem = BatchEmulator::new(&g, n).with_force_wide(wide).with_force_branchy(branchy);
+        let mut got = vec![0.0f64; n * g.output_dim];
+        bem.infer_batch(&x, &mut got).unwrap();
+        assert_eq!(got, want, "branchy={branchy} wide={wide}");
     }
 }
